@@ -1,0 +1,87 @@
+//! Serving example: the L3 router/batcher in its natural habitat. Spins up
+//! the inference server on a (SortCut) classification experiment, fires
+//! concurrent request traffic from multiple client threads, and reports
+//! throughput + latency percentiles and batch-size distribution.
+//!
+//! Run: `cargo run --release --example serve_classify -- [--requests N]`
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+use sinkhorn::data::TaskData;
+use sinkhorn::runtime::{artifacts_dir, Experiment, Runtime};
+use sinkhorn::server::{BatchPolicy, Server};
+use sinkhorn::util::cli::Args;
+use sinkhorn::util::stats::percentile;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n_requests = args.usize("requests", 192)?;
+    let n_clients = args.usize("clients", 4)?;
+    let exp_name = args.str("exp", "imdbw__sortcut_2x8");
+    let artifacts = artifacts_dir();
+
+    // quick sanity that the experiment exists before spawning the server
+    let probe = Experiment::load(&artifacts, &exp_name)?;
+    let seq_len = probe.manifest.eval_batch_inputs[0].shape[1];
+    println!(
+        "serving {exp_name} (seq_len {seq_len}, {} params) with {n_clients} clients",
+        probe.manifest.n_params()
+    );
+    drop(probe);
+    // warm up runtime check (the server owns its own runtime thread)
+    Runtime::cpu()?;
+
+    let server = Server::start(
+        artifacts.clone(),
+        exp_name.clone(),
+        None,
+        BatchPolicy { max_batch: 32, max_wait: std::time::Duration::from_millis(4) },
+        11,
+    )?;
+
+    let latencies = Arc::new(Mutex::new(Vec::<f64>::new()));
+    let batch_sizes = Arc::new(Mutex::new(Vec::<usize>::new()));
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..n_clients {
+        let handle = server.handle.clone();
+        let latencies = latencies.clone();
+        let batch_sizes = batch_sizes.clone();
+        let exp_name = exp_name.clone();
+        let artifacts = artifacts.clone();
+        joins.push(std::thread::spawn(move || -> Result<()> {
+            // each client generates its own traffic stream
+            let exp = Experiment::load(&artifacts, &exp_name)?;
+            let mut data = TaskData::for_experiment(&exp.manifest)?;
+            for _ in 0..n_requests / n_clients {
+                let batch = data.train_batch();
+                let toks = batch[0].as_i32()?[..handle.seq_len].to_vec();
+                let resp = handle.classify(toks)?;
+                latencies.lock().unwrap().push(resp.total.as_secs_f64() * 1e3);
+                batch_sizes.lock().unwrap().push(resp.batch_size);
+                let _ = c;
+            }
+            Ok(())
+        }));
+    }
+    for j in joins {
+        j.join().unwrap()?;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    server.shutdown()?;
+
+    let mut lat = latencies.lock().unwrap().clone();
+    let served = lat.len();
+    let bs = batch_sizes.lock().unwrap();
+    let mean_bs = bs.iter().sum::<usize>() as f64 / bs.len() as f64;
+    println!("served {served} requests in {secs:.2}s -> {:.1} req/s", served as f64 / secs);
+    println!(
+        "latency p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms | mean batch size {mean_bs:.1}",
+        percentile(&mut lat, 50.0),
+        percentile(&mut lat, 90.0),
+        percentile(&mut lat, 99.0),
+    );
+    println!("serve_classify OK");
+    Ok(())
+}

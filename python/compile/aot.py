@@ -1,0 +1,198 @@
+"""AOT exporter: lower every experiment's init/train/eval graphs to HLO text.
+
+HLO *text* (never ``.serialize()``) is the interchange format — jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids that the xla_extension
+0.5.1 backing the Rust ``xla`` crate rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per experiment ``E`` this writes into ``artifacts/``:
+
+  E.init.hlo.txt   (seed:i32) -> (params...)              reproducible init
+  E.train.hlo.txt  (params..., m..., v..., step:f32, seed:i32, batch...)
+                   -> (params'..., m'..., v'..., step', loss)
+  E.eval.hlo.txt   (params..., batch...) -> family-specific outputs
+  E.manifest.json  leaf names/shapes/dtypes + graph signatures
+
+plus a global ``registry.json`` indexing all experiments for the Rust side.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--only lmw_tiny]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, train
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_str(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}.get(str(dt), str(dt))
+
+
+def _leaf_entries(tree):
+    """Flatten a pytree into [(path-string, shape, dtype)] in tree order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out.append({"name": name, "shape": list(leaf.shape), "dtype": _dtype_str(leaf.dtype)})
+    return out
+
+
+def _init_fn(family, cfg):
+    init = {"lm": model.lm_init, "cls": model.classifier_init, "seq2seq": model.seq2seq_init}[family]
+
+    def fn(seed):
+        return init(jax.random.PRNGKey(seed), cfg)
+
+    return fn
+
+
+def _batch_entries(shapes, family, is_eval):
+    names = {
+        "lm": ["tokens"],
+        "cls": ["tokens", "labels"],
+        "seq2seq": ["src", "tgt"],
+    }[family]
+    return [
+        {"name": n, "shape": list(s.shape), "dtype": _dtype_str(s.dtype)}
+        for n, s in zip(names, shapes)
+    ]
+
+
+EVAL_OUTPUTS = {
+    "lm": [{"name": "loss"}],
+    "cls": [{"name": "loss"}, {"name": "n_correct"}, {"name": "pred"}],
+    "seq2seq": [{"name": "loss"}, {"name": "pred"}],
+}
+
+
+def export_experiment(exp: dict, out_dir: str, force: bool) -> dict:
+    name, family, cfg, tcfg = exp["name"], exp["family"], exp["cfg"], exp["train"]
+    paths = {
+        "init": f"{name}.init.hlo.txt",
+        "train": f"{name}.train.hlo.txt",
+        "eval": f"{name}.eval.hlo.txt",
+        "manifest": f"{name}.manifest.json",
+    }
+    done = all(os.path.exists(os.path.join(out_dir, p)) for p in paths.values())
+    if done and not force:
+        return paths
+
+    t0 = time.time()
+    init_fn = _init_fn(family, cfg)
+    params_shape = jax.eval_shape(init_fn, jnp.int32(0))
+    leaves = _leaf_entries(params_shape)
+
+    # --- init graph ---
+    lowered = jax.jit(init_fn).lower(jax.ShapeDtypeStruct((), jnp.int32))
+    _write(out_dir, paths["init"], to_hlo_text(lowered))
+
+    # --- train graph ---
+    step_fn = train.make_train_step(family, cfg, tcfg)
+    bshapes = train.batch_shapes(family, cfg, tcfg)
+    f32s = jax.ShapeDtypeStruct((), jnp.float32)
+    i32s = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = jax.jit(step_fn, keep_unused=True).lower(
+        params_shape, params_shape, params_shape, f32s, i32s, *bshapes
+    )
+    _write(out_dir, paths["train"], to_hlo_text(lowered))
+
+    # --- eval graph (seq2seq evals at doubled length) ---
+    ecfg = configs.eval_cfg(exp)
+    eval_fn = train.make_eval_step(family, ecfg)
+    eshapes = train.eval_batch_shapes(family, ecfg, tcfg)
+    lowered = jax.jit(eval_fn, keep_unused=True).lower(params_shape, *eshapes)
+    _write(out_dir, paths["eval"], to_hlo_text(lowered))
+
+    manifest = {
+        "name": name,
+        "family": family,
+        "table": exp["table"],
+        "cfg": cfg,
+        "train_cfg": tcfg,
+        "params": leaves,
+        "n_leaves": len(leaves),
+        "train_batch_inputs": _batch_entries(bshapes, family, False),
+        "eval_batch_inputs": _batch_entries(eshapes, family, True),
+        "eval_outputs": EVAL_OUTPUTS[family],
+        "eval_cfg": ecfg,
+        "artifacts": paths,
+    }
+    _write(out_dir, paths["manifest"], json.dumps(manifest, indent=1))
+    print(f"  [{time.time() - t0:5.1f}s] {name}", flush=True)
+    return paths
+
+
+def _write(out_dir, rel, text):
+    tmp = os.path.join(out_dir, rel + ".tmp")
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, os.path.join(out_dir, rel))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="substring filter on experiment name or table")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    exps = configs.EXPERIMENTS
+    if args.only:
+        exps = [e for e in exps if args.only in e["name"] or args.only == e["table"]]
+    print(f"exporting {len(exps)} experiments -> {out_dir}", flush=True)
+
+    registry = {"experiments": []}
+    for exp in exps:
+        paths = export_experiment(exp, out_dir, args.force)
+        registry["experiments"].append(
+            {
+                "name": exp["name"],
+                "family": exp["family"],
+                "table": exp["table"],
+                "cfg": exp["cfg"],
+                "train_cfg": exp["train"],
+                "manifest": paths["manifest"],
+            }
+        )
+
+    # merge with any previously exported experiments (partial --only runs)
+    reg_path = os.path.join(out_dir, "registry.json")
+    if os.path.exists(reg_path) and args.only:
+        with open(reg_path) as f:
+            old = json.load(f)
+        have = {e["name"] for e in registry["experiments"]}
+        for e in old.get("experiments", []):
+            if e["name"] not in have:
+                registry["experiments"].append(e)
+    registry["experiments"].sort(key=lambda e: e["name"])
+    with open(reg_path, "w") as f:
+        json.dump(registry, f, indent=1)
+    print(f"registry: {len(registry['experiments'])} experiments")
+
+
+if __name__ == "__main__":
+    main()

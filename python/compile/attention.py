@@ -1,0 +1,180 @@
+"""Multi-head attention variants (paper §3.2 + baselines from §5).
+
+Variants (the strings used throughout configs, benches and manifests):
+
+  ``vanilla``  — dense O(ell^2) attention (Vaswani et al., 2017)
+  ``local``    — block-local attention baseline (window = block)
+  ``sparse``   — Sparse Transformer, *fixed* scheme (Child et al., 2019),
+                 simulated with masking exactly as the paper's own baseline
+                 implementation (§5.2: "manually simulated masking")
+  ``sinkhorn`` — Sparse Sinkhorn Attention (sorted + local terms, L1 kernel)
+  ``mixture``  — sinkhorn + vanilla summed (paper §3.2.3)
+  ``sortcut``  — SortCut truncated attention (paper §3.4, encoder-only)
+
+All heads of the sinkhorn family learn their own sorting network (the paper
+does not share R across heads); K and V share one sort matrix (§3.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, sortnet
+from .kernels import attention_kernel, sortcut_kernel, ref
+
+SINKHORN_FAMILY = ("sinkhorn", "mixture", "sortcut")
+
+
+def attention_init(key, cfg):
+    """Parameters for one multi-head attention layer."""
+    d, nh = cfg["d_model"], cfg["n_heads"]
+    keys = jax.random.split(key, 5)
+    p = {
+        "q": layers.dense_init(keys[0], d, d),
+        "k": layers.dense_init(keys[1], d, d),
+        "v": layers.dense_init(keys[2], d, d),
+        "o": layers.dense_init(keys[3], d, d),
+    }
+    if cfg["variant"] in SINKHORN_FAMILY:
+        p["sort"] = sortnet.sortnet_init(
+            keys[4], d, cfg["nb"], nh, p_variant=cfg.get("p_variant", 4)
+        )
+    return p
+
+
+def _split_heads(x, nh):
+    b, ell, d = x.shape
+    dh = d // nh
+    return x.reshape(b, ell, nh, dh).transpose(0, 2, 1, 3)  # (B, H, ell, dh)
+
+
+def _merge_heads(x):
+    b, nh, ell, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, ell, nh * dh)
+
+
+def _block(x, nb):
+    g, ell, dh = x.shape
+    return x.reshape(g, nb, ell // nb, dh)
+
+
+def _sparse_fixed_mask(ell: int, b: int, c: int, causal: bool) -> jnp.ndarray:
+    """Child et al. (2019) 'fixed' factorized pattern as a dense mask.
+
+    Head pattern A1 (local): same block. Pattern A2 (fixed columns): the
+    last ``c`` positions of every block act as summary positions visible to
+    all. We merge both into one mask per head-group; the layer splits heads
+    between the two patterns.
+    Returns (2, ell, ell) bool — [0] local pattern, [1] fixed pattern.
+    """
+    i = jnp.arange(ell)[:, None]
+    j = jnp.arange(ell)[None, :]
+    same_block = (i // b) == (j // b)
+    summary = (j % b) >= (b - c)
+    m_local = same_block
+    m_fixed = summary | same_block
+    if causal:
+        caus = j <= i
+        m_local = m_local & caus
+        m_fixed = m_fixed & caus
+    return jnp.stack([m_local, m_fixed])
+
+
+def _dense_heads(q, k, v, mask=None, causal=False):
+    """(B,H,ell,dh) dense attention with optional (H-broadcastable) mask."""
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    logits = jnp.einsum("bhid,bhjd->bhij", q, k) * scale
+    ell = q.shape[2]
+    if causal:
+        tri = jnp.tril(jnp.ones((ell, ell), bool))
+        logits = jnp.where(tri, logits, ref.NEG_INF)
+    if mask is not None:
+        logits = jnp.where(mask, logits, ref.NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhij,bhjd->bhid", p, v)
+
+
+def multihead_attention(params, x, cfg, *, causal: bool, key=None):
+    """Apply one multi-head attention layer of the configured variant.
+
+    Args:
+      params: dict from ``attention_init``.
+      x: (B, ell, d_model).
+      cfg: model config dict (d_model, n_heads, nb, variant, sinkhorn_iters,
+           tau, p_variant, n_cut, share_kv, sparse_c).
+      causal: decoder-style masking.
+      key: PRNG key for Gumbel noise (None => deterministic, no noise).
+
+    Returns (B, ell, d_model).
+    """
+    variant = cfg["variant"]
+    nh = cfg["n_heads"]
+    bsz, ell, d = x.shape
+
+    q = _split_heads(layers.dense(params["q"], x), nh)
+    k = _split_heads(layers.dense(params["k"], x), nh)
+    if cfg.get("share_kv", False):
+        v = k  # Table 8 row (5): tie K and V
+    else:
+        v = _split_heads(layers.dense(params["v"], x), nh)
+
+    if variant == "vanilla":
+        y = _dense_heads(q, k, v, causal=causal)
+        return layers.dense(params["o"], _merge_heads(y))
+
+    if variant == "sparse":
+        b = ell // cfg["nb"]
+        masks = _sparse_fixed_mask(ell, b, cfg.get("sparse_c", max(1, b // 4)), causal)
+        half = nh // 2 or 1
+        head_mask = jnp.concatenate(
+            [jnp.broadcast_to(masks[0], (half, ell, ell)),
+             jnp.broadcast_to(masks[1], (nh - half, ell, ell))]
+        )[None]
+        y = _dense_heads(q, k, v, mask=head_mask)
+        return layers.dense(params["o"], _merge_heads(y))
+
+    nb = cfg["nb"]
+    dh = d // nh
+    qf = q.reshape(bsz * nh, ell, dh)
+    kf = k.reshape(bsz * nh, ell, dh)
+    vf = v.reshape(bsz * nh, ell, dh)
+
+    if variant == "local":
+        y = attention_kernel.local_block_attention(
+            _block(qf, nb), _block(kf, nb), _block(vf, nb), causal=causal
+        )
+        y = y.reshape(bsz, nh, ell, dh)
+        return layers.dense(params["o"], _merge_heads(y))
+
+    # --- sinkhorn family: build per-head sort matrices ---
+    s = sortnet.sort_matrix(
+        params["sort"], x,
+        nb=nb, n_iters=cfg["sinkhorn_iters"], tau=cfg.get("tau", 0.75),
+        p_variant=cfg.get("p_variant", 4), causal=causal, key=key,
+    )  # (B, H, nb, nb)
+    s_flat = s.reshape(bsz * nh, nb, nb)
+    k_blk, v_blk, q_blk = _block(kf, nb), _block(vf, nb), _block(qf, nb)
+    k_sorted = jnp.einsum("gij,gjbd->gibd", s_flat, k_blk)
+    v_sorted = jnp.einsum("gij,gjbd->gibd", s_flat, v_blk)
+    # a sorted block is valid iff its R row has support (§3.3.3 sparsity)
+    valid = (s_flat.sum(axis=-1) > 1e-6).astype(qf.dtype)  # (G, nb)
+
+    if variant == "sortcut":
+        n_cut = cfg["n_cut"]
+        k_cut = k_sorted[:, :n_cut].reshape(bsz * nh, n_cut * (ell // nb), dh)
+        v_cut = v_sorted[:, :n_cut].reshape(bsz * nh, n_cut * (ell // nb), dh)
+        y = sortcut_kernel.sortcut_attention(qf, k_cut, v_cut)
+        y = y.reshape(bsz, nh, ell, dh)
+        return layers.dense(params["o"], _merge_heads(y))
+
+    y = attention_kernel.sinkhorn_block_attention(
+        q_blk, k_blk, v_blk, k_sorted, v_sorted, valid, causal=causal
+    )
+    y = y.reshape(bsz, nh, ell, dh)
+
+    if variant == "mixture":  # §3.2.3: + vanilla dense view
+        y = y + _dense_heads(q, k, v, causal=causal)
+
+    return layers.dense(params["o"], _merge_heads(y))

@@ -1,0 +1,89 @@
+"""L1 kernel microbenchmarks: slab vs tile grid layouts, fwd and fwd+bwd,
+plus the analytic TPU estimates (VMEM footprint, MXU-shaped MAC fraction,
+FLOP ratio vs dense attention) recorded in EXPERIMENTS.md §Perf.
+
+Usage: cd python && python -m compile.bench_kernels [--iters 10]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention_kernel as ak
+from .kernels import ref
+
+
+def timeit(fn, *args, iters=10):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3  # ms
+
+
+def flop_ratio(ell: int, nb: int, d: int) -> float:
+    """Sinkhorn attention MACs / dense attention MACs (per head)."""
+    b = ell // nb
+    sink = 2 * ell * (2 * b) * d + 2 * nb * nb * b * d
+    dense = 2 * ell * ell * d
+    return sink / dense
+
+
+def vmem_kib(b: int, d: int) -> float:
+    return (5 * b * d + 2 * b * b) * 4 / 1024
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=10)
+    args = ap.parse_args()
+
+    print("== structure (TPU estimates) ==")
+    for ell, nb in [(1024, 16), (2048, 32), (4096, 32)]:
+        b = ell // nb
+        print(
+            f"  ell={ell:5} nb={nb:3} b={b:4}: FLOPs {flop_ratio(ell, nb, 64)*100:5.1f}% of dense, "
+            f"VMEM/tile {vmem_kib(b, 64):8.1f} KiB"
+        )
+
+    print(f"\n== interpret-mode wallclock (CPU, iters={args.iters}) ==")
+    key = jax.random.PRNGKey(0)
+    for (g, nb, b, d) in [(32, 8, 16, 16), (32, 4, 32, 16), (8, 8, 32, 32)]:
+        ks = jax.random.split(key, 4)
+        q = jax.random.normal(ks[0], (g, nb, b, d))
+        k = jax.random.normal(ks[1], (g, nb, b, d))
+        v = jax.random.normal(ks[2], (g, nb, b, d))
+        s = jax.vmap(lambda x: ref.sinkhorn_log(x, 5))(jax.random.normal(ks[3], (g, nb, nb)))
+        ksort = jnp.einsum("gij,gjbd->gibd", s, k)
+        vsort = jnp.einsum("gij,gjbd->gibd", s, v)
+        valid = jnp.ones((g, nb))
+        for mode in ("slab", "tile"):
+            fwd = jax.jit(
+                lambda q, k, v, ks_, vs_: ak.sinkhorn_block_attention(
+                    q, k, v, ks_, vs_, valid, mode=mode
+                )
+            )
+            t_f = timeit(fwd, q, k, v, ksort, vsort, iters=args.iters)
+            grad = jax.jit(
+                jax.grad(
+                    lambda q, k, v, ks_, vs_: ak.sinkhorn_block_attention(
+                        q, k, v, ks_, vs_, valid, mode=mode
+                    ).sum(),
+                    argnums=(0, 1, 2),
+                )
+            )
+            t_b = timeit(grad, q, k, v, ksort, vsort, iters=args.iters)
+            print(
+                f"  G={g:3} nb={nb:2} b={b:3} d={d:3} [{mode:4}]  "
+                f"fwd {t_f:8.2f} ms   fwd+bwd {t_b:8.2f} ms"
+            )
+
+
+if __name__ == "__main__":
+    main()

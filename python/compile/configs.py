@@ -1,0 +1,189 @@
+"""Experiment registry — the single source of truth shared by the AOT
+exporter (this package) and the Rust coordinator (via artifacts/registry.json).
+
+Every entry maps to one (task, attention-variant) pair from the paper's
+evaluation section and produces two HLO artifacts (train + eval) plus a
+manifest. Scales are shrunk to a 1-core CPU testbed (see DESIGN.md §4 —
+we reproduce the *shape* of each table, not absolute numbers).
+
+Naming: ``<task>__<variant>``, where variant encodes the paper's column,
+e.g. ``sinkhorn_b16`` = Sinkhorn Transformer with block length 16.
+"""
+
+from __future__ import annotations
+
+# --------------------------------------------------------------------------
+# model-size presets (paper: Base 50M / Big 430M -> here: tiny / small)
+# --------------------------------------------------------------------------
+
+TINY = dict(d_model=64, n_heads=4, d_ff=128, n_layers=2)
+SMALL = dict(d_model=128, n_heads=4, d_ff=256, n_layers=3)
+
+
+def _cfg(size, *, vocab, ell, block, variant, **kw):
+    cfg = dict(size)
+    cfg.update(vocab=vocab, ell=ell, variant=variant)
+    assert ell % block == 0, (ell, block)
+    cfg["block"] = block
+    cfg["nb"] = ell // block
+    cfg.setdefault("sinkhorn_iters", 5)
+    cfg.setdefault("tau", 0.75)
+    cfg.setdefault("p_variant", 4)
+    cfg.setdefault("share_kv", False)
+    cfg.update(kw)
+    return cfg
+
+
+def _variants(ell, blocks, *, sortcut=False, include_big_local=True):
+    """The standard comparison set used by most tables."""
+    out = [("vanilla", dict(variant="vanilla", block=blocks[-1]))]
+    for b in blocks if include_big_local else blocks[-1:]:
+        out.append((f"local_b{b}", dict(variant="local", block=b)))
+    out.append((f"sparse_b{blocks[-1]}", dict(variant="sparse", block=blocks[-1])))
+    for b in blocks:
+        out.append((f"sinkhorn_b{b}", dict(variant="sinkhorn", block=b)))
+    out.append(("mixture", dict(variant="mixture", block=blocks[-1])))
+    if sortcut:
+        for b in blocks:
+            out.append((f"sortcut_2x{b}", dict(variant="sortcut", block=b, n_cut=2)))
+    return out
+
+
+EXPERIMENTS: list[dict] = []
+
+
+def _add(name, family, size, *, vocab, ell, variant_kw, train, table, **extra):
+    kw = dict(variant_kw)
+    block = kw.pop("block")
+    variant = kw.pop("variant")
+    cfg = _cfg(size, vocab=vocab, ell=ell, block=block, variant=variant, **kw, **extra)
+    EXPERIMENTS.append(
+        dict(name=name, family=family, cfg=cfg, train=train, table=table)
+    )
+
+
+# --------------------------------------------------------------------------
+# Table 1 — algorithmic sorting, seq2seq, eval at 2x length
+# --------------------------------------------------------------------------
+SORT_TRAIN = dict(batch=8, warmup=200, default_steps=400, eval_batch=8)
+for vname, vkw in [
+    ("vanilla", dict(variant="vanilla", block=16)),
+    ("local_b16", dict(variant="local", block=16)),
+    ("sparse_b16", dict(variant="sparse", block=16)),
+    ("sinkhorn_b4", dict(variant="sinkhorn", block=4)),
+    ("sinkhorn_b8", dict(variant="sinkhorn", block=8)),
+    ("sinkhorn_b16", dict(variant="sinkhorn", block=16)),
+]:
+    _add(
+        f"sort__{vname}", "seq2seq", TINY, vocab=20, ell=64,
+        variant_kw=vkw, train=SORT_TRAIN, table="table1",
+        ell_tgt=64, ell_eval=128, ell_tgt_eval=128,
+    )
+
+# --------------------------------------------------------------------------
+# Table 2 — word-level LM, tiny ("Base") and small ("Big") columns
+# --------------------------------------------------------------------------
+LM_TRAIN = dict(batch=8, warmup=400, default_steps=400, eval_batch=8)
+for size_name, size in [("tiny", TINY), ("small", SMALL)]:
+    for vname, vkw in _variants(128, [8, 16, 32]):
+        _add(
+            f"lmw_{size_name}__{vname}", "lm", size, vocab=512, ell=128,
+            variant_kw=vkw, train=LM_TRAIN, table="table2",
+        )
+
+# --------------------------------------------------------------------------
+# Table 4 — char-level LM (longer sequences, fixed block)
+# --------------------------------------------------------------------------
+for vname, vkw in _variants(256, [32], include_big_local=True):
+    _add(
+        f"lmc__{vname}", "lm", TINY, vocab=96, ell=256,
+        variant_kw=vkw, train=dict(LM_TRAIN, batch=4), table="table4",
+    )
+
+# --------------------------------------------------------------------------
+# Table 5 — pixel-wise image generation (flattened RGB, ell = 8x8x3)
+# --------------------------------------------------------------------------
+for vname, vkw in _variants(192, [16], include_big_local=True):
+    _add(
+        f"img__{vname}", "lm", TINY, vocab=256, ell=192,
+        variant_kw=vkw, train=dict(LM_TRAIN, batch=4), table="table5",
+    )
+
+# --------------------------------------------------------------------------
+# Tables 6/7 — classification: sentiment (word+char) and NLI
+# --------------------------------------------------------------------------
+CLS_TRAIN = dict(batch=16, warmup=200, default_steps=300, eval_batch=32)
+CLS_SETS = [
+    ("imdbw", 512, 128, 2, "table6"),  # (name, vocab, ell, classes, table)
+    ("imdbc", 64, 256, 2, "table6"),
+    ("sstw", 512, 64, 2, "table6"),
+    ("sstc", 64, 256, 2, "table6"),
+    ("snli", 512, 128, 3, "table7"),
+    ("mnli", 512, 128, 3, "table7"),
+]
+for dsname, vocab, ell, ncls, table in CLS_SETS:
+    blocks = [max(4, ell // 32), max(8, ell // 16), max(16, ell // 8)]
+    variants = [("vanilla", dict(variant="vanilla", block=blocks[-1]))]
+    for b in blocks:
+        variants.append((f"sinkhorn_b{b}", dict(variant="sinkhorn", block=b)))
+    for b in blocks:
+        variants.append((f"sortcut_2x{b}", dict(variant="sortcut", block=b, n_cut=2)))
+    for vname, vkw in variants:
+        _add(
+            f"{dsname}__{vname}", "cls", TINY, vocab=vocab, ell=ell,
+            variant_kw=vkw, train=CLS_TRAIN, table=table, n_classes=ncls,
+        )
+
+# --------------------------------------------------------------------------
+# Table 8 — SortNet ablations (on word LM, block 16)
+# --------------------------------------------------------------------------
+ABL = [
+    ("p1", dict(p_variant=1)),
+    ("p2", dict(p_variant=2)),
+    ("p3", dict(p_variant=3)),
+    # p4 == lmw_tiny__sinkhorn_b16 (the default)
+    ("sharekv", dict(share_kv=True)),
+    ("noiters", dict(sinkhorn_iters=0)),
+]
+for aname, akw in ABL:
+    _add(
+        f"abl_{aname}__sinkhorn_b16", "lm", TINY, vocab=512, ell=128,
+        variant_kw=dict(variant="sinkhorn", block=16), train=LM_TRAIN,
+        table="table8", **akw,
+    )
+
+# --------------------------------------------------------------------------
+# Figure 3 — Gumbel temperature sweep; Figure 4 — sinkhorn iteration sweep
+# --------------------------------------------------------------------------
+for tau in (0.25, 0.5, 1.0):  # 0.75 is the default above
+    _add(
+        f"fig3_tau{str(tau).replace('.', 'p')}__sinkhorn_b16", "lm", TINY,
+        vocab=512, ell=128, variant_kw=dict(variant="sinkhorn", block=16),
+        train=LM_TRAIN, table="fig3", tau=tau,
+    )
+for k in (1, 2, 10, 20):  # 5 is the default; 0 is abl_noiters
+    _add(
+        f"fig4_k{k}__sinkhorn_b16", "lm", TINY, vocab=512, ell=128,
+        variant_kw=dict(variant="sinkhorn", block=16), train=LM_TRAIN,
+        table="fig4", sinkhorn_iters=k,
+    )
+
+
+BY_NAME = {e["name"]: e for e in EXPERIMENTS}
+
+
+def eval_cfg(exp: dict) -> dict:
+    """Config used to lower the eval graph (seq2seq evals at 2x length)."""
+    cfg = dict(exp["cfg"])
+    if "ell_eval" in cfg:
+        cfg["ell"] = cfg["ell_eval"]
+        cfg["ell_tgt"] = cfg["ell_tgt_eval"]
+        # nb is kept fixed; the block length doubles with the sequence
+    return cfg
+
+
+if __name__ == "__main__":
+    from collections import Counter
+
+    print(len(EXPERIMENTS), "experiments")
+    print(Counter(e["table"] for e in EXPERIMENTS))

@@ -1,0 +1,224 @@
+"""Pallas kernel for the Sparse Sinkhorn block attention hot-spot.
+
+This is the paper's O(ell^2) -> O(ell*b) core (§3.2): each query block
+attends to exactly two length-``b`` key blocks — its *sorted* block (the
+quasi-global term, keys pre-mixed by the Sinkhorn matrix R) and its *local*
+block — under one shared softmax.
+
+Two grid layouts, selected by ``mode`` (kernels are identical math, both
+tested against ``ref.py``):
+
+  * ``tile`` — grid ``(G, nb)`` (G = batch*heads): one ``(b, d)`` query
+    tile + two key and two value tiles per program, VMEM working set
+    ``5*b*d + 2*b^2`` floats independent of ``ell``. This is the TPU
+    mapping (DESIGN.md §Hardware-Adaptation): per-tile ``b x d x b``
+    contractions are MXU-shaped.
+  * ``slab`` — grid ``(nb,)``: one program per block position holding the
+    whole ``(G, b, d)`` slab and doing batched contractions. interpret
+    mode emulates the grid with a serial XLA loop, so fewer/fatter
+    programs are dramatically faster on CPU; this is the default for the
+    AOT artifacts (the CPU testbed), with ``tile`` kept for TPU lowering.
+
+Autodiff: ``pallas_call`` has no reverse-mode rule, so the public entry
+points carry a ``jax.custom_vjp`` whose backward pass is a *second* Pallas
+kernel (flash-attention style: the (·, b, 2b) probability tile is
+recomputed from the saved q/k/v tiles instead of materialized).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+# AOT artifacts are built for the CPU testbed -> slab; set
+# SINKHORN_KERNEL_MODE=tile when lowering for real TPUs.
+DEFAULT_MODE = os.environ.get("SINKHORN_KERNEL_MODE", "slab")
+
+
+def _prob_tile(q, ks, kl, valid, causal):
+    """Softmax tile over [sorted | local] keys. Shapes: q/ks/kl (..., b, d),
+    valid (...,) broadcastable; returns (..., b, 2b). Shared fwd/bwd."""
+    b = q.shape[-2]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    ls = jnp.einsum("...td,...ud->...tu", q, ks) * scale
+    ll = jnp.einsum("...td,...ud->...tu", q, kl) * scale
+    ls = jnp.where(valid[..., None, None] > 0.5, ls, NEG_INF)
+    if causal:
+        t = jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
+        u = jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
+        ll = jnp.where(u <= t, ll, NEG_INF)
+    logits = jnp.concatenate([ls, ll], axis=-1)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _fwd_body(q, ks, kl, vs, vl, valid, causal):
+    p = _prob_tile(q, ks, kl, valid, causal)
+    b = q.shape[-2]
+    return jnp.einsum("...tu,...ud->...td", p[..., :b], vs) + jnp.einsum(
+        "...tu,...ud->...td", p[..., b:], vl
+    )
+
+
+def _bwd_body(q, ks, kl, vs, vl, valid, dy, causal):
+    b, d = q.shape[-2], q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    p = _prob_tile(q, ks, kl, valid, causal)
+    dp = jnp.concatenate(
+        [jnp.einsum("...td,...ud->...tu", dy, vs), jnp.einsum("...td,...ud->...tu", dy, vl)],
+        axis=-1,
+    )
+    dlog = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))  # softmax vjp
+    ds_s, ds_l = dlog[..., :b], dlog[..., b:]
+    dq = (jnp.einsum("...tu,...ud->...td", ds_s, ks) + jnp.einsum("...tu,...ud->...td", ds_l, kl)) * scale
+    dks = jnp.einsum("...tu,...td->...ud", ds_s, q) * scale
+    dkl = jnp.einsum("...tu,...td->...ud", ds_l, q) * scale
+    dvs = jnp.einsum("...tu,...td->...ud", p[..., :b], dy)
+    dvl = jnp.einsum("...tu,...td->...ud", p[..., b:], dy)
+    return dq, dks, dkl, dvs, dvl
+
+
+# --- tile mode: grid (G, nb), (b, d) tiles --------------------------------
+
+
+def _tile_fwd_kernel(q_ref, ks_ref, kl_ref, vs_ref, vl_ref, valid_ref, y_ref, *, causal):
+    f32 = jnp.float32
+    y = _fwd_body(
+        q_ref[0, 0].astype(f32), ks_ref[0, 0].astype(f32), kl_ref[0, 0].astype(f32),
+        vs_ref[0, 0].astype(f32), vl_ref[0, 0].astype(f32), valid_ref[0, 0], causal,
+    )
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def _tile_bwd_kernel(
+    q_ref, ks_ref, kl_ref, vs_ref, vl_ref, valid_ref, dy_ref,
+    dq_ref, dks_ref, dkl_ref, dvs_ref, dvl_ref, *, causal,
+):
+    f32 = jnp.float32
+    outs = _bwd_body(
+        q_ref[0, 0].astype(f32), ks_ref[0, 0].astype(f32), kl_ref[0, 0].astype(f32),
+        vs_ref[0, 0].astype(f32), vl_ref[0, 0].astype(f32), valid_ref[0, 0],
+        dy_ref[0, 0].astype(f32), causal,
+    )
+    for ref, val in zip((dq_ref, dks_ref, dkl_ref, dvs_ref, dvl_ref), outs):
+        ref[0, 0] = val.astype(ref.dtype)
+
+
+# --- slab mode: grid (nb,), (G, b, d) slabs -------------------------------
+
+
+def _slab_fwd_kernel(q_ref, ks_ref, kl_ref, vs_ref, vl_ref, valid_ref, y_ref, *, causal):
+    f32 = jnp.float32
+    y = _fwd_body(
+        q_ref[:, 0].astype(f32), ks_ref[:, 0].astype(f32), kl_ref[:, 0].astype(f32),
+        vs_ref[:, 0].astype(f32), vl_ref[:, 0].astype(f32), valid_ref[:, 0], causal,
+    )
+    y_ref[:, 0] = y.astype(y_ref.dtype)
+
+
+def _slab_bwd_kernel(
+    q_ref, ks_ref, kl_ref, vs_ref, vl_ref, valid_ref, dy_ref,
+    dq_ref, dks_ref, dkl_ref, dvs_ref, dvl_ref, *, causal,
+):
+    f32 = jnp.float32
+    outs = _bwd_body(
+        q_ref[:, 0].astype(f32), ks_ref[:, 0].astype(f32), kl_ref[:, 0].astype(f32),
+        vs_ref[:, 0].astype(f32), vl_ref[:, 0].astype(f32), valid_ref[:, 0],
+        dy_ref[:, 0].astype(f32), causal,
+    )
+    for ref, val in zip((dq_ref, dks_ref, dkl_ref, dvs_ref, dvl_ref), outs):
+        ref[:, 0] = val.astype(ref.dtype)
+
+
+def _specs(g, nb, b, d, mode):
+    if mode == "tile":
+        spec = pl.BlockSpec((1, 1, b, d), lambda gi, i: (gi, i, 0, 0))
+        vspec = pl.BlockSpec((1, 1), lambda gi, i: (gi, i))
+        grid = (g, nb)
+    else:
+        spec = pl.BlockSpec((g, 1, b, d), lambda i: (0, i, 0, 0))
+        vspec = pl.BlockSpec((g, 1), lambda i: (0, i))
+        grid = (nb,)
+    return grid, spec, vspec
+
+
+def _pallas_fwd(q, ks, kl, vs, vl, valid, *, causal, mode):
+    g, nb, b, d = q.shape
+    grid, spec, vspec = _specs(g, nb, b, d, mode)
+    kern = _tile_fwd_kernel if mode == "tile" else _slab_fwd_kernel
+    return pl.pallas_call(
+        functools.partial(kern, causal=causal),
+        grid=grid,
+        in_specs=[spec] * 5 + [vspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((g, nb, b, d), q.dtype),
+        interpret=True,
+    )(q, ks, kl, vs, vl, valid)
+
+
+def _pallas_bwd(q, ks, kl, vs, vl, valid, dy, *, causal, mode):
+    g, nb, b, d = q.shape
+    grid, spec, vspec = _specs(g, nb, b, d, mode)
+    kern = _tile_bwd_kernel if mode == "tile" else _slab_bwd_kernel
+    shape = jax.ShapeDtypeStruct((g, nb, b, d), q.dtype)
+    return pl.pallas_call(
+        functools.partial(kern, causal=causal),
+        grid=grid,
+        in_specs=[spec] * 5 + [vspec, spec],
+        out_specs=[spec] * 5,
+        out_shape=[shape] * 5,
+        interpret=True,
+    )(q, ks, kl, vs, vl, valid, dy)
+
+
+@functools.lru_cache(maxsize=None)
+def _make(causal: bool, mode: str):
+    @jax.custom_vjp
+    def attn(q, ks, kl, vs, vl, valid):
+        return _pallas_fwd(q, ks, kl, vs, vl, valid, causal=causal, mode=mode)
+
+    def fwd(q, ks, kl, vs, vl, valid):
+        return attn(q, ks, kl, vs, vl, valid), (q, ks, kl, vs, vl, valid)
+
+    def bwd(res, dy):
+        q, ks, kl, vs, vl, valid = res
+        dq, dks, dkl, dvs, dvl = _pallas_bwd(q, ks, kl, vs, vl, valid, dy, causal=causal, mode=mode)
+        return dq, dks, dkl, dvs, dvl, None
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def sinkhorn_block_attention(q_blk, k_blk, v_blk, k_sorted, v_sorted, valid, causal=False, mode=None):
+    """Sparse Sinkhorn attention over blocked inputs.
+
+    Args:
+      q_blk, k_blk, v_blk: ``(G, nb, b, d)`` — local (original-order) blocks.
+      k_sorted, v_sorted:  ``(G, nb, b, d)`` — Sinkhorn-sorted blocks
+        (``R @ blocked``, computed by the caller so K and V share one R).
+      valid: ``(G, nb)`` float 1/0 — 0 disables the sorted term for a block
+        (empty support row of a strict-causal R).
+      causal: apply the within-block causal mask to the local term.
+      mode: "slab" (CPU default) or "tile" (TPU grid layout).
+
+    Returns ``(G, nb, b, d)``. Differentiable (custom VJP, Pallas bwd kernel).
+    """
+    fn = _make(bool(causal), mode or DEFAULT_MODE)
+    return fn(q_blk, k_sorted, k_blk, v_sorted, v_blk, valid)
+
+
+def local_block_attention(q_blk, k_blk, v_blk, causal=False, mode=None):
+    """Local-attention baseline via the same kernel: sorted term disabled
+    (valid=0 everywhere), so each block attends only to itself."""
+    g, nb = q_blk.shape[:2]
+    valid = jnp.zeros((g, nb), q_blk.dtype)
+    fn = _make(bool(causal), mode or DEFAULT_MODE)
+    return fn(q_blk, k_blk, k_blk, v_blk, v_blk, valid)

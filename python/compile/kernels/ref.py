@@ -1,0 +1,219 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the *correctness ground truth*: each Pallas kernel in
+``sinkhorn_kernel.py`` / ``attention_kernel.py`` / ``sortcut_kernel.py`` is
+tested (pytest + hypothesis) to match its oracle here to float tolerance.
+They are also used as the backward rule (``jax.vjp``) for the small kernels
+where a dedicated backward Pallas kernel is not worth the VMEM traffic
+(Sinkhorn balancing is O(N_B^2 * k) — tiny next to the O(ell*b) attention).
+
+Shape conventions (single head; batching/heads handled by the callers):
+  - ``ell``  : sequence length
+  - ``nb``   : number of blocks (paper: N_B)
+  - ``b``    : block length, ``ell = nb * b``
+  - ``d``    : head dimension
+  - blocked tensors are ``(nb, b, d)``; sort matrices are ``(nb, nb)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Sinkhorn balancing (paper §3.1.1 / §3.3.2)
+# ---------------------------------------------------------------------------
+
+
+def sinkhorn_log(logits: jnp.ndarray, n_iters: int) -> jnp.ndarray:
+    """Log-domain Sinkhorn normalization of ``logits`` (nb, nb).
+
+    Returns a (relaxed) doubly-stochastic matrix ``S = lim F_c(F_r(exp R))``.
+    ``n_iters == 0`` reproduces the paper's ablation row (6): plain
+    ``softmax`` over rows (exp + row-normalize once) so the result is at
+    least row-stochastic and usable as a mixing matrix.
+    """
+    log_s = logits
+    if n_iters == 0:
+        return jax.nn.softmax(log_s, axis=-1)
+    for _ in range(n_iters):
+        log_s = log_s - jax.nn.logsumexp(log_s, axis=-1, keepdims=True)  # rows
+        log_s = log_s - jax.nn.logsumexp(log_s, axis=-2, keepdims=True)  # cols
+    return jnp.exp(log_s)
+
+
+def causal_mask(nb: int, strict: bool = False) -> jnp.ndarray:
+    """(nb, nb) mask: dest block i may receive src block j iff j <= i.
+
+    With ``strict=True`` the diagonal is excluded (j < i): used for the
+    *sorted-key* term of causal attention, where keeping j == i would mix a
+    block's own future tokens into its keys. Paper §3.3: "if block i is
+    sorted into a new position p < i, then it is being masked out" — i.e.
+    content may only move to later (or equal) positions.
+    """
+    i = jnp.arange(nb)[:, None]
+    j = jnp.arange(nb)[None, :]
+    return (j < i) if strict else (j <= i)
+
+
+def causal_sinkhorn_log(logits: jnp.ndarray, n_iters: int, strict: bool = False) -> jnp.ndarray:
+    """Causal Sinkhorn balancing (paper §3.3.2): masked iterative
+    normalization in which *no normalizer may see the future*.
+
+    Row normalization is naturally causal (row i comes from block i's own
+    pooled — already causal — descriptor). Column normalization is NOT:
+    a full column sum at entry (i, j) would include rows i' > i, whose
+    logits encode future block content. We therefore use a *cumulative*
+    column normalizer: entry (i, j) is normalized by
+    ``logsumexp over rows j..i of column j`` only. (Subtracting the full
+    column max for stability cancels exactly in both value and gradient,
+    so it does not reintroduce leakage beyond float rounding.)
+
+    Rows with empty support (row 0 when ``strict``) come out all-zero; the
+    attention layer must handle such fully-masked sorted blocks.
+    """
+    mask = causal_mask(logits.shape[-1], strict=strict)
+    neg = jnp.asarray(NEG_INF, logits.dtype)
+    log_s = jnp.where(mask, logits, neg)
+    if n_iters == 0:
+        s = jax.nn.softmax(log_s, axis=-1)
+        return jnp.where(mask, s, 0.0)
+    for _ in range(n_iters):
+        row = jax.nn.logsumexp(log_s, axis=-1, keepdims=True)
+        log_s = jnp.where(mask, log_s - jnp.maximum(row, neg), neg)
+        # causal (cumulative) column normalization. The cumulative sum is
+        # expressed as a lower-triangular matmul rather than jnp.cumsum:
+        # identical math, but xla_extension 0.5.1's CPU compiler handles
+        # the matmul in milliseconds where the scan form took minutes.
+        cmax = jnp.maximum(jnp.max(log_s, axis=-2, keepdims=True), neg)
+        e = jnp.where(mask, jnp.exp(log_s - cmax), 0.0)
+        nb_ = logits.shape[-1]
+        tril = jnp.tril(jnp.ones((nb_, nb_), logits.dtype))
+        csum = jnp.einsum("ik,...kj->...ij", tril, e)
+        ncol = jnp.log(csum + 1e-30) + cmax
+        log_s = jnp.where(mask, log_s - jnp.maximum(ncol, neg), neg)
+    # exp(-1e9) == 0 exactly in f32, but clamp for bf16 safety
+    return jnp.where(mask, jnp.exp(log_s), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Block sort application (paper §3.1.2)
+# ---------------------------------------------------------------------------
+
+
+def block_sort(r: jnp.ndarray, x_blk: jnp.ndarray) -> jnp.ndarray:
+    """Apply sort matrix: ``X_S = U(R B(X))``; (nb,nb) x (nb,b,d) -> (nb,b,d)."""
+    return jnp.einsum("ij,jbd->ibd", r, x_blk)
+
+
+# ---------------------------------------------------------------------------
+# Sparse Sinkhorn attention (paper §3.2)
+# ---------------------------------------------------------------------------
+
+
+def sinkhorn_attention(
+    q_blk: jnp.ndarray,
+    k_blk: jnp.ndarray,
+    v_blk: jnp.ndarray,
+    k_sorted: jnp.ndarray,
+    v_sorted: jnp.ndarray,
+    sorted_valid: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Single-head sparse sinkhorn attention over blocked inputs.
+
+    Query block i attends to ``concat(k_sorted[i], k_blk[i])`` (2b keys):
+    the quasi-global sorted term plus the standard local term, one softmax
+    over both (paper eq. for A_ij with the secondary local term).
+
+    ``sorted_valid``: optional (nb,) bool — False where the sorted block has
+    no support (fully masked row of a strict-causal R); its 'sorted' logits
+    are masked to -inf.
+    """
+    d = q_blk.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q_blk.dtype))
+    ls = jnp.einsum("ibd,ijd->ibj", q_blk, k_sorted) * scale  # (nb, b, b)
+    ll = jnp.einsum("ibd,ijd->ibj", q_blk, k_blk) * scale  # (nb, b, b)
+    if sorted_valid is not None:
+        ls = jnp.where(sorted_valid[:, None, None], ls, NEG_INF)
+    logits = jnp.concatenate([ls, ll], axis=-1)  # (nb, b, 2b)
+    p = jax.nn.softmax(logits, axis=-1)
+    b = q_blk.shape[1]
+    y = jnp.einsum("ibj,ijd->ibd", p[..., :b], v_sorted) + jnp.einsum(
+        "ibj,ijd->ibd", p[..., b:], v_blk
+    )
+    return y
+
+
+def causal_sinkhorn_attention(
+    q_blk: jnp.ndarray,
+    k_blk: jnp.ndarray,
+    v_blk: jnp.ndarray,
+    k_sorted: jnp.ndarray,
+    v_sorted: jnp.ndarray,
+    sorted_valid: jnp.ndarray,
+) -> jnp.ndarray:
+    """Causal variant: local term gets the within-block causal mask; the
+    sorted term is already strictly-past by construction (strict-causal R),
+    with fully-masked rows disabled through ``sorted_valid``."""
+    d = q_blk.shape[-1]
+    b = q_blk.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q_blk.dtype))
+    ls = jnp.einsum("ibd,ijd->ibj", q_blk, k_sorted) * scale
+    ll = jnp.einsum("ibd,ijd->ibj", q_blk, k_blk) * scale
+    ls = jnp.where(sorted_valid[:, None, None], ls, NEG_INF)
+    tri = jnp.tril(jnp.ones((b, b), bool))  # query t sees local key u iff u <= t
+    ll = jnp.where(tri[None], ll, NEG_INF)
+    logits = jnp.concatenate([ls, ll], axis=-1)
+    p = jax.nn.softmax(logits, axis=-1)
+    y = jnp.einsum("ibj,ijd->ibd", p[..., :b], v_sorted) + jnp.einsum(
+        "ibj,ijd->ibd", p[..., b:], v_blk
+    )
+    return y
+
+
+def local_attention(q_blk, k_blk, v_blk, causal: bool = False) -> jnp.ndarray:
+    """Plain block-local attention baseline (Luong-style windows)."""
+    d = q_blk.shape[-1]
+    b = q_blk.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q_blk.dtype))
+    ll = jnp.einsum("ibd,ijd->ibj", q_blk, k_blk) * scale
+    if causal:
+        tri = jnp.tril(jnp.ones((b, b), bool))
+        ll = jnp.where(tri[None], ll, NEG_INF)
+    p = jax.nn.softmax(ll, axis=-1)
+    return jnp.einsum("ibj,ijd->ibd", p, v_blk)
+
+
+# ---------------------------------------------------------------------------
+# SortCut attention (paper §3.4)
+# ---------------------------------------------------------------------------
+
+
+def sortcut_attention(q: jnp.ndarray, k_cut: jnp.ndarray, v_cut: jnp.ndarray) -> jnp.ndarray:
+    """Y = softmax(Q K_cut^T) V_cut — queries are the full (ell, d) sequence,
+    keys/values the first ``n`` *sorted* blocks flattened to (n*b, d)."""
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    logits = (q @ k_cut.T) * scale
+    p = jax.nn.softmax(logits, axis=-1)
+    return p @ v_cut
+
+
+# ---------------------------------------------------------------------------
+# Dense attention oracle (baseline / mixture second term)
+# ---------------------------------------------------------------------------
+
+
+def dense_attention(q, k, v, causal: bool = False) -> jnp.ndarray:
+    """Vanilla O(ell^2) scaled dot-product attention, (ell, d) inputs."""
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    logits = (q @ k.T) * scale
+    if causal:
+        ell = q.shape[0]
+        tri = jnp.tril(jnp.ones((ell, ell), bool))
+        logits = jnp.where(tri, logits, NEG_INF)
+    return jax.nn.softmax(logits, axis=-1) @ v

@@ -1,0 +1,116 @@
+"""Pallas kernel for (causal) Sinkhorn balancing of sorting logits.
+
+Normalizes a batch of ``(nb, nb)`` block-permutation logits into relaxed
+doubly-stochastic matrices by ``n_iters`` of log-domain row/column
+normalization (paper §3.1.1), with the causal masked variant of §3.3.2.
+
+The matrix is tiny (``nb`` is 4–32 in every experiment) so one program owns
+one full matrix; the iteration count is a static closure so the loop
+unrolls into straight-line VPU code. Backward: this op is O(nb^2 * k) —
+negligible next to attention — so the custom VJP simply differentiates the
+jnp reference (``ref.sinkhorn_log``), which the tests pin to the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e9
+
+
+def _kernel(r_ref, s_ref, *, n_iters, causal, strict):
+    # single program owns the whole (G, nb, nb) slab: the matrices are tiny
+    # (nb <= 32) so grid-level parallelism buys nothing and interpret-mode
+    # grid emulation costs a serial loop per program.
+    x = r_ref[...].astype(jnp.float32)  # (G, nb, nb)
+    nb = x.shape[-1]
+    if causal:
+        i = jax.lax.broadcasted_iota(jnp.int32, (nb, nb), 0)
+        j = jax.lax.broadcasted_iota(jnp.int32, (nb, nb), 1)
+        mask = (j < i) if strict else (j <= i)
+        x = jnp.where(mask, x, NEG_INF)
+    else:
+        mask = None
+
+    def logsumexp(a, axis):
+        m = jnp.max(a, axis=axis, keepdims=True)
+        m = jnp.maximum(m, NEG_INF)  # guard all-masked slices
+        return jnp.log(jnp.sum(jnp.exp(a - m), axis=axis, keepdims=True) + 1e-30) + m
+
+    if n_iters == 0:
+        # softmax rows (paper Table 8 row 6 ablation)
+        s = jnp.exp(x - logsumexp(x, -1))
+    else:
+        for _ in range(n_iters):
+            x = x - jnp.maximum(logsumexp(x, -1), NEG_INF)
+            if mask is not None:
+                x = jnp.where(mask, x, NEG_INF)
+            if mask is None:
+                x = x - jnp.maximum(logsumexp(x, -2), NEG_INF)
+            else:
+                # causal column normalization: entry (i, j) may only be
+                # normalized by rows j..i (a full column sum would leak
+                # future block content through the normalizer — §3.3.2).
+                # cumulative sum as tril-matmul: same math as jnp.cumsum,
+                # but compiles fast on xla_extension 0.5.1 (see ref.py)
+                cmax = jnp.maximum(jnp.max(x, axis=-2, keepdims=True), NEG_INF)
+                e = jnp.where(mask, jnp.exp(x - cmax), 0.0)
+                tril = jnp.tril(jnp.ones((nb, nb), jnp.float32))
+                csum = jnp.einsum("ik,...kj->...ij", tril, e)
+                ncol = jnp.log(csum + 1e-30) + cmax
+                x = jnp.where(mask, x - jnp.maximum(ncol, NEG_INF), NEG_INF)
+        s = jnp.exp(x)
+    if mask is not None:
+        s = jnp.where(mask, s, 0.0)
+    s_ref[...] = s.astype(s_ref.dtype)
+
+
+def _pallas_sinkhorn(r, *, n_iters, causal, strict):
+    g, nb, _ = r.shape
+    spec = pl.BlockSpec((g, nb, nb), lambda i: (0, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, n_iters=n_iters, causal=causal, strict=strict),
+        grid=(1,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(r.shape, r.dtype),
+        interpret=True,
+    )(r)
+
+
+@functools.lru_cache(maxsize=None)
+def _make(n_iters: int, causal: bool, strict: bool):
+    if causal:
+        ref_fn = jax.vmap(lambda r: ref.causal_sinkhorn_log(r, n_iters, strict=strict))
+    else:
+        ref_fn = jax.vmap(lambda r: ref.sinkhorn_log(r, n_iters))
+
+    @jax.custom_vjp
+    def balance(r):
+        return _pallas_sinkhorn(r, n_iters=n_iters, causal=causal, strict=strict)
+
+    def fwd(r):
+        return balance(r), r
+
+    def bwd(r, ds):
+        _, vjp = jax.vjp(ref_fn, r)
+        return vjp(ds)
+
+    balance.defvjp(fwd, bwd)
+    return balance
+
+
+def sinkhorn_balance(r, n_iters: int, causal: bool = False, strict: bool = False):
+    """Balance a batch of sorting logits ``r`` (G, nb, nb).
+
+    Returns (relaxed) doubly-stochastic matrices; with ``causal=True``
+    entries sending a block to an earlier position are zeroed (``strict``
+    additionally zeroes the diagonal — used for the sorted-key term).
+    """
+    return _make(int(n_iters), bool(causal), bool(strict))(r)

@@ -1,0 +1,94 @@
+"""Pallas kernel for SortCut attention (paper §3.4).
+
+Every query attends to only the first ``n_cut`` *sorted* key/value blocks —
+a hard, differentiable, data-driven truncation: O(ell * n_cut * b) time,
+linear in sequence length.
+
+Grid is ``(G, nq)``: one program per (batch*head, query block). The
+truncated key/value tensors (``n_cut*b`` rows) are small by construction
+(that is the whole point of SortCut) so each program keeps them fully
+resident in VMEM next to its ``(bq, d)`` query tile.
+
+Backward: SortCut runs in encoder-only settings (classification) where the
+bwd cost is dwarfed by training-step overhead, so the custom VJP
+differentiates the jnp reference (pinned to the kernel by tests) instead of
+a second kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(q_ref, k_ref, v_ref, y_ref):
+    # slab layout: the whole (G, bq, d) query slab for one query-block
+    # position, with the full truncated (G, nc, d) KV resident in VMEM
+    q = q_ref[...].astype(jnp.float32)  # (G, bq, d)
+    k = k_ref[...].astype(jnp.float32)  # (G, nc, d)
+    v = v_ref[...].astype(jnp.float32)  # (G, nc, d)
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("gtd,gud->gtu", q, k) * scale
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    y_ref[...] = jnp.einsum("gtu,gud->gtd", p, v).astype(y_ref.dtype)
+
+
+def _pallas_sortcut(q, k_cut, v_cut, *, bq):
+    g, ell, d = q.shape
+    nc = k_cut.shape[1]
+    nq = ell // bq
+    qspec = pl.BlockSpec((g, bq, d), lambda i: (0, i, 0))
+    kspec = pl.BlockSpec((g, nc, d), lambda i: (0, 0, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(nq,),
+        in_specs=[qspec, kspec, kspec],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((g, ell, d), q.dtype),
+        interpret=True,
+    )(q, k_cut, v_cut)
+
+
+@functools.lru_cache(maxsize=None)
+def _make(bq: int):
+    ref_fn = jax.vmap(ref.sortcut_attention)
+
+    @jax.custom_vjp
+    def attn(q, k_cut, v_cut):
+        return _pallas_sortcut(q, k_cut, v_cut, bq=bq)
+
+    def fwd(q, k_cut, v_cut):
+        return attn(q, k_cut, v_cut), (q, k_cut, v_cut)
+
+    def bwd(res, dy):
+        _, vjp = jax.vjp(ref_fn, *res)
+        return vjp(dy)
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def sortcut_attention(q, k_cut, v_cut, block_q: int = 0):
+    """SortCut attention.
+
+    Args:
+      q: ``(G, ell, d)`` queries (full sequence).
+      k_cut, v_cut: ``(G, n_cut*b, d)`` — first ``n_cut`` sorted KV blocks.
+      block_q: query tile length (defaults to the KV length, capped by ell).
+
+    Returns ``(G, ell, d)``.
+    """
+    ell = q.shape[1]
+    if block_q <= 0:
+        block_q = min(ell, max(8, k_cut.shape[1]))
+    while ell % block_q != 0:
+        block_q //= 2
+    return _make(int(block_q))(q, k_cut, v_cut)

@@ -1,0 +1,73 @@
+"""Transformer building blocks (build-time JAX, hand-rolled — no flax/haiku).
+
+Parameters are plain nested dicts of ``jnp.ndarray``; initializers take an
+explicit PRNG key. The AOT exporter flattens these dicts with
+``jax.tree_util`` and records the leaf order in the artifact manifest, so
+the Rust coordinator can carry them opaquely.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in, d_out, scale=None):
+    if scale is None:
+        scale = 1.0 / np.sqrt(d_in)
+    wk, _ = jax.random.split(key)
+    return {
+        "w": jax.random.normal(wk, (d_in, d_out), jnp.float32) * scale,
+        "b": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def layernorm_init(d):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def ffn_init(key, d_model, d_ff):
+    k1, k2 = jax.random.split(key)
+    return {"in": dense_init(k1, d_model, d_ff), "out": dense_init(k2, d_ff, d_model)}
+
+
+def ffn(p, x):
+    return dense(p["out"], jax.nn.relu(dense(p["in"], x)))
+
+
+def embedding_init(key, vocab, d_model):
+    return {"table": jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02}
+
+
+def embed(p, tokens):
+    return p["table"][tokens]
+
+
+def sinusoid_positions(ell: int, d_model: int) -> jnp.ndarray:
+    """Fixed sinusoidal positional encodings (Vaswani et al., 2017)."""
+    pos = np.arange(ell)[:, None].astype(np.float32)
+    i = np.arange(d_model)[None, :].astype(np.float32)
+    angle = pos / np.power(10000.0, (2 * (i // 2)) / d_model)
+    enc = np.where(i % 2 == 0, np.sin(angle), np.cos(angle))
+    return jnp.asarray(enc, jnp.float32)
+
+
+def xent_loss(logits: jnp.ndarray, targets: jnp.ndarray, mask=None) -> jnp.ndarray:
+    """Mean token-level cross entropy; ``mask`` (same shape as targets,
+    float 1/0) selects contributing positions."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,142 @@
+"""L2 models: decoder-only LM, encoder classifier, seq2seq transducer.
+
+Each model is a pure function ``(params, batch..., key) -> logits`` built
+from ``attention.multihead_attention`` with the variant chosen in the
+config, mirroring the paper's tasks:
+
+  - ``lm_logits``        : language modeling / pixel generation (§5.2, §5.3)
+  - ``classifier_logits``: document classification / NLI (§5.4, SortCut)
+  - ``seq2seq_logits``   : algorithmic sorting (§5.1)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, layers
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": attention.attention_init(k1, cfg),
+        "ffn": layers.ffn_init(k2, cfg["d_model"], cfg["d_ff"]),
+        "ln1": layers.layernorm_init(cfg["d_model"]),
+        "ln2": layers.layernorm_init(cfg["d_model"]),
+    }
+
+
+def _xlayer_init(key, cfg):
+    """Decoder layer with cross attention (seq2seq)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    vcfg = dict(cfg, variant="vanilla")  # cross-attention stays dense
+    return {
+        "attn": attention.attention_init(k1, cfg),
+        "xattn": attention.attention_init(k2, vcfg),
+        "ffn": layers.ffn_init(k3, cfg["d_model"], cfg["d_ff"]),
+        "ln1": layers.layernorm_init(cfg["d_model"]),
+        "lnx": layers.layernorm_init(cfg["d_model"]),
+        "ln2": layers.layernorm_init(cfg["d_model"]),
+    }
+
+
+def lm_init(key, cfg):
+    keys = jax.random.split(key, cfg["n_layers"] + 2)
+    return {
+        "embed": layers.embedding_init(keys[0], cfg["vocab"], cfg["d_model"]),
+        "layers": [_layer_init(keys[i + 1], cfg) for i in range(cfg["n_layers"])],
+        "ln_f": layers.layernorm_init(cfg["d_model"]),
+        "head": layers.dense_init(keys[-1], cfg["d_model"], cfg["vocab"]),
+    }
+
+
+def classifier_init(key, cfg):
+    keys = jax.random.split(key, cfg["n_layers"] + 2)
+    return {
+        "embed": layers.embedding_init(keys[0], cfg["vocab"], cfg["d_model"]),
+        "layers": [_layer_init(keys[i + 1], cfg) for i in range(cfg["n_layers"])],
+        "ln_f": layers.layernorm_init(cfg["d_model"]),
+        "head": layers.dense_init(keys[-1], cfg["d_model"], cfg["n_classes"]),
+    }
+
+
+def seq2seq_init(key, cfg):
+    n = cfg["n_layers"]
+    keys = jax.random.split(key, 2 * n + 3)
+    return {
+        "embed": layers.embedding_init(keys[0], cfg["vocab"], cfg["d_model"]),
+        "enc": [_layer_init(keys[1 + i], cfg) for i in range(n)],
+        "dec": [_xlayer_init(keys[1 + n + i], cfg) for i in range(n)],
+        "ln_e": layers.layernorm_init(cfg["d_model"]),
+        "ln_d": layers.layernorm_init(cfg["d_model"]),
+        "head": layers.dense_init(keys[-1], cfg["d_model"], cfg["vocab"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward passes (pre-norm residual blocks)
+# ---------------------------------------------------------------------------
+
+
+def _run_layer(p, x, cfg, *, causal, key):
+    x = x + attention.multihead_attention(p["attn"], layers.layernorm(p["ln1"], x), cfg, causal=causal, key=key)
+    x = x + layers.ffn(p["ffn"], layers.layernorm(p["ln2"], x))
+    return x
+
+
+def _embed_seq(params, tokens, cfg):
+    ell = tokens.shape[1]
+    x = layers.embed(params["embed"], tokens)
+    return x + layers.sinusoid_positions(ell, cfg["d_model"])[None]
+
+
+def lm_logits(params, tokens, cfg, key=None):
+    """Causal LM: tokens (B, ell) int32 -> logits (B, ell, vocab)."""
+    x = _embed_seq(params, tokens, cfg)
+    for i, p in enumerate(params["layers"]):
+        k = None if key is None else jax.random.fold_in(key, i)
+        x = _run_layer(p, x, cfg, causal=True, key=k)
+    return layers.dense(params["head"], layers.layernorm(params["ln_f"], x))
+
+
+def classifier_logits(params, tokens, cfg, key=None):
+    """Encoder classifier: tokens (B, ell) -> class logits (B, n_classes)."""
+    x = _embed_seq(params, tokens, cfg)
+    for i, p in enumerate(params["layers"]):
+        k = None if key is None else jax.random.fold_in(key, i)
+        x = _run_layer(p, x, cfg, causal=False, key=k)
+    x = layers.layernorm(params["ln_f"], x).mean(axis=1)
+    return layers.dense(params["head"], x)
+
+
+def _cross_attend(p, x, mem, cfg):
+    """Standard dense cross-attention (queries x, keys/values mem)."""
+    nh = cfg["n_heads"]
+    q = attention._split_heads(layers.dense(p["q"], x), nh)
+    k = attention._split_heads(layers.dense(p["k"], mem), nh)
+    v = attention._split_heads(layers.dense(p["v"], mem), nh)
+    y = attention._dense_heads(q, k, v)
+    return layers.dense(p["o"], attention._merge_heads(y))
+
+
+def seq2seq_logits(params, src, tgt_in, cfg, key=None):
+    """Encoder-decoder: src (B, ls), tgt_in (B, lt) -> logits (B, lt, vocab)."""
+    mem = _embed_seq(params, src, cfg)
+    for i, p in enumerate(params["enc"]):
+        k = None if key is None else jax.random.fold_in(key, i)
+        mem = _run_layer(p, mem, cfg, causal=False, key=k)
+    mem = layers.layernorm(params["ln_e"], mem)
+
+    x = _embed_seq(params, tgt_in, cfg)
+    for i, p in enumerate(params["dec"]):
+        k = None if key is None else jax.random.fold_in(key, 100 + i)
+        x = x + attention.multihead_attention(p["attn"], layers.layernorm(p["ln1"], x), cfg, causal=True, key=k)
+        x = x + _cross_attend(p["xattn"], layers.layernorm(p["lnx"], x), mem, cfg)
+        x = x + layers.ffn(p["ffn"], layers.layernorm(p["ln2"], x))
+    return layers.dense(params["head"], layers.layernorm(params["ln_d"], x))

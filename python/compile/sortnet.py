@@ -1,0 +1,108 @@
+"""The meta Sorting Network (paper §3.1, §3.3.1, Table 8 variants).
+
+Pipeline per attention layer (and per head — the paper does *not* share R
+across heads):
+
+  1. ``psi_pool``    — block descriptors: sum pooling over each block, or
+                       the causal cumulative-sum variant (eq. 5).
+  2. ``P(·)``        — a small network mapping a descriptor (d_model) to an
+                       ``nb``-dim row of sorting logits. Four variants from
+                       Table 8, selected by ``p_variant``:
+                         1: relu(F2(relu(F1(x))))   2: F2(relu(F1(x)))
+                         3: relu(F1(x))             4: F1(x)        (default)
+  3. Gumbel noise + temperature tau (§3.2.1) on the logits.
+  4. Sinkhorn balancing (L1 Pallas kernel) -> relaxed permutation S.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import sinkhorn_kernel
+from . import layers
+
+
+def sortnet_init(key, d_model: int, nb: int, n_heads: int, p_variant: int = 4):
+    """Per-head sorting network parameters."""
+    k1, k2 = jax.random.split(key)
+    p = {}
+    if p_variant in (1, 2):
+        p["f1"] = {
+            "w": jax.random.normal(k1, (n_heads, d_model, d_model), jnp.float32)
+            / jnp.sqrt(d_model),
+            "b": jnp.zeros((n_heads, d_model), jnp.float32),
+        }
+        d_in2 = d_model
+        k_f2 = k2
+    else:
+        d_in2 = d_model
+        k_f2 = k1
+    p["f2"] = {
+        "w": jax.random.normal(k_f2, (n_heads, d_in2, nb), jnp.float32) / jnp.sqrt(d_in2),
+        "b": jnp.zeros((n_heads, nb), jnp.float32),
+    }
+    return p
+
+
+def psi_pool(x: jnp.ndarray, nb: int, causal: bool) -> jnp.ndarray:
+    """Block descriptors. ``x``: (B, ell, d) -> (B, nb, d).
+
+    Non-causal: sum of the block's tokens (paper eq. 2). Causal: cumulative
+    sum of all tokens up to and including the block's *first* token
+    (paper eq. 5) — conditioning only on past context.
+    """
+    bsz, ell, d = x.shape
+    b = ell // nb
+    if not causal:
+        return x.reshape(bsz, nb, b, d).sum(axis=2)
+    csum = jnp.cumsum(x, axis=1)  # (B, ell, d)
+    idx = jnp.arange(nb) * b  # first token of each block
+    return csum[:, idx, :]
+
+
+def sorting_logits(params, x_pooled: jnp.ndarray, p_variant: int) -> jnp.ndarray:
+    """Apply P(·) per head: (B, nb, d) -> (B, H, nb, nb)."""
+    h = x_pooled
+    if p_variant in (1, 2):
+        h = jnp.einsum("bnd,hde->bhne", h, params["f1"]["w"]) + params["f1"]["b"][None, :, None, :]
+        h = jax.nn.relu(h)
+    else:
+        h = h[:, None]  # (B, 1, nb, d) broadcast over heads in einsum below
+    r = jnp.einsum("bhnd,hdm->bhnm", jnp.broadcast_to(h, (h.shape[0], params["f2"]["w"].shape[0]) + h.shape[-2:]), params["f2"]["w"])
+    r = r + params["f2"]["b"][None, :, None, :]
+    if p_variant in (1, 3):
+        r = jax.nn.relu(r)
+    return r  # (B, H, nb, nb)
+
+
+def gumbel_noise(key, shape, dtype=jnp.float32):
+    u = jax.random.uniform(key, shape, dtype, minval=1e-6, maxval=1.0 - 1e-6)
+    return -jnp.log(-jnp.log(u))
+
+
+def sort_matrix(
+    params,
+    x: jnp.ndarray,
+    *,
+    nb: int,
+    n_iters: int,
+    tau: float,
+    p_variant: int,
+    causal: bool,
+    key=None,
+) -> jnp.ndarray:
+    """Full SortNet: input sequence -> per-head relaxed permutation.
+
+    Returns ``S``: (B, H, nb, nb). ``key=None`` disables Gumbel noise
+    (deterministic eval). Causal mode masks strictly (j < i) so a sorted
+    key block never contains same-block future tokens (see ref.causal_mask).
+    """
+    pooled = psi_pool(x, nb, causal)  # (B, nb, d)
+    r = sorting_logits(params, pooled, p_variant)  # (B, H, nb, nb)
+    if key is not None and tau > 0:
+        r = (r + gumbel_noise(key, r.shape, r.dtype)) / tau
+    bsz, nh = r.shape[0], r.shape[1]
+    flat = r.reshape(bsz * nh, nb, nb)
+    s = sinkhorn_kernel.sinkhorn_balance(flat, n_iters, causal=causal, strict=causal)
+    return s.reshape(bsz, nh, nb, nb)

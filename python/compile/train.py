@@ -1,0 +1,165 @@
+"""Loss functions, hand-rolled Adam, and train/eval step builders.
+
+No optax offline — Adam is implemented directly on the parameter pytree.
+The exported ``train_step`` signature (flattened by aot.py) is:
+
+    (params..., m..., v..., step, seed, batch...) ->
+    (params'..., m'..., v'..., step+1, loss)
+
+``step`` is f32 (drives warmup/inv-sqrt LR in-graph), ``seed`` is int32
+(PRNGKey for Gumbel noise). Eval graphs are deterministic (no noise).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, model
+
+
+# ---------------------------------------------------------------------------
+# Adam (Kingma & Ba) on pytrees
+# ---------------------------------------------------------------------------
+
+B1, B2, EPS = 0.9, 0.98, 1e-9
+
+
+def adam_init(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return jax.tree_util.tree_map(zeros, params), jax.tree_util.tree_map(zeros, params)
+
+
+def lr_schedule(step, d_model: int, warmup: float):
+    """Transformer inverse-sqrt schedule (Vaswani et al., 2017)."""
+    s = jnp.maximum(step, 1.0)
+    return (d_model ** -0.5) * jnp.minimum(s ** -0.5, s * warmup ** -1.5)
+
+
+def adam_update(params, grads, m, v, step, d_model, warmup, lr_mult=1.0):
+    lr = lr_schedule(step, d_model, warmup) * lr_mult
+    m = jax.tree_util.tree_map(lambda a, g: B1 * a + (1 - B1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda a, g: B2 * a + (1 - B2) * g * g, v, grads)
+    mh = jax.tree_util.tree_map(lambda a: a / (1 - B1 ** step), m)
+    vh = jax.tree_util.tree_map(lambda a: a / (1 - B2 ** step), v)
+    params = jax.tree_util.tree_map(
+        lambda p, a, b: p - lr * a / (jnp.sqrt(b) + EPS), params, mh, vh
+    )
+    return params, m, v
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, tokens, cfg, key=None):
+    """tokens (B, ell+1) -> mean next-token xent over ell positions."""
+    logits = model.lm_logits(params, tokens[:, :-1], cfg, key=key)
+    return layers.xent_loss(logits, tokens[:, 1:])
+
+
+def classifier_loss(params, tokens, labels, cfg, key=None):
+    logits = model.classifier_logits(params, tokens, cfg, key=key)
+    onehot_ll = jax.nn.log_softmax(logits)[jnp.arange(labels.shape[0]), labels]
+    return -jnp.mean(onehot_ll)
+
+
+def seq2seq_loss(params, src, tgt, cfg, key=None):
+    """tgt (B, lt+1): teacher forcing on tgt[:, :-1] -> predict tgt[:, 1:].
+    Pad token 0 is excluded from the loss."""
+    logits = model.seq2seq_logits(params, src, tgt[:, :-1], cfg, key=key)
+    mask = (tgt[:, 1:] != 0).astype(jnp.float32)
+    return layers.xent_loss(logits, tgt[:, 1:], mask)
+
+
+# ---------------------------------------------------------------------------
+# step builders — each returns (fn, example_args) ready for jax.jit().lower()
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(family: str, cfg, train_cfg):
+    d_model, warmup = cfg["d_model"], float(train_cfg.get("warmup", 400))
+    lr_mult = float(train_cfg.get("lr_mult", 1.0))
+
+    def step_fn(params, m, v, step, seed, *batch):
+        key = jax.random.PRNGKey(seed)
+        if family == "lm":
+            loss_fn = lambda p: lm_loss(p, batch[0], cfg, key=key)
+        elif family == "cls":
+            loss_fn = lambda p: classifier_loss(p, batch[0], batch[1], cfg, key=key)
+        elif family == "seq2seq":
+            loss_fn = lambda p: seq2seq_loss(p, batch[0], batch[1], cfg, key=key)
+        else:
+            raise ValueError(family)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        step = step + 1.0
+        params, m, v = adam_update(params, grads, m, v, step, d_model, warmup, lr_mult)
+        return params, m, v, step, loss
+
+    return step_fn
+
+
+def make_eval_step(family: str, cfg):
+    """Deterministic eval graph.
+
+    lm      : (params, tokens)      -> (loss,)
+    cls     : (params, tokens, labels) -> (loss, n_correct, pred (B,) i32)
+    seq2seq : (params, src, tgt_in) -> (loss_like_dummy, argmax (B, lt) i32)
+    """
+
+    def eval_fn(params, *batch):
+        if family == "lm":
+            return (lm_loss(params, batch[0], cfg),)
+        if family == "cls":
+            logits = model.classifier_logits(params, batch[0], cfg)
+            loss = classifier_loss(params, batch[0], batch[1], cfg)
+            pred = jnp.argmax(logits, -1).astype(jnp.int32)
+            correct = jnp.sum((pred == batch[1]).astype(jnp.int32))
+            return (loss, correct, pred)
+        if family == "seq2seq":
+            logits = model.seq2seq_logits(params, batch[0], batch[1], cfg)
+            pred = jnp.argmax(logits, -1).astype(jnp.int32)  # (B, lt)
+            mask = (batch[1] != 0) | (jnp.arange(batch[1].shape[1])[None] == 0)
+            loss = layers.xent_loss(logits, jnp.maximum(batch[1], 0), mask.astype(jnp.float32))
+            return (loss, pred)
+        raise ValueError(family)
+
+    return eval_fn
+
+
+def batch_shapes(family: str, cfg, train_cfg):
+    """ShapeDtypeStructs of the batch inputs for train graphs."""
+    bsz = train_cfg["batch"]
+    i32 = jnp.int32
+    if family == "lm":
+        return [jax.ShapeDtypeStruct((bsz, cfg["ell"] + 1), i32)]
+    if family == "cls":
+        return [
+            jax.ShapeDtypeStruct((bsz, cfg["ell"]), i32),
+            jax.ShapeDtypeStruct((bsz,), i32),
+        ]
+    if family == "seq2seq":
+        return [
+            jax.ShapeDtypeStruct((bsz, cfg["ell"]), i32),
+            jax.ShapeDtypeStruct((bsz, cfg["ell_tgt"] + 1), i32),
+        ]
+    raise ValueError(family)
+
+
+def eval_batch_shapes(family: str, cfg, train_cfg):
+    bsz = train_cfg.get("eval_batch", train_cfg["batch"])
+    i32 = jnp.int32
+    if family == "lm":
+        return [jax.ShapeDtypeStruct((bsz, cfg["ell"] + 1), i32)]
+    if family == "cls":
+        return [
+            jax.ShapeDtypeStruct((bsz, cfg["ell"]), i32),
+            jax.ShapeDtypeStruct((bsz,), i32),
+        ]
+    if family == "seq2seq":
+        return [
+            jax.ShapeDtypeStruct((bsz, cfg["ell"]), i32),
+            jax.ShapeDtypeStruct((bsz, cfg["ell_tgt"]), i32),
+        ]
+    raise ValueError(family)

@@ -1,0 +1,89 @@
+"""AOT export consistency: manifests must agree with the live model code
+(leaf order/shapes from jax.eval_shape), and exported HLO text must carry
+the expected entry-parameter count (3n+2+batch for train graphs)."""
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs, model, train
+
+ARTIFACTS = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "registry.json")),
+    reason="run `make artifacts` first",
+)
+
+
+def _manifest(name):
+    with open(os.path.join(ARTIFACTS, f"{name}.manifest.json")) as f:
+        return json.load(f)
+
+
+def test_leaf_entries_deterministic():
+    cfg = configs.BY_NAME["lmw_tiny__sinkhorn_b16"]["cfg"]
+    shape = jax.eval_shape(lambda s: model.lm_init(jax.random.PRNGKey(s), cfg), jnp.int32(0))
+    a = aot._leaf_entries(shape)
+    b = aot._leaf_entries(shape)
+    assert a == b
+    assert all(e["dtype"] == "f32" for e in a)
+
+
+@needs_artifacts
+def test_manifest_matches_live_model():
+    name = "lmw_tiny__sinkhorn_b16"
+    m = _manifest(name)
+    cfg = configs.BY_NAME[name]["cfg"]
+    shape = jax.eval_shape(lambda s: model.lm_init(jax.random.PRNGKey(s), cfg), jnp.int32(0))
+    live = aot._leaf_entries(shape)
+    assert m["params"] == live, "manifest drifted from model code — re-run make artifacts"
+
+
+@needs_artifacts
+def test_registry_covers_all_experiments():
+    with open(os.path.join(ARTIFACTS, "registry.json")) as f:
+        reg = json.load(f)
+    names = {e["name"] for e in reg["experiments"]}
+    for e in configs.EXPERIMENTS:
+        assert e["name"] in names, f"{e['name']} missing from registry"
+
+
+@needs_artifacts
+@pytest.mark.parametrize(
+    "name", ["lmw_tiny__vanilla", "lmw_tiny__sinkhorn_b16", "sort__sinkhorn_b8", "imdbw__sortcut_2x8"]
+)
+def test_hlo_entry_arity(name):
+    m = _manifest(name)
+    n = m["n_leaves"]
+    nb_inputs = len(m["train_batch_inputs"])
+    path = os.path.join(ARTIFACTS, m["artifacts"]["train"])
+    with open(path) as f:
+        text = f.read()
+    entry = re.search(r"\nENTRY [^{]*\{(.*)", text, re.S)
+    assert entry, "no ENTRY computation in HLO text"
+    n_params = len(set(re.findall(r"parameter\((\d+)\)", entry.group(1))))
+    assert n_params == 3 * n + 2 + nb_inputs, (
+        f"{name}: HLO has {n_params} entry params, manifest implies {3 * n + 2 + nb_inputs}"
+    )
+
+
+@needs_artifacts
+def test_eval_hlo_arity_seq2seq_doubles_length():
+    m = _manifest("sort__sinkhorn_b8")
+    assert m["eval_batch_inputs"][0]["shape"][1] == 2 * m["cfg"]["ell"]
+
+
+def test_batch_shapes_match_families():
+    for fam, cfg_extra in [("lm", {}), ("cls", {"n_classes": 2}), ("seq2seq", {"ell_tgt": 16})]:
+        cfg = dict(d_model=16, n_heads=2, d_ff=32, n_layers=1, vocab=32, ell=16,
+                   block=4, nb=4, variant="vanilla", sinkhorn_iters=3, tau=0.75,
+                   p_variant=4, share_kv=False, **cfg_extra)
+        tcfg = dict(batch=4)
+        shapes = train.batch_shapes(fam, cfg, tcfg)
+        assert all(s.dtype == jnp.int32 for s in shapes)
+        assert shapes[0].shape[0] == 4

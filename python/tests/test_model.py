@@ -1,0 +1,193 @@
+"""L2 model tests: shapes for every attention variant, causality (no
+gradient from future targets to past inputs), SortNet behavior, and
+trainability (loss decreases on a memorizable batch)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import attention, configs, model, sortnet, train
+
+TINY = dict(
+    d_model=16, n_heads=2, d_ff=32, n_layers=2, vocab=32, ell=16,
+    block=4, nb=4, sinkhorn_iters=3, tau=0.75, p_variant=4, share_kv=False,
+)
+
+VARIANTS = ["vanilla", "local", "sparse", "sinkhorn", "mixture", "sortcut"]
+
+
+def cfg_for(variant, **kw):
+    c = dict(TINY)
+    c["variant"] = variant
+    if variant == "sortcut":
+        c["n_cut"] = 2
+    c.update(kw)
+    return c
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_lm_logits_shape(variant):
+    cfg = cfg_for(variant)
+    params = model.lm_init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.zeros((2, cfg["ell"]), jnp.int32)
+    out = model.lm_logits(params, toks, cfg, key=jax.random.PRNGKey(1))
+    assert out.shape == (2, cfg["ell"], cfg["vocab"])
+    assert jnp.isfinite(out).all()
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_classifier_logits_shape(variant):
+    cfg = cfg_for(variant, n_classes=3)
+    params = model.classifier_init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.zeros((4, cfg["ell"]), jnp.int32)
+    out = model.classifier_logits(params, toks, cfg)
+    assert out.shape == (4, 3)
+
+
+@pytest.mark.parametrize("variant", ["vanilla", "local", "sinkhorn"])
+def test_seq2seq_logits_shape(variant):
+    cfg = cfg_for(variant)
+    cfg["ell_tgt"] = cfg["ell"]
+    params = model.seq2seq_init(jax.random.PRNGKey(0), cfg)
+    src = jnp.zeros((2, cfg["ell"]), jnp.int32)
+    tgt = jnp.zeros((2, cfg["ell"]), jnp.int32)
+    out = model.seq2seq_logits(params, src, tgt, cfg)
+    assert out.shape == (2, cfg["ell"], cfg["vocab"])
+
+
+@pytest.mark.parametrize("variant", ["vanilla", "local", "sparse", "sinkhorn", "mixture"])
+def test_lm_causality_no_future_grad(variant):
+    """d loss(position t) / d embedding(token u) must vanish for u > t."""
+    cfg = cfg_for(variant)
+    params = model.lm_init(jax.random.PRNGKey(0), cfg)
+    # distinct tokens so "future token id" never appears in the past
+    perm = jax.random.permutation(jax.random.PRNGKey(1), cfg["vocab"])[: cfg["ell"]]
+    toks = perm[None, :]
+    t_probe = cfg["ell"] // 2
+
+    def loss_at_t(table):
+        p2 = dict(params)
+        p2["embed"] = {"table": table}
+        logits = model.lm_logits(p2, toks, cfg, key=jax.random.PRNGKey(2))
+        return logits[0, t_probe].sum()
+
+    g = jax.grad(loss_at_t)(params["embed"]["table"])
+    # token at a future position u > t_probe, unique in the sequence
+    future_tok = int(toks[0, t_probe + 2])
+    past_toks = set(int(x) for x in np.asarray(toks[0, : t_probe + 1]))
+    if future_tok in past_toks:
+        pytest.skip("token collision; causality unverifiable for this draw")
+    leak = float(jnp.abs(g[future_tok]).max())
+    assert leak < 1e-6, f"future leak {leak} in {variant}"
+
+
+def test_sortnet_doubly_stochastic():
+    cfg = cfg_for("sinkhorn")
+    p = sortnet.sortnet_init(jax.random.PRNGKey(0), cfg["d_model"], cfg["nb"], cfg["n_heads"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, cfg["ell"], cfg["d_model"]))
+    s = sortnet.sort_matrix(
+        p, x, nb=cfg["nb"], n_iters=20, tau=0.75, p_variant=4, causal=False,
+        key=jax.random.PRNGKey(2),
+    )
+    assert s.shape == (2, cfg["n_heads"], cfg["nb"], cfg["nb"])
+    np.testing.assert_allclose(s.sum(-1), 1.0, atol=2e-2)
+    np.testing.assert_allclose(s.sum(-2), 1.0, atol=2e-2)
+
+
+def test_sortnet_heads_differ():
+    """Per-head sort matrices (paper: no sharing across heads)."""
+    cfg = cfg_for("sinkhorn")
+    p = sortnet.sortnet_init(jax.random.PRNGKey(3), cfg["d_model"], cfg["nb"], cfg["n_heads"])
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, cfg["ell"], cfg["d_model"]))
+    s = sortnet.sort_matrix(p, x, nb=cfg["nb"], n_iters=5, tau=0.75, p_variant=4, causal=False)
+    assert not np.allclose(s[0, 0], s[0, 1])
+
+
+def test_causal_pooling_uses_only_past():
+    """psi_pool causal: block descriptor i must not change when tokens after
+    the block's first token are perturbed."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 16, 8))
+    base = sortnet.psi_pool(x, 4, causal=True)
+    x2 = x.at[0, 5:].add(100.0)  # block 1 starts at index 4
+    pert = sortnet.psi_pool(x2, 4, causal=True)
+    np.testing.assert_allclose(base[0, 1], pert[0, 1], rtol=1e-6)
+    assert not np.allclose(base[0, 2], pert[0, 2])
+
+
+@pytest.mark.parametrize("pv", [1, 2, 3, 4])
+def test_sortnet_p_variants(pv):
+    cfg = cfg_for("sinkhorn", p_variant=pv)
+    p = sortnet.sortnet_init(jax.random.PRNGKey(0), cfg["d_model"], cfg["nb"], cfg["n_heads"], p_variant=pv)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, cfg["ell"], cfg["d_model"]))
+    s = sortnet.sort_matrix(p, x, nb=cfg["nb"], n_iters=3, tau=0.75, p_variant=pv, causal=False)
+    assert s.shape == (2, cfg["n_heads"], cfg["nb"], cfg["nb"])
+    assert jnp.isfinite(s).all()
+
+
+def test_gumbel_noise_changes_with_key_and_tau():
+    cfg = cfg_for("sinkhorn")
+    p = sortnet.sortnet_init(jax.random.PRNGKey(0), cfg["d_model"], cfg["nb"], cfg["n_heads"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, cfg["ell"], cfg["d_model"]))
+    kw = dict(nb=cfg["nb"], n_iters=5, p_variant=4, causal=False)
+    s1 = sortnet.sort_matrix(p, x, tau=0.75, key=jax.random.PRNGKey(2), **kw)
+    s2 = sortnet.sort_matrix(p, x, tau=0.75, key=jax.random.PRNGKey(3), **kw)
+    s_det = sortnet.sort_matrix(p, x, tau=0.75, key=None, **kw)
+    assert not np.allclose(s1, s2)
+    assert np.isfinite(np.asarray(s_det)).all()
+
+
+@pytest.mark.parametrize("family,variant", [("lm", "sinkhorn"), ("cls", "sortcut"), ("seq2seq", "sinkhorn")])
+def test_train_step_loss_decreases(family, variant):
+    """Memorize one small batch: loss after 25 Adam steps must drop."""
+    cfg = cfg_for(variant)
+    tcfg = dict(batch=4, warmup=10, default_steps=10)
+    if family == "cls":
+        cfg["n_classes"] = 2
+    if family == "seq2seq":
+        cfg["ell_tgt"] = cfg["ell"]
+    step = jax.jit(train.make_train_step(family, cfg, tcfg))
+    init = {"lm": model.lm_init, "cls": model.classifier_init, "seq2seq": model.seq2seq_init}[family]
+    params = init(jax.random.PRNGKey(0), cfg)
+    m, v = train.adam_init(params)
+    key = jax.random.PRNGKey(9)
+    if family == "lm":
+        batch = (jax.random.randint(key, (4, cfg["ell"] + 1), 0, cfg["vocab"]),)
+    elif family == "cls":
+        batch = (
+            jax.random.randint(key, (4, cfg["ell"]), 0, cfg["vocab"]),
+            jnp.array([0, 1, 0, 1], jnp.int32),
+        )
+    else:
+        src = jax.random.randint(key, (4, cfg["ell"]), 4, cfg["vocab"])
+        tgt = jnp.concatenate([jnp.full((4, 1), 2, jnp.int32), jnp.sort(src, axis=1)], axis=1)
+        batch = (src, tgt)
+    s = jnp.float32(0.0)
+    losses = []
+    for i in range(25):
+        params, m, v, s, loss = step(params, m, v, s, i, *batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+
+def test_share_kv_changes_output():
+    cfg = cfg_for("sinkhorn")
+    cfg2 = cfg_for("sinkhorn", share_kv=True)
+    params = model.lm_init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, cfg["ell"]), 0, cfg["vocab"])
+    y1 = model.lm_logits(params, toks, cfg)
+    y2 = model.lm_logits(params, toks, cfg2)
+    assert not np.allclose(y1, y2)
+
+
+def test_registry_configs_consistent():
+    for e in configs.EXPERIMENTS:
+        cfg = e["cfg"]
+        assert cfg["ell"] % cfg["nb"] == 0, e["name"]
+        assert cfg["d_model"] % cfg["n_heads"] == 0, e["name"]
+        if cfg["variant"] == "sortcut":
+            assert cfg["n_cut"] <= cfg["nb"], e["name"]
+        if "ell_eval" in cfg:
+            assert cfg["ell_eval"] % cfg["nb"] == 0, e["name"]
+    names = [e["name"] for e in configs.EXPERIMENTS]
+    assert len(names) == len(set(names)), "duplicate experiment names"

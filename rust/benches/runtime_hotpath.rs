@@ -1,0 +1,79 @@
+//! Microbenchmarks of the L3 hot path (§Perf): literal upload, train-step
+//! execute, eval execute, end-to-end step including data generation, and
+//! server batch assembly. These numbers drive the EXPERIMENTS.md §Perf
+//! iteration log.
+//!
+//! Run: cargo bench --bench runtime_hotpath [-- --exp NAME --iters N]
+
+use sinkhorn::coordinator::TrainOptions;
+use sinkhorn::data::TaskData;
+use sinkhorn::runtime::{artifacts_dir, Experiment, Runtime};
+use sinkhorn::util::cli::Args;
+use sinkhorn::util::stats::{percentile, time_iters};
+
+fn report(label: &str, secs: &mut [f64]) {
+    let p50 = percentile(secs, 50.0) * 1e3;
+    let p95 = percentile(secs, 95.0) * 1e3;
+    let mean = secs.iter().sum::<f64>() / secs.len() as f64 * 1e3;
+    println!("{label:<42} mean {mean:>8.3}ms  p50 {p50:>8.3}ms  p95 {p95:>8.3}ms");
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let name = args.str("exp", "lmw_tiny__sinkhorn_b16");
+    let iters = args.usize("iters", 20)?;
+    let artifacts = artifacts_dir();
+    let rt = Runtime::cpu()?;
+    let exp = Experiment::load(&artifacts, &name)?;
+    let mut data = TaskData::for_experiment(&exp.manifest)?;
+    println!("== runtime hot path: {name} ({} params) ==", exp.manifest.n_params());
+
+    // 1. batch generation (pure rust data pipeline)
+    let mut t = time_iters(3, iters, || {
+        let _ = data.train_batch();
+    });
+    report("data: train_batch generation", &mut t);
+
+    // 2. literal upload
+    let batch = data.train_batch();
+    let mut t = time_iters(3, iters, || {
+        let _ = batch.iter().map(|b| b.to_literal().unwrap()).collect::<Vec<_>>();
+    });
+    report("runtime: host->literal upload", &mut t);
+
+    // 3. train-step execute (graph already compiled after warmup)
+    let mut state = exp.init_state(&rt, 1)?;
+    let lits: Vec<_> = batch.iter().map(|b| b.to_literal().unwrap()).collect();
+    let mut t = time_iters(2, iters, || {
+        exp.train_step(&rt, &mut state, 1, &lits).unwrap();
+    });
+    report("runtime: train_step execute+state swap", &mut t);
+
+    // 4. eval execute
+    if let TaskData::Lm(d) = &mut data {
+        let eval_batches = d.eval_batches(1);
+        let elits: Vec<_> = eval_batches[0].iter().map(|b| b.to_literal().unwrap()).collect();
+        let mut t = time_iters(2, iters, || {
+            exp.eval(&rt, &state.params, &elits).unwrap();
+        });
+        report("runtime: eval execute", &mut t);
+    }
+
+    // 5. end-to-end step (data + upload + execute)
+    let mut t = time_iters(1, iters, || {
+        let b = data.train_batch();
+        let l: Vec<_> = b.iter().map(|x| x.to_literal().unwrap()).collect();
+        exp.train_step(&rt, &mut state, 2, &l).unwrap();
+    });
+    report("e2e: full train step", &mut t);
+
+    // 6. training throughput over a short run (includes logging machinery)
+    let mut d2 = TaskData::for_experiment(&exp.manifest)?;
+    let opts = TrainOptions { steps: iters, seed: 3, log_every: 1000, verbose: false, checkpoint: None };
+    let mut s2 = exp.init_state(&rt, 3)?;
+    let t0 = std::time::Instant::now();
+    sinkhorn::coordinator::train(&rt, &exp, &mut d2, &mut s2, &opts)?;
+    let sps = iters as f64 / t0.elapsed().as_secs_f64();
+    println!("{:<42} {sps:>8.2} steps/s", "coordinator: sustained training");
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! `cargo bench` target: regenerates every paper table/figure at reduced
+//! step budgets (a fast regression of the full `sinkhorn bench --target all`
+//! run used for EXPERIMENTS.md). Pass harness args after `--`:
+//!   cargo bench --bench tables -- --target table1 --scale 0.3
+//!
+//! No criterion offline — this is a plain main() harness on
+//! `sinkhorn::bench` (see util::stats for the timing substrate).
+
+use sinkhorn::bench::{tables, BenchOptions};
+use sinkhorn::runtime::{artifacts_dir, Registry, Runtime};
+use sinkhorn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let opts = BenchOptions {
+        artifacts: args.opt_str("artifacts").map(Into::into).unwrap_or_else(artifacts_dir),
+        // default: quick regression pass (≈1/8 of the full budget)
+        scale: args.f64("scale", 0.125)?,
+        steps: args.opt_str("steps").map(|s| s.parse()).transpose()?,
+        seed: 17,
+        eval_batches: args.usize("eval-batches", 2)?,
+        verbose: args.bool("verbose"),
+        // teacher-forced seq2seq eval keeps the bench fast; the example
+        // sort_seq2seq and `sinkhorn bench table1` do true greedy decode
+        fast_decode: !args.has("full-decode"),
+    };
+    let rt = Runtime::cpu()?;
+    let reg = Registry::load(&opts.artifacts)?;
+    let target = args.str("target", "all");
+    let t0 = std::time::Instant::now();
+    if target == "all" {
+        for t in tables::ALL_TARGETS {
+            tables::run_target(&rt, &reg, &opts, t)?;
+        }
+    } else {
+        tables::run_target(&rt, &reg, &opts, &target)?;
+    }
+    let (csecs, cn) = *rt.compile_stats.borrow();
+    println!(
+        "[bench tables] done in {:.1}s (compile: {cn} graphs, {csecs:.1}s)",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,155 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation section (plus the §4 memory analysis) on the synthetic
+//! testbed. Each target trains the registered experiments from scratch,
+//! evaluates with the task's metric, and prints paper-vs-measured rows.
+
+pub mod paper;
+pub mod tables;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{self, TrainOptions};
+use crate::data::TaskData;
+use crate::runtime::{Experiment, Registry, Runtime};
+
+/// Bench-wide options (from the CLI).
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    pub artifacts: PathBuf,
+    /// multiplies each experiment's default_steps
+    pub scale: f64,
+    /// hard override of the step count (takes precedence over scale)
+    pub steps: Option<usize>,
+    pub seed: i32,
+    pub eval_batches: usize,
+    pub verbose: bool,
+    /// use teacher-forced seq2seq eval (fast) instead of true greedy decode
+    pub fast_decode: bool,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions {
+            artifacts: crate::runtime::artifacts_dir(),
+            scale: 1.0,
+            steps: None,
+            seed: 17,
+            eval_batches: 4,
+            verbose: false,
+            fast_decode: false,
+        }
+    }
+}
+
+/// Result of one experiment run: the task metric(s).
+#[derive(Debug, Clone)]
+pub struct ExpResult {
+    pub name: String,
+    pub variant: String,
+    pub n_params: usize,
+    pub train_loss: f64,
+    pub steps_per_sec: f64,
+    /// primary metric (ppl / bpc / bpd / accuracy / EM)
+    pub metric: f64,
+    /// secondary metric (edit distance for table 1)
+    pub metric2: Option<f64>,
+}
+
+/// Train + evaluate one experiment end to end.
+pub fn run_experiment(rt: &Runtime, opts: &BenchOptions, name: &str) -> Result<ExpResult> {
+    let exp = Experiment::load(&opts.artifacts, name)?;
+    let m = &exp.manifest;
+    let default_steps = m.train_cfg.usize_of("default_steps").unwrap_or(200);
+    let steps = opts.steps.unwrap_or(((default_steps as f64 * opts.scale) as usize).max(10));
+
+    let mut data = TaskData::for_experiment(m)?;
+    if opts.verbose {
+        println!("[{name}] training {steps} steps ({} params)...", m.n_params());
+    }
+    let topts = TrainOptions {
+        steps,
+        seed: opts.seed,
+        log_every: (steps / 10).max(1),
+        verbose: opts.verbose,
+        checkpoint: None,
+    };
+    let (state, report) = coordinator::train_from_scratch(rt, &exp, &mut data, &topts)?;
+
+    let (metric, metric2) = match &mut data {
+        TaskData::Lm(d) => {
+            let loss = coordinator::eval_lm(rt, &exp, &state, d, opts.eval_batches)?;
+            let key = name.split("__").next().unwrap_or("");
+            let metric = if key.starts_with("lmc") {
+                coordinator::bpc(loss)
+            } else if key.starts_with("img") {
+                coordinator::bpd(loss)
+            } else {
+                coordinator::perplexity(loss)
+            };
+            (metric, None)
+        }
+        TaskData::Cls(d) => {
+            let (_loss, acc) = coordinator::eval_cls(rt, &exp, &state, d)?;
+            (acc * 100.0, None)
+        }
+        TaskData::Sort(d) => {
+            let (em, ed) = if opts.fast_decode {
+                coordinator::eval_sort_teacher_forced(rt, &exp, &state, d, opts.eval_batches)?
+            } else {
+                coordinator::eval_sort(rt, &exp, &state, d, opts.eval_batches)?
+            };
+            (em * 100.0, Some(ed))
+        }
+    };
+
+    if opts.verbose {
+        println!(
+            "[{name}] metric {metric:.4}{} ({:.2} steps/s)",
+            metric2.map(|e| format!(" ed {e:.4}")).unwrap_or_default(),
+            report.steps_per_sec
+        );
+    }
+    Ok(ExpResult {
+        name: name.to_string(),
+        variant: name.split("__").nth(1).unwrap_or("?").to_string(),
+        n_params: m.n_params(),
+        train_loss: report.ema_loss,
+        steps_per_sec: report.steps_per_sec,
+        metric,
+        metric2,
+    })
+}
+
+/// Run every experiment of one table; preserves registry order.
+pub fn run_table_experiments(
+    rt: &Runtime,
+    reg: &Registry,
+    opts: &BenchOptions,
+    table: &str,
+    name_filter: Option<&str>,
+) -> Result<Vec<ExpResult>> {
+    let entries = reg.by_table(table);
+    if entries.is_empty() {
+        bail!("no experiments registered for '{table}'");
+    }
+    let mut out = Vec::new();
+    for e in entries {
+        if let Some(f) = name_filter {
+            if !e.name.contains(f) {
+                continue;
+            }
+        }
+        out.push(run_experiment(rt, opts, &e.name)?);
+    }
+    Ok(out)
+}
+
+/// Write a rendered table + raw rows under `artifacts/results/`.
+pub fn save_result(artifacts: &Path, tag: &str, rendered: &str) -> Result<()> {
+    let dir = artifacts.join("results");
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(format!("{tag}.txt")), rendered)?;
+    Ok(())
+}

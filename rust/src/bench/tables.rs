@@ -1,0 +1,385 @@
+//! Per-table bench targets: each regenerates one table/figure of the paper
+//! with paper-vs-measured columns and records it under artifacts/results/.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::runtime::{Registry, Runtime};
+use crate::sinkhorn::memory;
+use crate::util::stats::Table;
+
+use super::{paper, run_table_experiments, save_result, BenchOptions, ExpResult};
+
+fn fmt(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+fn by_variant(results: &[ExpResult]) -> HashMap<String, &ExpResult> {
+    results.iter().map(|r| (r.name.clone(), r)).collect()
+}
+
+fn lookup<'a>(
+    map: &'a HashMap<String, &'a ExpResult>,
+    prefix: &str,
+    variant: &str,
+) -> Option<&'a ExpResult> {
+    map.get(&format!("{prefix}__{variant}")).copied()
+}
+
+/// Table 1 — algorithmic sorting: EM + edit distance, eval at 2x length.
+pub fn table1(rt: &Runtime, reg: &Registry, opts: &BenchOptions) -> Result<String> {
+    let results = run_table_experiments(rt, reg, opts, "table1", None)?;
+    let map = by_variant(&results);
+    let mut t = Table::new(
+        "Table 1 — seq2seq sorting (paper: ell=256 eval 512 | ours: ell=64 eval 128)",
+        &["Model", "paper EdDist", "paper EM%", "ours EdDist", "ours EM%"],
+    );
+    for (variant, p_ed, p_em) in paper::table1_paper() {
+        let (ed, em) = lookup(&map, "sort", variant)
+            .map(|r| (fmt(r.metric2.unwrap_or(f64::NAN)), fmt(r.metric)))
+            .unwrap_or(("-".into(), "-".into()));
+        t.row(&[variant.to_string(), fmt(p_ed), fmt(p_em), ed, em]);
+    }
+    finish(opts, "table1", t)
+}
+
+/// Table 2 — word-level LM perplexity, two model sizes.
+pub fn table2(rt: &Runtime, reg: &Registry, opts: &BenchOptions) -> Result<String> {
+    let results = run_table_experiments(rt, reg, opts, "table2", None)?;
+    let map = by_variant(&results);
+    let mut t = Table::new(
+        "Table 2 — word LM ppl (paper: LM1B Base/Big | ours: synthetic, tiny/small)",
+        &["Model", "paper Base", "paper Big", "ours tiny", "ours small"],
+    );
+    for (variant, p_base, p_big) in paper::table2_paper() {
+        let tiny = lookup(&map, "lmw_tiny", variant).map(|r| fmt(r.metric)).unwrap_or("-".into());
+        let small =
+            lookup(&map, "lmw_small", variant).map(|r| fmt(r.metric)).unwrap_or("-".into());
+        t.row(&[variant.to_string(), fmt(p_base), fmt(p_big), tiny, small]);
+    }
+    finish(opts, "table2", t)
+}
+
+/// Table 3 — SOTA comparison: quoted rows + our measured best variants.
+pub fn table3(rt: &Runtime, reg: &Registry, opts: &BenchOptions) -> Result<String> {
+    // reuse table2's best sinkhorn + mixture runs (paper reports its best)
+    let results = run_table_experiments(rt, reg, opts, "table2", Some("sinkhorn_b32"))?;
+    let mix = run_table_experiments(rt, reg, opts, "table2", Some("mixture"))?;
+    let mut t = Table::new(
+        "Table 3 — published LM1B comparison (quoted) + ours (measured, synthetic corpus)",
+        &["Model", "# Params", "Perplexity", "source"],
+    );
+    for (model, params, ppl) in paper::table3_paper() {
+        t.row(&[model.to_string(), params.to_string(), fmt(ppl), "paper".into()]);
+    }
+    for r in results.iter().chain(mix.iter()) {
+        t.row(&[
+            format!("ours {}", r.name),
+            format!("{:.2}M", r.n_params as f64 / 1e6),
+            fmt(r.metric),
+            "measured".into(),
+        ]);
+    }
+    finish(opts, "table3", t)
+}
+
+/// Table 4 — char-level LM bpc.
+pub fn table4(rt: &Runtime, reg: &Registry, opts: &BenchOptions) -> Result<String> {
+    let results = run_table_experiments(rt, reg, opts, "table4", None)?;
+    let map = by_variant(&results);
+    let mut t = Table::new(
+        "Table 4 — char LM bpc (paper: LM1B 1024 chars | ours: synthetic, 256 chars)",
+        &["Model", "paper Base", "paper Big", "ours"],
+    );
+    for (variant, p_base, p_big) in paper::table4_paper() {
+        let ours = lookup(&map, "lmc", variant).map(|r| fmt(r.metric)).unwrap_or("-".into());
+        t.row(&[variant.to_string(), fmt(p_base), fmt(p_big), ours]);
+    }
+    finish(opts, "table4", t)
+}
+
+/// Table 5 — pixel-wise image generation bpd.
+pub fn table5(rt: &Runtime, reg: &Registry, opts: &BenchOptions) -> Result<String> {
+    let results = run_table_experiments(rt, reg, opts, "table5", None)?;
+    let map = by_variant(&results);
+    let mut t = Table::new(
+        "Table 5 — image generation bpd (paper: CIFAR-10 3072 px | ours: synthetic 192 px)",
+        &["Model", "paper Bpd", "ours Bpd"],
+    );
+    for (variant, p_bpd) in paper::table5_paper() {
+        let ours = lookup(&map, "img", variant).map(|r| fmt(r.metric)).unwrap_or("-".into());
+        t.row(&[variant.to_string(), fmt(p_bpd), ours]);
+    }
+    finish(opts, "table5", t)
+}
+
+/// Table 6 — sentiment classification accuracy (word + char).
+pub fn table6(rt: &Runtime, reg: &Registry, opts: &BenchOptions) -> Result<String> {
+    let results = run_table_experiments(rt, reg, opts, "table6", None)?;
+    let map = by_variant(&results);
+    let mut t = Table::new(
+        "Table 6 — sentiment accuracy (paper: IMDb/SST | ours: synthetic planted-signal)",
+        &["Model", "IMDb w", "IMDb c", "SST w", "SST c", "(ours)"],
+    );
+    for (variant, p) in paper::table6_paper() {
+        t.row(&[
+            format!("paper {variant}"),
+            fmt(p[0]),
+            fmt(p[1]),
+            fmt(p[2]),
+            fmt(p[3]),
+            String::new(),
+        ]);
+    }
+    // our grid: the three block sizes per family
+    let ours_variants = variant_grid(&map, "imdbw");
+    for v in ours_variants {
+        let cell = |ds: &str| -> String {
+            // block sizes differ by dataset (ell-dependent); match by family+rank
+            match_variant(&map, ds, &v).map(|r| fmt(r.metric)).unwrap_or("-".into())
+        };
+        t.row(&[
+            format!("ours {v}"),
+            cell("imdbw"),
+            cell("imdbc"),
+            cell("sstw"),
+            cell("sstc"),
+            String::new(),
+        ]);
+    }
+    finish(opts, "table6", t)
+}
+
+/// Table 7 — NLI accuracy.
+pub fn table7(rt: &Runtime, reg: &Registry, opts: &BenchOptions) -> Result<String> {
+    let results = run_table_experiments(rt, reg, opts, "table7", None)?;
+    let map = by_variant(&results);
+    let mut t = Table::new(
+        "Table 7 — NLI accuracy (paper: SNLI/MNLI | ours: synthetic entity-attribute NLI)",
+        &["Model", "SNLI", "MNLI", "(ours)"],
+    );
+    for (variant, p_snli, p_mnli) in paper::table7_paper() {
+        t.row(&[format!("paper {variant}"), fmt(p_snli), fmt(p_mnli), String::new()]);
+    }
+    for v in variant_grid(&map, "snli") {
+        let snli = match_variant(&map, "snli", &v).map(|r| fmt(r.metric)).unwrap_or("-".into());
+        let mnli = match_variant(&map, "mnli", &v).map(|r| fmt(r.metric)).unwrap_or("-".into());
+        t.row(&[format!("ours {v}"), snli, mnli, String::new()]);
+    }
+    finish(opts, "table7", t)
+}
+
+/// Table 8 — SortNet ablations.
+pub fn table8(rt: &Runtime, reg: &Registry, opts: &BenchOptions) -> Result<String> {
+    let results = run_table_experiments(rt, reg, opts, "table8", None)?;
+    // the p4 default row comes from table2's lmw_tiny__sinkhorn_b16
+    let default_row = super::run_experiment(rt, opts, "lmw_tiny__sinkhorn_b16")?;
+    let map = by_variant(&results);
+    let mut t = Table::new(
+        "Table 8 — SortNet ablations at b=16 (paper b=32 on LM1B)",
+        &["Modeling choice", "paper ppl", "ours ppl"],
+    );
+    let ours = |abl: &str| -> String {
+        map.get(&format!("abl_{abl}__sinkhorn_b16")).map(|r| fmt(r.metric)).unwrap_or("-".into())
+    };
+    for (variant, p_ppl) in paper::table8_paper() {
+        let val = match variant {
+            "p4 (default)" => fmt(default_row.metric),
+            "p1" => ours("p1"),
+            "p2" => ours("p2"),
+            "p3" => ours("p3"),
+            "sharekv" => ours("sharekv"),
+            "noiters" => ours("noiters"),
+            _ => "-".into(),
+        };
+        t.row(&[variant.to_string(), fmt(p_ppl), val]);
+    }
+    finish(opts, "table8", t)
+}
+
+/// Figure 3 — Gumbel temperature sweep.
+pub fn fig3(rt: &Runtime, reg: &Registry, opts: &BenchOptions) -> Result<String> {
+    let results = run_table_experiments(rt, reg, opts, "fig3", None)?;
+    let default_row = super::run_experiment(rt, opts, "lmw_tiny__sinkhorn_b16")?; // tau=0.75
+    let mut t = Table::new(
+        "Figure 3 — temperature tau vs ppl (paper optimum: tau=0.75)",
+        &["tau", "ours ppl"],
+    );
+    let mut rows: Vec<(f64, f64)> = results
+        .iter()
+        .map(|r| {
+            let tau = r
+                .name
+                .split("tau")
+                .nth(1)
+                .and_then(|s| s.split("__").next())
+                .map(|s| s.replace('p', ".").parse().unwrap_or(f64::NAN))
+                .unwrap_or(f64::NAN);
+            (tau, r.metric)
+        })
+        .collect();
+    rows.push((0.75, default_row.metric));
+    rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for (tau, ppl) in rows {
+        t.row(&[format!("{tau:.2}"), fmt(ppl)]);
+    }
+    finish(opts, "fig3", t)
+}
+
+/// Figure 4 — sinkhorn iterations sweep.
+pub fn fig4(rt: &Runtime, reg: &Registry, opts: &BenchOptions) -> Result<String> {
+    let results = run_table_experiments(rt, reg, opts, "fig4", None)?;
+    let k0 = super::run_experiment(rt, opts, "abl_noiters__sinkhorn_b16")?;
+    let k5 = super::run_experiment(rt, opts, "lmw_tiny__sinkhorn_b16")?;
+    let mut t = Table::new(
+        "Figure 4 — sinkhorn iterations k vs ppl (paper optimum: k=5-10, k=0 catastrophic)",
+        &["k", "ours ppl"],
+    );
+    let mut rows: Vec<(usize, f64)> = results
+        .iter()
+        .map(|r| {
+            let k = r
+                .name
+                .split("_k")
+                .nth(1)
+                .and_then(|s| s.split("__").next())
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            (k, r.metric)
+        })
+        .collect();
+    rows.push((0, k0.metric));
+    rows.push((5, k5.metric));
+    rows.sort_by_key(|&(k, _)| k);
+    for (k, ppl) in rows {
+        t.row(&[k.to_string(), fmt(ppl)]);
+    }
+    finish(opts, "fig4", t)
+}
+
+/// §4 memory-complexity analysis: analytic model across sequence lengths.
+pub fn memory_table(opts: &BenchOptions) -> Result<String> {
+    let d = 64;
+    let mut t = Table::new(
+        "§4 memory complexity — attention score + aux f32 elements per head",
+        &["ell", "dense", "local(nb=16)", "sparse", "sinkhorn(nb=16)", "sortcut(n=2)", "saving"],
+    );
+    for ell in [256usize, 512, 1024, 2048, 4096, 8192] {
+        let nb = 16;
+        let dense = memory::dense(ell, d);
+        let local = memory::local(ell, nb, d);
+        let sparse = memory::sparse_fixed(ell, nb, (ell / nb / 4).max(1), d);
+        let sink = memory::sinkhorn(ell, nb, d);
+        let cut = memory::sortcut(ell, nb, 2, d);
+        t.row(&[
+            ell.to_string(),
+            dense.total_elems().to_string(),
+            local.total_elems().to_string(),
+            sparse.total_elems().to_string(),
+            sink.total_elems().to_string(),
+            cut.total_elems().to_string(),
+            format!("{:.0}x", memory::saving_factor(ell, nb)),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str(&format!(
+        "\nL1 kernel VMEM/program: b=64,d=64 -> {} KiB (TPU VMEM ~16 MiB); MXU-shaped: {}\n",
+        memory::kernel_vmem_bytes(64, 64) / 1024,
+        memory::mxu_mac_fraction(64, 64) == 1.0,
+    ));
+    save_result(&opts.artifacts, "memory", &s)?;
+    println!("{s}");
+    Ok(s)
+}
+
+// --- helpers ---------------------------------------------------------------
+
+fn finish(opts: &BenchOptions, tag: &str, t: Table) -> Result<String> {
+    let s = t.render();
+    save_result(&opts.artifacts, tag, &s)?;
+    println!("{s}");
+    Ok(s)
+}
+
+/// The measured variant suffixes available for a dataset prefix, sorted.
+fn variant_grid(map: &HashMap<String, &ExpResult>, ds: &str) -> Vec<String> {
+    let mut v: Vec<String> = map
+        .keys()
+        .filter(|k| k.starts_with(&format!("{ds}__")))
+        .map(|k| k.split("__").nth(1).unwrap().to_string())
+        .collect();
+    v.sort_by_key(|s| (variant_family_rank(s), variant_block(s)));
+    v
+}
+
+fn variant_family_rank(v: &str) -> usize {
+    if v.starts_with("vanilla") {
+        0
+    } else if v.starts_with("sinkhorn") {
+        1
+    } else if v.starts_with("sortcut") {
+        2
+    } else {
+        3
+    }
+}
+
+fn variant_block(v: &str) -> usize {
+    v.rsplit(|c: char| !c.is_ascii_digit())
+        .next()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
+}
+
+/// Match "same family + same size-rank" across datasets whose block sizes
+/// differ (ell-dependent): e.g. imdbw sinkhorn_b8 <-> sstc sinkhorn_b16.
+fn match_variant<'a>(
+    map: &'a HashMap<String, &'a ExpResult>,
+    ds: &str,
+    variant: &str,
+) -> Option<&'a ExpResult> {
+    if let Some(r) = map.get(&format!("{ds}__{variant}")) {
+        return Some(r);
+    }
+    let grid = variant_grid(map, ds);
+    // rank within family in the *source* grid
+    let fam = variant_family_rank(variant);
+    let same_fam: Vec<&String> = grid.iter().filter(|v| variant_family_rank(v) == fam).collect();
+    let src_rank = same_fam
+        .iter()
+        .position(|v| variant_block(v) == variant_block(variant))
+        .or_else(|| {
+            // fall back to ordering of the requested variant among typical blocks
+            let blocks = [4usize, 8, 16, 32, 64];
+            blocks.iter().position(|&b| b == variant_block(variant))
+        })?;
+    same_fam
+        .get(src_rank.min(same_fam.len().saturating_sub(1)))
+        .and_then(|v| map.get(&format!("{ds}__{v}")))
+        .copied()
+}
+
+/// Dispatch by target name ("table1".."table8", "fig3", "fig4", "memory").
+pub fn run_target(rt: &Runtime, reg: &Registry, opts: &BenchOptions, target: &str) -> Result<()> {
+    match target {
+        "table1" => table1(rt, reg, opts)?,
+        "table2" => table2(rt, reg, opts)?,
+        "table3" => table3(rt, reg, opts)?,
+        "table4" => table4(rt, reg, opts)?,
+        "table5" => table5(rt, reg, opts)?,
+        "table6" => table6(rt, reg, opts)?,
+        "table7" => table7(rt, reg, opts)?,
+        "table8" => table8(rt, reg, opts)?,
+        "fig3" => fig3(rt, reg, opts)?,
+        "fig4" => fig4(rt, reg, opts)?,
+        "memory" => memory_table(opts)?,
+        other => anyhow::bail!("unknown bench target '{other}'"),
+    };
+    Ok(())
+}
+
+pub const ALL_TARGETS: &[&str] = &[
+    "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "fig3",
+    "fig4", "memory",
+];

@@ -1,0 +1,235 @@
+//! Checkpoint store: a simple length-prefixed binary tensor format
+//! (`SNKH1` magic). Saves the full Adam state so training resumes exactly.
+//!
+//! Layout (little-endian):
+//!   magic "SNKH1" | name_len u32 | name bytes | step f32 | n_tensors u32
+//!   then per tensor: name_len u32 | name | dtype u8 (0=f32, 1=i32)
+//!                    | ndim u32 | dims u64... | data bytes
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{HostTensor, Manifest, TrainState};
+
+const MAGIC: &[u8; 5] = b"SNKH1";
+
+pub struct Checkpoint {
+    pub exp_name: String,
+    pub step: f32,
+    /// params, then m, then v — in manifest leaf order.
+    pub tensors: Vec<(String, HostTensor)>,
+}
+
+fn put_u32(w: &mut impl Write, x: u32) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn get_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn put_str(w: &mut impl Write, s: &str) -> Result<()> {
+    put_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn get_str(r: &mut impl Read) -> Result<String> {
+    let n = get_u32(r)? as usize;
+    if n > 1 << 20 {
+        bail!("unreasonable string length {n}");
+    }
+    let mut b = vec![0u8; n];
+    r.read_exact(&mut b)?;
+    Ok(String::from_utf8(b)?)
+}
+
+impl Checkpoint {
+    /// Capture a training state (downloads literals to host).
+    pub fn capture(manifest: &Manifest, state: &TrainState) -> Result<Checkpoint> {
+        let mut tensors = Vec::with_capacity(3 * state.params.len());
+        for (group, lits) in [("p", &state.params), ("m", &state.m), ("v", &state.v)] {
+            for (spec, lit) in manifest.params.iter().zip(lits.iter()) {
+                let t = HostTensor::from_literal(lit)?;
+                t.check_spec(spec)?;
+                tensors.push((format!("{group}/{}", spec.name), t));
+            }
+        }
+        Ok(Checkpoint { exp_name: manifest.name.clone(), step: state.step, tensors })
+    }
+
+    /// Rebuild a runtime training state (uploads to literals).
+    pub fn restore(&self, manifest: &Manifest) -> Result<TrainState> {
+        if self.exp_name != manifest.name {
+            bail!("checkpoint is for '{}', not '{}'", self.exp_name, manifest.name);
+        }
+        let n = manifest.n_leaves();
+        if self.tensors.len() != 3 * n {
+            bail!("checkpoint has {} tensors, expected {}", self.tensors.len(), 3 * n);
+        }
+        let lits = |offset: usize| -> Result<Vec<xla::Literal>> {
+            manifest
+                .params
+                .iter()
+                .enumerate()
+                .map(|(i, spec)| {
+                    let (name, t) = &self.tensors[offset + i];
+                    if !name.ends_with(&spec.name) {
+                        bail!("leaf order mismatch: '{name}' vs '{}'", spec.name);
+                    }
+                    t.check_spec(spec)?;
+                    t.to_literal()
+                })
+                .collect()
+        };
+        Ok(TrainState { params: lits(0)?, m: lits(n)?, v: lits(2 * n)?, step: self.step })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        {
+            let mut w = std::io::BufWriter::new(
+                std::fs::File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?,
+            );
+            w.write_all(MAGIC)?;
+            put_str(&mut w, &self.exp_name)?;
+            w.write_all(&self.step.to_le_bytes())?;
+            put_u32(&mut w, self.tensors.len() as u32)?;
+            for (name, t) in &self.tensors {
+                put_str(&mut w, name)?;
+                let (tag, bytes): (u8, Vec<u8>) = match t {
+                    HostTensor::F32 { data, .. } => {
+                        (0, data.iter().flat_map(|x| x.to_le_bytes()).collect())
+                    }
+                    HostTensor::I32 { data, .. } => {
+                        (1, data.iter().flat_map(|x| x.to_le_bytes()).collect())
+                    }
+                };
+                w.write_all(&[tag])?;
+                put_u32(&mut w, t.shape().len() as u32)?;
+                for &d in t.shape() {
+                    w.write_all(&(d as u64).to_le_bytes())?;
+                }
+                w.write_all(&bytes)?;
+            }
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 5];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a SNKH1 checkpoint");
+        }
+        let exp_name = get_str(&mut r)?;
+        let mut stepb = [0u8; 4];
+        r.read_exact(&mut stepb)?;
+        let step = f32::from_le_bytes(stepb);
+        let n = get_u32(&mut r)? as usize;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = get_str(&mut r)?;
+            let mut tag = [0u8; 1];
+            r.read_exact(&mut tag)?;
+            let ndim = get_u32(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut d = [0u8; 8];
+                r.read_exact(&mut d)?;
+                shape.push(u64::from_le_bytes(d) as usize);
+            }
+            let count: usize = shape.iter().product();
+            let mut raw = vec![0u8; count * 4];
+            r.read_exact(&mut raw)?;
+            let t = match tag[0] {
+                0 => HostTensor::f32(
+                    &shape,
+                    raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                ),
+                1 => HostTensor::i32(
+                    &shape,
+                    raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+                ),
+                t => bail!("bad dtype tag {t}"),
+            };
+            tensors.push((name, t));
+        }
+        Ok(Checkpoint { exp_name, step, tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sinkhorn-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let ck = Checkpoint {
+            exp_name: "demo".into(),
+            step: 42.0,
+            tensors: vec![
+                ("p/w".into(), HostTensor::f32(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 9.9, -7.0])),
+                ("m/w".into(), HostTensor::i32(&[4], vec![1, 2, 3, 4])),
+            ],
+        };
+        let path = tmpfile("roundtrip.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.exp_name, "demo");
+        assert_eq!(back.step, 42.0);
+        assert_eq!(back.tensors, ck.tensors);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("bad.ckpt");
+        std::fs::write(&path, b"NOPE!xxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn property_roundtrip_random_tensors() {
+        use crate::util::prop::forall;
+        forall(
+            10,
+            0xCC,
+            |g| {
+                let n = 1 + g.usize(0, 4);
+                (0..n)
+                    .map(|i| {
+                        let r = 1 + g.usize(0, 5);
+                        let c = 1 + g.usize(0, 5);
+                        (format!("t{i}"), HostTensor::f32(&[r, c], g.vec_f32(r * c, -10.0, 10.0)))
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |tensors| {
+                let ck = Checkpoint { exp_name: "x".into(), step: 1.0, tensors: tensors.clone() };
+                let path = tmpfile("prop.ckpt");
+                ck.save(&path).map_err(|e| e.to_string())?;
+                let back = Checkpoint::load(&path).map_err(|e| e.to_string())?;
+                if back.tensors == *tensors {
+                    Ok(())
+                } else {
+                    Err("tensors differ after roundtrip".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! Evaluation drivers: LM perplexity/bpc/bpd, classification accuracy, and
+//! greedy seq2seq decoding with EM/edit-distance scoring (Table 1).
+
+use anyhow::{bail, Result};
+
+use crate::data::sorting::score_predictions;
+use crate::data::tokenizer::BOS;
+use crate::data::{ClsData, LmData, SortData};
+use crate::runtime::{Experiment, HostTensor, Runtime, TrainState};
+
+/// Mean eval loss (nats/token) over `n_batches` held-out LM batches.
+pub fn eval_lm(
+    rt: &Runtime,
+    exp: &Experiment,
+    state: &TrainState,
+    data: &mut LmData,
+    n_batches: usize,
+) -> Result<f64> {
+    let mut total = 0.0;
+    let batches = data.eval_batches(n_batches);
+    let n = batches.len();
+    for batch in batches {
+        let lits = batch.iter().map(|t| t.to_literal()).collect::<Result<Vec<_>>>()?;
+        let out = exp.eval(rt, &state.params, &lits)?;
+        total += HostTensor::from_literal(&out[0])?.as_f32()?[0] as f64;
+    }
+    Ok(total / n.max(1) as f64)
+}
+
+/// Classification: (mean loss, accuracy) over the held-out set.
+pub fn eval_cls(
+    rt: &Runtime,
+    exp: &Experiment,
+    state: &TrainState,
+    data: &ClsData,
+) -> Result<(f64, f64)> {
+    let batches = data.eval_batches();
+    if batches.is_empty() {
+        bail!("no eval batches");
+    }
+    let mut total_loss = 0.0;
+    let mut correct = 0i64;
+    let mut seen = 0usize;
+    for batch in &batches {
+        let lits = batch.iter().map(|t| t.to_literal()).collect::<Result<Vec<_>>>()?;
+        let out = exp.eval(rt, &state.params, &lits)?;
+        total_loss += HostTensor::from_literal(&out[0])?.as_f32()?[0] as f64;
+        correct += HostTensor::from_literal(&out[1])?.as_i32()?[0] as i64;
+        seen += batch[1].len();
+    }
+    Ok((total_loss / batches.len() as f64, correct as f64 / seen as f64))
+}
+
+/// Greedy autoregressive decode for the sorting task, scored with exact
+/// match and normalized edit distance. The eval graph returns per-position
+/// argmax under teacher forcing; the coordinator feeds its own predictions
+/// back in, position by position (true decoding — no gold leakage).
+pub fn eval_sort(
+    rt: &Runtime,
+    exp: &Experiment,
+    state: &TrainState,
+    data: &mut SortData,
+    n_batches: usize,
+) -> Result<(f64, f64)> {
+    let lt = data.eval_len();
+    let bsz = data.eval_batch_size();
+    let mut all_preds: Vec<Vec<i32>> = Vec::new();
+    let mut all_golds: Vec<Vec<i32>> = Vec::new();
+
+    for batch in data.eval_batches(n_batches) {
+        let src_lit = batch.src.to_literal()?;
+        // decoder input starts as [BOS, 0, 0, ...]
+        let mut tgt_in = vec![0i32; bsz * lt];
+        for r in 0..bsz {
+            tgt_in[r * lt] = BOS;
+        }
+        let mut preds = vec![vec![0i32; lt]; bsz];
+        for t in 0..lt {
+            let tgt_lit = HostTensor::i32(&[bsz, lt], tgt_in.clone()).to_literal()?;
+            let out = exp.eval(rt, &state.params, &[src_lit.clone(), tgt_lit])?;
+            let pred = HostTensor::from_literal(&out[1])?;
+            let pred = pred.as_i32()?;
+            for r in 0..bsz {
+                let tok = pred[r * lt + t];
+                preds[r][t] = tok;
+                if t + 1 < lt {
+                    tgt_in[r * lt + t + 1] = tok;
+                }
+            }
+        }
+        all_preds.extend(preds);
+        all_golds.extend(batch.golds);
+    }
+    let (em, ed) = score_predictions(&all_preds, &all_golds);
+    Ok((em, ed))
+}
+
+/// Faster proxy used while iterating: teacher-forced argmax accuracy
+/// (single eval call per batch; upper-bounds true greedy decoding).
+pub fn eval_sort_teacher_forced(
+    rt: &Runtime,
+    exp: &Experiment,
+    state: &TrainState,
+    data: &mut SortData,
+    n_batches: usize,
+) -> Result<(f64, f64)> {
+    let lt = data.eval_len();
+    let bsz = data.eval_batch_size();
+    let mut all_preds: Vec<Vec<i32>> = Vec::new();
+    let mut all_golds: Vec<Vec<i32>> = Vec::new();
+    for batch in data.eval_batches(n_batches) {
+        let src_lit = batch.src.to_literal()?;
+        let mut tgt_in = vec![0i32; bsz * lt];
+        for (r, gold) in batch.golds.iter().enumerate() {
+            tgt_in[r * lt] = BOS;
+            for t in 1..lt {
+                tgt_in[r * lt + t] = gold[t - 1];
+            }
+        }
+        let tgt_lit = HostTensor::i32(&[bsz, lt], tgt_in).to_literal()?;
+        let out = exp.eval(rt, &state.params, &[src_lit, tgt_lit])?;
+        let pred = HostTensor::from_literal(&out[1])?;
+        let pred = pred.as_i32()?;
+        for r in 0..bsz {
+            all_preds.push(pred[r * lt..(r + 1) * lt].to_vec());
+        }
+        all_golds.extend(batch.golds);
+    }
+    let (em, ed) = score_predictions(&all_preds, &all_golds);
+    Ok((em, ed))
+}

@@ -1,0 +1,104 @@
+//! Metric conversions + loss-curve recording (the paper reports ppl, bpc,
+//! bpd, accuracy, EM and edit distance depending on the task).
+
+/// Word-level perplexity from mean token xent (nats).
+pub fn perplexity(loss_nats: f64) -> f64 {
+    loss_nats.exp()
+}
+
+/// Bits-per-character from mean char xent (nats).
+pub fn bpc(loss_nats: f64) -> f64 {
+    loss_nats / std::f64::consts::LN_2
+}
+
+/// Bits-per-dimension for pixel modeling — same conversion, per subpixel.
+pub fn bpd(loss_nats: f64) -> f64 {
+    bpc(loss_nats)
+}
+
+/// A recorded training run: (step, loss) samples + wall-clock.
+#[derive(Debug, Clone, Default)]
+pub struct LossCurve {
+    pub points: Vec<(usize, f64)>,
+    pub secs: f64,
+}
+
+impl LossCurve {
+    pub fn push(&mut self, step: usize, loss: f64) {
+        self.points.push((step, loss));
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.points.last().map(|&(_, l)| l)
+    }
+
+    /// Mean loss over the last `k` recorded points (smoothed endpoint).
+    pub fn tail_mean(&self, k: usize) -> Option<f64> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let n = self.points.len().min(k.max(1));
+        Some(self.points[self.points.len() - n..].iter().map(|&(_, l)| l).sum::<f64>() / n as f64)
+    }
+
+    /// True if the curve went down overall (sanity check for examples).
+    pub fn decreased(&self) -> bool {
+        match (self.points.first(), self.tail_mean(5)) {
+            (Some(&(_, first)), Some(tail)) => tail < first,
+            _ => false,
+        }
+    }
+
+    /// Render a compact ASCII sparkline of the loss curve.
+    pub fn sparkline(&self, width: usize) -> String {
+        if self.points.is_empty() {
+            return String::new();
+        }
+        let glyphs = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let lo = self.points.iter().map(|&(_, l)| l).fold(f64::INFINITY, f64::min);
+        let hi = self.points.iter().map(|&(_, l)| l).fold(f64::NEG_INFINITY, f64::max);
+        let span = (hi - lo).max(1e-9);
+        let n = self.points.len();
+        (0..width.min(n))
+            .map(|i| {
+                let idx = i * n / width.min(n);
+                let v = (self.points[idx].1 - lo) / span;
+                glyphs[((v * 7.0).round() as usize).min(7)]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert!((perplexity(0.0) - 1.0).abs() < 1e-12);
+        assert!((bpc(std::f64::consts::LN_2) - 1.0).abs() < 1e-12);
+        assert!((perplexity(3.7) - 40.447).abs() < 0.01);
+    }
+
+    #[test]
+    fn curve_tail_and_decrease() {
+        let mut c = LossCurve::default();
+        for (s, l) in [(0, 5.0), (10, 4.0), (20, 3.0), (30, 2.0)] {
+            c.push(s, l);
+        }
+        assert!(c.decreased());
+        assert_eq!(c.final_loss(), Some(2.0));
+        assert!((c.tail_mean(2).unwrap() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let mut c = LossCurve::default();
+        for i in 0..16 {
+            c.push(i, 16.0 - i as f64);
+        }
+        let s = c.sparkline(8);
+        assert_eq!(s.chars().count(), 8);
+        assert!(s.starts_with('█') && s.ends_with('▁'));
+    }
+}

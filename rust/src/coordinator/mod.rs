@@ -1,0 +1,13 @@
+//! The L3 coordination layer: training orchestration, evaluation drivers,
+//! checkpointing and metric conversion. Everything here runs on the
+//! compiled artifacts — Python is never on this path.
+
+pub mod checkpoint;
+pub mod eval;
+pub mod metrics;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use eval::{eval_cls, eval_lm, eval_sort, eval_sort_teacher_forced};
+pub use metrics::{bpc, bpd, perplexity, LossCurve};
+pub use trainer::{train, train_from_scratch, TrainOptions, TrainReport};

@@ -1,0 +1,107 @@
+//! The training loop: feeds generated batches into the AOT train-step
+//! graph, tracks the loss curve, optionally checkpoints. Pure Rust hot
+//! path — Python was only involved at `make artifacts` time.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::data::TaskData;
+use crate::runtime::{Experiment, Runtime, TrainState};
+use crate::util::stats::{Ema, Timer};
+
+use super::checkpoint::Checkpoint;
+use super::metrics::LossCurve;
+
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub seed: i32,
+    /// record the loss every `log_every` steps (always records the last)
+    pub log_every: usize,
+    pub verbose: bool,
+    /// save a checkpoint here when done
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { steps: 100, seed: 0, log_every: 10, verbose: false, checkpoint: None }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub curve: LossCurve,
+    pub steps: usize,
+    pub secs: f64,
+    pub steps_per_sec: f64,
+    /// EMA(0.1) of the loss at the end of training.
+    pub ema_loss: f64,
+}
+
+/// Train `exp` from `state` for `opts.steps` steps.
+pub fn train(
+    rt: &Runtime,
+    exp: &Experiment,
+    data: &mut TaskData,
+    state: &mut TrainState,
+    opts: &TrainOptions,
+) -> Result<TrainReport> {
+    let timer = Timer::start();
+    let mut curve = LossCurve::default();
+    let mut ema = Ema::new(0.1);
+    let start_step = state.step as usize;
+
+    for i in 0..opts.steps {
+        let batch = data.train_batch();
+        let lits = batch.iter().map(|t| t.to_literal()).collect::<Result<Vec<_>>>()?;
+        // per-step seed: distinct gumbel noise each step, reproducible
+        let seed = opts.seed.wrapping_add((start_step + i) as i32);
+        let loss = exp.train_step(rt, state, seed, &lits)?;
+        if !loss.is_finite() {
+            anyhow::bail!("loss diverged (step {}): {loss}", start_step + i);
+        }
+        let sm = ema.push(loss as f64);
+        if i % opts.log_every.max(1) == 0 || i + 1 == opts.steps {
+            curve.push(start_step + i, loss as f64);
+            if opts.verbose {
+                println!(
+                    "  step {:>5}  loss {:>8.4}  ema {:>8.4}",
+                    start_step + i,
+                    loss,
+                    sm
+                );
+            }
+        }
+    }
+    let secs = timer.secs();
+    curve.secs = secs;
+
+    if let Some(path) = &opts.checkpoint {
+        Checkpoint::capture(&exp.manifest, state)?.save(path)?;
+        if opts.verbose {
+            println!("  checkpoint -> {}", path.display());
+        }
+    }
+
+    Ok(TrainReport {
+        curve,
+        steps: opts.steps,
+        secs,
+        steps_per_sec: opts.steps as f64 / secs.max(1e-9),
+        ema_loss: ema.get().unwrap_or(f64::NAN),
+    })
+}
+
+/// Convenience: init + train in one call (most bench targets).
+pub fn train_from_scratch(
+    rt: &Runtime,
+    exp: &Experiment,
+    data: &mut TaskData,
+    opts: &TrainOptions,
+) -> Result<(TrainState, TrainReport)> {
+    let mut state = exp.init_state(rt, opts.seed)?;
+    let report = train(rt, exp, data, &mut state, opts)?;
+    Ok((state, report))
+}

@@ -1,0 +1,80 @@
+//! Epoch batcher for fixed datasets (classification): deterministic
+//! shuffling per epoch, drop-last semantics so batch shapes stay static
+//! (XLA graphs are shape-specialized).
+
+use crate::util::rng::Rng;
+
+/// Yields index batches over `n` examples, reshuffled every epoch.
+pub struct Batcher {
+    n: usize,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    pub epoch: usize,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        assert!(batch <= n, "batch {batch} > dataset {n}");
+        let mut b = Batcher { n, batch, order: (0..n).collect(), cursor: 0, rng: Rng::new(seed), epoch: 0 };
+        b.rng.shuffle(&mut b.order);
+        b
+    }
+
+    /// Next batch of example indices (always exactly `batch` long).
+    pub fn next_indices(&mut self) -> &[usize] {
+        if self.cursor + self.batch > self.n {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+            self.epoch += 1;
+        }
+        let s = &self.order[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn batches_cover_dataset_each_epoch() {
+        let mut b = Batcher::new(10, 5, 1);
+        let mut seen = HashSet::new();
+        seen.extend(b.next_indices().iter().copied());
+        seen.extend(b.next_indices().iter().copied());
+        assert_eq!(seen.len(), 10);
+        assert_eq!(b.epoch, 0);
+        b.next_indices();
+        assert_eq!(b.epoch, 1);
+    }
+
+    #[test]
+    fn drop_last_keeps_shape() {
+        let mut b = Batcher::new(10, 4, 2);
+        for _ in 0..20 {
+            assert_eq!(b.next_indices().len(), 4);
+        }
+    }
+
+    #[test]
+    fn no_duplicates_within_epoch() {
+        let mut b = Batcher::new(12, 4, 3);
+        let mut seen = HashSet::new();
+        for _ in 0..3 {
+            for &i in b.next_indices() {
+                assert!(seen.insert(i), "dup {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = Batcher::new(20, 5, 9);
+        let mut b = Batcher::new(20, 5, 9);
+        assert_eq!(a.next_indices(), b.next_indices());
+    }
+}

@@ -1,0 +1,194 @@
+//! Synthetic language-modeling corpus (stand-in for LM1B — DESIGN.md §4).
+//!
+//! The generator plants exactly the structure the paper's comparison
+//! hinges on:
+//!   * a Zipf (power-law) unigram distribution over the vocabulary,
+//!   * 2nd-order Markov local syntax (what local attention can model),
+//!   * **long-range topic recurrence**: each sequence samples a few topic
+//!     tokens that re-appear periodically across the whole sequence —
+//!     context a block-local window cannot see but quasi-global (sorted)
+//!     attention can exploit.
+//!
+//! Word-level mode emits token ids directly; char-level mode renders each
+//! word id to a deterministic pseudo-word string (same long-range
+//! structure at ~4x the sequence length).
+
+use crate::util::rng::Rng;
+
+use super::tokenizer::{CharVocab, N_SPECIALS};
+
+/// Word-level corpus generator.
+pub struct Corpus {
+    pub vocab: usize,
+    rng: Rng,
+    zipf_cache: Vec<f64>,
+    /// per-state transition bias tables (tiny 2nd-order hash chain)
+    n_states: usize,
+}
+
+impl Corpus {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        Corpus { vocab, rng: Rng::new(seed), zipf_cache: Vec::new(), n_states: 64 }
+    }
+
+    fn markov_next(&mut self, prev1: usize, prev2: usize) -> usize {
+        // deterministic "grammar": the state hash biases a band of the
+        // vocabulary, mixed with the global zipf draw
+        let state = (prev1.wrapping_mul(31).wrapping_add(prev2)) % self.n_states;
+        if self.rng.bool(0.55) {
+            // local-syntax draw: band of 8 tokens owned by this state
+            let base = (state * 97) % (self.vocab.saturating_sub(16)).max(1);
+            base + self.rng.usize_below(8)
+        } else {
+            self.rng.zipf(self.vocab, 1.1, &mut self.zipf_cache)
+        }
+    }
+
+    /// One training sequence of `len` token ids in `[N_SPECIALS, vocab)`.
+    pub fn sequence(&mut self, len: usize) -> Vec<i32> {
+        let reserved = N_SPECIALS as usize;
+        let eff_vocab = self.vocab - reserved;
+        // sample 2-4 topic tokens for long-range recurrence
+        let n_topics = 2 + self.rng.usize_below(3);
+        let topics: Vec<usize> =
+            (0..n_topics).map(|_| self.rng.usize_below(eff_vocab)).collect();
+        let period = 12 + self.rng.usize_below(12);
+
+        let mut seq = Vec::with_capacity(len);
+        let (mut p1, mut p2) = (0usize, 1usize);
+        for t in 0..len {
+            let tok = if t > 0 && t % period == 0 {
+                // long-range dependency: topic token recurs
+                topics[(t / period) % n_topics]
+            } else {
+                self.markov_next(p1, p2)
+            };
+            p2 = p1;
+            p1 = tok;
+            seq.push((tok % eff_vocab) as i32 + N_SPECIALS as i32);
+        }
+        seq
+    }
+}
+
+/// Char-level corpus: word-level sequences rendered to pseudo-words.
+pub struct CharCorpus {
+    inner: Corpus,
+    cv: CharVocab,
+}
+
+impl CharCorpus {
+    pub fn new(word_vocab: usize, seed: u64) -> Self {
+        CharCorpus { inner: Corpus::new(word_vocab, seed), cv: CharVocab::ascii() }
+    }
+
+    pub fn char_vocab_len(&self) -> usize {
+        self.cv.len()
+    }
+
+    /// Deterministic word-id -> string rendering (letters base-20, so the
+    /// char model can learn the id structure).
+    pub fn render_word(id: i32) -> String {
+        let letters = b"etaoinshrdlucmfwypvb";
+        let mut x = id as usize;
+        let mut s = String::new();
+        loop {
+            s.push(letters[x % letters.len()] as char);
+            x /= letters.len();
+            if x == 0 {
+                break;
+            }
+        }
+        s
+    }
+
+    /// One char-level sequence of exactly `len` char ids.
+    pub fn sequence(&mut self, len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len + 8);
+        while out.len() < len {
+            let words = self.inner.sequence(16);
+            for w in words {
+                for c in Self::render_word(w).chars() {
+                    out.push(self.cv.encode(c));
+                }
+                out.push(self.cv.encode(' '));
+                if out.len() >= len {
+                    break;
+                }
+            }
+        }
+        out.truncate(len);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_range() {
+        let mut c = Corpus::new(512, 1);
+        for _ in 0..5 {
+            let s = c.sequence(128);
+            assert_eq!(s.len(), 128);
+            assert!(s.iter().all(|&t| (N_SPECIALS..512).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Corpus::new(256, 9);
+        let mut b = Corpus::new(256, 9);
+        assert_eq!(a.sequence(64), b.sequence(64));
+    }
+
+    #[test]
+    fn topic_recurrence_present() {
+        // at least one token must repeat at a fixed period in most seqs
+        let mut c = Corpus::new(512, 3);
+        let mut hits = 0;
+        for _ in 0..20 {
+            let s = c.sequence(128);
+            let mut counts = std::collections::HashMap::new();
+            for &t in &s {
+                *counts.entry(t).or_insert(0usize) += 1;
+            }
+            if counts.values().any(|&n| n >= 4) {
+                hits += 1;
+            }
+        }
+        assert!(hits > 10, "long-range topics missing: {hits}/20");
+    }
+
+    #[test]
+    fn zipf_head_heavy() {
+        let mut c = Corpus::new(512, 5);
+        let mut counts = vec![0usize; 512];
+        for _ in 0..30 {
+            for t in c.sequence(128) {
+                counts[t as usize] += 1;
+            }
+        }
+        let head: usize = counts[4..54].iter().sum();
+        let tail: usize = counts[262..312].iter().sum();
+        assert!(head > tail, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn char_mode_len_and_range() {
+        let mut c = CharCorpus::new(256, 2);
+        let v = c.char_vocab_len() as i32;
+        let s = c.sequence(256);
+        assert_eq!(s.len(), 256);
+        assert!(s.iter().all(|&t| t >= 1 && t < v));
+    }
+
+    #[test]
+    fn render_word_unique_small_ids() {
+        let mut seen = std::collections::HashSet::new();
+        for id in 0..400 {
+            assert!(seen.insert(CharCorpus::render_word(id)), "collision at {id}");
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! Data pipeline: synthetic task generators + batching, one per paper task
+//! (DESIGN.md §4 lists each substitution). All generators are seeded by
+//! *dataset*, not by experiment, so every attention variant in a table
+//! trains and evaluates on identical data.
+
+pub mod batcher;
+pub mod classify;
+pub mod corpus;
+pub mod images;
+pub mod sorting;
+pub mod tokenizer;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Family, HostTensor, Manifest};
+use batcher::Batcher;
+use classify::{CharSentimentTask, Example, NliTask, SentimentTask};
+use corpus::{CharCorpus, Corpus};
+use images::ImageTask;
+use sorting::SortTask;
+
+/// FNV-1a — stable dataset seeds from name prefixes.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Stream of LM sequences (word corpus, char corpus, or images).
+enum LmSource {
+    Word(Corpus),
+    Char(CharCorpus),
+    Image(ImageTask),
+}
+
+impl LmSource {
+    fn sequence(&mut self, len: usize) -> Vec<i32> {
+        match self {
+            LmSource::Word(c) => c.sequence(len),
+            LmSource::Char(c) => c.sequence(len),
+            LmSource::Image(t) => {
+                // autoregressive over pixels: prepend BOS so len = ell+1
+                let mut v = vec![tokenizer::BOS];
+                v.extend(t.image());
+                v.truncate(len);
+                v
+            }
+        }
+    }
+}
+
+/// Language-modeling data (Tables 2/4/5, 8, Figs 3/4).
+pub struct LmData {
+    train: LmSource,
+    eval: LmSource,
+    ell: usize,
+    batch: usize,
+    eval_batch: usize,
+}
+
+impl LmData {
+    /// (batch, ell+1) token tensor.
+    pub fn train_batch(&mut self) -> Vec<HostTensor> {
+        let mut data = Vec::with_capacity(self.batch * (self.ell + 1));
+        for _ in 0..self.batch {
+            data.extend(self.train.sequence(self.ell + 1));
+        }
+        vec![HostTensor::i32(&[self.batch, self.ell + 1], data)]
+    }
+
+    pub fn eval_batches(&mut self, n: usize) -> Vec<Vec<HostTensor>> {
+        (0..n)
+            .map(|_| {
+                let mut data = Vec::with_capacity(self.eval_batch * (self.ell + 1));
+                for _ in 0..self.eval_batch {
+                    data.extend(self.eval.sequence(self.ell + 1));
+                }
+                vec![HostTensor::i32(&[self.eval_batch, self.ell + 1], data)]
+            })
+            .collect()
+    }
+}
+
+/// Classification data (Tables 6/7).
+pub struct ClsData {
+    train_set: Vec<Example>,
+    eval_set: Vec<Example>,
+    batcher: Batcher,
+    ell: usize,
+    eval_batch: usize,
+}
+
+impl ClsData {
+    fn to_tensors(examples: &[Example], ell: usize) -> Vec<HostTensor> {
+        let bsz = examples.len();
+        let mut toks = Vec::with_capacity(bsz * ell);
+        let mut labels = Vec::with_capacity(bsz);
+        for e in examples {
+            assert_eq!(e.tokens.len(), ell);
+            toks.extend_from_slice(&e.tokens);
+            labels.push(e.label);
+        }
+        vec![HostTensor::i32(&[bsz, ell], toks), HostTensor::i32(&[bsz], labels)]
+    }
+
+    pub fn train_batch(&mut self) -> Vec<HostTensor> {
+        let idx = self.batcher.next_indices().to_vec();
+        let exs: Vec<Example> = idx.iter().map(|&i| self.train_set[i].clone()).collect();
+        Self::to_tensors(&exs, self.ell)
+    }
+
+    pub fn eval_batches(&self) -> Vec<Vec<HostTensor>> {
+        self.eval_set
+            .chunks(self.eval_batch)
+            .filter(|c| c.len() == self.eval_batch)
+            .map(|c| Self::to_tensors(c, self.ell))
+            .collect()
+    }
+
+    pub fn n_eval(&self) -> usize {
+        (self.eval_set.len() / self.eval_batch) * self.eval_batch
+    }
+}
+
+/// Sorting seq2seq data (Table 1): train at `ell`, evaluate at `ell_eval`.
+pub struct SortData {
+    train_task: SortTask,
+    eval_task: SortTask,
+    ell: usize,
+    ell_eval: usize,
+    batch: usize,
+    eval_batch: usize,
+}
+
+/// One sorting eval batch: sources plus gold sorted sequences.
+pub struct SortEvalBatch {
+    /// (eval_batch, ell_eval) i32
+    pub src: HostTensor,
+    pub golds: Vec<Vec<i32>>,
+}
+
+impl SortData {
+    pub fn train_batch(&mut self) -> Vec<HostTensor> {
+        let (src, tgt) = self.train_task.batch(self.batch, self.ell);
+        vec![
+            HostTensor::i32(&[self.batch, self.ell], src),
+            HostTensor::i32(&[self.batch, self.ell + 1], tgt),
+        ]
+    }
+
+    pub fn eval_batches(&mut self, n: usize) -> Vec<SortEvalBatch> {
+        (0..n)
+            .map(|_| {
+                let mut src = Vec::with_capacity(self.eval_batch * self.ell_eval);
+                let mut golds = Vec::with_capacity(self.eval_batch);
+                for _ in 0..self.eval_batch {
+                    let ex = self.eval_task.example(self.ell_eval);
+                    src.extend_from_slice(&ex.src);
+                    golds.push(ex.tgt[1..].to_vec()); // drop BOS
+                }
+                SortEvalBatch {
+                    src: HostTensor::i32(&[self.eval_batch, self.ell_eval], src),
+                    golds,
+                }
+            })
+            .collect()
+    }
+
+    pub fn eval_len(&self) -> usize {
+        self.ell_eval
+    }
+
+    pub fn eval_batch_size(&self) -> usize {
+        self.eval_batch
+    }
+}
+
+/// All task data behind one facade, constructed from a manifest.
+pub enum TaskData {
+    Lm(LmData),
+    Cls(ClsData),
+    Sort(SortData),
+}
+
+/// Which synthetic dataset an experiment name maps to.
+fn dataset_key(name: &str) -> &'static str {
+    let prefix = name.split("__").next().unwrap_or(name);
+    match prefix {
+        p if p.starts_with("sort") => "sort",
+        p if p.starts_with("lmw") || p.starts_with("abl") || p.starts_with("fig") => "lmw",
+        p if p.starts_with("lmc") => "lmc",
+        p if p.starts_with("img") => "img",
+        p if p.starts_with("imdbw") => "imdbw",
+        p if p.starts_with("imdbc") => "imdbc",
+        p if p.starts_with("sstw") => "sstw",
+        p if p.starts_with("sstc") => "sstc",
+        p if p.starts_with("snli") => "snli",
+        p if p.starts_with("mnli") => "mnli",
+        _ => "lmw",
+    }
+}
+
+const CLS_TRAIN_N: usize = 2048;
+const CLS_EVAL_N: usize = 512;
+
+impl TaskData {
+    pub fn for_experiment(m: &Manifest) -> Result<TaskData> {
+        let key = dataset_key(&m.name);
+        let vocab = m.cfg_usize("vocab")?;
+        let ell = m.cfg_usize("ell")?;
+        let batch = m.train_cfg.usize_of("batch")?;
+        let eval_batch = m.train_cfg.usize_of("eval_batch").unwrap_or(batch);
+        let tseed = fnv1a(key); // train stream
+        let eseed = fnv1a(key) ^ 0xEEEE_EEEE; // held-out stream
+
+        let data = match (m.family, key) {
+            (Family::Seq2seq, _) => {
+                let ell_eval = m.eval_cfg.usize_of("ell").unwrap_or(2 * ell);
+                TaskData::Sort(SortData {
+                    train_task: SortTask::new(vocab, tseed),
+                    eval_task: SortTask::new(vocab, eseed),
+                    ell,
+                    ell_eval,
+                    batch,
+                    eval_batch,
+                })
+            }
+            (Family::Lm, "lmc") => TaskData::Lm(LmData {
+                train: LmSource::Char(CharCorpus::new(256, tseed)),
+                eval: LmSource::Char(CharCorpus::new(256, eseed)),
+                ell,
+                batch,
+                eval_batch,
+            }),
+            (Family::Lm, "img") => TaskData::Lm(LmData {
+                train: LmSource::Image(ImageTask::for_seq_len(ell, tseed)),
+                eval: LmSource::Image(ImageTask::for_seq_len(ell, eseed)),
+                ell,
+                batch,
+                eval_batch,
+            }),
+            (Family::Lm, _) => TaskData::Lm(LmData {
+                train: LmSource::Word(Corpus::new(vocab, tseed)),
+                eval: LmSource::Word(Corpus::new(vocab, eseed)),
+                ell,
+                batch,
+                eval_batch,
+            }),
+            (Family::Cls, key) => {
+                let (train_set, eval_set) = match key {
+                    "imdbw" | "sstw" => {
+                        let mut tr = SentimentTask::new(vocab, tseed);
+                        let mut ev = SentimentTask::new(vocab, eseed);
+                        (tr.dataset(CLS_TRAIN_N, ell), ev.dataset(CLS_EVAL_N, ell))
+                    }
+                    "imdbc" | "sstc" => {
+                        let mut tr = CharSentimentTask::new(tseed);
+                        let mut ev = CharSentimentTask::new(eseed);
+                        (tr.dataset(CLS_TRAIN_N, ell), ev.dataset(CLS_EVAL_N, ell))
+                    }
+                    "snli" | "mnli" => {
+                        let hard = key == "mnli";
+                        let mut tr = NliTask::new(vocab, tseed, hard);
+                        let mut ev = NliTask::new(vocab, eseed, hard);
+                        (tr.dataset(CLS_TRAIN_N, ell), ev.dataset(CLS_EVAL_N, ell))
+                    }
+                    other => bail!("no classification dataset for '{other}'"),
+                };
+                TaskData::Cls(ClsData {
+                    train_set,
+                    eval_set,
+                    batcher: Batcher::new(CLS_TRAIN_N, batch, tseed ^ 7),
+                    ell,
+                    eval_batch,
+                })
+            }
+        };
+        Ok(data)
+    }
+
+    pub fn train_batch(&mut self) -> Vec<HostTensor> {
+        match self {
+            TaskData::Lm(d) => d.train_batch(),
+            TaskData::Cls(d) => d.train_batch(),
+            TaskData::Sort(d) => d.train_batch(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_key_mapping() {
+        assert_eq!(dataset_key("sort__vanilla"), "sort");
+        assert_eq!(dataset_key("lmw_tiny__sinkhorn_b16"), "lmw");
+        assert_eq!(dataset_key("abl_p1__sinkhorn_b16"), "lmw");
+        assert_eq!(dataset_key("fig4_k10__sinkhorn_b16"), "lmw");
+        assert_eq!(dataset_key("imdbc__sortcut_2x16"), "imdbc");
+        assert_eq!(dataset_key("mnli__vanilla"), "mnli");
+    }
+
+    #[test]
+    fn same_dataset_across_variants() {
+        // two variants of the same table must see identical data
+        assert_eq!(fnv1a(dataset_key("lmw_tiny__vanilla")), fnv1a(dataset_key("lmw_small__mixture")));
+        assert_ne!(fnv1a("lmw"), fnv1a("lmc"));
+    }
+}

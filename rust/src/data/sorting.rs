@@ -1,0 +1,130 @@
+//! Algorithmic sorting task (paper §5.1, Table 1): seq2seq transduction —
+//! input a random integer sequence, output its sorted order. Mirrors
+//! Tensor2Tensor's `algorithmic_sort_problem`, including the length-
+//! generalization probe (train at ell, evaluate at 2*ell).
+
+use crate::util::rng::Rng;
+
+use super::tokenizer::BOS;
+
+/// Digits live in [FIRST_DIGIT, vocab); 0..3 are pad/unk/bos/sep specials.
+pub const FIRST_DIGIT: i32 = 4;
+
+pub struct SortTask {
+    pub vocab: usize,
+    rng: Rng,
+}
+
+/// One example: src digits and the decoder target `[BOS, sorted...]`.
+#[derive(Debug, Clone)]
+pub struct SortExample {
+    pub src: Vec<i32>,
+    /// length = src.len() + 1 (BOS-prefixed sorted sequence)
+    pub tgt: Vec<i32>,
+}
+
+impl SortTask {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        assert!(vocab as i32 > FIRST_DIGIT + 2, "vocab too small for digits");
+        SortTask { vocab, rng: Rng::new(seed) }
+    }
+
+    pub fn example(&mut self, len: usize) -> SortExample {
+        let hi = self.vocab as i64;
+        let src: Vec<i32> = (0..len)
+            .map(|_| self.rng.range_i64(FIRST_DIGIT as i64, hi) as i32)
+            .collect();
+        let mut sorted = src.clone();
+        sorted.sort_unstable();
+        let mut tgt = Vec::with_capacity(len + 1);
+        tgt.push(BOS);
+        tgt.extend_from_slice(&sorted);
+        SortExample { src, tgt }
+    }
+
+    /// A batch as two row-major id buffers: src (bsz, len), tgt (bsz, len+1).
+    pub fn batch(&mut self, bsz: usize, len: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut src = Vec::with_capacity(bsz * len);
+        let mut tgt = Vec::with_capacity(bsz * (len + 1));
+        for _ in 0..bsz {
+            let ex = self.example(len);
+            src.extend_from_slice(&ex.src);
+            tgt.extend_from_slice(&ex.tgt);
+        }
+        (src, tgt)
+    }
+}
+
+/// Exact-match + mean normalized edit distance between predictions and the
+/// ground-truth sorted sequences (the Table 1 metrics).
+pub fn score_predictions(preds: &[Vec<i32>], golds: &[Vec<i32>]) -> (f64, f64) {
+    assert_eq!(preds.len(), golds.len());
+    let mut em = 0usize;
+    let mut ed_sum = 0.0;
+    for (p, g) in preds.iter().zip(golds) {
+        if p == g {
+            em += 1;
+        }
+        ed_sum += crate::util::edit_distance(p, g) as f64 / g.len().max(1) as f64;
+    }
+    (em as f64 / preds.len() as f64, ed_sum / preds.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn target_is_sorted_permutation() {
+        forall(
+            32,
+            0x50,
+            |g| {
+                let mut t = SortTask::new(20, g.rng.next_u64());
+                t.example(8 + g.usize(0, 56))
+            },
+            |ex| {
+                if ex.tgt[0] != BOS {
+                    return Err("missing BOS".into());
+                }
+                let body = &ex.tgt[1..];
+                if !body.windows(2).all(|w| w[0] <= w[1]) {
+                    return Err("target not sorted".into());
+                }
+                let mut a = ex.src.clone();
+                let mut b = body.to_vec();
+                a.sort_unstable();
+                b.sort_unstable();
+                if a != b {
+                    return Err("target not a permutation of source".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn digits_in_vocab_range() {
+        let mut t = SortTask::new(20, 7);
+        let ex = t.example(64);
+        assert!(ex.src.iter().all(|&d| (FIRST_DIGIT..20).contains(&d)));
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut t = SortTask::new(20, 3);
+        let (src, tgt) = t.batch(4, 16);
+        assert_eq!(src.len(), 4 * 16);
+        assert_eq!(tgt.len(), 4 * 17);
+    }
+
+    #[test]
+    fn scoring() {
+        let golds = vec![vec![1, 2, 3], vec![4, 5, 6]];
+        let preds = vec![vec![1, 2, 3], vec![4, 6, 5]];
+        let (em, ed) = score_predictions(&preds, &golds);
+        assert!((em - 0.5).abs() < 1e-12);
+        assert!(ed > 0.0 && ed < 1.0);
+    }
+}

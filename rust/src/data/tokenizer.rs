@@ -1,0 +1,171 @@
+//! Tokenizers: frequency-based word vocabulary and a char vocabulary.
+//!
+//! The paper's tasks use 32k wordpieces / raw characters; our synthetic
+//! corpora use a word vocab built the same way (frequency cutoff, specials
+//! first) and a printable-ASCII char vocab.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const UNK: i32 = 1;
+pub const BOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const N_SPECIALS: i32 = 4;
+
+/// Frequency-ranked word vocabulary.
+#[derive(Debug, Clone)]
+pub struct WordVocab {
+    id_of: HashMap<String, i32>,
+    words: Vec<String>,
+    pub capacity: usize,
+}
+
+impl WordVocab {
+    /// Build from a corpus iterator, keeping the `capacity - N_SPECIALS`
+    /// most frequent words (ties broken lexicographically for determinism).
+    pub fn build<'a>(tokens: impl Iterator<Item = &'a str>, capacity: usize) -> Self {
+        let mut freq: HashMap<&str, usize> = HashMap::new();
+        for t in tokens {
+            *freq.entry(t).or_default() += 1;
+        }
+        let mut ranked: Vec<(&str, usize)> = freq.into_iter().collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        ranked.truncate(capacity.saturating_sub(N_SPECIALS as usize));
+
+        let mut id_of = HashMap::new();
+        let mut words: Vec<String> =
+            ["<pad>", "<unk>", "<bos>", "<sep>"].iter().map(|s| s.to_string()).collect();
+        for (w, _) in ranked {
+            id_of.insert(w.to_string(), words.len() as i32);
+            words.push(w.to_string());
+        }
+        WordVocab { id_of, words, capacity }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn encode(&self, word: &str) -> i32 {
+        *self.id_of.get(word).unwrap_or(&UNK)
+    }
+
+    pub fn decode(&self, id: i32) -> &str {
+        self.words.get(id as usize).map(|s| s.as_str()).unwrap_or("<bad>")
+    }
+
+    pub fn encode_seq(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace().map(|w| self.encode(w)).collect()
+    }
+}
+
+/// Char vocabulary over a fixed printable alphabet.
+#[derive(Debug, Clone)]
+pub struct CharVocab {
+    alphabet: Vec<char>,
+    id_of: HashMap<char, i32>,
+}
+
+impl CharVocab {
+    /// lowercase letters + digits + space + basic punctuation (fits the
+    /// vocab=64 char-level configs).
+    pub fn ascii() -> Self {
+        let alphabet: Vec<char> =
+            "abcdefghijklmnopqrstuvwxyz0123456789 .,!?'-:;()".chars().collect();
+        let id_of = alphabet
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (c, i as i32 + N_SPECIALS))
+            .collect();
+        CharVocab { alphabet, id_of }
+    }
+
+    pub fn len(&self) -> usize {
+        self.alphabet.len() + N_SPECIALS as usize
+    }
+
+    pub fn encode(&self, c: char) -> i32 {
+        *self.id_of.get(&c.to_ascii_lowercase()).unwrap_or(&UNK)
+    }
+
+    pub fn encode_str(&self, s: &str) -> Vec<i32> {
+        s.chars().map(|c| self.encode(c)).collect()
+    }
+
+    pub fn decode(&self, id: i32) -> char {
+        if id < N_SPECIALS {
+            return match id {
+                x if x == PAD => '_',
+                x if x == BOS => '^',
+                x if x == SEP => '|',
+                _ => '?',
+            };
+        }
+        self.alphabet.get((id - N_SPECIALS) as usize).copied().unwrap_or('?')
+    }
+}
+
+/// Fit (or truncate) a token sequence into `len`, padding with PAD.
+pub fn pad_to(mut seq: Vec<i32>, len: usize) -> Vec<i32> {
+    seq.truncate(len);
+    while seq.len() < len {
+        seq.push(PAD);
+    }
+    seq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_ranks_by_frequency() {
+        let text = "b b b a a c";
+        let v = WordVocab::build(text.split_whitespace(), 16);
+        assert_eq!(v.encode("b"), N_SPECIALS); // most frequent = first slot
+        assert_eq!(v.encode("a"), N_SPECIALS + 1);
+        assert_eq!(v.encode("zzz"), UNK);
+        assert_eq!(v.decode(v.encode("c")), "c");
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let text = "a a a b b c d e f";
+        let v = WordVocab::build(text.split_whitespace(), 6);
+        assert!(v.len() <= 6);
+        assert_eq!(v.encode("f"), UNK); // rare word out of budget
+    }
+
+    #[test]
+    fn word_roundtrip() {
+        let v = WordVocab::build("x y z".split_whitespace(), 10);
+        let ids = v.encode_seq("x z y");
+        let back: Vec<&str> = ids.iter().map(|&i| v.decode(i)).collect();
+        assert_eq!(back, vec!["x", "z", "y"]);
+    }
+
+    #[test]
+    fn char_roundtrip() {
+        let v = CharVocab::ascii();
+        let ids = v.encode_str("hello, world!");
+        let back: String = ids.iter().map(|&i| v.decode(i)).collect();
+        assert_eq!(back, "hello, world!");
+        assert!(v.len() <= 64);
+    }
+
+    #[test]
+    fn char_unknown_maps_unk() {
+        let v = CharVocab::ascii();
+        assert_eq!(v.encode('\u{1F600}'), UNK);
+    }
+
+    #[test]
+    fn pad_to_works() {
+        assert_eq!(pad_to(vec![5, 6], 4), vec![5, 6, 0, 0]);
+        assert_eq!(pad_to(vec![1, 2, 3], 2), vec![1, 2]);
+    }
+}

@@ -1,0 +1,29 @@
+//! # Sinkhorn Transformer — Sparse Sinkhorn Attention, full-stack
+//!
+//! Reproduction of *Sparse Sinkhorn Attention* (Tay, Bahri, Yang, Metzler,
+//! Juan — ICML 2020) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): Sinkhorn
+//!   balancing, block-sparse sorted+local attention (fwd *and* bwd),
+//!   SortCut attention. AOT-lowered, never run from Python at runtime.
+//! * **L2** — JAX models (`python/compile/`): SortNet, multi-head Sinkhorn
+//!   attention (+ vanilla/local/Sparse-Transformer baselines), LM /
+//!   classifier / seq2seq stacks, hand-rolled Adam train step.
+//! * **L3** — this crate: the coordinator. Loads the compiled HLO
+//!   artifacts via PJRT ([`runtime`]), generates data ([`data`]), drives
+//!   training/eval ([`coordinator`]), serves batched inference
+//!   ([`server`]), regenerates every table and figure of the paper
+//!   ([`bench`]), and carries a pure-Rust reference implementation of the
+//!   algorithm ([`sinkhorn`]) for property tests and analytic memory
+//!   models.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod server;
+pub mod sinkhorn;
+pub mod util;

@@ -1,0 +1,235 @@
+//! `sinkhorn` — the coordinator CLI.
+//!
+//! Subcommands:
+//!   list                         show registered experiments
+//!   train  --exp NAME            train one experiment (AOT graphs, no python)
+//!   eval   --exp NAME --ckpt F   evaluate a checkpoint
+//!   bench  --target tableN|figN|memory|all   regenerate paper tables
+//!   serve  --exp NAME            run the batched inference demo
+//!   inspect --exp NAME           dump manifest facts
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use sinkhorn::bench::{self, tables};
+use sinkhorn::coordinator::{self, Checkpoint, TrainOptions};
+use sinkhorn::data::TaskData;
+use sinkhorn::runtime::{artifacts_dir, Experiment, Registry, Runtime};
+use sinkhorn::server::{BatchPolicy, Server};
+use sinkhorn::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let artifacts = args
+        .opt_str("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(artifacts_dir);
+    match args.subcommand.as_deref() {
+        Some("list") => cmd_list(&artifacts),
+        Some("train") => cmd_train(args, &artifacts),
+        Some("eval") => cmd_eval(args, &artifacts),
+        Some("bench") => cmd_bench(args, &artifacts),
+        Some("serve") => cmd_serve(args, &artifacts),
+        Some("inspect") => cmd_inspect(args, &artifacts),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand '{o}'\n");
+            }
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "sinkhorn — Sparse Sinkhorn Attention (ICML 2020) coordinator
+
+USAGE: sinkhorn <subcommand> [flags]
+
+  list                              experiments in the registry
+  train  --exp NAME [--steps N] [--seed S] [--ckpt out.ckpt] [--verbose]
+  eval   --exp NAME --ckpt F [--eval-batches N]
+  bench  --target table1..table8|fig3|fig4|memory|all
+         [--scale F] [--steps N] [--fast-decode] [--verbose]
+  serve  --exp NAME [--ckpt F] [--requests N] [--max-batch B] [--max-wait-ms T]
+  inspect --exp NAME
+
+  global: --artifacts DIR (default ./artifacts or $SINKHORN_ARTIFACTS)"
+    );
+}
+
+fn cmd_list(artifacts: &PathBuf) -> Result<()> {
+    let reg = Registry::load(artifacts)?;
+    println!("{} experiments in {}", reg.entries.len(), artifacts.display());
+    let mut cur = String::new();
+    for e in &reg.entries {
+        if e.table != cur {
+            cur = e.table.clone();
+            println!("\n[{cur}]");
+        }
+        println!("  {}", e.name);
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let name = args.opt_str("exp").ok_or_else(|| anyhow!("--exp required"))?;
+    let rt = Runtime::cpu()?;
+    let exp = Experiment::load(artifacts, &name)?;
+    let mut data = TaskData::for_experiment(&exp.manifest)?;
+    let default_steps = exp.manifest.train_cfg.usize_of("default_steps").unwrap_or(200);
+    let opts = TrainOptions {
+        steps: args.usize("steps", default_steps)?,
+        seed: args.u64("seed", 17)? as i32,
+        log_every: args.usize("log-every", 10)?,
+        verbose: true,
+        checkpoint: args.opt_str("ckpt").map(PathBuf::from),
+    };
+    println!(
+        "training {name}: {} params, {} steps",
+        exp.manifest.n_params(),
+        opts.steps
+    );
+    let (_state, report) = coordinator::train_from_scratch(&rt, &exp, &mut data, &opts)?;
+    println!(
+        "done in {:.1}s ({:.2} steps/s); loss curve: {}",
+        report.secs,
+        report.steps_per_sec,
+        report.curve.sparkline(40)
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let name = args.opt_str("exp").ok_or_else(|| anyhow!("--exp required"))?;
+    let ckpt = args.opt_str("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
+    let rt = Runtime::cpu()?;
+    let exp = Experiment::load(artifacts, &name)?;
+    let state = Checkpoint::load(&PathBuf::from(ckpt))?.restore(&exp.manifest)?;
+    let n = args.usize("eval-batches", 4)?;
+    let mut data = TaskData::for_experiment(&exp.manifest)?;
+    match &mut data {
+        TaskData::Lm(d) => {
+            let loss = coordinator::eval_lm(&rt, &exp, &state, d, n)?;
+            println!(
+                "loss {loss:.4} nats | ppl {:.3} | bpc {:.4}",
+                coordinator::perplexity(loss),
+                coordinator::bpc(loss)
+            );
+        }
+        TaskData::Cls(d) => {
+            let (loss, acc) = coordinator::eval_cls(&rt, &exp, &state, d)?;
+            println!("loss {loss:.4} | accuracy {:.2}%", acc * 100.0);
+        }
+        TaskData::Sort(d) => {
+            let (em, ed) = coordinator::eval_sort(&rt, &exp, &state, d, n)?;
+            println!("exact match {:.2}% | edit distance {ed:.4}", em * 100.0);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let target = args.str("target", "all");
+    let opts = bench::BenchOptions {
+        artifacts: artifacts.clone(),
+        scale: args.f64("scale", 1.0)?,
+        steps: args.opt_str("steps").map(|s| s.parse()).transpose()?,
+        seed: args.u64("seed", 17)? as i32,
+        eval_batches: args.usize("eval-batches", 4)?,
+        verbose: args.bool("verbose"),
+        fast_decode: args.bool("fast-decode"),
+    };
+    let rt = Runtime::cpu()?;
+    let reg = Registry::load(artifacts)?;
+    if target == "all" {
+        for t in tables::ALL_TARGETS {
+            tables::run_target(&rt, &reg, &opts, t)?;
+        }
+    } else {
+        tables::run_target(&rt, &reg, &opts, &target)?;
+    }
+    let (csecs, cn) = *rt.compile_stats.borrow();
+    println!("[runtime] compiled {cn} graphs in {csecs:.1}s total");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let name = args.opt_str("exp").ok_or_else(|| anyhow!("--exp required"))?;
+    let n_requests = args.usize("requests", 256)?;
+    let policy = BatchPolicy {
+        max_batch: args.usize("max-batch", 32)?,
+        max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 5)?),
+    };
+    let server = Server::start(
+        artifacts.clone(),
+        name.clone(),
+        args.opt_str("ckpt").map(PathBuf::from),
+        policy,
+        args.u64("seed", 17)? as i32,
+    )?;
+    // optional TCP frontend (line protocol; see server::tcp)
+    let tcp = match args.opt_str("port") {
+        Some(p) => {
+            let fe = sinkhorn::server::TcpFrontend::start(
+                &format!("127.0.0.1:{p}"),
+                server.handle.clone(),
+            )?;
+            println!("tcp frontend listening on {}", fe.addr);
+            Some(fe)
+        }
+        None => None,
+    };
+    // demo traffic: synthetic requests from the experiment's own dataset
+    let rt_exp = Experiment::load(artifacts, &name)?;
+    let mut data = TaskData::for_experiment(&rt_exp.manifest)?;
+    let seq_len = server.handle.seq_len;
+    let mut latencies = Vec::new();
+    let t0 = std::time::Instant::now();
+    for _ in 0..n_requests {
+        let batch = data.train_batch();
+        let toks = batch[0].as_i32()?[..seq_len].to_vec();
+        let resp = server.handle.classify(toks)?;
+        latencies.push(resp.total.as_secs_f64() * 1e3);
+    }
+    drop(tcp);
+    let total = t0.elapsed().as_secs_f64();
+    let p50 = sinkhorn::util::stats::percentile(&mut latencies.clone(), 50.0);
+    let p99 = sinkhorn::util::stats::percentile(&mut latencies.clone(), 99.0);
+    println!(
+        "served {n_requests} requests in {total:.2}s ({:.1} req/s) | p50 {p50:.2}ms p99 {p99:.2}ms",
+        n_requests as f64 / total
+    );
+    server.shutdown()?;
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let name = args.opt_str("exp").ok_or_else(|| anyhow!("--exp required"))?;
+    let exp = Experiment::load(artifacts, &name)?;
+    let m = &exp.manifest;
+    println!("name    : {}", m.name);
+    println!("family  : {:?}   table: {}", m.family, m.table);
+    println!("variant : {}", m.variant());
+    println!("params  : {} leaves, {} total", m.n_leaves(), m.n_params());
+    println!("cfg     : {}", m.cfg.to_string());
+    println!("train   : {}", m.train_cfg.to_string());
+    println!("train inputs:");
+    for s in &m.train_batch_inputs {
+        println!("  {} {:?} {:?}", s.name, s.shape, s.dtype);
+    }
+    println!("eval outputs: {:?}", m.eval_outputs);
+    if m.n_leaves() == 0 {
+        bail!("manifest has no parameters — corrupt artifact?");
+    }
+    Ok(())
+}

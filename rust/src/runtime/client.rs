@@ -1,0 +1,77 @@
+//! PJRT runtime: loads HLO-text artifacts, compiles them once, executes
+//! them from the coordinator hot path. Python is never involved here.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// Wraps the PJRT CPU client with a compile cache keyed by artifact path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative (compile_secs, n_compiles) for the perf report.
+    pub compile_stats: RefCell<(f64, usize)>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            compile_stats: RefCell::new((0.0, 0)),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    ///
+    /// HLO *text* is the interchange format: jax >= 0.5 serializes protos
+    /// with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+    /// text parser reassigns ids (see DESIGN.md §2).
+    pub fn load(&self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(path) {
+            return Ok(exe.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        {
+            let mut st = self.compile_stats.borrow_mut();
+            st.0 += t0.elapsed().as_secs_f64();
+            st.1 += 1;
+        }
+        self.cache.borrow_mut().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a compiled graph on literals; returns the flattened output
+    /// tuple (all our graphs are lowered with `return_tuple=True`).
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let buffers = exe.execute::<&xla::Literal>(args).context("executing graph")?;
+        let out = buffers[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+
+    /// Number of graphs compiled so far (test/diagnostic hook).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,125 @@
+//! An `Experiment` bundles one (task, attention-variant) pair's compiled
+//! graphs and drives them: reproducible init, train steps, evaluation.
+//!
+//! Train-graph calling convention (see python/compile/aot.py):
+//!   inputs : params..., m..., v..., step:f32, seed:i32, batch...
+//!   outputs: params'..., m'..., v'..., step', loss
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::Runtime;
+use super::manifest::Manifest;
+use super::tensor::{zero_literal, HostTensor};
+
+/// Mutable optimizer state held between steps (literals stay host-side;
+/// PJRT CPU shares the memory space so uploads are cheap copies).
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    pub step: f32,
+}
+
+impl TrainState {
+    pub fn n_leaves(&self) -> usize {
+        self.params.len()
+    }
+}
+
+pub struct Experiment {
+    pub manifest: Manifest,
+}
+
+impl Experiment {
+    pub fn load(artifacts_dir: &Path, name: &str) -> Result<Self> {
+        Ok(Experiment { manifest: Manifest::load(artifacts_dir, name)? })
+    }
+
+    /// Run the init graph: reproducible parameter init from a seed, with
+    /// fresh zero Adam slots.
+    pub fn init_state(&self, rt: &Runtime, seed: i32) -> Result<TrainState> {
+        let exe = rt.load(&self.manifest.init_hlo)?;
+        let seed_lit = HostTensor::scalar_i32(seed).to_literal()?;
+        let params = rt.execute(&exe, &[&seed_lit])?;
+        if params.len() != self.manifest.n_leaves() {
+            bail!(
+                "init graph returned {} leaves, manifest says {}",
+                params.len(),
+                self.manifest.n_leaves()
+            );
+        }
+        let m = self.manifest.params.iter().map(zero_literal).collect();
+        let v = self.manifest.params.iter().map(zero_literal).collect();
+        Ok(TrainState { params, m, v, step: 0.0 })
+    }
+
+    /// One optimizer step. Returns the training loss.
+    pub fn train_step(
+        &self,
+        rt: &Runtime,
+        state: &mut TrainState,
+        seed: i32,
+        batch: &[xla::Literal],
+    ) -> Result<f32> {
+        let n = self.manifest.n_leaves();
+        if batch.len() != self.manifest.train_batch_inputs.len() {
+            bail!(
+                "train batch arity {} != manifest {}",
+                batch.len(),
+                self.manifest.train_batch_inputs.len()
+            );
+        }
+        let exe = rt.load(&self.manifest.train_hlo)?;
+        let step_lit = HostTensor::scalar_f32(state.step).to_literal()?;
+        let seed_lit = HostTensor::scalar_i32(seed).to_literal()?;
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 2 + batch.len());
+        args.extend(state.params.iter());
+        args.extend(state.m.iter());
+        args.extend(state.v.iter());
+        args.push(&step_lit);
+        args.push(&seed_lit);
+        args.extend(batch.iter());
+
+        let mut out = rt.execute(&exe, &args).context("train step")?;
+        if out.len() != 3 * n + 2 {
+            bail!("train graph returned {} outputs, expected {}", out.len(), 3 * n + 2);
+        }
+        let loss = HostTensor::from_literal(&out[3 * n + 1])?.as_f32()?[0];
+        let step = HostTensor::from_literal(&out[3 * n])?.as_f32()?[0];
+        // replace state with the updated leaves (reverse-order pops avoid
+        // shifting the vec)
+        out.truncate(3 * n);
+        let mut it = out.into_iter();
+        state.params = it.by_ref().take(n).collect();
+        state.m = it.by_ref().take(n).collect();
+        state.v = it.by_ref().take(n).collect();
+        state.step = step;
+        Ok(loss)
+    }
+
+    /// Run the eval graph on one batch; returns the raw output literals
+    /// (family-specific: lm -> [loss]; cls -> [loss, n_correct];
+    /// seq2seq -> [loss, pred]).
+    pub fn eval(
+        &self,
+        rt: &Runtime,
+        params: &[xla::Literal],
+        batch: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        if batch.len() != self.manifest.eval_batch_inputs.len() {
+            bail!(
+                "eval batch arity {} != manifest {}",
+                batch.len(),
+                self.manifest.eval_batch_inputs.len()
+            );
+        }
+        let exe = rt.load(&self.manifest.eval_hlo)?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(params.len() + batch.len());
+        args.extend(params.iter());
+        args.extend(batch.iter());
+        rt.execute(&exe, &args).context("eval step")
+    }
+}

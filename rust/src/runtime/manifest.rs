@@ -1,0 +1,252 @@
+//! Typed views over the AOT artifact manifests written by
+//! `python/compile/aot.py` (`<exp>.manifest.json`) and the global
+//! `registry.json`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a tensor crossing the Rust <-> XLA boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+
+    pub fn primitive(self) -> xla::PrimitiveType {
+        match self {
+            Dtype::F32 => xla::PrimitiveType::F32,
+            Dtype::I32 => xla::PrimitiveType::S32,
+        }
+    }
+}
+
+/// One named tensor slot (a parameter leaf or a batch input).
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl LeafSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("shape not an array"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(LeafSpec {
+            name: j.str_of("name")?,
+            shape,
+            dtype: Dtype::parse(&j.str_of("dtype")?)?,
+        })
+    }
+}
+
+/// Which model family an experiment belongs to (decides batch layout and
+/// eval-output interpretation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Lm,
+    Cls,
+    Seq2seq,
+}
+
+impl Family {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "lm" => Ok(Family::Lm),
+            "cls" => Ok(Family::Cls),
+            "seq2seq" => Ok(Family::Seq2seq),
+            other => bail!("unknown family '{other}'"),
+        }
+    }
+}
+
+/// Parsed `<exp>.manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub family: Family,
+    pub table: String,
+    pub params: Vec<LeafSpec>,
+    pub train_batch_inputs: Vec<LeafSpec>,
+    pub eval_batch_inputs: Vec<LeafSpec>,
+    pub eval_outputs: Vec<String>,
+    pub init_hlo: PathBuf,
+    pub train_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    /// Raw config (vocab, ell, nb, variant, ...) for typed lookups.
+    pub cfg: Json,
+    pub train_cfg: Json,
+    pub eval_cfg: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path, name: &str) -> Result<Self> {
+        let path = dir.join(format!("{name}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<Self> {
+        let leafs = |key: &str| -> Result<Vec<LeafSpec>> {
+            j.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{key} not an array"))?
+                .iter()
+                .map(LeafSpec::from_json)
+                .collect()
+        };
+        let arts = j.req("artifacts")?;
+        Ok(Manifest {
+            name: j.str_of("name")?,
+            family: Family::parse(&j.str_of("family")?)?,
+            table: j.str_of("table")?,
+            params: leafs("params")?,
+            train_batch_inputs: leafs("train_batch_inputs")?,
+            eval_batch_inputs: leafs("eval_batch_inputs")?,
+            eval_outputs: arts_names(j.req("eval_outputs")?)?,
+            init_hlo: dir.join(arts.str_of("init")?),
+            train_hlo: dir.join(arts.str_of("train")?),
+            eval_hlo: dir.join(arts.str_of("eval")?),
+            cfg: j.req("cfg")?.clone(),
+            train_cfg: j.req("train_cfg")?.clone(),
+            eval_cfg: j.get("eval_cfg").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Total parameter count (for the paper-style "# Params" column).
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(|l| l.elements()).sum()
+    }
+
+    pub fn cfg_usize(&self, key: &str) -> Result<usize> {
+        self.cfg.usize_of(key)
+    }
+
+    pub fn variant(&self) -> String {
+        self.cfg.str_of("variant").unwrap_or_else(|_| "?".into())
+    }
+}
+
+fn arts_names(j: &Json) -> Result<Vec<String>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("eval_outputs not an array"))?
+        .iter()
+        .map(|o| o.str_of("name"))
+        .collect()
+}
+
+/// One entry of `registry.json`.
+#[derive(Debug, Clone)]
+pub struct RegistryEntry {
+    pub name: String,
+    pub family: Family,
+    pub table: String,
+    pub cfg: Json,
+    pub train_cfg: Json,
+}
+
+/// The global experiment registry.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub entries: Vec<RegistryEntry>,
+}
+
+impl Registry {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("registry.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text)?;
+        let entries = j
+            .req("experiments")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("experiments not an array"))?
+            .iter()
+            .map(|e| {
+                Ok(RegistryEntry {
+                    name: e.str_of("name")?,
+                    family: Family::parse(&e.str_of("family")?)?,
+                    table: e.str_of("table")?,
+                    cfg: e.req("cfg")?.clone(),
+                    train_cfg: e.req("train_cfg")?.clone(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Registry { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn by_table(&self, table: &str) -> Vec<&RegistryEntry> {
+        self.entries.iter().filter(|e| e.table == table).collect()
+    }
+
+    pub fn find(&self, name: &str) -> Result<&RegistryEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("experiment '{name}' not in registry"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_roundtrip() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("i32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("f64").is_err());
+    }
+
+    #[test]
+    fn manifest_from_json() {
+        let j = Json::parse(
+            r#"{
+              "name": "t", "family": "lm", "table": "table2",
+              "params": [{"name": "w", "shape": [2, 3], "dtype": "f32"}],
+              "train_batch_inputs": [{"name": "tokens", "shape": [4, 9], "dtype": "i32"}],
+              "eval_batch_inputs": [{"name": "tokens", "shape": [4, 9], "dtype": "i32"}],
+              "eval_outputs": [{"name": "loss"}],
+              "cfg": {"ell": 8, "variant": "sinkhorn"}, "train_cfg": {"batch": 4},
+              "artifacts": {"init": "t.init.hlo.txt", "train": "t.train.hlo.txt",
+                            "eval": "t.eval.hlo.txt", "manifest": "t.manifest.json"}
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/a"), &j).unwrap();
+        assert_eq!(m.n_leaves(), 1);
+        assert_eq!(m.n_params(), 6);
+        assert_eq!(m.family, Family::Lm);
+        assert_eq!(m.cfg_usize("ell").unwrap(), 8);
+        assert_eq!(m.variant(), "sinkhorn");
+        assert!(m.train_hlo.ends_with("t.train.hlo.txt"));
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 -> XLA bridge: load AOT artifacts (HLO text + JSON manifest), compile
+//! once on the PJRT CPU client, execute from the coordinator hot path.
+
+pub mod client;
+pub mod experiment;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::Runtime;
+pub use experiment::{Experiment, TrainState};
+pub use manifest::{Dtype, Family, LeafSpec, Manifest, Registry, RegistryEntry};
+pub use tensor::HostTensor;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$SINKHORN_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("SINKHORN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,183 @@
+//! Host-side tensors and conversions to/from `xla::Literal`.
+//!
+//! The coordinator's data pipeline produces `HostTensor`s; the runtime
+//! uploads them as literals. Downloads go the other way for metrics,
+//! checkpoints and predictions.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{Dtype, LeafSpec};
+
+/// A dense host tensor (row-major), f32 or i32.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn zeros(dtype: Dtype, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        match dtype {
+            Dtype::F32 => HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; n] },
+            Dtype::I32 => HostTensor::I32 { shape: shape.to_vec(), data: vec![0; n] },
+        }
+    }
+
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32 { .. } => Dtype::F32,
+            HostTensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Upload: convert to an XLA literal with this shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        if dims.is_empty() {
+            // rank-0: reshape from [1] to []
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// Download: read back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Validate against a manifest slot (shape + dtype).
+    pub fn check_spec(&self, spec: &LeafSpec) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "tensor '{}': shape {:?} != manifest {:?}",
+                spec.name,
+                self.shape(),
+                spec.shape
+            );
+        }
+        if self.dtype() != spec.dtype {
+            bail!("tensor '{}': dtype mismatch", spec.name);
+        }
+        Ok(())
+    }
+}
+
+/// Zero-initialized literal matching a manifest leaf (Adam m/v slots).
+pub fn zero_literal(spec: &LeafSpec) -> xla::Literal {
+    xla::Literal::create_from_shape(spec.dtype.primitive(), &spec.shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape() {
+        let t = HostTensor::zeros(Dtype::F32, &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32(&[3], vec![-1, 0, 7]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = HostTensor::scalar_f32(2.5);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &[2.5]);
+        assert!(back.shape().is_empty());
+    }
+
+    #[test]
+    fn spec_check() {
+        let spec = LeafSpec { name: "w".into(), shape: vec![2, 2], dtype: Dtype::F32 };
+        assert!(HostTensor::zeros(Dtype::F32, &[2, 2]).check_spec(&spec).is_ok());
+        assert!(HostTensor::zeros(Dtype::F32, &[4]).check_spec(&spec).is_err());
+        assert!(HostTensor::zeros(Dtype::I32, &[2, 2]).check_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn zero_literal_matches() {
+        let spec = LeafSpec { name: "m".into(), shape: vec![3, 4], dtype: Dtype::F32 };
+        let lit = zero_literal(&spec);
+        let t = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t.shape(), &[3, 4]);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+}

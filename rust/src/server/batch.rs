@@ -1,0 +1,141 @@
+//! Dynamic batcher: groups inference requests into fixed-shape batches
+//! under a (max_batch, max_wait) policy — the classic serving trade-off
+//! between latency and throughput. Graphs are shape-specialized, so the
+//! executor always runs full `batch_size` tensors; short batches are
+//! padded with dummy rows that are dropped on the way out.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Target batch size (must equal the compiled graph's batch dim).
+    pub max_batch: usize,
+    /// Max time the first request in a batch waits for company.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Pull up to `max_batch` items from `rx`, waiting at most `max_wait`
+/// after the first item arrives. Blocks indefinitely for the first item;
+/// returns `None` when the channel is closed and drained.
+pub fn gather<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn gathers_up_to_max_batch() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) };
+        let b = gather(&rx, &policy).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = gather(&rx, &policy).unwrap();
+        assert_eq!(b, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_deadline() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(10) };
+        let t0 = Instant::now();
+        let b = gather(&rx, &policy).unwrap();
+        assert_eq!(b, vec![1, 2]);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn none_when_closed() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(gather(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn drains_after_close() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        drop(tx);
+        let b = gather(&rx, &BatchPolicy::default()).unwrap();
+        assert_eq!(b, vec![7]);
+        assert!(gather(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn conservation_under_concurrent_producers() {
+        // queue conservation: every sent item appears in exactly one batch
+        let (tx, rx) = channel();
+        let n_producers = 4;
+        let per = 50;
+        let mut joins = Vec::new();
+        for p in 0..n_producers {
+            let tx = tx.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    tx.send(p * per + i).unwrap();
+                    if i % 7 == 0 {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                }
+            }));
+        }
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 9, max_wait: Duration::from_millis(1) };
+        let mut seen = std::collections::HashSet::new();
+        while let Some(batch) = gather(&rx, &policy) {
+            assert!(batch.len() <= 9);
+            for x in batch {
+                assert!(seen.insert(x), "duplicate {x}");
+            }
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(seen.len(), n_producers * per, "dropped items");
+    }
+
+    #[test]
+    fn batch_never_exceeds_graph_capacity() {
+        let (tx, rx) = channel();
+        for i in 0..100 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+        let mut count = 0;
+        while let Some(b) = gather(&rx, &policy) {
+            assert_eq!(b.len(), 1);
+            count += 1;
+        }
+        assert_eq!(count, 100);
+    }
+}

@@ -1,0 +1,11 @@
+//! Batched inference serving (the L3 "router" role): client threads submit
+//! token sequences; a dynamic batcher groups them; a single executor thread
+//! owning the PJRT runtime classifies whole batches at once.
+
+pub mod batch;
+pub mod service;
+pub mod tcp;
+
+pub use batch::{gather, BatchPolicy};
+pub use service::{Response, Server, ServerHandle};
+pub use tcp::TcpFrontend;

@@ -1,0 +1,172 @@
+//! Inference service: a router thread owns the PJRT runtime (the client is
+//! not `Send`-shareable, so all execution funnels through one executor —
+//! the vllm-router shape: N frontends -> channel -> batcher -> executor).
+//!
+//! Serves classification experiments: request = token ids, response =
+//! predicted label + timing breakdown.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::Checkpoint;
+use crate::data::tokenizer::pad_to;
+use crate::runtime::{Experiment, HostTensor, Runtime};
+
+use super::batch::{gather, BatchPolicy};
+
+/// One inference request.
+struct Request {
+    tokens: Vec<i32>,
+    enqueued: Instant,
+    resp: Sender<Result<Response>>,
+}
+
+/// Executor inbox message: a request, or an explicit stop. The sentinel
+/// lets `shutdown` terminate the executor even while detached frontends
+/// (e.g. the TCP acceptor) still hold live `ServerHandle` clones.
+enum Msg {
+    Req(Request),
+    Stop,
+}
+
+/// Server reply.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub label: i32,
+    /// time spent waiting in the batcher
+    pub queue: Duration,
+    /// total time from submit to reply
+    pub total: Duration,
+    /// how many requests shared the executed batch
+    pub batch_size: usize,
+}
+
+/// Handle to a running server; cloneable across client threads.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: Sender<Msg>,
+    pub seq_len: usize,
+}
+
+impl ServerHandle {
+    /// Blocking classify call.
+    pub fn classify(&self, tokens: Vec<i32>) -> Result<Response> {
+        let (rtx, rrx) = channel();
+        let req = Request { tokens, enqueued: Instant::now(), resp: rtx };
+        self.tx.send(Msg::Req(req)).map_err(|_| anyhow!("server stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+}
+
+/// A running inference server (executor joins on drop of the handle + stop).
+pub struct Server {
+    pub handle: ServerHandle,
+    join: Option<JoinHandle<Result<()>>>,
+}
+
+impl Server {
+    /// Start the executor thread: loads the experiment, restores or inits
+    /// parameters, then serves until all handles are dropped.
+    pub fn start(
+        artifacts: PathBuf,
+        exp_name: String,
+        checkpoint: Option<PathBuf>,
+        policy: BatchPolicy,
+        init_seed: i32,
+    ) -> Result<Server> {
+        // load the manifest up front so config errors surface synchronously
+        let probe = Experiment::load(&artifacts, &exp_name)?;
+        if probe.manifest.eval_outputs.len() < 3 {
+            bail!("experiment '{exp_name}' has no pred output; re-run make artifacts");
+        }
+        let seq_len = probe.manifest.eval_batch_inputs[0].shape[1];
+        let graph_batch = probe.manifest.eval_batch_inputs[0].shape[0];
+        let policy = BatchPolicy { max_batch: policy.max_batch.min(graph_batch), ..policy };
+
+        let (tx, rx) = channel::<Msg>();
+        let join = std::thread::spawn(move || -> Result<()> {
+            let rt = Runtime::cpu().context("server runtime")?;
+            let exp = Experiment::load(&artifacts, &exp_name)?;
+            let state = match checkpoint {
+                Some(path) => Checkpoint::load(&path)?.restore(&exp.manifest)?,
+                None => exp.init_state(&rt, init_seed)?,
+            };
+            // warm the compile cache before accepting traffic
+            let zeros = HostTensor::i32(&[graph_batch, seq_len], vec![0; graph_batch * seq_len]);
+            let zlabels = HostTensor::i32(&[graph_batch], vec![0; graph_batch]);
+            exp.eval(&rt, &state.params, &[zeros.to_literal()?, zlabels.to_literal()?])?;
+
+            'serve: while let Some(msgs) = gather(&rx, &policy) {
+                let mut stop = false;
+                let batch: Vec<Request> = msgs
+                    .into_iter()
+                    .filter_map(|m| match m {
+                        Msg::Req(r) => Some(r),
+                        Msg::Stop => {
+                            stop = true;
+                            None
+                        }
+                    })
+                    .collect();
+                if batch.is_empty() {
+                    if stop {
+                        break 'serve;
+                    }
+                    continue;
+                }
+                let n = batch.len();
+                let exec_start = Instant::now();
+                // assemble fixed-shape tensors, padding unused rows
+                let mut toks = Vec::with_capacity(graph_batch * seq_len);
+                for req in &batch {
+                    toks.extend(pad_to(req.tokens.clone(), seq_len));
+                }
+                toks.resize(graph_batch * seq_len, 0);
+                let labels = vec![0i32; graph_batch];
+                let t_tok = HostTensor::i32(&[graph_batch, seq_len], toks);
+                let t_lab = HostTensor::i32(&[graph_batch], labels);
+                let result = exp
+                    .eval(&rt, &state.params, &[t_tok.to_literal()?, t_lab.to_literal()?])
+                    .and_then(|out| HostTensor::from_literal(&out[2]));
+                match result {
+                    Ok(pred) => {
+                        let pred = pred.as_i32()?;
+                        for (i, req) in batch.into_iter().enumerate() {
+                            let _ = req.resp.send(Ok(Response {
+                                label: pred[i],
+                                queue: exec_start - req.enqueued,
+                                total: req.enqueued.elapsed(),
+                                batch_size: n,
+                            }));
+                        }
+                    }
+                    Err(e) => {
+                        for req in batch {
+                            let _ = req.resp.send(Err(anyhow!("exec failed: {e}")));
+                        }
+                    }
+                }
+                if stop {
+                    break 'serve;
+                }
+            }
+            Ok(())
+        });
+
+        Ok(Server { handle: ServerHandle { tx, seq_len }, join: Some(join) })
+    }
+
+    /// Close the intake channel and wait for the executor to drain.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.handle.tx.send(Msg::Stop);
+        drop(self.handle);
+        if let Some(j) = self.join.take() {
+            j.join().map_err(|_| anyhow!("executor panicked"))??;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,109 @@
+//! TCP line-protocol frontend for the inference service.
+//!
+//! Protocol (one request per line, UTF-8):
+//!   client: `<id> <id> <id> ...\n`   (space-separated token ids)
+//!   server: `label=<k> batch=<n> queue_us=<q> total_us=<t>\n`
+//!           or `error=<message>\n`
+//!
+//! Each accepted connection gets its own thread that forwards requests to
+//! the shared [`ServerHandle`] (the dynamic batcher merges concurrent
+//! streams into executor batches).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::service::ServerHandle;
+
+/// A listening TCP frontend. The acceptor runs as a detached daemon
+/// thread for the lifetime of the process: `TcpListener::incoming` has no
+/// portable cancellation, so `drop` does NOT join it (joining would
+/// deadlock — the loop blocks in accept). Connection handlers exit when
+/// clients disconnect; requests after the backing [`ServerHandle`]'s
+/// server shuts down get `error=` replies.
+pub struct TcpFrontend {
+    pub addr: std::net::SocketAddr,
+    _accept_join: JoinHandle<()>,
+}
+
+/// Parse one request line into token ids.
+pub fn parse_request(line: &str) -> Result<Vec<i32>> {
+    line.split_whitespace()
+        .map(|t| t.parse::<i32>().with_context(|| format!("bad token '{t}'")))
+        .collect()
+}
+
+/// Render a response line.
+pub fn format_response(label: i32, batch: usize, queue_us: u128, total_us: u128) -> String {
+    format!("label={label} batch={batch} queue_us={queue_us} total_us={total_us}\n")
+}
+
+impl TcpFrontend {
+    /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and serve.
+    pub fn start(addr: &str, handle: ServerHandle) -> Result<TcpFrontend> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        let accept_join = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(stream) = conn else { break };
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let _ = serve_conn(stream, h);
+                });
+            }
+        });
+        Ok(TcpFrontend { addr: local, _accept_join: accept_join })
+    }
+}
+
+fn serve_conn(stream: TcpStream, handle: ServerHandle) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let reply = match parse_request(&line) {
+            Err(e) => format!("error={e}\n"),
+            Ok(tokens) if tokens.is_empty() => "error=empty request\n".to_string(),
+            Ok(tokens) => match handle.classify(tokens) {
+                Ok(r) => format_response(
+                    r.label,
+                    r.batch_size,
+                    r.queue.as_micros(),
+                    r.total.as_micros(),
+                ),
+                Err(e) => format!("error={e}\n"),
+            },
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.flush()?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_valid() {
+        assert_eq!(parse_request("1 2 3\n").unwrap(), vec![1, 2, 3]);
+        assert_eq!(parse_request("  7  \n").unwrap(), vec![7]);
+        assert!(parse_request("1 x 3").is_err());
+    }
+
+    #[test]
+    fn response_format() {
+        let s = format_response(1, 8, 120, 4500);
+        assert_eq!(s, "label=1 batch=8 queue_us=120 total_us=4500\n");
+    }
+
+    #[test]
+    fn parse_empty_gives_empty_vec() {
+        assert_eq!(parse_request("\n").unwrap(), Vec::<i32>::new());
+    }
+}

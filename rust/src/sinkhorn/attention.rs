@@ -1,0 +1,337 @@
+//! Pure-Rust single-head Sparse Sinkhorn Attention — mirrors
+//! `kernels/ref.py` and backs the coordinator property tests (causality by
+//! perturbation, local-attention equivalence, permutation invariances).
+
+use super::balance::NEG_INF;
+use super::matrix::Mat;
+
+/// Blocked sequence: `nb` blocks of a `(b, d)` matrix each.
+#[derive(Debug, Clone)]
+pub struct Blocked {
+    pub blocks: Vec<Mat>,
+}
+
+impl Blocked {
+    /// Split an `(ell, d)` matrix into `nb` blocks.
+    pub fn from_seq(x: &Mat, nb: usize) -> Self {
+        assert_eq!(x.rows % nb, 0, "ell must divide nb");
+        let b = x.rows / nb;
+        let blocks = (0..nb)
+            .map(|i| {
+                Mat::from_vec(
+                    b,
+                    x.cols,
+                    x.data[i * b * x.cols..(i + 1) * b * x.cols].to_vec(),
+                )
+            })
+            .collect();
+        Blocked { blocks }
+    }
+
+    pub fn to_seq(&self) -> Mat {
+        let b = self.blocks[0].rows;
+        let d = self.blocks[0].cols;
+        let mut data = Vec::with_capacity(self.blocks.len() * b * d);
+        for blk in &self.blocks {
+            data.extend_from_slice(&blk.data);
+        }
+        Mat::from_vec(self.blocks.len() * b, d, data)
+    }
+
+    /// Apply a sort matrix: out[i] = sum_j R[i,j] * blocks[j].
+    pub fn sort(&self, r: &Mat) -> Blocked {
+        let nb = self.blocks.len();
+        assert_eq!((r.rows, r.cols), (nb, nb));
+        let b = self.blocks[0].rows;
+        let d = self.blocks[0].cols;
+        let blocks = (0..nb)
+            .map(|i| {
+                let mut acc = Mat::zeros(b, d);
+                for j in 0..nb {
+                    let w = r[(i, j)];
+                    if w != 0.0 {
+                        let mut t = self.blocks[j].clone();
+                        t.scale(w);
+                        acc.add(&t);
+                    }
+                }
+                acc
+            })
+            .collect();
+        Blocked { blocks }
+    }
+}
+
+/// Sparse Sinkhorn attention (single head) over an `(ell, d)` q/k/v.
+///
+/// `r`: (nb, nb) sort matrix (already balanced; caller picks causal or not).
+/// `causal`: within-block causal mask on the local term; the sorted term is
+/// masked per-block where `r`'s row has no support.
+pub fn sinkhorn_attention(q: &Mat, k: &Mat, v: &Mat, r: &Mat, nb: usize, causal: bool) -> Mat {
+    let kb = Blocked::from_seq(k, nb);
+    let vb = Blocked::from_seq(v, nb);
+    let qb = Blocked::from_seq(q, nb);
+    let ks = kb.sort(r);
+    let vs = vb.sort(r);
+    let b = qb.blocks[0].rows;
+    let d = qb.blocks[0].cols;
+    let scale = 1.0 / (d as f32).sqrt();
+
+    let mut out_blocks = Vec::with_capacity(nb);
+    for i in 0..nb {
+        let row_support: f32 = r.row(i).iter().sum();
+        let valid = row_support > 1e-6;
+        let mut ls = qb.blocks[i].matmul_t(&ks.blocks[i]); // (b, b)
+        ls.scale(scale);
+        if !valid {
+            for x in &mut ls.data {
+                *x = NEG_INF;
+            }
+        }
+        let mut ll = qb.blocks[i].matmul_t(&kb.blocks[i]); // (b, b)
+        ll.scale(scale);
+        if causal {
+            for t in 0..b {
+                for u in (t + 1)..b {
+                    ll[(t, u)] = NEG_INF;
+                }
+            }
+        }
+        // joint softmax over [sorted | local]
+        let mut logits = Mat::zeros(b, 2 * b);
+        for t in 0..b {
+            logits.row_mut(t)[..b].copy_from_slice(ls.row(t));
+            logits.row_mut(t)[b..].copy_from_slice(ll.row(t));
+        }
+        logits.softmax_rows();
+        let ps = Mat::from_fn(b, b, |t, u| logits[(t, u)]);
+        let pl = Mat::from_fn(b, b, |t, u| logits[(t, b + u)]);
+        let mut y = ps.matmul(&vs.blocks[i]);
+        y.add(&pl.matmul(&vb.blocks[i]));
+        out_blocks.push(y);
+    }
+    Blocked { blocks: out_blocks }.to_seq()
+}
+
+/// Block-local attention baseline: identical to `sinkhorn_attention` with
+/// an all-zero sort matrix (the sorted term fully masked).
+pub fn local_attention(q: &Mat, k: &Mat, v: &Mat, nb: usize, causal: bool) -> Mat {
+    let zero = Mat::zeros(nb, nb);
+    sinkhorn_attention(q, k, v, &zero, nb, causal)
+}
+
+/// Dense O(ell^2) attention baseline.
+pub fn dense_attention(q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut logits = q.matmul_t(k);
+    logits.scale(scale);
+    if causal {
+        for i in 0..logits.rows {
+            for j in (i + 1)..logits.cols {
+                logits[(i, j)] = NEG_INF;
+            }
+        }
+    }
+    logits.softmax_rows();
+    logits.matmul(v)
+}
+
+/// SortCut attention: queries attend to the first `n_cut` sorted blocks.
+pub fn sortcut_attention(q: &Mat, k: &Mat, v: &Mat, r: &Mat, nb: usize, n_cut: usize) -> Mat {
+    let ks = Blocked::from_seq(k, nb).sort(r);
+    let vs = Blocked::from_seq(v, nb).sort(r);
+    let kcut = Blocked { blocks: ks.blocks[..n_cut].to_vec() }.to_seq();
+    let vcut = Blocked { blocks: vs.blocks[..n_cut].to_vec() }.to_seq();
+    dense_attention(q, &kcut, &vcut, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sinkhorn::balance::{causal_sinkhorn, sinkhorn};
+    use crate::util::prop::{forall, Gen};
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| rng.normal() as f32 * 0.5)
+    }
+
+    struct Case {
+        q: Mat,
+        k: Mat,
+        v: Mat,
+        logits: Mat,
+        nb: usize,
+    }
+
+    impl std::fmt::Debug for Case {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "Case(ell={}, d={}, nb={})", self.q.rows, self.q.cols, self.nb)
+        }
+    }
+
+    fn gen_case(g: &mut Gen) -> Case {
+        let nb = 2 + g.usize(0, 3);
+        let b = 2 + g.usize(0, 3);
+        let d = 4 + g.usize(0, 4);
+        let ell = nb * b;
+        let mut rng = Rng::new(g.rng.next_u64());
+        Case {
+            q: rand_mat(&mut rng, ell, d),
+            k: rand_mat(&mut rng, ell, d),
+            v: rand_mat(&mut rng, ell, d),
+            logits: rand_mat(&mut rng, nb, nb),
+            nb,
+        }
+    }
+
+    #[test]
+    fn rows_are_convex_attention_outputs() {
+        // every output row must be inside the range of V's values per dim
+        forall(24, 0xA7, gen_case, |c| {
+            let r = sinkhorn(&c.logits, 8);
+            let y = sinkhorn_attention(&c.q, &c.k, &c.v, &r, c.nb, false);
+            for col in 0..c.v.cols {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for row in 0..c.v.rows {
+                    lo = lo.min(c.v[(row, col)]);
+                    hi = hi.max(c.v[(row, col)]);
+                }
+                // sorted V values are convex mixes of V blocks, so the
+                // bound still holds (up to fp slack)
+                for row in 0..y.rows {
+                    let x = y[(row, col)];
+                    if x < lo - 1e-3 || x > hi + 1e-3 {
+                        return Err(format!("out of hull: {x} not in [{lo},{hi}]"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn causal_no_future_leak() {
+        // perturb a future token; outputs at earlier positions must not move
+        forall(12, 0xC1, gen_case, |c| {
+            let r = causal_sinkhorn(&c.logits, 6, true);
+            let y1 = sinkhorn_attention(&c.q, &c.k, &c.v, &r, c.nb, true);
+            let ell = c.q.rows;
+            let t_perturb = ell - 1; // last token
+            let mut k2 = c.k.clone();
+            let mut v2 = c.v.clone();
+            for j in 0..k2.cols {
+                k2[(t_perturb, j)] += 3.0;
+                v2[(t_perturb, j)] -= 2.0;
+            }
+            let y2 = sinkhorn_attention(&c.q, &k2, &v2, &r, c.nb, true);
+            for t in 0..t_perturb {
+                for j in 0..y1.cols {
+                    if (y1[(t, j)] - y2[(t, j)]).abs() > 1e-4 {
+                        return Err(format!("position {t} saw future (diff at col {j})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn causal_r_sorting_respects_block_order() {
+        // with the strict-causal R, perturbing block i must not affect
+        // any position in earlier blocks
+        forall(8, 0xCB, gen_case, |c| {
+            let r = causal_sinkhorn(&c.logits, 6, true);
+            let b = c.q.rows / c.nb;
+            let tgt_block = c.nb - 1;
+            let mut k2 = c.k.clone();
+            for t in tgt_block * b..c.q.rows {
+                for j in 0..k2.cols {
+                    k2[(t, j)] += 1.0;
+                }
+            }
+            let y1 = sinkhorn_attention(&c.q, &c.k, &c.v, &r, c.nb, true);
+            let y2 = sinkhorn_attention(&c.q, &k2, &c.v, &r, c.nb, true);
+            for t in 0..tgt_block * b {
+                for j in 0..y1.cols {
+                    if (y1[(t, j)] - y2[(t, j)]).abs() > 1e-4 {
+                        return Err(format!("block leak at position {t}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn identity_sort_matches_doubled_local() {
+        // R = I makes sorted keys == local keys: attention over duplicated
+        // local keys equals plain local attention (softmax halves weights
+        // but the convex combination is unchanged)
+        forall(16, 0x1D, gen_case, |c| {
+            let eye = Mat::eye(c.nb);
+            let y_sink = sinkhorn_attention(&c.q, &c.k, &c.v, &eye, c.nb, false);
+            let y_local = local_attention(&c.q, &c.k, &c.v, c.nb, false);
+            let diff = y_sink.max_abs_diff(&y_local);
+            if diff < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("diff {diff}"))
+            }
+        });
+    }
+
+    #[test]
+    fn single_block_local_equals_dense() {
+        forall(16, 0x5B, gen_case, |c| {
+            let y_local = local_attention(&c.q, &c.k, &c.v, 1, false);
+            let y_dense = dense_attention(&c.q, &c.k, &c.v, false);
+            let diff = y_local.max_abs_diff(&y_dense);
+            if diff < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("diff {diff}"))
+            }
+        });
+    }
+
+    #[test]
+    fn sortcut_equals_dense_over_cut() {
+        let mut rng = Rng::new(3);
+        let (nb, b, d) = (4, 3, 8);
+        let q = rand_mat(&mut rng, nb * b, d);
+        let k = rand_mat(&mut rng, nb * b, d);
+        let v = rand_mat(&mut rng, nb * b, d);
+        let r = sinkhorn(&rand_mat(&mut rng, nb, nb), 8);
+        let y = sortcut_attention(&q, &k, &v, &r, nb, 2);
+        // manual: dense attention against first 2 sorted blocks
+        let ks = Blocked::from_seq(&k, nb).sort(&r);
+        let vs = Blocked::from_seq(&v, nb).sort(&r);
+        let kc = Blocked { blocks: ks.blocks[..2].to_vec() }.to_seq();
+        let vc = Blocked { blocks: vs.blocks[..2].to_vec() }.to_seq();
+        let want = dense_attention(&q, &kc, &vc, false);
+        assert!(y.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let mut rng = Rng::new(9);
+        let x = rand_mat(&mut rng, 12, 5);
+        let b = Blocked::from_seq(&x, 4);
+        assert_eq!(b.to_seq(), x);
+    }
+
+    #[test]
+    fn hard_permutation_sort_moves_blocks() {
+        let mut rng = Rng::new(11);
+        let x = rand_mat(&mut rng, 8, 3);
+        let xb = Blocked::from_seq(&x, 4);
+        // permutation sending block j=perm[i] to position i
+        let perm = [2usize, 0, 3, 1];
+        let r = Mat::from_fn(4, 4, |i, j| if perm[i] == j { 1.0 } else { 0.0 });
+        let sorted = xb.sort(&r);
+        for (i, &p) in perm.iter().enumerate() {
+            assert_eq!(sorted.blocks[i], xb.blocks[p]);
+        }
+    }
+}

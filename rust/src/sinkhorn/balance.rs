@@ -1,0 +1,252 @@
+//! Pure-Rust Sinkhorn balancing — mirrors `kernels/ref.py` exactly and is
+//! the oracle for the coordinator-side property tests (doubly-stochastic
+//! invariants, causal support, convergence).
+
+use super::matrix::Mat;
+
+pub const NEG_INF: f32 = -1e9;
+
+fn logsumexp(xs: impl Iterator<Item = f32> + Clone) -> f32 {
+    let m = xs.clone().fold(f32::NEG_INFINITY, f32::max).max(NEG_INF);
+    let s: f32 = xs.map(|x| (x - m).exp()).sum();
+    s.ln() + m
+}
+
+/// Log-domain Sinkhorn normalization: `n_iters` alternating row/column
+/// normalizations of `exp(logits)`. `n_iters == 0` => row softmax only
+/// (paper Table 8 row 6 ablation).
+pub fn sinkhorn(logits: &Mat, n_iters: usize) -> Mat {
+    let mut x = logits.clone();
+    if n_iters == 0 {
+        x.softmax_rows();
+        return x;
+    }
+    let (n, m) = (x.rows, x.cols);
+    for _ in 0..n_iters {
+        for i in 0..n {
+            let lse = logsumexp(x.row(i).iter().cloned());
+            for v in x.row_mut(i) {
+                *v -= lse;
+            }
+        }
+        for j in 0..m {
+            let lse = logsumexp((0..n).map(|i| x[(i, j)]));
+            for i in 0..n {
+                x[(i, j)] -= lse;
+            }
+        }
+    }
+    for v in &mut x.data {
+        *v = v.exp();
+    }
+    x
+}
+
+/// Causal masked variant (§3.3.2): entries with src block j after dest
+/// block i (j > i; `strict` also j == i) are pinned to zero, and — the
+/// crucial part — the *column* normalizer at entry (i, j) only sums rows
+/// j..=i. A full column sum would include rows i' > i whose logits encode
+/// future block content, leaking the future through the normalizer
+/// (mirrors `ref.causal_sinkhorn_log`; pinned by tests on both sides).
+pub fn causal_sinkhorn(logits: &Mat, n_iters: usize, strict: bool) -> Mat {
+    let n = logits.rows;
+    let keep = |i: usize, j: usize| if strict { j < i } else { j <= i };
+    let mut x = Mat::from_fn(n, n, |i, j| if keep(i, j) { logits[(i, j)] } else { NEG_INF });
+    if n_iters == 0 {
+        x.softmax_rows();
+        return Mat::from_fn(n, n, |i, j| if keep(i, j) { x[(i, j)] } else { 0.0 });
+    }
+    for _ in 0..n_iters {
+        for i in 0..n {
+            let lse = logsumexp(x.row(i).iter().cloned()).max(NEG_INF);
+            for (j, v) in x.row_mut(i).iter_mut().enumerate() {
+                *v = if keep(i, j) { *v - lse } else { NEG_INF };
+            }
+        }
+        for j in 0..n {
+            // cumulative (causal) column logsumexp, stabilized by the
+            // column max (cancels exactly — see ref.py)
+            let cmax = (0..n).map(|i| x[(i, j)]).fold(f32::NEG_INFINITY, f32::max).max(NEG_INF);
+            let mut csum = 0.0f32;
+            for i in 0..n {
+                if keep(i, j) {
+                    csum += (x[(i, j)] - cmax).exp();
+                    let ncol = ((csum + 1e-30).ln() + cmax).max(NEG_INF);
+                    x[(i, j)] -= ncol;
+                } else {
+                    x[(i, j)] = NEG_INF;
+                }
+            }
+        }
+    }
+    Mat::from_fn(n, n, |i, j| if keep(i, j) { x[(i, j)].exp() } else { 0.0 })
+}
+
+/// How far a matrix is from doubly stochastic: max |row/col sum - 1|.
+pub fn ds_residual(s: &Mat) -> f32 {
+    let mut worst: f32 = 0.0;
+    for i in 0..s.rows {
+        let r: f32 = s.row(i).iter().sum();
+        worst = worst.max((r - 1.0).abs());
+    }
+    for j in 0..s.cols {
+        let c: f32 = (0..s.rows).map(|i| s[(i, j)]).sum();
+        worst = worst.max((c - 1.0).abs());
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+
+    fn rand_logits(g: &mut Gen, n: usize) -> Mat {
+        Mat::from_vec(n, n, g.vec_f32(n * n, -3.0, 3.0))
+    }
+
+    #[test]
+    fn converges_to_doubly_stochastic() {
+        forall(
+            48,
+            0xD5,
+            |g| {
+                let n = 2 + g.usize(0, 7);
+                rand_logits(g, n)
+            },
+            |logits| {
+                let s = sinkhorn(logits, 30);
+                let r = ds_residual(&s);
+                if r < 5e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("residual {r}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn residual_decreases_with_iters() {
+        let mut g_ = crate::util::rng::Rng::new(7);
+        let logits = Mat::from_fn(8, 8, |_, _| g_.normal() as f32);
+        let r1 = ds_residual(&sinkhorn(&logits, 1));
+        let r5 = ds_residual(&sinkhorn(&logits, 5));
+        let r20 = ds_residual(&sinkhorn(&logits, 20));
+        assert!(r5 <= r1 + 1e-6 && r20 <= r5 + 1e-6, "{r1} {r5} {r20}");
+    }
+
+    #[test]
+    fn nonnegative_entries() {
+        forall(
+            32,
+            0xA1,
+            |g| {
+                let n = 2 + g.usize(0, 6);
+                rand_logits(g, n)
+            },
+            |l| {
+                let s = sinkhorn(l, 5);
+                if s.data.iter().all(|&x| x >= 0.0) {
+                    Ok(())
+                } else {
+                    Err("negative entry".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn causal_support_respected() {
+        forall(
+            32,
+            0xC2,
+            |g| {
+                let n = 3 + g.usize(0, 5);
+                rand_logits(g, n)
+            },
+            |l| {
+                for strict in [false, true] {
+                    let s = causal_sinkhorn(l, 8, strict);
+                    for i in 0..s.rows {
+                        for j in 0..s.cols {
+                            let banned = if strict { j >= i } else { j > i };
+                            if banned && s[(i, j)] != 0.0 {
+                                return Err(format!("leak at ({i},{j}) strict={strict}"));
+                            }
+                        }
+                    }
+                    // all entries must be valid probabilities-ish weights
+                    for v in &s.data {
+                        if !v.is_finite() || *v < 0.0 {
+                            return Err(format!("bad entry {v}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn causal_normalizers_never_see_future() {
+        // THE causal invariant: perturbing row i' of the logits must not
+        // change any output row i < i' (this is what full-column Sinkhorn
+        // normalization violates — see §3.3.2 and the kernel docstring)
+        forall(
+            32,
+            0xF1,
+            |g| {
+                let n = 3 + g.usize(0, 5);
+                rand_logits(g, n)
+            },
+            |l| {
+                for strict in [false, true] {
+                    let n = l.rows;
+                    let base = causal_sinkhorn(l, 7, strict);
+                    for tgt in 1..n {
+                        let mut l2 = l.clone();
+                        for j in 0..n {
+                            l2[(tgt, j)] += 2.5;
+                        }
+                        let pert = causal_sinkhorn(&l2, 7, strict);
+                        for i in 0..tgt {
+                            for j in 0..n {
+                                let d = (base[(i, j)] - pert[(i, j)]).abs();
+                                if d > 1e-5 {
+                                    return Err(format!(
+                                        "row {i} changed by {d} when row {tgt} perturbed (strict={strict})"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn zero_iters_is_row_softmax() {
+        let l = Mat::from_vec(2, 2, vec![0.0, 0.0, 1.0, 3.0]);
+        let s = sinkhorn(&l, 0);
+        assert!((s[(0, 0)] - 0.5).abs() < 1e-6);
+        let e = ((1.0f32).exp(), (3.0f32).exp());
+        assert!((s[(1, 1)] - e.1 / (e.0 + e.1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn permutation_fixed_point() {
+        // a matrix already near a hard permutation stays put
+        let mut l = Mat::zeros(4, 4);
+        let perm = [2usize, 0, 3, 1];
+        for (i, &p) in perm.iter().enumerate() {
+            l[(i, p)] = 20.0; // huge logit
+        }
+        let s = sinkhorn(&l, 10);
+        for (i, &p) in perm.iter().enumerate() {
+            assert!(s[(i, p)] > 0.99, "({i},{p}) = {}", s[(i, p)]);
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Analytic memory/FLOP model for the paper's §4 complexity analysis and
+//! the TPU-side performance estimates in DESIGN.md §Perf.
+//!
+//! The paper's claim: vanilla attention materializes an O(ell^2) score
+//! matrix; Sinkhorn attention only B^2 per block pair (local + sorted)
+//! plus the N_B^2 sort matrix; SortCut is O(ell * n_cut * b). The
+//! `bench memory` target prints these side by side with *measured*
+//! allocation counts from the pure-Rust reference implementation.
+
+/// Attention-variant cost model for one head over one sequence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cost {
+    /// f32 elements of attention score matrices materialized.
+    pub score_elems: usize,
+    /// extra f32 elements for sort machinery (R matrix, sorted K/V copies).
+    pub aux_elems: usize,
+    /// multiply-accumulate count for score + combine matmuls.
+    pub macs: usize,
+}
+
+impl Cost {
+    pub fn total_elems(&self) -> usize {
+        self.score_elems + self.aux_elems
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.total_elems() * 4
+    }
+}
+
+/// Vanilla dense attention: ell x ell scores, 2*ell^2*d MACs.
+pub fn dense(ell: usize, d: usize) -> Cost {
+    Cost { score_elems: ell * ell, aux_elems: 0, macs: 2 * ell * ell * d }
+}
+
+/// Block-local attention: nb blocks of b^2 scores.
+pub fn local(ell: usize, nb: usize, d: usize) -> Cost {
+    let b = ell / nb;
+    Cost { score_elems: nb * b * b, aux_elems: 0, macs: 2 * nb * b * b * d }
+}
+
+/// Sparse Transformer (fixed scheme): local + column summary of stride c.
+pub fn sparse_fixed(ell: usize, nb: usize, c: usize, d: usize) -> Cost {
+    let b = ell / nb;
+    let local_scores = nb * b * b;
+    let summary_cols = nb * c; // every block exposes c summary positions
+    let fixed_scores = ell * summary_cols;
+    Cost {
+        score_elems: local_scores + fixed_scores,
+        aux_elems: 0,
+        macs: 2 * (local_scores + fixed_scores) * d,
+    }
+}
+
+/// Sparse Sinkhorn attention: per block 2*b^2 scores (sorted + local), an
+/// nb^2 sort matrix and sorted K/V copies (2*ell*d).
+pub fn sinkhorn(ell: usize, nb: usize, d: usize) -> Cost {
+    let b = ell / nb;
+    Cost {
+        score_elems: nb * 2 * b * b,
+        aux_elems: nb * nb + 2 * ell * d,
+        macs: 2 * nb * 2 * b * b * d   // attention matmuls
+            + 2 * nb * nb * b * d, // block-sort mixes for K and V
+    }
+}
+
+/// SortCut: ell x (n_cut*b) scores + sort machinery.
+pub fn sortcut(ell: usize, nb: usize, n_cut: usize, d: usize) -> Cost {
+    let b = ell / nb;
+    let kv = n_cut * b;
+    Cost {
+        score_elems: ell * kv,
+        aux_elems: nb * nb + 2 * kv * d,
+        macs: 2 * ell * kv * d + 2 * nb * n_cut * b * d,
+    }
+}
+
+/// The paper's headline illustration (§1 fn 1): ell=1024, N_B=16 blocks of
+/// b=64 gives a ~240x memory saving factor vs dense. We expose the same
+/// ratio computation for the bench + tests.
+pub fn saving_factor(ell: usize, nb: usize) -> f64 {
+    let b = ell / nb;
+    (ell * ell) as f64 / (b * b + nb * nb) as f64
+}
+
+/// Estimated VMEM working set (bytes) of one L1 kernel program — the
+/// quantity that must fit in a TPU core's ~16 MiB VMEM (DESIGN.md §Perf):
+/// 5 tiles of (b, d) (q, ks, kl, vs, vl) + the (b, 2b) score tile.
+pub fn kernel_vmem_bytes(b: usize, d: usize) -> usize {
+    (5 * b * d + 2 * b * b) * 4
+}
+
+/// MXU utilization proxy: fraction of the kernel's MACs that land in
+/// >=8x8x8-shaped matmuls (all of them, for b,d >= 8 — the point is the
+/// tiles are MXU-shaped by construction).
+pub fn mxu_mac_fraction(b: usize, d: usize) -> f64 {
+    if b >= 8 && d >= 8 {
+        1.0
+    } else {
+        // degenerate tiles fall back to VPU element ops
+        (b.min(8) * d.min(8)) as f64 / 64.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_saving_factor_illustration() {
+        // paper §1 footnote: ell=1024, N_B=64-token blocks -> ~240x.
+        // (1024^2) / (64^2 + 16^2) = 240.9 with nb=16 blocks of b=64.
+        let f = saving_factor(1024, 16);
+        assert!((f - 240.9).abs() < 1.0, "{f}");
+    }
+
+    #[test]
+    fn sinkhorn_beats_dense_when_long() {
+        let d = 64;
+        let dense_c = dense(2048, d);
+        let sink_c = sinkhorn(2048, 32, d);
+        // the paper's claim is about attention *score* memory; the sorted
+        // K/V copies (aux) are linear in ell and dominate only at small d
+        assert!(sink_c.score_elems < dense_c.score_elems / 10);
+        assert!(sink_c.total_elems() < dense_c.total_elems() / 4);
+        assert!(sink_c.macs < dense_c.macs);
+    }
+
+    #[test]
+    fn local_is_lower_bound_for_sinkhorn_scores() {
+        // sinkhorn materializes exactly 2x the local scores
+        let (ell, nb, d) = (512, 16, 32);
+        assert_eq!(sinkhorn(ell, nb, d).score_elems, 2 * local(ell, nb, d).score_elems);
+    }
+
+    #[test]
+    fn sortcut_linear_in_ell() {
+        let d = 32;
+        let c1 = sortcut(1024, 16, 2, d);
+        let c2 = sortcut(2048, 32, 2, d);
+        // same block size b=64, same cut => scores scale linearly with ell
+        assert_eq!(c2.score_elems, 2 * c1.score_elems);
+    }
+
+    #[test]
+    fn vmem_fits_tpu_for_paper_blocks() {
+        // b=64, d=64 head tiles comfortably fit 16 MiB VMEM
+        assert!(kernel_vmem_bytes(64, 64) < 16 << 20);
+        assert!(kernel_vmem_bytes(256, 128) < 16 << 20);
+    }
+
+    #[test]
+    fn mxu_fraction_full_for_mxu_shaped_tiles() {
+        assert_eq!(mxu_mac_fraction(64, 64), 1.0);
+        assert!(mxu_mac_fraction(4, 64) < 1.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Pure-Rust reference implementation of Sparse Sinkhorn Attention.
+//!
+//! This is *not* on the training hot path (that's the AOT-compiled XLA
+//! graphs); it exists to (1) property-test the algorithm's invariants from
+//! the coordinator side, (2) cross-check artifact numerics end-to-end, and
+//! (3) back the §4 memory-complexity analysis with an executable model.
+
+pub mod attention;
+pub mod balance;
+pub mod matrix;
+pub mod memory;
+
+pub use attention::{dense_attention, local_attention, sinkhorn_attention, sortcut_attention};
+pub use balance::{causal_sinkhorn, ds_residual, sinkhorn};
+pub use matrix::Mat;

@@ -1,0 +1,133 @@
+//! Tiny argument parser (no `clap` in the offline crate set).
+//!
+//! Grammar: `sinkhorn <subcommand> [--key value]... [--flag]... [positional]...`
+//! Values parse lazily and typed getters report the offending flag on error.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.push(k.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                    out.present.push(name.to_string());
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                    out.present.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected number, got '{v}'")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        self.flags.get(key).is_some_and(|v| v != "false" && v != "0")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --steps 100 --exp lmw_tiny__vanilla --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize("steps", 0).unwrap(), 100);
+        assert_eq!(a.str("exp", ""), "lmw_tiny__vanilla");
+        assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("bench --table=table1 --scale=0.5");
+        assert_eq!(a.str("table", ""), "table1");
+        assert_eq!(a.f64("scale", 1.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn positional() {
+        let a = parse("eval ckpt.bin extra");
+        assert_eq!(a.positional, vec!["ckpt.bin", "extra"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("x --n abc");
+        assert_eq!(a.usize("missing", 7).unwrap(), 7);
+        assert!(a.usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn bool_false_values() {
+        let a = parse("x --flag false");
+        assert!(!a.bool("flag"));
+        assert!(a.has("flag"));
+    }
+}

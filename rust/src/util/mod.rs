@@ -1,0 +1,49 @@
+//! Hand-rolled substrates: the offline crate set has no serde/clap/rand/
+//! criterion/proptest, so the coordinator carries its own JSON codec,
+//! argument parser, PRNGs, stats/bench helpers and property-test harness.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Levenshtein edit distance between two sequences (used by the Table 1
+/// sorting metric, normalized by target length as in Tensor2Tensor).
+pub fn edit_distance<T: PartialEq>(a: &[T], b: &[T]) -> usize {
+    let (n, m) = (a.len(), b.len());
+    if n == 0 {
+        return m;
+    }
+    let mut prev: Vec<usize> = (0..=m).collect();
+    let mut cur = vec![0usize; m + 1];
+    for i in 1..=n {
+        cur[0] = i;
+        for j in 1..=m {
+            let cost = usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = (prev[j] + 1).min(cur[j - 1] + 1).min(prev[j - 1] + cost);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[m]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance(b"kitten", b"sitting"), 3);
+        assert_eq!(edit_distance::<u8>(b"", b"abc"), 3);
+        assert_eq!(edit_distance(b"abc", b"abc"), 0);
+        assert_eq!(edit_distance(b"abc", b""), 3);
+    }
+
+    #[test]
+    fn edit_distance_symmetric() {
+        let a = [1, 2, 3, 4, 5];
+        let b = [1, 3, 2, 5];
+        assert_eq!(edit_distance(&a, &b), edit_distance(&b, &a));
+    }
+}

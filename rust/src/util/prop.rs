@@ -1,0 +1,129 @@
+//! Minimal property-based testing harness (no `proptest` offline).
+//!
+//! `forall(cases, gen, prop)` runs `prop` against `cases` generated inputs.
+//! Each case derives its own deterministic seed; on failure the harness
+//! retries with progressively "smaller" generator budgets (a lightweight
+//! stand-in for shrinking) and reports the failing seed so the case can be
+//! replayed exactly with `replay(seed, gen, prop)`.
+
+use super::rng::Rng;
+
+/// Generation budget passed to generators — generators should scale their
+/// output size with `size` so the harness can shrink on failure.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.usize_below((hi - lo).max(1))
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| lo + self.rng.f32() * (hi - lo)).collect()
+    }
+
+    pub fn vec_i64(&mut self, len: usize, lo: i64, hi: i64) -> Vec<i64> {
+        (0..len).map(|_| self.rng.range_i64(lo, hi)).collect()
+    }
+}
+
+/// Outcome of a property check.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` on `cases` generated inputs; panics with a replayable report
+/// on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    cases: usize,
+    base_seed: u64,
+    gen: impl Fn(&mut Gen) -> T,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let full_size = 2 + case % 32; // grow sizes across cases
+        let mut rng = Rng::new(seed);
+        let mut g = Gen { rng: &mut rng, size: full_size };
+        let input = gen(&mut g);
+        if let Err(msg) = prop(&input) {
+            // shrink-lite: retry smaller budgets with the same seed to find
+            // a smaller failing example for the report
+            let mut smallest: Option<(usize, String, String)> = None;
+            for size in 1..full_size {
+                let mut rng = Rng::new(seed);
+                let mut g = Gen { rng: &mut rng, size };
+                let small = gen(&mut g);
+                if let Err(m) = prop(&small) {
+                    smallest = Some((size, format!("{small:?}"), m));
+                    break;
+                }
+            }
+            let (ssize, sdbg, smsg) = smallest.unwrap_or((full_size, format!("{input:?}"), msg));
+            panic!(
+                "property failed (seed={seed}, case={case}, size={ssize}):\n  input: {}\n  error: {smsg}",
+                truncate(&sdbg, 400)
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed (use the seed from the panic).
+pub fn replay<T>(seed: u64, size: usize, gen: impl Fn(&mut Gen) -> T) -> T {
+    let mut rng = Rng::new(seed);
+    let mut g = Gen { rng: &mut rng, size };
+    gen(&mut g)
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}… ({} bytes)", &s[..n], s.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        forall(
+            64,
+            1,
+            |g| g.vec_i64(g.size, -100, 100),
+            |v| {
+                let mut s = v.clone();
+                s.sort();
+                if s.len() == v.len() {
+                    Ok(())
+                } else {
+                    Err("len changed".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn catches_bad_property() {
+        forall(
+            64,
+            2,
+            |g| g.usize(0, 100),
+            |&x| if x < 90 { Ok(()) } else { Err(format!("{x} >= 90")) },
+        );
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let a: usize = replay(99, 4, |g| g.usize(0, 1000));
+        let b: usize = replay(99, 4, |g| g.usize(0, 1000));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,262 @@
+//! Deterministic PRNGs for data generation, shuffling and property tests.
+//!
+//! The offline crate set has no `rand`, so this module provides a
+//! SplitMix64 seeder and a PCG32 generator (O'Neill 2014) with the handful
+//! of distributions the coordinator needs. Everything is reproducible from
+//! a single `u64` seed — data pipelines record their seed in results files.
+
+/// SplitMix64 — used to expand one seed into stream seeds.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG32 (XSH-RR 64/32): small, fast, statistically solid.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+}
+
+impl Rng {
+    /// Construct from a seed; distinct `stream`s give independent sequences.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let init = sm.next_u64();
+        let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(init);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child generator (for parallel streams).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::with_stream(self.next_u64() ^ tag, tag.wrapping_mul(2) | 1)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, n)` without modulo bias (Lemire).
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_wide(x, n);
+            if lo >= n || lo >= x.wrapping_neg() % n {
+                return hi;
+            }
+        }
+    }
+
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as i64
+    }
+
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Zipf-like power-law index in [0, n): p(i) proportional to 1/(i+1)^alpha.
+    /// Used for the synthetic LM corpus vocabulary distribution.
+    pub fn zipf(&mut self, n: usize, alpha: f64, cdf_cache: &mut Vec<f64>) -> usize {
+        if cdf_cache.len() != n {
+            cdf_cache.clear();
+            let mut acc = 0.0;
+            for i in 0..n {
+                acc += 1.0 / ((i + 1) as f64).powf(alpha);
+                cdf_cache.push(acc);
+            }
+            let total = acc;
+            for c in cdf_cache.iter_mut() {
+                *c /= total;
+            }
+        }
+        let u = self.f64();
+        match cdf_cache.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(n - 1),
+        }
+    }
+
+    /// Fisher-Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_below(xs.len())]
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[inline]
+fn mul_wide(a: u64, b: u64) -> (u64, u64) {
+    let m = (a as u128) * (b as u128);
+    ((m >> 64) as u64, m as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn below_in_range_and_covers() {
+        let mut r = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn zipf_monotone_head() {
+        let mut r = Rng::new(9);
+        let mut cache = Vec::new();
+        let mut counts = vec![0usize; 50];
+        for _ in 0..20_000 {
+            counts[r.zipf(50, 1.2, &mut cache)] += 1;
+        }
+        assert!(counts[0] > counts[5] && counts[5] > counts[30]);
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut r = Rng::new(13);
+        let mut c = [0usize; 3];
+        for _ in 0..3000 {
+            c[r.weighted(&[1.0, 0.0, 9.0])] += 1;
+        }
+        assert_eq!(c[1], 0);
+        assert!(c[2] > c[0] * 5);
+    }
+
+    #[test]
+    fn fork_independent() {
+        let mut r = Rng::new(21);
+        let mut a = r.fork(1);
+        let mut b = r.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}
