@@ -1,0 +1,37 @@
+# Sparse Sinkhorn Attention — repo-level targets.
+# `check-docs` is the CI documentation gate; the rest are conveniences.
+
+CARGO ?= cargo
+MANIFEST := rust/Cargo.toml
+
+.PHONY: build test check-docs doc-refs bench-engine serve-fallback artifacts all
+
+all: build
+
+build:
+	$(CARGO) build --release --manifest-path $(MANIFEST)
+
+test:
+	$(CARGO) test -q --manifest-path $(MANIFEST)
+
+## CI documentation gate: rustdoc must be warning-free and every
+## `DESIGN.md §` citation in rust/src/ must resolve to a real section.
+check-docs: doc-refs
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --manifest-path $(MANIFEST)
+
+## The reference check alone needs no Rust toolchain (plain python3).
+doc-refs:
+	python3 tools/check_design_refs.py --all
+
+## Regenerate the naive/fused/parallel engine table (no artifacts needed).
+bench-engine:
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target engine
+
+## Serve the pure-Rust fallback engine over TCP (no artifacts needed):
+##   echo "4 8 15 16 23 42" | nc 127.0.0.1 7878
+serve-fallback:
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- serve --fallback --port 7878 --wait
+
+## AOT-compile the XLA artifacts (needs the python env + real xla crate).
+artifacts:
+	cd python && python -m compile.aot

@@ -1,0 +1,77 @@
+//! Microbenchmarks of the pure-Rust blocked engine (DESIGN.md §Engine):
+//! naive reference vs fused vs parallel, plus the SortCut truncated path
+//! and the gather kernel in isolation. Runs on any machine — no
+//! artifacts, no XLA. The `bench engine` CLI target prints the
+//! paper-shaped table; this harness is for quick iteration on one shape.
+//!
+//! Run: cargo bench --bench engine [-- --ell N --nb N --d N --iters N]
+
+use sinkhorn::sinkhorn::{
+    engine::gather_block_into, sinkhorn, sinkhorn_attention, sortcut_attention, BlockedView, Mat,
+    SinkhornEngine,
+};
+use sinkhorn::util::cli::Args;
+use sinkhorn::util::rng::Rng;
+use sinkhorn::util::stats::{percentile, time_iters};
+
+fn report(label: &str, secs: &mut [f64]) {
+    let p50 = percentile(secs, 50.0) * 1e3;
+    let p95 = percentile(secs, 95.0) * 1e3;
+    println!("{label:<46} p50 {p50:>9.3}ms  p95 {p95:>9.3}ms");
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let ell = args.usize("ell", 2048)?;
+    let nb = args.usize("nb", 16)?;
+    let d = args.usize("d", 64)?;
+    let n_cut = args.usize("n-cut", 2)?;
+    let iters = args.usize("iters", 5)?;
+    anyhow::ensure!(ell % nb == 0, "--nb must divide --ell");
+
+    let mut rng = Rng::new(7);
+    let mk = |rng: &mut Rng| Mat::from_fn(ell, d, |_, _| rng.normal() as f32 * 0.5);
+    let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let r = sinkhorn(&Mat::from_fn(nb, nb, |_, _| rng.normal() as f32), 8);
+
+    let fused = SinkhornEngine::serial();
+    let par = SinkhornEngine::auto();
+    println!(
+        "== engine hot path: ell={ell} nb={nb} d={d} (parallel: {} threads) ==",
+        par.threads()
+    );
+
+    // correctness gate before timing anything
+    let want = sinkhorn_attention(&q, &k, &v, &r, nb, false);
+    anyhow::ensure!(want == fused.attention(&q, &k, &v, &r, nb, false), "fused diverged");
+    anyhow::ensure!(want == par.attention(&q, &k, &v, &r, nb, false), "parallel diverged");
+
+    let mut t = time_iters(1, iters, || drop(sinkhorn_attention(&q, &k, &v, &r, nb, false)));
+    report("attention: naive reference", &mut t);
+
+    let mut out = Mat::zeros(ell, d);
+    let mut t = time_iters(1, iters, || fused.attention_into(&q, &k, &v, &r, nb, false, &mut out));
+    report("attention: fused (1 thread)", &mut t);
+
+    let mut t = time_iters(1, iters, || par.attention_into(&q, &k, &v, &r, nb, false, &mut out));
+    report(&format!("attention: parallel ({} threads)", par.threads()), &mut t);
+
+    let mut t = time_iters(1, iters, || drop(sortcut_attention(&q, &k, &v, &r, nb, n_cut)));
+    report(&format!("sortcut n_cut={n_cut}: naive reference"), &mut t);
+
+    let mut t =
+        time_iters(1, iters, || par.sortcut_attention_into(&q, &k, &v, &r, nb, n_cut, &mut out));
+    report(&format!("sortcut n_cut={n_cut}: parallel engine"), &mut t);
+
+    // the fused gather kernel in isolation (the old clone-scale-add cost)
+    let kb = BlockedView::from_seq(&k, nb);
+    let b = ell / nb;
+    let mut tile = vec![0.0f32; b * d];
+    let mut t = time_iters(2, iters.max(10), || {
+        for i in 0..nb {
+            gather_block_into(r.row(i), &kb, &mut tile);
+        }
+    });
+    report("sort: fused gather, all nb blocks", &mut t);
+    Ok(())
+}

@@ -1,0 +1,217 @@
+//! Offline stand-in for the `anyhow` crate, API-compatible with the subset
+//! this repository uses: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]
+//! macros and the [`Context`] extension trait.
+//!
+//! The build container has no crates.io access, so `rust/Cargo.toml` points
+//! the `anyhow` dependency at this path crate. The semantics match real
+//! `anyhow` where it matters here:
+//!
+//! * `{}` formats the outermost message only; `{:#}` walks the whole
+//!   context chain (`outer: inner: root`), which is what `main.rs` prints.
+//! * Any `std::error::Error` converts via `?` (so `io::Error`,
+//!   `FromUtf8Error`, parse errors, ... all work unchanged).
+//! * Like real `anyhow`, [`Error`] deliberately does **not** implement
+//!   `std::error::Error` — that is what keeps the blanket `From` legal.
+
+use std::fmt;
+
+/// A chain of error messages, outermost context first, root cause last.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (what `anyhow!` expands to).
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { frames: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context frame (used by [`Context`]).
+    pub fn context(mut self, ctx: impl fmt::Display) -> Self {
+        self.frames.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The root cause message (innermost frame).
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterate frames from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, exactly how real anyhow renders it
+            let mut first = true;
+            for frame in &self.frames {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                f.write_str(frame)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.frames.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.first().map(String::as_str).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` intentionally does not implement `std::error::Error`; this
+// blanket impl would otherwise collide with `impl From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // preserve the source chain as context frames
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+/// `anyhow::Result<T>` — alias with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from format args: `anyhow!("bad dim {d}")`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)` to
+/// `Result` and `Option`, mirroring real `anyhow::Context`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/xyz")?;
+        Ok(())
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        assert_eq!(format!("{e:#}"), "bad value 7");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn ensure_guards() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x % 2 == 0, "odd: {x}");
+            Ok(x / 2)
+        }
+        assert_eq!(f(4).unwrap(), 2);
+        assert_eq!(f(3).unwrap_err().to_string(), "odd: 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = io_fail().context("loading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "loading manifest");
+        let alt = format!("{e:#}");
+        assert!(alt.starts_with("loading manifest: "), "{alt}");
+        assert!(alt.len() > "loading manifest: ".len());
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u8> = None;
+        let e = v.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        assert_eq!(Some(5u8).context("x").unwrap(), 5);
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = io_fail().context("outer").unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.starts_with("outer"), "{d}");
+        assert!(d.contains("Caused by:"), "{d}");
+    }
+}

@@ -1,0 +1,315 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The build container has no crates.io access (and no XLA shared
+//! library), so `rust/Cargo.toml` resolves the `xla` dependency to this
+//! path crate. It splits the API the coordinator uses into two tiers:
+//!
+//! * **Host-side literals — fully functional.** [`Literal`] construction,
+//!   reshape, shape queries and `to_vec` roundtrips behave like the real
+//!   crate, so `runtime::tensor::HostTensor` and the checkpoint store work
+//!   (and stay unit-tested) in every build.
+//! * **PJRT compile/execute — honest errors.** [`PjRtClient::cpu`] fails
+//!   with a recognizable message. Callers that need a runtime degrade
+//!   gracefully: the serving stack falls back to the pure-Rust blocked
+//!   engine (`sinkhorn::server::fallback`), and `bench` keeps the targets
+//!   that don't train (`engine`, `memory`). Link the real `xla` crate to
+//!   execute AOT artifacts (DESIGN.md §2).
+
+use std::fmt;
+
+/// Error type for all fallible shim operations. Implements
+/// `std::error::Error` so it converts into `anyhow::Error` via `?`.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// The message every PJRT entry point fails with — callers sniff for
+/// "offline `xla` stub" when deciding to fall back.
+const STUB_MSG: &str = "PJRT backend not available: this build links the offline `xla` stub \
+     (rust/shims/xla); rebuild against the real `xla` crate to execute AOT artifacts";
+
+fn stub_err<T>() -> Result<T> {
+    Err(Error::msg(STUB_MSG))
+}
+
+/// XLA element types crossing the boundary (subset the coordinator uses,
+/// plus `Pred`/`F64` so `match` arms keep their catch-all).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    F64,
+    Pred,
+}
+
+/// Primitive type tags used when creating zeroed literals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+}
+
+impl PrimitiveType {
+    fn element(self) -> ElementType {
+        match self {
+            PrimitiveType::F32 => ElementType::F32,
+            PrimitiveType::S32 => ElementType::S32,
+        }
+    }
+}
+
+/// Shape of a (non-tuple) literal: element type + dimensions.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side tensor value. Fully functional in the shim.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+/// Rust scalar types that map onto XLA element types.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn wrap(data: Vec<Self>) -> Data;
+    fn unwrap(data: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(data: Vec<f32>) -> Data {
+        Data::F32(data)
+    }
+    fn unwrap(data: &Data) -> Option<&[f32]> {
+        match data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(data: Vec<i32>) -> Data {
+        Data::I32(data)
+    }
+    fn unwrap(data: &Data) -> Option<&[i32]> {
+        match data {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    /// Zero-filled literal of the given shape.
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let n: usize = dims.iter().product();
+        let data = match ty {
+            PrimitiveType::F32 => Data::F32(vec![0.0; n]),
+            PrimitiveType::S32 => Data::I32(vec![0; n]),
+        };
+        Literal { dims: dims.iter().map(|&d| d as i64).collect(), data }
+    }
+
+    fn element_count(&self) -> usize {
+        self.dims.iter().product::<i64>() as usize
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error::msg(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            Data::F32(_) => ElementType::F32,
+            Data::I32(_) => ElementType::S32,
+            Data::Tuple(_) => return Err(Error::msg("array_shape on a tuple literal")),
+        };
+        Ok(ArrayShape { ty, dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error::msg(format!("literal is not {:?}", T::TY)))
+    }
+
+    /// Flatten a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            _ => Err(Error::msg("to_tuple on a non-tuple literal")),
+        }
+    }
+
+    /// Build a tuple literal (test helper; the real crate returns tuples
+    /// from executions).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], data: Data::Tuple(elems) }
+    }
+}
+
+/// Parsed HLO module. The stub cannot parse HLO text.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub_err()
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled executable. Never constructed by the stub.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+/// A device buffer holding one output. Never constructed by the stub.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err()
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err()
+    }
+}
+
+/// The PJRT client. [`PjRtClient::cpu`] always fails in the stub, which is
+/// the signal the serving stack uses to select the pure-Rust fallback.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_err()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.5, -3.0]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.5, -3.0]);
+        let s = lit.array_shape().unwrap();
+        assert_eq!(s.dims(), &[3]);
+        assert_eq!(s.ty(), ElementType::F32);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let lit = Literal::vec1(&[1i32, 2, 3, 4]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert!(lit.reshape(&[3]).is_err());
+        // rank-0 from a single element
+        let s = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert_eq!(s.array_shape().unwrap().dims(), &[] as &[i64]);
+    }
+
+    #[test]
+    fn zeros_have_right_type() {
+        let z = Literal::create_from_shape(PrimitiveType::S32, &[2, 3]);
+        assert_eq!(z.to_vec::<i32>().unwrap(), vec![0; 6]);
+        assert!(z.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn tuple_roundtrip() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[1i32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_is_stubbed() {
+        let e = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(e.contains("offline `xla` stub"), "{e}");
+    }
+}

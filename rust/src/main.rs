@@ -4,8 +4,9 @@
 //!   list                         show registered experiments
 //!   train  --exp NAME            train one experiment (AOT graphs, no python)
 //!   eval   --exp NAME --ckpt F   evaluate a checkpoint
-//!   bench  --target tableN|figN|memory|all   regenerate paper tables
+//!   bench  --target tableN|figN|memory|engine|all   regenerate paper tables
 //!   serve  --exp NAME            run the batched inference demo
+//!   serve  --fallback            serve the pure-Rust engine (no artifacts)
 //!   inspect --exp NAME           dump manifest facts
 
 use std::path::PathBuf;
@@ -58,9 +59,13 @@ USAGE: sinkhorn <subcommand> [flags]
   list                              experiments in the registry
   train  --exp NAME [--steps N] [--seed S] [--ckpt out.ckpt] [--verbose]
   eval   --exp NAME --ckpt F [--eval-batches N]
-  bench  --target table1..table8|fig3|fig4|memory|all
+  bench  --target table1..table8|fig3|fig4|memory|engine|all
          [--scale F] [--steps N] [--fast-decode] [--verbose]
-  serve  --exp NAME [--ckpt F] [--requests N] [--max-batch B] [--max-wait-ms T]
+         (engine + memory run without artifacts/XLA)
+  serve  --exp NAME | --fallback [--seq-len L] [--nb N] [--threads T]
+         [--ckpt F] [--requests N] [--max-batch B] [--max-wait-ms T]
+         [--port P] [--wait]
+         (--fallback serves the pure-Rust engine; no artifacts needed)
   inspect --exp NAME
 
   global: --artifacts DIR (default ./artifacts or $SINKHORN_ARTIFACTS)"
@@ -149,34 +154,56 @@ fn cmd_bench(args: &Args, artifacts: &PathBuf) -> Result<()> {
         verbose: args.bool("verbose"),
         fast_decode: args.bool("fast-decode"),
     };
-    let rt = Runtime::cpu()?;
-    let reg = Registry::load(artifacts)?;
+    // runtime + registry are optional (and skipped entirely for the
+    // runtime-free targets): engine/memory run on any machine, including
+    // offline `xla` stub builds
+    let needs_rt = target == "all" || tables::target_needs_runtime(&target);
+    let (rt, reg) = tables::load_backend(artifacts, needs_rt);
     if target == "all" {
-        for t in tables::ALL_TARGETS {
-            tables::run_target(&rt, &reg, &opts, t)?;
-        }
+        tables::run_all(rt.as_ref(), reg.as_ref(), &opts)?;
     } else {
-        tables::run_target(&rt, &reg, &opts, &target)?;
+        tables::run_target(rt.as_ref(), reg.as_ref(), &opts, &target)?;
     }
-    let (csecs, cn) = *rt.compile_stats.borrow();
-    println!("[runtime] compiled {cn} graphs in {csecs:.1}s total");
+    if let Some(rt) = &rt {
+        let (csecs, cn) = *rt.compile_stats.borrow();
+        println!("[runtime] compiled {cn} graphs in {csecs:.1}s total");
+    }
     Ok(())
 }
 
 fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
-    let name = args.opt_str("exp").ok_or_else(|| anyhow!("--exp required"))?;
     let n_requests = args.usize("requests", 256)?;
     let policy = BatchPolicy {
         max_batch: args.usize("max-batch", 32)?,
         max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 5)?),
     };
-    let server = Server::start(
-        artifacts.clone(),
-        name.clone(),
-        args.opt_str("ckpt").map(PathBuf::from),
-        policy,
-        args.u64("seed", 17)? as i32,
-    )?;
+    let seed = args.u64("seed", 17)?;
+    // --fallback forces the pure-Rust engine backend; otherwise Server
+    // falls back by itself when the experiment's artifacts are unusable
+    let server = if args.bool("fallback") {
+        let seq_len = args.usize("seq-len", 128)?;
+        let cfg = sinkhorn::server::FallbackConfig {
+            seq_len,
+            nb: args.usize("nb", sinkhorn::server::FallbackConfig::blocks_for(seq_len))?,
+            threads: args.usize("threads", 0)?,
+            seed,
+            ..Default::default()
+        };
+        println!(
+            "serving pure-Rust fallback engine (seq_len {}, nb {})",
+            cfg.seq_len, cfg.nb
+        );
+        Server::start_fallback(cfg, policy)?
+    } else {
+        let name = args.opt_str("exp").ok_or_else(|| anyhow!("--exp required (or --fallback)"))?;
+        Server::start(
+            artifacts.clone(),
+            name,
+            args.opt_str("ckpt").map(PathBuf::from),
+            policy,
+            seed as i32,
+        )?
+    };
     // optional TCP frontend (line protocol; see server::tcp)
     let tcp = match args.opt_str("port") {
         Some(p) => {
@@ -189,26 +216,55 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
         }
         None => None,
     };
-    // demo traffic: synthetic requests from the experiment's own dataset
-    let rt_exp = Experiment::load(artifacts, &name)?;
-    let mut data = TaskData::for_experiment(&rt_exp.manifest)?;
+    if args.bool("wait") {
+        println!("serving until ctrl-c (no demo traffic)...");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    // demo traffic: the experiment's own dataset when artifacts exist,
+    // seeded synthetic requests otherwise. Only the *artifact load* may
+    // fail soft (that's the fallback case); a dataset error on a loaded
+    // experiment is a real configuration bug and must abort.
     let seq_len = server.handle.seq_len;
+    let mut data = match args.opt_str("exp") {
+        Some(name) => match Experiment::load(artifacts, &name) {
+            Ok(exp) => Some(TaskData::for_experiment(&exp.manifest)?),
+            Err(_) => None,
+        },
+        None => None,
+    };
+    let mut rng = sinkhorn::util::rng::Rng::new(seed ^ 0x5E7E);
     let mut latencies = Vec::new();
     let t0 = std::time::Instant::now();
     for _ in 0..n_requests {
-        let batch = data.train_batch();
-        let toks = batch[0].as_i32()?[..seq_len].to_vec();
+        let toks = match &mut data {
+            Some(d) => {
+                // one request = the first row of a generated batch; the
+                // dataset's row length may differ from the server's
+                // seq_len (e.g. fallback backend), so slice the row, not
+                // the flat buffer, and let the server pad/truncate
+                let batch = d.train_batch();
+                let row_len = batch[0].shape().get(1).copied().unwrap_or(seq_len);
+                batch[0].as_i32()?[..row_len.min(seq_len)].to_vec()
+            }
+            None => (0..seq_len).map(|_| rng.range_i64(0, 256) as i32).collect(),
+        };
         let resp = server.handle.classify(toks)?;
         latencies.push(resp.total.as_secs_f64() * 1e3);
     }
     drop(tcp);
     let total = t0.elapsed().as_secs_f64();
-    let p50 = sinkhorn::util::stats::percentile(&mut latencies.clone(), 50.0);
-    let p99 = sinkhorn::util::stats::percentile(&mut latencies.clone(), 99.0);
-    println!(
-        "served {n_requests} requests in {total:.2}s ({:.1} req/s) | p50 {p50:.2}ms p99 {p99:.2}ms",
-        n_requests as f64 / total
-    );
+    if latencies.is_empty() {
+        println!("served 0 requests (nothing to report)");
+    } else {
+        let p50 = sinkhorn::util::stats::percentile(&mut latencies.clone(), 50.0);
+        let p99 = sinkhorn::util::stats::percentile(&mut latencies.clone(), 99.0);
+        println!(
+            "served {n_requests} requests in {total:.2}s ({:.1} req/s) | p50 {p50:.2}ms p99 {p99:.2}ms",
+            n_requests as f64 / total
+        );
+    }
     server.shutdown()?;
     Ok(())
 }

@@ -2,9 +2,15 @@
 //!
 //! The coordinator's data pipeline produces `HostTensor`s; the runtime
 //! uploads them as literals. Downloads go the other way for metrics,
-//! checkpoints and predictions.
+//! checkpoints and predictions. Rank-2 f32 tensors also bridge zero-copy
+//! into the blocked engine's strided views ([`HostTensor::mat_view`]) and
+//! owning matrices ([`HostTensor::from_mat`]/[`HostTensor::into_mat`]),
+//! so engine results and runtime tensors share one layout convention
+//! (row-major, shape + stride) instead of copying at the boundary.
 
 use anyhow::{bail, Result};
+
+use crate::sinkhorn::matrix::{Mat, MatView};
 
 use super::manifest::{Dtype, LeafSpec};
 
@@ -106,6 +112,33 @@ impl HostTensor {
         }
     }
 
+    /// Zero-copy view of a rank-2 f32 tensor as a blocked-engine matrix
+    /// view (shared row-major layout — no data movement).
+    pub fn mat_view(&self) -> Result<MatView<'_>> {
+        match self {
+            HostTensor::F32 { shape, data } if shape.len() == 2 => {
+                Ok(MatView::contiguous(data, shape[0], shape[1]))
+            }
+            HostTensor::F32 { shape, .. } => bail!("mat_view: rank {} != 2", shape.len()),
+            HostTensor::I32 { .. } => bail!("mat_view: tensor is not f32"),
+        }
+    }
+
+    /// Wrap an engine matrix as a rank-2 tensor (copies the buffer).
+    pub fn from_mat(m: &Mat) -> HostTensor {
+        HostTensor::F32 { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+
+    /// Take a rank-2 f32 tensor's buffer as an engine matrix (no copy).
+    pub fn into_mat(self) -> Result<Mat> {
+        match self {
+            HostTensor::F32 { shape, data } if shape.len() == 2 => {
+                Ok(Mat::from_vec(shape[0], shape[1], data))
+            }
+            other => bail!("into_mat: need a rank-2 f32 tensor, got {:?} {:?}", other.dtype(), other.shape()),
+        }
+    }
+
     /// Validate against a manifest slot (shape + dtype).
     pub fn check_spec(&self, spec: &LeafSpec) -> Result<()> {
         if self.shape() != spec.shape.as_slice() {
@@ -170,6 +203,20 @@ mod tests {
         assert!(HostTensor::zeros(Dtype::F32, &[2, 2]).check_spec(&spec).is_ok());
         assert!(HostTensor::zeros(Dtype::F32, &[4]).check_spec(&spec).is_err());
         assert!(HostTensor::zeros(Dtype::I32, &[2, 2]).check_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn mat_bridge_roundtrip() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let t = HostTensor::from_mat(&m);
+        assert_eq!(t.shape(), &[3, 4]);
+        // zero-copy view shares layout with the matrix
+        let v = t.mat_view().unwrap();
+        assert_eq!(v.to_mat(), m);
+        assert_eq!(t.into_mat().unwrap(), m);
+        // rank / dtype guards
+        assert!(HostTensor::f32(&[4], vec![0.0; 4]).mat_view().is_err());
+        assert!(HostTensor::i32(&[2, 2], vec![0; 4]).mat_view().is_err());
     }
 
     #[test]

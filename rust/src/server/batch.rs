@@ -22,6 +22,14 @@ impl Default for BatchPolicy {
     }
 }
 
+impl BatchPolicy {
+    /// Cap `max_batch` at the executor's capacity (e.g. the compiled
+    /// graph's batch dimension).
+    pub fn clamped(self, cap: usize) -> BatchPolicy {
+        BatchPolicy { max_batch: self.max_batch.min(cap), ..self }
+    }
+}
+
 /// Pull up to `max_batch` items from `rx`, waiting at most `max_wait`
 /// after the first item arrives. Blocks indefinitely for the first item;
 /// returns `None` when the channel is closed and drained.
@@ -71,6 +79,14 @@ mod tests {
         let b = gather(&rx, &policy).unwrap();
         assert_eq!(b, vec![1, 2]);
         assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn clamped_caps_but_keeps_wait() {
+        let p = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(9) }.clamped(16);
+        assert_eq!(p.max_batch, 16);
+        assert_eq!(p.max_wait, Duration::from_millis(9));
+        assert_eq!(BatchPolicy::default().clamped(1000).max_batch, 32);
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! Pure-Rust inference fallback: a single-layer Sinkhorn-attention
+//! classifier that runs entirely on the blocked engine
+//! (`sinkhorn::engine`, DESIGN.md §Engine) — no XLA, no compiled
+//! artifacts, no Python. The server selects it when an experiment's HLO
+//! artifacts (or the PJRT runtime itself) are unavailable, so the full
+//! serving stack — TCP frontend, dynamic batcher, executor — works on any
+//! machine straight from `cargo run`.
+//!
+//! The model is deliberately small and deterministic from its seed:
+//! embedding + sinusoid-free learned-style positional table, one
+//! multi-part attention step (SortNet -> Sinkhorn balance -> blocked
+//! sorted+local attention), residual mean-pool, linear head. It is not
+//! trained (there is no training path without XLA); what it demonstrates
+//! and exercises is the *serving* pipeline and the engine hot path with
+//! production shapes.
+
+use anyhow::Result;
+
+use crate::sinkhorn::balance;
+use crate::sinkhorn::matrix::Mat;
+use crate::sinkhorn::{SinkhornEngine, WorkerPool};
+use crate::util::rng::Rng;
+
+/// Configuration of the fallback classifier.
+#[derive(Debug, Clone)]
+pub struct FallbackConfig {
+    /// token ids are wrapped into `[0, vocab)` so any client input is safe
+    pub vocab: usize,
+    /// fixed sequence length (requests are padded/truncated to this)
+    pub seq_len: usize,
+    pub d_model: usize,
+    /// number of sort blocks; must divide `seq_len`
+    pub nb: usize,
+    pub n_classes: usize,
+    /// Sinkhorn balance iterations for the sort matrix
+    pub sinkhorn_iters: usize,
+    pub seed: u64,
+    /// engine worker threads (0 = auto)
+    pub threads: usize,
+}
+
+impl Default for FallbackConfig {
+    fn default() -> Self {
+        let seq_len = 128;
+        FallbackConfig {
+            vocab: 512,
+            seq_len,
+            d_model: 64,
+            // keep in sync with the `serve --fallback` CLI default, which
+            // also derives nb from blocks_for(seq_len) — the auto-fallback
+            // and the forced fallback must build the same model
+            nb: Self::blocks_for(seq_len),
+            n_classes: 2,
+            sinkhorn_iters: 5,
+            seed: 17,
+            threads: 0,
+        }
+    }
+}
+
+impl FallbackConfig {
+    /// Largest power of two <= 16 dividing `seq_len` (a reasonable block
+    /// count when the manifest doesn't pin one).
+    pub fn blocks_for(seq_len: usize) -> usize {
+        for nb in [16usize, 8, 4, 2] {
+            if seq_len % nb == 0 {
+                return nb;
+            }
+        }
+        1
+    }
+}
+
+/// The deterministic fallback classifier.
+pub struct FallbackModel {
+    pub cfg: FallbackConfig,
+    engine: SinkhornEngine,
+    /// request-level parallelism for batches (per-request work is large
+    /// enough to amortize the pool's spawn cost; per-block work is not)
+    batch_pool: WorkerPool,
+    /// (vocab, d) token embeddings
+    embed: Mat,
+    /// (seq_len, d) positional table
+    pos: Mat,
+    wq: Mat,
+    wk: Mat,
+    wv: Mat,
+    wo: Mat,
+    /// (d, nb) SortNet head: block descriptor -> destination-block logits
+    sortnet: Mat,
+    /// (d, n_classes) classification head
+    w_cls: Mat,
+}
+
+impl FallbackModel {
+    pub fn new(cfg: FallbackConfig) -> Result<FallbackModel> {
+        if cfg.seq_len % cfg.nb != 0 {
+            anyhow::bail!("fallback: nb {} must divide seq_len {}", cfg.nb, cfg.seq_len);
+        }
+        if cfg.vocab == 0 || cfg.n_classes == 0 {
+            anyhow::bail!("fallback: vocab and n_classes must be positive");
+        }
+        let d = cfg.d_model;
+        let mut rng = Rng::new(cfg.seed);
+        let mut init = |rows: usize, cols: usize, scale: f64| {
+            let mut r = rng.fork((rows * 31 + cols) as u64);
+            Mat::from_fn(rows, cols, |_, _| (r.normal() * scale) as f32)
+        };
+        let wscale = 1.0 / (d as f64).sqrt();
+        // At serving shapes (seq_len ~128) each block's work is
+        // microseconds — below the pool's per-call thread-spawn cost — so
+        // "auto" means serial unless the request is big enough for the
+        // parallel engine to pay off. An explicit threads count wins.
+        let engine = if cfg.threads == 0 && cfg.seq_len * cfg.d_model < (1 << 17) {
+            SinkhornEngine::serial()
+        } else {
+            SinkhornEngine::new(cfg.threads)
+        };
+        Ok(FallbackModel {
+            engine,
+            batch_pool: WorkerPool::new(cfg.threads),
+            embed: init(cfg.vocab, d, 0.1),
+            pos: init(cfg.seq_len, d, 0.05),
+            wq: init(d, d, wscale),
+            wk: init(d, d, wscale),
+            wv: init(d, d, wscale),
+            wo: init(d, d, wscale),
+            sortnet: init(d, cfg.nb, wscale),
+            w_cls: init(d, cfg.n_classes, wscale),
+            cfg,
+        })
+    }
+
+    /// Class logits for one request (tokens are wrapped into the vocab and
+    /// padded/truncated to `seq_len`).
+    pub fn class_logits(&self, tokens: &[i32]) -> Vec<f32> {
+        self.logits_with(tokens, &mut Mat::zeros(self.cfg.seq_len, self.cfg.d_model))
+    }
+
+    /// [`Self::class_logits`] with a caller-provided attention output
+    /// buffer (serving hot path: one buffer per executor worker, reused
+    /// across requests).
+    fn logits_with(&self, tokens: &[i32], ctx_buf: &mut Mat) -> Vec<f32> {
+        let (ell, d, nb) = (self.cfg.seq_len, self.cfg.d_model, self.cfg.nb);
+        // embed + position
+        let mut x = Mat::zeros(ell, d);
+        for t in 0..ell {
+            let tok = tokens.get(t).copied().unwrap_or(0); // PAD
+            let id = tok.rem_euclid(self.cfg.vocab as i32) as usize;
+            let (er, pr) = (self.embed.row(id), self.pos.row(t));
+            for (c, o) in x.row_mut(t).iter_mut().enumerate() {
+                *o = er[c] + pr[c];
+            }
+        }
+        let q = x.matmul(&self.wq);
+        let k = x.matmul(&self.wk);
+        let v = x.matmul(&self.wv);
+        // SortNet: mean-pooled block descriptors -> (nb, nb) logits -> balance
+        let b = ell / nb;
+        let mut blk = Mat::zeros(nb, d);
+        for i in 0..nb {
+            for t in 0..b {
+                let xr = x.row(i * b + t);
+                for (c, o) in blk.row_mut(i).iter_mut().enumerate() {
+                    *o += xr[c];
+                }
+            }
+        }
+        blk.scale(1.0 / b as f32);
+        let r = balance::sinkhorn(&blk.matmul(&self.sortnet), self.cfg.sinkhorn_iters);
+        // blocked sorted+local attention on the engine, into the reused buffer
+        self.engine.attention_into(&q, &k, &v, &r, nb, false, ctx_buf);
+        let ctx = ctx_buf.matmul(&self.wo);
+        // residual + mean pool
+        let mut h = vec![0.0f32; d];
+        for t in 0..ell {
+            let (xr, cr) = (x.row(t), ctx.row(t));
+            for c in 0..d {
+                h[c] += xr[c] + cr[c];
+            }
+        }
+        for v in &mut h {
+            *v /= ell as f32;
+        }
+        // linear head
+        let mut logits = vec![0.0f32; self.cfg.n_classes];
+        for (c, &hc) in h.iter().enumerate() {
+            let wr = self.w_cls.row(c);
+            for (j, l) in logits.iter_mut().enumerate() {
+                *l += hc * wr[j];
+            }
+        }
+        logits
+    }
+
+    /// Predicted label for one request.
+    pub fn classify(&self, tokens: &[i32]) -> i32 {
+        argmax(&self.class_logits(tokens))
+    }
+
+    /// Labels for a batch of requests (executor entry point). Requests
+    /// are independent, so the batch fans out over the worker pool —
+    /// that's the throughput the dynamic batcher buys — with one reused
+    /// attention buffer per worker.
+    pub fn classify_batch(&self, batch: &[Vec<i32>]) -> Vec<i32> {
+        let mut labels = vec![0i32; batch.len()];
+        let tasks: Vec<(usize, &mut i32)> = labels.iter_mut().enumerate().collect();
+        self.batch_pool.run(
+            tasks,
+            || Mat::zeros(self.cfg.seq_len, self.cfg.d_model),
+            |buf, (i, slot)| *slot = argmax(&self.logits_with(&batch[i], buf)),
+        );
+        labels
+    }
+}
+
+fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0;
+    for (j, &l) in logits.iter().enumerate() {
+        if l > logits[best] {
+            best = j;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> FallbackModel {
+        FallbackModel::new(FallbackConfig {
+            seq_len: 32,
+            d_model: 16,
+            nb: 4,
+            vocab: 64,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let (a, b) = (model(), model());
+        let toks: Vec<i32> = (0..32).map(|i| (i * 7) % 64).collect();
+        assert_eq!(a.class_logits(&toks), b.class_logits(&toks));
+        assert_eq!(a.classify(&toks), b.classify(&toks));
+    }
+
+    #[test]
+    fn labels_in_range_and_inputs_matter() {
+        let m = model();
+        let mut seen = std::collections::HashSet::new();
+        for s in 0..24 {
+            let toks: Vec<i32> = (0..32).map(|i| (i * (s + 3) + s) % 64).collect();
+            let label = m.classify(&toks);
+            assert!((0..m.cfg.n_classes as i32).contains(&label));
+            let lg = m.class_logits(&toks);
+            assert!(lg.iter().all(|x| x.is_finite()));
+            seen.insert(format!("{lg:?}"));
+        }
+        assert!(seen.len() > 1, "logits must depend on the input");
+    }
+
+    #[test]
+    fn handles_short_long_and_hostile_token_ids() {
+        let m = model();
+        // short (padded), long (truncated), out-of-range ids (wrapped)
+        let short = m.classify(&[1, 2, 3]);
+        let long = m.classify(&vec![5; 500]);
+        let hostile = m.classify(&[i32::MIN, i32::MAX, -1, 1 << 30]);
+        for l in [short, long, hostile] {
+            assert!((0..m.cfg.n_classes as i32).contains(&l));
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let m = model();
+        let reqs: Vec<Vec<i32>> = (0..5).map(|s| (0..32).map(|i| (i + s) % 64).collect()).collect();
+        let batch = m.classify_batch(&reqs);
+        for (r, &want) in reqs.iter().zip(&batch) {
+            assert_eq!(m.classify(r), want);
+        }
+    }
+
+    #[test]
+    fn blocks_for_divides() {
+        for ell in [128, 96, 64, 30, 7] {
+            assert_eq!(ell % FallbackConfig::blocks_for(ell), 0);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        assert!(FallbackModel::new(FallbackConfig { seq_len: 30, nb: 8, ..Default::default() })
+            .is_err());
+    }
+}

@@ -1,11 +1,16 @@
 //! Batched inference serving (the L3 "router" role): client threads submit
 //! token sequences; a dynamic batcher groups them; a single executor thread
-//! owning the PJRT runtime classifies whole batches at once.
+//! owning the execution backend classifies whole batches at once. The
+//! backend is either the PJRT runtime over compiled artifacts or, when no
+//! HLO artifact is present, the pure-Rust blocked engine
+//! ([`fallback`] — works on any machine).
 
 pub mod batch;
+pub mod fallback;
 pub mod service;
 pub mod tcp;
 
 pub use batch::{gather, BatchPolicy};
+pub use fallback::{FallbackConfig, FallbackModel};
 pub use service::{Response, Server, ServerHandle};
 pub use tcp::TcpFrontend;

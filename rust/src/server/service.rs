@@ -1,22 +1,30 @@
-//! Inference service: a router thread owns the PJRT runtime (the client is
-//! not `Send`-shareable, so all execution funnels through one executor —
-//! the vllm-router shape: N frontends -> channel -> batcher -> executor).
+//! Inference service: a router thread owns the execution backend (the
+//! PJRT client is not `Send`-shareable, so all execution funnels through
+//! one executor — the vllm-router shape: N frontends -> channel ->
+//! batcher -> executor).
 //!
-//! Serves classification experiments: request = token ids, response =
-//! predicted label + timing breakdown.
+//! Two backends serve classification requests (token ids in, predicted
+//! label + timing breakdown out):
+//!
+//! * **Artifacts** — the AOT-compiled XLA eval graph, when the
+//!   experiment's HLO artifacts and a PJRT runtime are available.
+//! * **Pure-Rust fallback** — [`super::fallback::FallbackModel`] on the
+//!   parallel blocked engine, selected automatically when no compiled HLO
+//!   artifact is present (or the build links the offline `xla` stub), so
+//!   the serving stack runs on any machine. See DESIGN.md §Engine.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::Checkpoint;
-use crate::data::tokenizer::pad_to;
-use crate::runtime::{Experiment, HostTensor, Runtime};
+use crate::runtime::{Experiment, HostTensor, Runtime, TrainState};
 
 use super::batch::{gather, BatchPolicy};
+use super::fallback::{FallbackConfig, FallbackModel};
 
 /// One inference request.
 struct Request {
@@ -68,9 +76,65 @@ pub struct Server {
     join: Option<JoinHandle<Result<()>>>,
 }
 
+/// The shared executor: pull batches off the channel under `policy`, hand
+/// the token rows to `classify`, fan the labels back out. Both backends
+/// run this loop; only `classify` differs. Token rows are moved out of
+/// the requests (no per-request copies on this path).
+fn executor_loop(
+    rx: &Receiver<Msg>,
+    policy: &BatchPolicy,
+    mut classify: impl FnMut(&[Vec<i32>]) -> Result<Vec<i32>>,
+) -> Result<()> {
+    'serve: while let Some(msgs) = gather(rx, policy) {
+        let mut stop = false;
+        let mut rows: Vec<Vec<i32>> = Vec::with_capacity(msgs.len());
+        let mut meta: Vec<(Instant, Sender<Result<Response>>)> = Vec::with_capacity(msgs.len());
+        for m in msgs {
+            match m {
+                Msg::Req(r) => {
+                    rows.push(r.tokens);
+                    meta.push((r.enqueued, r.resp));
+                }
+                Msg::Stop => stop = true,
+            }
+        }
+        if rows.is_empty() {
+            if stop {
+                break 'serve;
+            }
+            continue;
+        }
+        let n = rows.len();
+        let exec_start = Instant::now();
+        match classify(&rows) {
+            Ok(labels) => {
+                for (i, (enqueued, resp)) in meta.into_iter().enumerate() {
+                    let _ = resp.send(Ok(Response {
+                        label: labels[i],
+                        queue: exec_start - enqueued,
+                        total: enqueued.elapsed(),
+                        batch_size: n,
+                    }));
+                }
+            }
+            Err(e) => {
+                for (_, resp) in meta {
+                    let _ = resp.send(Err(anyhow!("exec failed: {e}")));
+                }
+            }
+        }
+        if stop {
+            break 'serve;
+        }
+    }
+    Ok(())
+}
+
 impl Server {
-    /// Start the executor thread: loads the experiment, restores or inits
-    /// parameters, then serves until all handles are dropped.
+    /// Start a server for `exp_name`: the artifact-backed executor when
+    /// the compiled HLO artifacts and a PJRT runtime are available,
+    /// otherwise the pure-Rust fallback engine (unless a checkpoint was
+    /// requested — checkpoints only restore into artifact graphs).
     pub fn start(
         artifacts: PathBuf,
         exp_name: String,
@@ -78,85 +142,130 @@ impl Server {
         policy: BatchPolicy,
         init_seed: i32,
     ) -> Result<Server> {
-        // load the manifest up front so config errors surface synchronously
+        // a present registry means the operator *has* artifacts: a bad
+        // experiment name or corrupt manifest must then fail loudly, not
+        // silently demote to the untrained fallback model. Runtime (PJRT)
+        // startup failures still fall back — the offline-stub case.
+        let artifacts_present = artifacts.join("registry.json").exists();
+        // start_artifact reports executor startup failures (missing
+        // manifest, stub/broken PJRT runtime, bad artifacts) synchronously
+        match Self::start_artifact(artifacts, exp_name.clone(), checkpoint.clone(), policy, init_seed)
+        {
+            Ok(server) => Ok(server),
+            Err(e) if checkpoint.is_some() => {
+                Err(e.context(format!("'{exp_name}' needs its artifacts to restore a checkpoint")))
+            }
+            // "server runtime" is the context start_artifact puts on the
+            // PJRT construction failure — the one artifact-present error
+            // that legitimately falls back
+            Err(e) if artifacts_present && !format!("{e:#}").contains("server runtime") => {
+                Err(e.context(format!(
+                    "experiment '{exp_name}' failed to start (artifacts are present, so not \
+                     falling back — check the name with `sinkhorn list`)"
+                )))
+            }
+            Err(e) => {
+                eprintln!(
+                    "[server] no usable HLO artifact for '{exp_name}' ({e:#}); \
+                     serving with the pure-Rust fallback engine"
+                );
+                let cfg = FallbackConfig { seed: init_seed as u64, ..Default::default() };
+                Self::start_fallback(cfg, policy)
+            }
+        }
+    }
+
+    /// Artifact-backed executor: loads the experiment, restores or inits
+    /// parameters, then serves until all handles are dropped. The
+    /// executor thread owns the PJRT runtime (it is not `Send`); its
+    /// startup outcome is funneled back over a channel so failures
+    /// surface here without constructing a throwaway probe runtime.
+    fn start_artifact(
+        artifacts: PathBuf,
+        exp_name: String,
+        checkpoint: Option<PathBuf>,
+        policy: BatchPolicy,
+        init_seed: i32,
+    ) -> Result<Server> {
         let probe = Experiment::load(&artifacts, &exp_name)?;
         if probe.manifest.eval_outputs.len() < 3 {
             bail!("experiment '{exp_name}' has no pred output; re-run make artifacts");
         }
         let seq_len = probe.manifest.eval_batch_inputs[0].shape[1];
         let graph_batch = probe.manifest.eval_batch_inputs[0].shape[0];
-        let policy = BatchPolicy { max_batch: policy.max_batch.min(graph_batch), ..policy };
+        let policy = policy.clamped(graph_batch);
 
         let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
         let join = std::thread::spawn(move || -> Result<()> {
-            let rt = Runtime::cpu().context("server runtime")?;
-            let exp = Experiment::load(&artifacts, &exp_name)?;
-            let state = match checkpoint {
-                Some(path) => Checkpoint::load(&path)?.restore(&exp.manifest)?,
-                None => exp.init_state(&rt, init_seed)?,
+            // executor startup: anything failing here aborts the server
+            // before it accepts traffic (reported via ready_tx)
+            let startup = || -> Result<(Runtime, Experiment, TrainState)> {
+                let rt = Runtime::cpu().context("server runtime")?;
+                let exp = Experiment::load(&artifacts, &exp_name)?;
+                let state = match checkpoint {
+                    Some(path) => Checkpoint::load(&path)?.restore(&exp.manifest)?,
+                    None => exp.init_state(&rt, init_seed)?,
+                };
+                // warm the compile cache before accepting traffic
+                let zeros =
+                    HostTensor::i32(&[graph_batch, seq_len], vec![0; graph_batch * seq_len]);
+                let zlabels = HostTensor::i32(&[graph_batch], vec![0; graph_batch]);
+                exp.eval(&rt, &state.params, &[zeros.to_literal()?, zlabels.to_literal()?])?;
+                Ok((rt, exp, state))
             };
-            // warm the compile cache before accepting traffic
-            let zeros = HostTensor::i32(&[graph_batch, seq_len], vec![0; graph_batch * seq_len]);
-            let zlabels = HostTensor::i32(&[graph_batch], vec![0; graph_batch]);
-            exp.eval(&rt, &state.params, &[zeros.to_literal()?, zlabels.to_literal()?])?;
-
-            'serve: while let Some(msgs) = gather(&rx, &policy) {
-                let mut stop = false;
-                let batch: Vec<Request> = msgs
-                    .into_iter()
-                    .filter_map(|m| match m {
-                        Msg::Req(r) => Some(r),
-                        Msg::Stop => {
-                            stop = true;
-                            None
-                        }
-                    })
-                    .collect();
-                if batch.is_empty() {
-                    if stop {
-                        break 'serve;
-                    }
-                    continue;
+            let (rt, exp, state) = match startup() {
+                Ok(x) => {
+                    let _ = ready_tx.send(Ok(()));
+                    x
                 }
-                let n = batch.len();
-                let exec_start = Instant::now();
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return Ok(()); // failure already reported to the caller
+                }
+            };
+
+            executor_loop(&rx, &policy, |rows| {
                 // assemble fixed-shape tensors, padding unused rows
                 let mut toks = Vec::with_capacity(graph_batch * seq_len);
-                for req in &batch {
-                    toks.extend(pad_to(req.tokens.clone(), seq_len));
+                for r in rows {
+                    let take = r.len().min(seq_len);
+                    toks.extend_from_slice(&r[..take]);
+                    toks.resize(toks.len() + (seq_len - take), 0);
                 }
                 toks.resize(graph_batch * seq_len, 0);
                 let labels = vec![0i32; graph_batch];
                 let t_tok = HostTensor::i32(&[graph_batch, seq_len], toks);
                 let t_lab = HostTensor::i32(&[graph_batch], labels);
-                let result = exp
-                    .eval(&rt, &state.params, &[t_tok.to_literal()?, t_lab.to_literal()?])
-                    .and_then(|out| HostTensor::from_literal(&out[2]));
-                match result {
-                    Ok(pred) => {
-                        let pred = pred.as_i32()?;
-                        for (i, req) in batch.into_iter().enumerate() {
-                            let _ = req.resp.send(Ok(Response {
-                                label: pred[i],
-                                queue: exec_start - req.enqueued,
-                                total: req.enqueued.elapsed(),
-                                batch_size: n,
-                            }));
-                        }
-                    }
-                    Err(e) => {
-                        for req in batch {
-                            let _ = req.resp.send(Err(anyhow!("exec failed: {e}")));
-                        }
-                    }
-                }
-                if stop {
-                    break 'serve;
-                }
-            }
-            Ok(())
+                let out = exp.eval(&rt, &state.params, &[t_tok.to_literal()?, t_lab.to_literal()?])?;
+                let pred = HostTensor::from_literal(&out[2])?;
+                Ok(pred.as_i32()?[..rows.len()].to_vec())
+            })
         });
 
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Server { handle: ServerHandle { tx, seq_len }, join: Some(join) }),
+            Ok(Err(e)) => {
+                let _ = join.join();
+                Err(e)
+            }
+            Err(_) => {
+                let _ = join.join();
+                bail!("server executor died during startup")
+            }
+        }
+    }
+
+    /// Pure-Rust executor on the blocked engine — works with no artifacts
+    /// directory at all.
+    pub fn start_fallback(cfg: FallbackConfig, policy: BatchPolicy) -> Result<Server> {
+        // build the model synchronously so config errors surface here
+        let model = FallbackModel::new(cfg)?;
+        let seq_len = model.cfg.seq_len;
+        let (tx, rx) = channel::<Msg>();
+        let join = std::thread::spawn(move || -> Result<()> {
+            executor_loop(&rx, &policy, |rows| Ok(model.classify_batch(rows)))
+        });
         Ok(Server { handle: ServerHandle { tx, seq_len }, join: Some(join) })
     }
 
@@ -168,5 +277,92 @@ impl Server {
             j.join().map_err(|_| anyhow!("executor panicked"))??;
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The fallback backend end to end: concurrent clients, batching,
+    /// deterministic labels — all without artifacts or XLA.
+    #[test]
+    fn fallback_server_classifies_concurrently() {
+        let cfg = FallbackConfig { seq_len: 32, d_model: 16, nb: 4, ..Default::default() };
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(3) };
+        let server = Server::start_fallback(cfg.clone(), policy).unwrap();
+        assert_eq!(server.handle.seq_len, 32);
+        let mut joins = Vec::new();
+        for t in 0..3i32 {
+            let h = server.handle.clone();
+            joins.push(std::thread::spawn(move || {
+                (0..6)
+                    .map(|i| {
+                        let toks: Vec<i32> = (0..32).map(|p| p * 13 + t * 7 + i).collect();
+                        let resp = h.classify(toks).unwrap();
+                        assert!(resp.batch_size >= 1);
+                        resp.label
+                    })
+                    .collect::<Vec<i32>>()
+            }));
+        }
+        let labels: Vec<Vec<i32>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        server.shutdown().unwrap();
+        // replies must be deterministic: same requests against a fresh
+        // server give identical labels
+        let server2 = Server::start_fallback(cfg, BatchPolicy::default()).unwrap();
+        for (t, row) in labels.iter().enumerate() {
+            for (i, &want) in row.iter().enumerate() {
+                let toks: Vec<i32> = (0..32).map(|p| p * 13 + (t as i32) * 7 + i as i32).collect();
+                assert_eq!(server2.handle.classify(toks).unwrap().label, want);
+            }
+        }
+        server2.shutdown().unwrap();
+    }
+
+    #[test]
+    fn missing_artifacts_fall_back() {
+        let server = Server::start(
+            PathBuf::from("/definitely/not/artifacts"),
+            "sstw__sinkhorn_b8".into(),
+            None,
+            BatchPolicy::default(),
+            3,
+        )
+        .unwrap();
+        let resp = server.handle.classify(vec![1, 2, 3, 4]).unwrap();
+        assert!(resp.label >= 0);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn typo_with_artifacts_present_errors_instead_of_falling_back() {
+        // a registry.json marks artifacts as present: unknown experiment
+        // names must fail loudly rather than serve the toy fallback
+        let dir = std::env::temp_dir().join("sinkhorn-svc-typo-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("registry.json"), "{\"experiments\": []}").unwrap();
+        let err = Server::start(
+            dir,
+            "definitely_not_an_experiment".into(),
+            None,
+            BatchPolicy::default(),
+            3,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("not falling back"), "{err:#}");
+    }
+
+    #[test]
+    fn checkpoint_without_artifacts_errors() {
+        let err = Server::start(
+            PathBuf::from("/definitely/not/artifacts"),
+            "sstw__sinkhorn_b8".into(),
+            Some(PathBuf::from("some.ckpt")),
+            BatchPolicy::default(),
+            3,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("restore a checkpoint"), "{err:#}");
     }
 }

@@ -1,6 +1,12 @@
 //! Pure-Rust single-head Sparse Sinkhorn Attention — mirrors
 //! `kernels/ref.py` and backs the coordinator property tests (causality by
 //! perturbation, local-attention equivalence, permutation invariances).
+//!
+//! This is the *naive reference path*: one materialized `Mat` per
+//! intermediate, single-threaded, written for obviousness. The production
+//! path is [`super::engine::SinkhornEngine`], which computes bit-identical
+//! outputs over zero-copy views with a worker pool; the engine's property
+//! tests compare against this module.
 
 use super::balance::NEG_INF;
 use super::matrix::Mat;
@@ -14,7 +20,7 @@ pub struct Blocked {
 impl Blocked {
     /// Split an `(ell, d)` matrix into `nb` blocks.
     pub fn from_seq(x: &Mat, nb: usize) -> Self {
-        assert_eq!(x.rows % nb, 0, "ell must divide nb");
+        assert_eq!(x.rows % nb, 0, "nb must divide ell");
         let b = x.rows / nb;
         let blocks = (0..nb)
             .map(|i| {
@@ -39,6 +45,14 @@ impl Blocked {
     }
 
     /// Apply a sort matrix: out[i] = sum_j R[i,j] * blocks[j].
+    ///
+    /// Fused gather-matmul: the balanced `r` is nearly a permutation, so
+    /// zero weights are skipped and each `w * block` is accumulated
+    /// directly into the output tile — no block clone, no scale pass, no
+    /// temporaries. Accumulation order (ascending `j`, multiply then add)
+    /// matches the historical clone-scale-add loop, so results are
+    /// bit-identical to it (and to `engine::gather_block_into`, which is
+    /// this loop over zero-copy views).
     pub fn sort(&self, r: &Mat) -> Blocked {
         let nb = self.blocks.len();
         assert_eq!((r.rows, r.cols), (nb, nb));
@@ -50,9 +64,9 @@ impl Blocked {
                 for j in 0..nb {
                     let w = r[(i, j)];
                     if w != 0.0 {
-                        let mut t = self.blocks[j].clone();
-                        t.scale(w);
-                        acc.add(&t);
+                        for (o, x) in acc.data.iter_mut().zip(&self.blocks[j].data) {
+                            *o += w * *x;
+                        }
                     }
                 }
                 acc

@@ -1,0 +1,356 @@
+//! Parallel, allocation-free blocked execution engine for Sparse Sinkhorn
+//! Attention (DESIGN.md §Engine).
+//!
+//! The naive reference path in [`super::attention`] exists to be obviously
+//! correct: it materializes every block, clones and rescales `(b, d)`
+//! tiles per permutation weight, and runs on one thread. This module is
+//! the production path over the *same* algorithm:
+//!
+//! * **Zero-copy blocking** — [`BlockedView`] carves `nb` blocks out of a
+//!   contiguous `(ell, d)` buffer without copying (the strided-view
+//!   conventions shared with `runtime::tensor`).
+//! * **Fused gather-matmul sort** — the balanced matrix `r` is nearly a
+//!   permutation, so block mixing skips zero weights and accumulates
+//!   `w * block` directly into a preallocated workspace tile
+//!   ([`gather_block_into`]): no clone, no scale pass, no temporaries.
+//! * **SortCut** (paper §3.3) — the truncated path gathers only the first
+//!   `n_cut` sorted blocks and attends all queries to them.
+//! * **Worker pool** — output blocks are embarrassingly parallel; they are
+//!   split via `chunks_mut` and fanned out over [`WorkerPool`], one
+//!   private `Workspace` per worker. Inner loops allocate nothing.
+//!
+//! **Bit-exactness:** every kernel mirrors the reference path's
+//! floating-point operation order (see `matrix.rs`), and blocks never
+//! share accumulators, so fused and parallel outputs equal the naive
+//! path's bit for bit — for any thread count. The property tests in
+//! `tests/engine_props.rs` pin this contract (edge cases are covered
+//! below); `bench engine` re-checks it before every timing run.
+
+use super::balance::NEG_INF;
+use super::matrix::{
+    add_assign, matmul_into, matmul_t_scaled_into, softmax_rows_inplace, Mat, MatView, MatViewMut,
+};
+use super::pool::WorkerPool;
+
+/// Zero-copy view of an `(ell, d)` matrix as `nb` contiguous `(b, d)`
+/// blocks sharing one buffer.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockedView<'a> {
+    pub nb: usize,
+    /// rows per block
+    pub b: usize,
+    /// model dim
+    pub d: usize,
+    data: &'a [f32],
+}
+
+impl<'a> BlockedView<'a> {
+    pub fn from_seq(x: &'a Mat, nb: usize) -> Self {
+        assert!(nb > 0, "nb must be positive");
+        assert_eq!(x.rows % nb, 0, "nb must divide ell");
+        BlockedView { nb, b: x.rows / nb, d: x.cols, data: &x.data }
+    }
+
+    /// Block `i` as a strided matrix view.
+    pub fn block(&self, i: usize) -> MatView<'a> {
+        MatView::contiguous(self.block_slice(i), self.b, self.d)
+    }
+
+    /// Block `i`'s raw contiguous storage.
+    pub fn block_slice(&self, i: usize) -> &'a [f32] {
+        let n = self.b * self.d;
+        &self.data[i * n..(i + 1) * n]
+    }
+}
+
+/// Fused gather-matmul over the near-permutation sort weights: write
+/// `sum_j weights[j] * block_j` into `out`, skipping zero entries. This is
+/// the reference `Blocked::sort` inner loop with the clone-scale-add
+/// temporaries fused away (same accumulation order, bit-identical).
+pub fn gather_block_into(weights: &[f32], src: &BlockedView, out: &mut [f32]) {
+    debug_assert_eq!(weights.len(), src.nb);
+    debug_assert_eq!(out.len(), src.b * src.d);
+    out.fill(0.0);
+    for (j, &w) in weights.iter().enumerate() {
+        if w != 0.0 {
+            for (o, x) in out.iter_mut().zip(src.block_slice(j)) {
+                *o += w * *x;
+            }
+        }
+    }
+}
+
+/// Per-worker scratch tiles; sized once, reused for every block the worker
+/// processes (the engine's per-block loop is allocation-free).
+struct Workspace {
+    /// gathered (sorted) keys, `(b, d)`
+    ks: Vec<f32>,
+    /// gathered (sorted) values, `(b, d)`
+    vs: Vec<f32>,
+    /// joint `[sorted | local]` logits, `(b, 2b)`
+    logits: Vec<f32>,
+    /// local-term combine scratch, `(b, d)`
+    tmp: Vec<f32>,
+}
+
+impl Workspace {
+    fn new(b: usize, d: usize) -> Self {
+        Workspace {
+            ks: vec![0.0; b * d],
+            vs: vec![0.0; b * d],
+            logits: vec![0.0; 2 * b * b],
+            tmp: vec![0.0; b * d],
+        }
+    }
+}
+
+/// The parallel blocked engine. Construction is free; `threads == 0`
+/// auto-detects (see [`super::pool::auto_threads`]).
+#[derive(Debug, Clone, Copy)]
+pub struct SinkhornEngine {
+    pool: WorkerPool,
+}
+
+impl SinkhornEngine {
+    pub fn new(threads: usize) -> Self {
+        SinkhornEngine { pool: WorkerPool::new(threads) }
+    }
+
+    /// Single-threaded fused engine (the "fused" row of `bench engine`).
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// One worker per available core (the "parallel" row).
+    pub fn auto() -> Self {
+        Self::new(0)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Sparse Sinkhorn attention over `(ell, d)` q/k/v with balanced sort
+    /// matrix `r` — semantics identical to
+    /// [`super::attention::sinkhorn_attention`], output bit-identical.
+    pub fn attention(&self, q: &Mat, k: &Mat, v: &Mat, r: &Mat, nb: usize, causal: bool) -> Mat {
+        let mut out = Mat::zeros(q.rows, q.cols);
+        self.attention_into(q, k, v, r, nb, causal, &mut out);
+        out
+    }
+
+    /// [`Self::attention`] into a caller-provided output (serving hot
+    /// path: reuse the buffer across requests). `out` need not be zeroed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_into(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        r: &Mat,
+        nb: usize,
+        causal: bool,
+        out: &mut Mat,
+    ) {
+        check_qkv(q, k, v);
+        assert_eq!((r.rows, r.cols), (nb, nb), "sort matrix must be (nb, nb)");
+        assert_eq!((out.rows, out.cols), (q.rows, q.cols), "output shape");
+        let qb = BlockedView::from_seq(q, nb);
+        let kb = BlockedView::from_seq(k, nb);
+        let vb = BlockedView::from_seq(v, nb);
+        let (b, d) = (qb.b, qb.d);
+        let scale = 1.0 / (d as f32).sqrt();
+
+        let tasks: Vec<(usize, &mut [f32])> = out.data.chunks_mut(b * d).enumerate().collect();
+        self.pool.run(
+            tasks,
+            || Workspace::new(b, d),
+            |ws, (i, chunk)| block_attention(ws, i, chunk, &qb, &kb, &vb, r, causal, scale),
+        );
+    }
+
+    /// SortCut truncated attention (paper §3.3): every query attends to
+    /// the first `n_cut` *sorted* blocks. Semantics identical to
+    /// [`super::attention::sortcut_attention`], output bit-identical, but
+    /// only `n_cut` of the `nb` gather rows are ever computed.
+    pub fn sortcut_attention(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        r: &Mat,
+        nb: usize,
+        n_cut: usize,
+    ) -> Mat {
+        let mut out = Mat::zeros(q.rows, q.cols);
+        self.sortcut_attention_into(q, k, v, r, nb, n_cut, &mut out);
+        out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn sortcut_attention_into(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        r: &Mat,
+        nb: usize,
+        n_cut: usize,
+        out: &mut Mat,
+    ) {
+        check_qkv(q, k, v);
+        assert_eq!((r.rows, r.cols), (nb, nb), "sort matrix must be (nb, nb)");
+        assert!((1..=nb).contains(&n_cut), "n_cut must be in 1..=nb, got {n_cut}");
+        assert_eq!((out.rows, out.cols), (q.rows, q.cols), "output shape");
+        let qb = BlockedView::from_seq(q, nb);
+        let kb = BlockedView::from_seq(k, nb);
+        let vb = BlockedView::from_seq(v, nb);
+        let (b, d) = (qb.b, qb.d);
+        let scale = 1.0 / (d as f32).sqrt();
+
+        // gather the truncated sorted K/V once (n_cut blocks, not nb)
+        let mut kcut = vec![0.0f32; n_cut * b * d];
+        let mut vcut = vec![0.0f32; n_cut * b * d];
+        for i in 0..n_cut {
+            gather_block_into(r.row(i), &kb, &mut kcut[i * b * d..(i + 1) * b * d]);
+            gather_block_into(r.row(i), &vb, &mut vcut[i * b * d..(i + 1) * b * d]);
+        }
+        let kcutv = MatView::contiguous(&kcut, n_cut * b, d);
+        let vcutv = MatView::contiguous(&vcut, n_cut * b, d);
+
+        // all row operations (logits, softmax, combine) are row-local, so
+        // query blocks parallelize bit-exactly
+        let tasks: Vec<(usize, &mut [f32])> = out.data.chunks_mut(b * d).enumerate().collect();
+        self.pool.run(
+            tasks,
+            || vec![0.0f32; b * n_cut * b],
+            |scratch, (i, chunk)| {
+                let qi = qb.block(i);
+                let mut lg = MatViewMut::contiguous(scratch, b, n_cut * b);
+                matmul_t_scaled_into(&qi, &kcutv, scale, &mut lg);
+                softmax_rows_inplace(&mut lg);
+                let mut y = MatViewMut::contiguous(chunk, b, d);
+                matmul_into(&lg.as_view(), &vcutv, &mut y);
+            },
+        );
+    }
+}
+
+fn check_qkv(q: &Mat, k: &Mat, v: &Mat) {
+    assert_eq!(q.rows, k.rows, "q/k rows");
+    assert_eq!(q.rows, v.rows, "q/v rows");
+    assert_eq!(q.cols, k.cols, "q/k cols");
+    assert_eq!(k.cols, v.cols, "k/v cols");
+}
+
+/// One output block of the fused sorted+local attention. Mirrors the loop
+/// body of the reference `sinkhorn_attention` exactly (see module docs for
+/// the bit-exactness contract).
+#[allow(clippy::too_many_arguments)]
+fn block_attention(
+    ws: &mut Workspace,
+    i: usize,
+    out_chunk: &mut [f32],
+    qb: &BlockedView,
+    kb: &BlockedView,
+    vb: &BlockedView,
+    r: &Mat,
+    causal: bool,
+    scale: f32,
+) {
+    let (b, d) = (qb.b, qb.d);
+    let rrow = r.row(i);
+    let row_support: f32 = rrow.iter().sum();
+    let valid = row_support > 1e-6;
+
+    // 1. fused gather of this block's sorted keys/values
+    gather_block_into(rrow, kb, &mut ws.ks);
+    gather_block_into(rrow, vb, &mut ws.vs);
+
+    let qi = qb.block(i);
+    // 2. sorted-term logits into the left (b, b) band of the (b, 2b) tile
+    {
+        let mut ls = MatViewMut::new(&mut ws.logits, b, b, 2 * b);
+        if valid {
+            let ksv = MatView::contiguous(&ws.ks, b, d);
+            matmul_t_scaled_into(&qi, &ksv, scale, &mut ls);
+        } else {
+            // no sort support for this block: mask the whole sorted term
+            ls.fill(NEG_INF);
+        }
+    }
+    // 3. local-term logits into the right band, causally masked if asked
+    {
+        let mut ll = MatViewMut::new(&mut ws.logits[b..], b, b, 2 * b);
+        matmul_t_scaled_into(&qi, &kb.block(i), scale, &mut ll);
+        if causal {
+            for t in 0..b {
+                for u in (t + 1)..b {
+                    ll.set(t, u, NEG_INF);
+                }
+            }
+        }
+    }
+    // 4. joint softmax over [sorted | local]
+    {
+        let mut lg = MatViewMut::contiguous(&mut ws.logits, b, 2 * b);
+        softmax_rows_inplace(&mut lg);
+    }
+    // 5. combine: y = P_s @ V_sorted + P_l @ V_local, written in place
+    let mut y = MatViewMut::contiguous(out_chunk, b, d);
+    {
+        let ps = MatView::new(&ws.logits, b, b, 2 * b);
+        let vsv = MatView::contiguous(&ws.vs, b, d);
+        matmul_into(&ps, &vsv, &mut y);
+    }
+    {
+        let pl = MatView::new(&ws.logits[b..], b, b, 2 * b);
+        let mut t = MatViewMut::contiguous(&mut ws.tmp, b, d);
+        matmul_into(&pl, &vb.block(i), &mut t);
+        add_assign(&mut y, &t.as_view());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The heavy bit-exactness property suites (fused == naive, parallel
+    // == fused for any thread count, sortcut == naive, sortcut k = nb)
+    // live in tests/engine_props.rs — only edge cases are covered here.
+    use super::*;
+    use crate::sinkhorn::balance::sinkhorn;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| rng.normal() as f32 * 0.5)
+    }
+
+    #[test]
+    fn attention_into_reuses_dirty_buffer() {
+        let mut rng = Rng::new(0xE5);
+        let (nb, b, d) = (3, 4, 6);
+        let ell = nb * b;
+        let q = rand_mat(&mut rng, ell, d);
+        let k = rand_mat(&mut rng, ell, d);
+        let v = rand_mat(&mut rng, ell, d);
+        let r = sinkhorn(&rand_mat(&mut rng, nb, nb), 8);
+        let eng = SinkhornEngine::serial();
+        let want = eng.attention(&q, &k, &v, &r, nb, false);
+        let mut out = Mat::from_fn(ell, d, |_, _| f32::NAN); // dirty
+        eng.attention_into(&q, &k, &v, &r, nb, false, &mut out);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "nb must divide ell")]
+    fn rejects_indivisible_block_count() {
+        let q = Mat::zeros(10, 4);
+        SinkhornEngine::serial().attention(&q, &q, &q, &Mat::zeros(3, 3), 3, false);
+    }
+
+    #[test]
+    #[should_panic(expected = "n_cut must be in 1..=nb")]
+    fn rejects_zero_cut() {
+        let q = Mat::zeros(8, 4);
+        SinkhornEngine::serial().sortcut_attention(&q, &q, &q, &Mat::eye(4), 4, 0);
+    }
+}

@@ -1,6 +1,18 @@
 //! Small dense row-major f32 matrices for the pure-Rust reference
 //! implementation of Sparse Sinkhorn Attention (no BLAS offline; sizes
-//! here are tiny — nb x nb sort matrices and b x d tiles).
+//! here are tiny — nb x nb sort matrices and b x d tiles), plus the
+//! zero-copy strided views ([`MatView`]/[`MatViewMut`]) and write-into
+//! kernels that back the allocation-free blocked engine
+//! (`sinkhorn::engine`, DESIGN.md §Engine). The views follow the same
+//! row-major shape+stride conventions as `runtime::tensor::HostTensor`
+//! (which bridges into them via `HostTensor::mat_view`).
+//!
+//! **Bit-exactness contract:** every `*_into` kernel performs the same
+//! floating-point operations in the same order as the corresponding
+//! owning `Mat` method (`matmul`, `matmul_t` + `scale`, `softmax_rows`),
+//! so the fused engine reproduces the naive reference path bit for bit.
+//! The property tests in `sinkhorn::engine` pin this down; keep the loop
+//! orders in sync when editing either side.
 
 /// Dense row-major matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -127,6 +139,192 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     }
 }
 
+// --- zero-copy strided views ------------------------------------------------
+
+/// Immutable view of a row-major `(rows, cols)` region inside a shared
+/// buffer; `row_stride >= cols` lets a view select a column band (e.g. the
+/// sorted half of a `(b, 2b)` logits tile).
+#[derive(Debug, Clone, Copy)]
+pub struct MatView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_stride: usize,
+    data: &'a [f32],
+}
+
+impl<'a> MatView<'a> {
+    pub fn new(data: &'a [f32], rows: usize, cols: usize, row_stride: usize) -> Self {
+        assert!(cols <= row_stride, "cols {cols} > row_stride {row_stride}");
+        assert!(
+            rows == 0 || (rows - 1) * row_stride + cols <= data.len(),
+            "view {rows}x{cols} (stride {row_stride}) exceeds buffer of {}",
+            data.len()
+        );
+        MatView { rows, cols, row_stride, data }
+    }
+
+    /// Contiguous view over a whole buffer.
+    pub fn contiguous(data: &'a [f32], rows: usize, cols: usize) -> Self {
+        Self::new(data, rows, cols, cols)
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.row_stride + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.row_stride..i * self.row_stride + self.cols]
+    }
+
+    /// Materialize into an owning `Mat` (test/debug helper).
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |i, j| self.at(i, j))
+    }
+}
+
+/// Mutable strided view (same layout rules as [`MatView`]).
+#[derive(Debug)]
+pub struct MatViewMut<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_stride: usize,
+    data: &'a mut [f32],
+}
+
+impl<'a> MatViewMut<'a> {
+    pub fn new(data: &'a mut [f32], rows: usize, cols: usize, row_stride: usize) -> Self {
+        assert!(cols <= row_stride, "cols {cols} > row_stride {row_stride}");
+        assert!(
+            rows == 0 || (rows - 1) * row_stride + cols <= data.len(),
+            "view {rows}x{cols} (stride {row_stride}) exceeds buffer of {}",
+            data.len()
+        );
+        MatViewMut { rows, cols, row_stride, data }
+    }
+
+    pub fn contiguous(data: &'a mut [f32], rows: usize, cols: usize) -> Self {
+        Self::new(data, rows, cols, cols)
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.row_stride + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, x: f32) {
+        self.data[i * self.row_stride + j] = x;
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.row_stride..i * self.row_stride + self.cols]
+    }
+
+    /// Reborrow as an immutable view.
+    pub fn as_view(&self) -> MatView<'_> {
+        MatView { rows: self.rows, cols: self.cols, row_stride: self.row_stride, data: &*self.data }
+    }
+
+    pub fn fill(&mut self, x: f32) {
+        for i in 0..self.rows {
+            self.row_mut(i).fill(x);
+        }
+    }
+}
+
+impl Mat {
+    pub fn view(&self) -> MatView<'_> {
+        MatView::contiguous(&self.data, self.rows, self.cols)
+    }
+
+    pub fn view_mut(&mut self) -> MatViewMut<'_> {
+        MatViewMut::contiguous(&mut self.data, self.rows, self.cols)
+    }
+
+    /// Zero-copy view of a contiguous row range `[r0, r0 + rows)`.
+    pub fn row_block(&self, r0: usize, rows: usize) -> MatView<'_> {
+        assert!(r0 + rows <= self.rows, "row block {r0}+{rows} > {}", self.rows);
+        MatView::contiguous(&self.data[r0 * self.cols..(r0 + rows) * self.cols], rows, self.cols)
+    }
+}
+
+// --- write-into kernels (bit-exact mirrors of the Mat methods) --------------
+
+/// `out = (a @ b^T) * scale`, written into a preallocated view.
+///
+/// Mirrors `a.matmul_t(b)` followed by `scale()`: identical accumulation
+/// order (`k` innermost), scaling applied to the finished dot product —
+/// multiplying after the sum equals scaling the stored value, so results
+/// are bit-identical to the two-pass reference.
+pub fn matmul_t_scaled_into(a: &MatView, b: &MatView, scale: f32, out: &mut MatViewMut) {
+    assert_eq!(a.cols, b.cols, "matmul_t dims");
+    assert_eq!((out.rows, out.cols), (a.rows, b.rows), "out dims");
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        for j in 0..b.rows {
+            let br = b.row(j);
+            let mut acc = 0.0f32;
+            for k in 0..a.cols {
+                acc += ar[k] * br[k];
+            }
+            out.set(i, j, acc * scale);
+        }
+    }
+}
+
+/// `out = probs @ v` (zero-initializing `out` first), same `i-k-j` loop
+/// order and zero-weight skip as `Mat::matmul` — bit-identical results.
+pub fn matmul_into(probs: &MatView, v: &MatView, out: &mut MatViewMut) {
+    assert_eq!(probs.cols, v.rows, "matmul dims");
+    assert_eq!((out.rows, out.cols), (probs.rows, v.cols), "out dims");
+    out.fill(0.0);
+    for i in 0..probs.rows {
+        for k in 0..probs.cols {
+            let a = probs.at(i, k);
+            if a == 0.0 {
+                continue;
+            }
+            let vr = v.row(k);
+            let or = out.row_mut(i);
+            for j in 0..v.cols {
+                or[j] += a * vr[j];
+            }
+        }
+    }
+}
+
+/// `out += t` elementwise (the reference path's `Mat::add`).
+pub fn add_assign(out: &mut MatViewMut, t: &MatView) {
+    assert_eq!((out.rows, out.cols), (t.rows, t.cols), "add dims");
+    for i in 0..out.rows {
+        let tr = t.row(i);
+        let or = out.row_mut(i);
+        for (o, x) in or.iter_mut().zip(tr) {
+            *o += x;
+        }
+    }
+}
+
+/// Row-wise softmax in place over the view's full width — the same
+/// max-shift/exp/normalize sequence as `Mat::softmax_rows`.
+pub fn softmax_rows_inplace(x: &mut MatViewMut) {
+    for i in 0..x.rows {
+        let r = x.row_mut(i);
+        let m = r.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in r.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in r.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +358,79 @@ mod tests {
         for i in 0..4 {
             let s: f32 = a.row(i).iter().sum();
             assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    fn demo(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        Mat::from_fn(rows, cols, |_, _| rng.normal() as f32)
+    }
+
+    #[test]
+    fn views_select_blocks_and_bands() {
+        let m = demo(6, 4, 1);
+        // contiguous row block
+        let blk = m.row_block(2, 2);
+        assert_eq!(blk.to_mat(), Mat::from_fn(2, 4, |i, j| m[(i + 2, j)]));
+        // strided column band: right half of each row
+        let band = MatView::new(&m.data[2..], 6, 2, 4);
+        assert_eq!(band.to_mat(), Mat::from_fn(6, 2, |i, j| m[(i, j + 2)]));
+        assert_eq!(m.view().to_mat(), m);
+    }
+
+    #[test]
+    fn matmul_t_scaled_into_is_bit_exact() {
+        let a = demo(3, 5, 2);
+        let b = demo(4, 5, 3);
+        let mut want = a.matmul_t(&b);
+        want.scale(0.25);
+        let mut out = Mat::zeros(3, 4);
+        matmul_t_scaled_into(&a.view(), &b.view(), 0.25, &mut out.view_mut());
+        assert_eq!(out, want); // bitwise: same op order by construction
+    }
+
+    #[test]
+    fn matmul_into_is_bit_exact() {
+        let a = demo(3, 4, 4);
+        let b = demo(4, 6, 5);
+        let want = a.matmul(&b);
+        let mut out = Mat::from_fn(3, 6, |_, _| 9.9); // pre-dirty: must be zeroed
+        matmul_into(&a.view(), &b.view(), &mut out.view_mut());
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn softmax_inplace_matches_mat() {
+        let mut a = demo(4, 7, 6);
+        let mut b = a.clone();
+        a.softmax_rows();
+        softmax_rows_inplace(&mut b.view_mut());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn add_assign_matches_add() {
+        let mut a = demo(3, 3, 7);
+        let t = demo(3, 3, 8);
+        let mut want = a.clone();
+        want.add(&t);
+        add_assign(&mut a.view_mut(), &t.view());
+        assert_eq!(a, want);
+    }
+
+    #[test]
+    fn strided_write_only_touches_band() {
+        // write a (2,2) product into the left band of a (2,5)-strided buffer
+        let a = Mat::eye(2);
+        let b = demo(2, 3, 9);
+        let mut buf = vec![7.0f32; 2 * 5];
+        {
+            let mut out = MatViewMut::new(&mut buf, 2, 3, 5);
+            matmul_into(&a.view(), &b.view(), &mut out);
+        }
+        for i in 0..2 {
+            assert_eq!(&buf[i * 5..i * 5 + 3], b.row(i));
+            assert_eq!(&buf[i * 5 + 3..i * 5 + 5], &[7.0, 7.0]); // untouched
         }
     }
 }

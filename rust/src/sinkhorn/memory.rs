@@ -90,6 +90,16 @@ pub fn kernel_vmem_bytes(b: usize, d: usize) -> usize {
     (5 * b * d + 2 * b * b) * 4
 }
 
+/// Working-set bytes of one `engine::Workspace` — the per-worker scratch
+/// of the pure-Rust blocked engine (DESIGN.md §Perf): two gathered (b, d)
+/// tiles, the (b, 2b) joint-logits tile and the (b, d) combine scratch.
+/// Two (b, d) tiles smaller than [`kernel_vmem_bytes`]: the engine reads
+/// q and the local K/V blocks through zero-copy views instead of staging
+/// them (3 staged tiles + 1 scratch vs the kernel's 5 staged tiles).
+pub fn engine_workspace_bytes(b: usize, d: usize) -> usize {
+    (3 * b * d + 2 * b * b) * 4
+}
+
 /// MXU utilization proxy: fraction of the kernel's MACs that land in
 /// >=8x8x8-shaped matmuls (all of them, for b,d >= 8 — the point is the
 /// tiles are MXU-shaped by construction).
@@ -153,5 +163,13 @@ mod tests {
     fn mxu_fraction_full_for_mxu_shaped_tiles() {
         assert_eq!(mxu_mac_fraction(64, 64), 1.0);
         assert!(mxu_mac_fraction(4, 64) < 1.0);
+    }
+
+    #[test]
+    fn engine_workspace_smaller_than_kernel_vmem() {
+        // the engine stages two (b, d) tiles fewer than the L1 kernel program
+        for (b, d) in [(64, 64), (256, 64), (16, 32)] {
+            assert_eq!(kernel_vmem_bytes(b, d) - engine_workspace_bytes(b, d), 2 * b * d * 4);
+        }
     }
 }

@@ -2,14 +2,21 @@
 //!
 //! This is *not* on the training hot path (that's the AOT-compiled XLA
 //! graphs); it exists to (1) property-test the algorithm's invariants from
-//! the coordinator side, (2) cross-check artifact numerics end-to-end, and
-//! (3) back the §4 memory-complexity analysis with an executable model.
+//! the coordinator side, (2) cross-check artifact numerics end-to-end,
+//! (3) back the §4 memory-complexity analysis with an executable model,
+//! and — since the [`engine`] rework — (4) serve inference on machines
+//! with no compiled HLO artifacts at all, through the parallel blocked
+//! execution engine (DESIGN.md §Engine) that `server::fallback` runs on.
 
 pub mod attention;
 pub mod balance;
+pub mod engine;
 pub mod matrix;
 pub mod memory;
+pub mod pool;
 
 pub use attention::{dense_attention, local_attention, sinkhorn_attention, sortcut_attention};
 pub use balance::{causal_sinkhorn, ds_residual, sinkhorn};
-pub use matrix::Mat;
+pub use engine::{BlockedView, SinkhornEngine};
+pub use matrix::{Mat, MatView, MatViewMut};
+pub use pool::WorkerPool;

@@ -1,0 +1,142 @@
+//! Small std-thread worker pool for the blocked engine (DESIGN.md
+//! §Engine). Blocks of the sorted/local attention computation are
+//! embarrassingly parallel, so the pool does static round-robin
+//! partitioning — no work stealing, no locks, no `Send` output channels —
+//! and joins via `std::thread::scope`, which lets tasks borrow the
+//! caller's buffers (the disjoint `chunks_mut` of the output matrix).
+//!
+//! Determinism: partitioning is by task index only, every task writes only
+//! its own output chunk, and each worker's scratch state (the engine's
+//! `Workspace`) is private — so results are identical for any thread
+//! count, bit for bit.
+
+/// Number of worker threads to use when the caller asks for "auto":
+/// `$SINKHORN_THREADS` if set (>= 1), else the machine's available
+/// parallelism.
+pub fn auto_threads() -> usize {
+    if let Ok(v) = std::env::var("SINKHORN_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A fixed-width worker pool. Cheap to construct; threads are scoped to
+/// each [`WorkerPool::run`] call — scoping keeps borrowed task data safe
+/// without `Arc`, at the cost of a spawn (tens of microseconds per
+/// worker) on every call. Use a multi-thread pool only when per-task
+/// work dominates that (bench-scale blocks do; tiny serving-scale blocks
+/// don't — see `server::fallback` for an adaptive caller).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// `threads == 0` selects [`auto_threads`].
+    pub fn new(threads: usize) -> Self {
+        WorkerPool { threads: if threads == 0 { auto_threads() } else { threads } }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `work` over `tasks`, partitioned round-robin across the pool.
+    ///
+    /// `init` builds one private scratch state per worker (preallocated
+    /// buffers); `work(&mut state, task)` runs every task of that worker
+    /// in submission order. Single-threaded pools (or single tasks) run
+    /// inline on the caller's thread. Panics in workers propagate.
+    pub fn run<T, S, I, W>(&self, tasks: Vec<T>, init: I, work: W)
+    where
+        T: Send,
+        I: Fn() -> S + Sync,
+        W: Fn(&mut S, T) + Sync,
+    {
+        let n_workers = self.threads.min(tasks.len()).max(1);
+        if n_workers == 1 {
+            let mut state = init();
+            for t in tasks {
+                work(&mut state, t);
+            }
+            return;
+        }
+        let mut buckets: Vec<Vec<T>> = (0..n_workers).map(|_| Vec::new()).collect();
+        for (i, t) in tasks.into_iter().enumerate() {
+            buckets[i % n_workers].push(t);
+        }
+        let (init, work) = (&init, &work);
+        std::thread::scope(|scope| {
+            for bucket in buckets {
+                scope.spawn(move || {
+                    let mut state = init();
+                    for t in bucket {
+                        work(&mut state, t);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_every_task_once() {
+        let mut out = vec![0u32; 100];
+        let chunks: Vec<(usize, &mut [u32])> =
+            out.chunks_mut(1).enumerate().map(|(i, c)| (i, c)).collect();
+        WorkerPool::new(4).run(chunks, || (), |_, (i, c)| c[0] = i as u32 + 1);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let main_id = std::thread::current().id();
+        let on_main = std::sync::Mutex::new(true);
+        let tasks: Vec<usize> = (0..10).collect();
+        WorkerPool { threads: 1 }.run(tasks, || (), |_, _| {
+            if std::thread::current().id() != main_id {
+                *on_main.lock().unwrap() = false;
+            }
+        });
+        assert!(*on_main.lock().unwrap(), "threads=1 must not spawn");
+    }
+
+    #[test]
+    fn init_runs_once_per_worker() {
+        let inits = AtomicUsize::new(0);
+        let tasks: Vec<usize> = (0..64).collect();
+        WorkerPool::new(3).run(
+            tasks,
+            || {
+                inits.fetch_add(1, Ordering::SeqCst);
+            },
+            |_, _| {},
+        );
+        assert_eq!(inits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn more_workers_than_tasks_is_fine() {
+        let done = AtomicUsize::new(0);
+        WorkerPool::new(16).run(vec![1, 2], || (), |_, _| {
+            done.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn auto_threads_at_least_one() {
+        assert!(auto_threads() >= 1);
+    }
+}

@@ -1,0 +1,137 @@
+//! Property tests for the parallel blocked engine against the naive
+//! reference path — these run with no artifacts and no XLA, in every
+//! build. The contract under test (DESIGN.md §Engine):
+//!
+//! 1. fused output == naive output, **bit for bit**, causal and not;
+//! 2. parallel output == fused output for any thread count;
+//! 3. SortCut with k = nb recovers full attention.
+
+use sinkhorn::sinkhorn::{
+    causal_sinkhorn, dense_attention, sinkhorn, sinkhorn_attention, sortcut_attention, Mat,
+    SinkhornEngine,
+};
+use sinkhorn::util::prop::{forall, Gen};
+use sinkhorn::util::rng::Rng;
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.normal() as f32 * 0.5)
+}
+
+struct Case {
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    logits: Mat,
+    nb: usize,
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Case(ell={}, d={}, nb={})", self.q.rows, self.q.cols, self.nb)
+    }
+}
+
+fn gen_case(g: &mut Gen) -> Case {
+    let nb = 2 + g.usize(0, 5);
+    let b = 2 + g.usize(0, 5);
+    let d = 4 + g.usize(0, 8);
+    let ell = nb * b;
+    let mut rng = Rng::new(g.rng.next_u64());
+    Case {
+        q: rand_mat(&mut rng, ell, d),
+        k: rand_mat(&mut rng, ell, d),
+        v: rand_mat(&mut rng, ell, d),
+        logits: rand_mat(&mut rng, nb, nb),
+        nb,
+    }
+}
+
+#[test]
+fn engine_equals_naive_bit_for_bit_across_modes() {
+    forall(32, 0xF00D, gen_case, |c| {
+        for causal in [false, true] {
+            let r = if causal {
+                causal_sinkhorn(&c.logits, 6, true)
+            } else {
+                sinkhorn(&c.logits, 8)
+            };
+            let naive = sinkhorn_attention(&c.q, &c.k, &c.v, &r, c.nb, causal);
+            for threads in [1usize, 2, 5] {
+                let eng = SinkhornEngine::new(threads);
+                let got = eng.attention(&c.q, &c.k, &c.v, &r, c.nb, causal);
+                // bitwise equality — not a tolerance check
+                if got != naive {
+                    return Err(format!(
+                        "threads={threads} causal={causal}: max diff {}",
+                        got.max_abs_diff(&naive)
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_sortcut_equals_naive_bit_for_bit() {
+    forall(24, 0xF00E, gen_case, |c| {
+        let r = sinkhorn(&c.logits, 8);
+        for n_cut in 1..=c.nb {
+            let naive = sortcut_attention(&c.q, &c.k, &c.v, &r, c.nb, n_cut);
+            let got = SinkhornEngine::new(4).sortcut_attention(&c.q, &c.k, &c.v, &r, c.nb, n_cut);
+            if got != naive {
+                return Err(format!("n_cut={n_cut} diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sortcut_with_full_cut_equals_full_attention() {
+    // paper §3.3: k = nb keeps every sorted block, so SortCut degrades to
+    // full (quasi-global) attention. With a hard permutation sort this
+    // equals dense attention over the original sequence (softmax is
+    // permutation-invariant up to fp summation order).
+    forall(
+        24,
+        0xF00F,
+        |g| {
+            let nb = 2 + g.usize(0, 5);
+            let b = 2 + g.usize(0, 5);
+            let d = 4 + g.usize(0, 8);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let mut perm: Vec<usize> = (0..nb).collect();
+            rng.shuffle(&mut perm);
+            (
+                rand_mat(&mut rng, nb * b, d),
+                rand_mat(&mut rng, nb * b, d),
+                rand_mat(&mut rng, nb * b, d),
+                perm,
+                nb,
+            )
+        },
+        |(q, k, v, perm, nb)| {
+            let r = Mat::from_fn(*nb, *nb, |i, j| if perm[i] == j { 1.0 } else { 0.0 });
+            let cut = SinkhornEngine::auto().sortcut_attention(q, k, v, &r, *nb, *nb);
+            let dense = dense_attention(q, k, v, false);
+            let diff = cut.max_abs_diff(&dense);
+            if diff < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("sortcut(k=nb) vs dense diff {diff}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn engine_handles_degenerate_single_block() {
+    // nb = 1: the sorted and local terms both see the whole sequence
+    let mut rng = Rng::new(42);
+    let (q, k, v) = (rand_mat(&mut rng, 6, 4), rand_mat(&mut rng, 6, 4), rand_mat(&mut rng, 6, 4));
+    let r = Mat::eye(1);
+    let naive = sinkhorn_attention(&q, &k, &v, &r, 1, false);
+    let got = SinkhornEngine::auto().attention(&q, &k, &v, &r, 1, false);
+    assert_eq!(naive, got);
+}

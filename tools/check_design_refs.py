@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""Verify that every `DESIGN.md §<anchor>` citation in rust/src/ names a
+section that actually exists in DESIGN.md (the repo's docs used to cite
+seven sections that didn't exist — this check keeps them resolvable).
+
+Usage: python3 tools/check_design_refs.py [--all]
+  --all also scans python/, examples/, rust/tests/ and rust/benches/
+Exit code 0 when every reference resolves, 1 otherwise.
+"""
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+REF_RE = re.compile(r"DESIGN\.md §([A-Za-z0-9_-]+)")
+HEADING_RE = re.compile(r"^#{1,6}\s+.*§([A-Za-z0-9_-]+)", re.MULTILINE)
+
+
+def main() -> int:
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        print("FAIL: DESIGN.md does not exist")
+        return 1
+    anchors = set(HEADING_RE.findall(design.read_text(encoding="utf-8")))
+
+    scan_dirs = [ROOT / "rust" / "src"]
+    if "--all" in sys.argv[1:]:
+        scan_dirs += [
+            ROOT / "python",
+            ROOT / "examples",
+            ROOT / "rust" / "tests",
+            ROOT / "rust" / "benches",
+        ]
+
+    refs = []  # (file, line_no, anchor)
+    for d in scan_dirs:
+        for path in sorted(d.rglob("*")):
+            if path.suffix not in {".rs", ".py", ".md"} or not path.is_file():
+                continue
+            for i, line in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+                for anchor in REF_RE.findall(line):
+                    refs.append((path.relative_to(ROOT), i, anchor))
+
+    if not refs:
+        print("FAIL: found no DESIGN.md § references — scan paths wrong?")
+        return 1
+
+    bad = [(f, i, a) for (f, i, a) in refs if a not in anchors]
+    for f, i, a in bad:
+        print(f"FAIL: {f}:{i} cites DESIGN.md §{a}, but DESIGN.md has no such section")
+    print(
+        f"checked {len(refs)} references to {len(set(a for _, _, a in refs))} anchors "
+        f"({', '.join(sorted(set(a for _, _, a in refs)))}) "
+        f"against {len(anchors)} headings: "
+        + ("FAIL" if bad else "OK")
+    )
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
