@@ -4,7 +4,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test check-docs doc-refs bench-engine serve-fallback artifacts all
+.PHONY: build test check-docs doc-refs fmt-check clippy bench bench-engine serve-fallback artifacts all
 
 all: build
 
@@ -23,7 +23,27 @@ check-docs: doc-refs
 doc-refs:
 	python3 tools/check_design_refs.py --all
 
-## Regenerate the naive/fused/parallel engine table (no artifacts needed).
+## Formatting gate. Loudly skipped when no Rust toolchain is on PATH (the
+## offline build container), like the toolchain half of check-docs.
+fmt-check:
+	@if command -v $(CARGO) >/dev/null 2>&1; then \
+		$(CARGO) fmt --all --manifest-path $(MANIFEST) -- --check; \
+	else \
+		echo "WARNING: fmt-check SKIPPED — no '$(CARGO)' toolchain on PATH"; \
+	fi
+
+## Lint gate, same toolchain guard as fmt-check.
+clippy:
+	@if command -v $(CARGO) >/dev/null 2>&1; then \
+		$(CARGO) clippy --all-targets --manifest-path $(MANIFEST) -- -D warnings; \
+	else \
+		echo "WARNING: clippy SKIPPED — no '$(CARGO)' toolchain on PATH"; \
+	fi
+
+## Regenerate the engine perf numbers: the naive/fused/parallel text table
+## plus machine-readable medians in BENCH_engine.json at the repo root.
+bench: bench-engine
+
 bench-engine:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target engine
 

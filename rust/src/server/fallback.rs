@@ -18,7 +18,7 @@ use anyhow::Result;
 
 use crate::sinkhorn::balance;
 use crate::sinkhorn::matrix::Mat;
-use crate::sinkhorn::{SinkhornEngine, WorkerPool};
+use crate::sinkhorn::{AttentionReq, SinkhornEngine, WorkerPool};
 use crate::util::rng::Rng;
 
 /// Configuration of the fallback classifier.
@@ -58,6 +58,12 @@ impl Default for FallbackConfig {
     }
 }
 
+/// f32-element work below which the engine's per-call thread spawn costs
+/// more than it buys: per request for the single-request engine choice,
+/// per *batch* (total flattened work) for `classify_batch`. One constant
+/// so the two heuristics cannot drift apart.
+const SERIAL_WORK_CUTOFF: usize = 1 << 17;
+
 impl FallbackConfig {
     /// Largest power of two <= 16 dividing `seq_len` (a reasonable block
     /// count when the manifest doesn't pin one).
@@ -75,9 +81,13 @@ impl FallbackConfig {
 pub struct FallbackModel {
     pub cfg: FallbackConfig,
     engine: SinkhornEngine,
-    /// request-level parallelism for batches (per-request work is large
-    /// enough to amortize the pool's spawn cost; per-block work is not)
+    /// request-level parallelism for the batched prep/head phases
     batch_pool: WorkerPool,
+    /// batched attention phase: the whole batch's `(request, head, block)`
+    /// tasks land in one pool pass (`SinkhornEngine::attention_batch_into`),
+    /// so serving traffic saturates the workers even though each single
+    /// request is too small to justify a per-request fan-out
+    batch_engine: SinkhornEngine,
     /// (vocab, d) token embeddings
     embed: Mat,
     /// (seq_len, d) positional table
@@ -107,11 +117,14 @@ impl FallbackModel {
             Mat::from_fn(rows, cols, |_, _| (r.normal() * scale) as f32)
         };
         let wscale = 1.0 / (d as f64).sqrt();
-        // At serving shapes (seq_len ~128) each block's work is
-        // microseconds — below the pool's per-call thread-spawn cost — so
-        // "auto" means serial unless the request is big enough for the
-        // parallel engine to pay off. An explicit threads count wins.
-        let engine = if cfg.threads == 0 && cfg.seq_len * cfg.d_model < (1 << 17) {
+        // At serving shapes (seq_len ~128) one request's blocks are
+        // microseconds of work — below the pool's per-call thread-spawn
+        // cost — so for *single* requests "auto" means serial unless the
+        // request is big enough for the parallel engine to pay off. An
+        // explicit threads count wins. Batches don't use this engine:
+        // `classify_batch` amortizes the spawn over the whole batch's
+        // (request, head, block) tasks via `batch_engine`.
+        let engine = if cfg.threads == 0 && cfg.seq_len * cfg.d_model < SERIAL_WORK_CUTOFF {
             SinkhornEngine::serial()
         } else {
             SinkhornEngine::new(cfg.threads)
@@ -119,6 +132,7 @@ impl FallbackModel {
         Ok(FallbackModel {
             engine,
             batch_pool: WorkerPool::new(cfg.threads),
+            batch_engine: SinkhornEngine::new(cfg.threads),
             embed: init(cfg.vocab, d, 0.1),
             pos: init(cfg.seq_len, d, 0.05),
             wq: init(d, d, wscale),
@@ -132,15 +146,18 @@ impl FallbackModel {
     }
 
     /// Class logits for one request (tokens are wrapped into the vocab and
-    /// padded/truncated to `seq_len`).
+    /// padded/truncated to `seq_len`). Batched traffic goes through
+    /// [`Self::classify_batch`] instead — same math, pooled scheduling.
     pub fn class_logits(&self, tokens: &[i32]) -> Vec<f32> {
-        self.logits_with(tokens, &mut Mat::zeros(self.cfg.seq_len, self.cfg.d_model))
+        let p = self.prep(tokens);
+        let mut ctx = Mat::zeros(self.cfg.seq_len, self.cfg.d_model);
+        self.engine.attention_into(&p.q, &p.k, &p.v, &p.r, self.cfg.nb, false, &mut ctx);
+        self.head(&p.x, &ctx)
     }
 
-    /// [`Self::class_logits`] with a caller-provided attention output
-    /// buffer (serving hot path: one buffer per executor worker, reused
-    /// across requests).
-    fn logits_with(&self, tokens: &[i32], ctx_buf: &mut Mat) -> Vec<f32> {
+    /// Per-request prelude shared by the single and batched paths: embed
+    /// tokens, project q/k/v, and balance the SortNet's sort matrix.
+    fn prep(&self, tokens: &[i32]) -> Prep {
         let (ell, d, nb) = (self.cfg.seq_len, self.cfg.d_model, self.cfg.nb);
         // embed + position
         let mut x = Mat::zeros(ell, d);
@@ -168,9 +185,14 @@ impl FallbackModel {
         }
         blk.scale(1.0 / b as f32);
         let r = balance::sinkhorn(&blk.matmul(&self.sortnet), self.cfg.sinkhorn_iters);
-        // blocked sorted+local attention on the engine, into the reused buffer
-        self.engine.attention_into(&q, &k, &v, &r, nb, false, ctx_buf);
-        let ctx = ctx_buf.matmul(&self.wo);
+        Prep { x, q, k, v, r }
+    }
+
+    /// Output projection, residual mean-pool and classification head over
+    /// a computed attention context.
+    fn head(&self, x: &Mat, attn_ctx: &Mat) -> Vec<f32> {
+        let (ell, d) = (self.cfg.seq_len, self.cfg.d_model);
+        let ctx = attn_ctx.matmul(&self.wo);
         // residual + mean pool
         let mut h = vec![0.0f32; d];
         for t in 0..ell {
@@ -198,20 +220,65 @@ impl FallbackModel {
         argmax(&self.class_logits(tokens))
     }
 
-    /// Labels for a batch of requests (executor entry point). Requests
-    /// are independent, so the batch fans out over the worker pool —
-    /// that's the throughput the dynamic batcher buys — with one reused
-    /// attention buffer per worker.
+    /// Labels for a batch of requests (executor entry point) — three
+    /// phases, each one pool pass over the whole batch:
+    ///
+    /// 1. **prep** (request-parallel): embedding, q/k/v projections,
+    ///    SortNet balance;
+    /// 2. **attention** (batch×block-parallel): the batch is flattened to
+    ///    `(request, head, block)` tasks via
+    ///    [`SinkhornEngine::attention_batch_into`], so even a batch of
+    ///    small requests keeps every worker busy — the previous scheme ran
+    ///    whole requests serially through a per-request engine;
+    /// 3. **head** (request-parallel): output projection, pooling, argmax.
+    ///
+    /// The per-block math is identical to the single-request path, so
+    /// batched and single labels agree exactly.
     pub fn classify_batch(&self, batch: &[Vec<i32>]) -> Vec<i32> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let (ell, d, nb) = (self.cfg.seq_len, self.cfg.d_model, self.cfg.nb);
+        // phase 1 — prep
+        let mut preps: Vec<Option<Prep>> = batch.iter().map(|_| None).collect();
+        {
+            let tasks: Vec<(usize, &mut Option<Prep>)> = preps.iter_mut().enumerate().collect();
+            self.batch_pool.run(tasks, || (), |_, (i, slot)| *slot = Some(self.prep(&batch[i])));
+        }
+        let preps: Vec<Prep> = preps.into_iter().map(|p| p.expect("prep phase ran")).collect();
+        // phase 2 — attention over the flattened task domain
+        let reqs: Vec<AttentionReq> = preps
+            .iter()
+            .map(|p| AttentionReq { q: &p.q, k: &p.k, v: &p.v, r: &p.r, nb, causal: false })
+            .collect();
+        let mut ctxs: Vec<Mat> = batch.iter().map(|_| Mat::zeros(ell, d)).collect();
+        // a batch whose *total* flattened work sits below the thread-spawn
+        // payoff runs serially — same cutoff as the single-request engine
+        // choice, scaled by batch size; an explicit threads count still
+        // wins via batch_engine
+        if self.cfg.threads == 0 && batch.len() * ell * d < SERIAL_WORK_CUTOFF {
+            SinkhornEngine::serial().attention_batch_into(&reqs, &mut ctxs);
+        } else {
+            self.batch_engine.attention_batch_into(&reqs, &mut ctxs);
+        }
+        // phase 3 — heads
         let mut labels = vec![0i32; batch.len()];
         let tasks: Vec<(usize, &mut i32)> = labels.iter_mut().enumerate().collect();
-        self.batch_pool.run(
-            tasks,
-            || Mat::zeros(self.cfg.seq_len, self.cfg.d_model),
-            |buf, (i, slot)| *slot = argmax(&self.logits_with(&batch[i], buf)),
-        );
+        self.batch_pool.run(tasks, || (), |_, (i, slot)| {
+            *slot = argmax(&self.head(&preps[i].x, &ctxs[i]));
+        });
         labels
     }
+}
+
+/// Per-request tensors produced by the prep phase and consumed by the
+/// attention + head phases.
+struct Prep {
+    x: Mat,
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    r: Mat,
 }
 
 fn argmax(logits: &[f32]) -> i32 {

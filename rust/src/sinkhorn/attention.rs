@@ -4,9 +4,11 @@
 //!
 //! This is the *naive reference path*: one materialized `Mat` per
 //! intermediate, single-threaded, written for obviousness. The production
-//! path is [`super::engine::SinkhornEngine`], which computes bit-identical
-//! outputs over zero-copy views with a worker pool; the engine's property
-//! tests compare against this module.
+//! path is [`super::engine::SinkhornEngine`], which streams the joint
+//! softmax over zero-copy views with a worker pool; its tiled kernels
+//! reorder float summation, so the engine is verified to within 1e-5
+//! max-abs of this module — which remains the oracle the engine's
+//! property tests (`tests/engine_props.rs`) compare against.
 
 use super::balance::NEG_INF;
 use super::matrix::Mat;
@@ -51,8 +53,10 @@ impl Blocked {
     /// directly into the output tile — no block clone, no scale pass, no
     /// temporaries. Accumulation order (ascending `j`, multiply then add)
     /// matches the historical clone-scale-add loop, so results are
-    /// bit-identical to it (and to `engine::gather_block_into`, which is
-    /// this loop over zero-copy views).
+    /// bit-identical to it. (`engine::gather_block_into` is the tiled
+    /// production version of this loop — it folds two source blocks per
+    /// pass, which reorders the sum and lands under the engine's epsilon
+    /// contract instead.)
     pub fn sort(&self, r: &Mat) -> Blocked {
         let nb = self.blocks.len();
         assert_eq!((r.rows, r.cols), (nb, nb));
@@ -151,11 +155,37 @@ pub fn dense_attention(q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat {
 }
 
 /// SortCut attention: queries attend to the first `n_cut` sorted blocks.
+///
+/// Only the first `n_cut` sort rows are mixed, straight into one
+/// `(n_cut*b, d)` buffer per K/V — the historical path sorted all `nb`
+/// blocks and then copied the cut twice (`blocks[..n_cut].to_vec()` +
+/// `to_seq()`). Per-row accumulation order matches [`Blocked::sort`], so
+/// results are unchanged.
 pub fn sortcut_attention(q: &Mat, k: &Mat, v: &Mat, r: &Mat, nb: usize, n_cut: usize) -> Mat {
-    let ks = Blocked::from_seq(k, nb).sort(r);
-    let vs = Blocked::from_seq(v, nb).sort(r);
-    let kcut = Blocked { blocks: ks.blocks[..n_cut].to_vec() }.to_seq();
-    let vcut = Blocked { blocks: vs.blocks[..n_cut].to_vec() }.to_seq();
+    assert!((1..=nb).contains(&n_cut), "n_cut must be in 1..=nb, got {n_cut}");
+    assert_eq!((r.rows, r.cols), (nb, nb));
+    let kb = Blocked::from_seq(k, nb);
+    let vb = Blocked::from_seq(v, nb);
+    let b = kb.blocks[0].rows;
+    let d = kb.blocks[0].cols;
+    let mut kcut = Mat::zeros(n_cut * b, d);
+    let mut vcut = Mat::zeros(n_cut * b, d);
+    for i in 0..n_cut {
+        let ko = &mut kcut.data[i * b * d..(i + 1) * b * d];
+        let vo = &mut vcut.data[i * b * d..(i + 1) * b * d];
+        for j in 0..nb {
+            let w = r[(i, j)];
+            if w == 0.0 {
+                continue;
+            }
+            for (o, x) in ko.iter_mut().zip(&kb.blocks[j].data) {
+                *o += w * *x;
+            }
+            for (o, x) in vo.iter_mut().zip(&vb.blocks[j].data) {
+                *o += w * *x;
+            }
+        }
+    }
     dense_attention(q, &kcut, &vcut, false)
 }
 

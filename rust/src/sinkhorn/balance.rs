@@ -6,9 +6,19 @@ use super::matrix::Mat;
 
 pub const NEG_INF: f32 = -1e9;
 
-fn logsumexp(xs: impl Iterator<Item = f32> + Clone) -> f32 {
-    let m = xs.clone().fold(f32::NEG_INFINITY, f32::max).max(NEG_INF);
-    let s: f32 = xs.map(|x| (x - m).exp()).sum();
+/// Slice logsumexp: one max pass + one sum pass, no iterator clone, no
+/// allocation. Same fold order as the historical cloned-iterator version,
+/// so results are unchanged bit for bit.
+fn logsumexp(xs: &[f32]) -> f32 {
+    let mut m = f32::NEG_INFINITY;
+    for &x in xs {
+        m = m.max(x);
+    }
+    let m = m.max(NEG_INF);
+    let mut s = 0.0f32;
+    for &x in xs {
+        s += (x - m).exp();
+    }
     s.ln() + m
 }
 
@@ -22,15 +32,19 @@ pub fn sinkhorn(logits: &Mat, n_iters: usize) -> Mat {
         return x;
     }
     let (n, m) = (x.rows, x.cols);
+    let mut col = vec![0.0f32; n]; // reused column staging for the slice lse
     for _ in 0..n_iters {
         for i in 0..n {
-            let lse = logsumexp(x.row(i).iter().cloned());
+            let lse = logsumexp(x.row(i));
             for v in x.row_mut(i) {
                 *v -= lse;
             }
         }
         for j in 0..m {
-            let lse = logsumexp((0..n).map(|i| x[(i, j)]));
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = x[(i, j)];
+            }
+            let lse = logsumexp(&col);
             for i in 0..n {
                 x[(i, j)] -= lse;
             }
@@ -58,7 +72,7 @@ pub fn causal_sinkhorn(logits: &Mat, n_iters: usize, strict: bool) -> Mat {
     }
     for _ in 0..n_iters {
         for i in 0..n {
-            let lse = logsumexp(x.row(i).iter().cloned()).max(NEG_INF);
+            let lse = logsumexp(x.row(i)).max(NEG_INF);
             for (j, v) in x.row_mut(i).iter_mut().enumerate() {
                 *v = if keep(i, j) { *v - lse } else { NEG_INF };
             }

@@ -1,9 +1,9 @@
 //! Parallel, allocation-free blocked execution engine for Sparse Sinkhorn
-//! Attention (DESIGN.md §Engine).
+//! Attention (DESIGN.md §Engine, §Streaming).
 //!
 //! The naive reference path in [`super::attention`] exists to be obviously
-//! correct: it materializes every block, clones and rescales `(b, d)`
-//! tiles per permutation weight, and runs on one thread. This module is
+//! correct: it materializes every block, the full `(b, 2b)` joint logits
+//! and both probability matrices, and runs on one thread. This module is
 //! the production path over the *same* algorithm:
 //!
 //! * **Zero-copy blocking** — [`BlockedView`] carves `nb` blocks out of a
@@ -13,24 +13,45 @@
 //!   permutation, so block mixing skips zero weights and accumulates
 //!   `w * block` directly into a preallocated workspace tile
 //!   ([`gather_block_into`]): no clone, no scale pass, no temporaries.
-//! * **SortCut** (paper §3.3) — the truncated path gathers only the first
-//!   `n_cut` sorted blocks and attends all queries to them.
-//! * **Worker pool** — output blocks are embarrassingly parallel; they are
-//!   split via `chunks_mut` and fanned out over [`WorkerPool`], one
-//!   private `Workspace` per worker. Inner loops allocate nothing.
+//! * **Streaming joint softmax** (DESIGN.md §Streaming) — the
+//!   `[sorted | local]` key range is consumed in [`STREAM_TILE_W`]-wide
+//!   tiles with a flash-style running max/denominator, accumulating the
+//!   unnormalized context straight into the output tile. The `(b, 2b)`
+//!   logits and split `ps`/`pl` probability matrices are never
+//!   materialized; per-worker scratch is linear in `b`
+//!   (`memory::engine_workspace_bytes`).
+//! * **SortCut** (paper §3.3) — gathers only the first `n_cut` sorted
+//!   blocks and streams every query block over them through the same loop.
+//! * **Worker pool** — work is flattened to `(request, head, block)` tasks
+//!   ([`SinkhornEngine::attention_batch_into`]) and fanned out over
+//!   [`WorkerPool`], one private `Workspace` per worker. Inner loops
+//!   allocate nothing.
 //!
-//! **Bit-exactness:** every kernel mirrors the reference path's
-//! floating-point operation order (see `matrix.rs`), and blocks never
-//! share accumulators, so fused and parallel outputs equal the naive
-//! path's bit for bit — for any thread count. The property tests in
-//! `tests/engine_props.rs` pin this contract (edge cases are covered
-//! below); `bench engine` re-checks it before every timing run.
+//! **Numerics contract:** the streaming softmax and the tiled microkernels
+//! (`matrix.rs`, DESIGN.md §Microkernels) change float summation order, so
+//! engine outputs are *epsilon-equal* — within 1e-5 max-abs on the
+//! property-test shapes — to the naive reference, which remains the
+//! oracle. The engine itself stays deterministic: outputs are identical
+//! bit for bit across thread counts, because every task owns its output
+//! chunk and per-block math never depends on which worker runs it.
+//! `tests/engine_props.rs` pins both halves; `bench engine` re-checks the
+//! epsilon gate before every timing run.
 
-use super::balance::NEG_INF;
-use super::matrix::{
-    add_assign, matmul_into, matmul_t_scaled_into, softmax_rows_inplace, Mat, MatView, MatViewMut,
-};
+use super::matrix::{matmul_acc_into, matmul_t_scaled_into, Mat, MatView, MatViewMut};
 use super::pool::WorkerPool;
+
+/// Streamed key-tile width of the flash-style joint softmax: logits are
+/// computed `(b, STREAM_TILE_W)` at a time, so per-worker scratch carries
+/// no `(b, 2b)` tile (DESIGN.md §Streaming; `memory::engine_workspace_bytes`
+/// does the analytic accounting, [`workspace_f32_elems`] the measured one).
+pub const STREAM_TILE_W: usize = 32;
+
+/// The engine's numerics contract in one number: max-abs divergence
+/// allowed between any engine path and the naive `attention.rs` oracle
+/// (module docs; DESIGN.md §Streaming). Shared by the bench gates
+/// (`bench engine`, `benches/engine.rs`) and the property tests so the
+/// contract can only be changed in one place.
+pub const ENGINE_TOL: f32 = 1e-5;
 
 /// Zero-copy view of an `(ell, d)` matrix as `nb` contiguous `(b, d)`
 /// blocks sharing one buffer.
@@ -64,44 +85,194 @@ impl<'a> BlockedView<'a> {
 }
 
 /// Fused gather-matmul over the near-permutation sort weights: write
-/// `sum_j weights[j] * block_j` into `out`, skipping zero entries. This is
-/// the reference `Blocked::sort` inner loop with the clone-scale-add
-/// temporaries fused away (same accumulation order, bit-identical).
+/// `sum_j weights[j] * block_j` into `out`, skipping zero entries and
+/// folding two source blocks per pass over the output tile (halving the
+/// number of read-modify-write sweeps when the balanced matrix is not yet
+/// a hard permutation).
 pub fn gather_block_into(weights: &[f32], src: &BlockedView, out: &mut [f32]) {
     debug_assert_eq!(weights.len(), src.nb);
     debug_assert_eq!(out.len(), src.b * src.d);
     out.fill(0.0);
+    let mut pending: Option<usize> = None;
     for (j, &w) in weights.iter().enumerate() {
-        if w != 0.0 {
-            for (o, x) in out.iter_mut().zip(src.block_slice(j)) {
-                *o += w * *x;
+        if w == 0.0 {
+            continue;
+        }
+        match pending.take() {
+            None => pending = Some(j),
+            Some(p) => {
+                let (wp, xp, xj) = (weights[p], src.block_slice(p), src.block_slice(j));
+                for ((o, a), b) in out.iter_mut().zip(xp).zip(xj) {
+                    *o += wp * a + w * b;
+                }
+            }
+        }
+    }
+    if let Some(p) = pending {
+        let wp = weights[p];
+        for (o, x) in out.iter_mut().zip(src.block_slice(p)) {
+            *o += wp * x;
+        }
+    }
+}
+
+/// Per-row running state of the streaming softmax — max `m`, denominator
+/// `l`, and the `(b, STREAM_TILE_W)` logit/probability tile. Everything
+/// here is linear in `b`; this is what replaced the `(b, 2b)` joint-logits
+/// buffer.
+struct StreamState {
+    m: Vec<f32>,
+    l: Vec<f32>,
+    stile: Vec<f32>,
+}
+
+impl StreamState {
+    fn new(b: usize) -> Self {
+        StreamState { m: vec![0.0; b], l: vec![0.0; b], stile: vec![0.0; b * STREAM_TILE_W] }
+    }
+
+    /// Prepare for a fresh query block of `b` rows (buffers may be sized
+    /// for a larger block when the batch mixes shapes).
+    fn reset(&mut self, b: usize) {
+        self.m[..b].fill(f32::NEG_INFINITY);
+        self.l[..b].fill(0.0);
+    }
+
+    fn f32_elems(&self) -> usize {
+        self.m.len() + self.l.len() + self.stile.len()
+    }
+}
+
+/// Stream one key/value segment through the flash-style joint softmax for
+/// query block `q`: per [`STREAM_TILE_W`]-wide key tile, compute the
+/// scaled logit tile (one microkernel call), fold it into the per-row
+/// running max `m` and denominator `l` — rescaling whatever `out` has
+/// accumulated so far by `exp(m_old - m_new)` when the max moves —
+/// exponentiate the tile in place, and accumulate the unnormalized
+/// context `exp(s - m) @ V_tile` straight into `out`.
+///
+/// `causal == true` restricts query row `t` to keys `0..=t` (the segment
+/// is position-aligned with the query block, i.e. the local band). Masked
+/// keys are skipped by bounding the row's visible width — no sentinel
+/// logits — which matches the reference's `NEG_INF` masking exactly:
+/// there, `exp(-1e9 - m)` underflows to zero probability.
+///
+/// The caller divides `out` rows by `l` after the last segment.
+fn stream_segment(
+    q: &MatView,
+    kseg: &MatView,
+    vseg: &MatView,
+    scale: f32,
+    causal: bool,
+    st: &mut StreamState,
+    out: &mut MatViewMut,
+) {
+    let b = q.rows;
+    let n_keys = kseg.rows;
+    let mut u0 = 0;
+    while u0 < n_keys {
+        let w = STREAM_TILE_W.min(n_keys - u0);
+        {
+            let ktile = kseg.row_range(u0, w);
+            let mut sv = MatViewMut::contiguous(&mut st.stile[..b * w], b, w);
+            matmul_t_scaled_into(q, &ktile, scale, &mut sv);
+        }
+        for t in 0..b {
+            // width visible to row t (causal: keys u <= t only)
+            let wv = if causal { (t + 1).saturating_sub(u0).min(w) } else { w };
+            let srow = &mut st.stile[t * w..(t + 1) * w];
+            if wv == 0 {
+                // fully masked tile row: contribute nothing to the combine
+                srow.fill(0.0);
+                continue;
+            }
+            let mut tile_max = f32::NEG_INFINITY;
+            for &s in &srow[..wv] {
+                tile_max = tile_max.max(s);
+            }
+            let new_m = st.m[t].max(tile_max); // finite: wv >= 1 real logits
+            let corr = (st.m[t] - new_m).exp(); // 0.0 when m was -inf
+            if corr != 1.0 {
+                st.l[t] *= corr;
+                for o in out.row_mut(t) {
+                    *o *= corr;
+                }
+            }
+            st.m[t] = new_m;
+            let mut psum = 0.0f32;
+            for s in &mut srow[..wv] {
+                *s = (*s - new_m).exp();
+                psum += *s;
+            }
+            st.l[t] += psum;
+            srow[wv..].fill(0.0); // masked tail must not combine
+        }
+        // out += P_tile @ V_tile, unnormalized (P rows already exp'd)
+        let ptile = MatView::contiguous(&st.stile[..b * w], b, w);
+        let vtile = vseg.row_range(u0, w);
+        matmul_acc_into(&ptile, &vtile, out);
+        u0 += w;
+    }
+}
+
+/// Divide each accumulated context row by its softmax denominator. A zero
+/// denominator (only possible when a row saw no keys at all, which the
+/// always-visible local diagonal prevents) leaves the zero row in place.
+fn normalize_rows(y: &mut MatViewMut, l: &[f32]) {
+    for t in 0..y.rows {
+        let lt = l[t];
+        if lt > 0.0 {
+            let inv = 1.0 / lt;
+            for o in y.row_mut(t) {
+                *o *= inv;
             }
         }
     }
 }
 
-/// Per-worker scratch tiles; sized once, reused for every block the worker
-/// processes (the engine's per-block loop is allocation-free).
+/// Per-worker scratch tiles; sized once for the largest block shape in the
+/// batch, reused for every `(request, head, block)` task the worker runs
+/// (the per-task loop is allocation-free).
 struct Workspace {
     /// gathered (sorted) keys, `(b, d)`
     ks: Vec<f32>,
     /// gathered (sorted) values, `(b, d)`
     vs: Vec<f32>,
-    /// joint `[sorted | local]` logits, `(b, 2b)`
-    logits: Vec<f32>,
-    /// local-term combine scratch, `(b, d)`
-    tmp: Vec<f32>,
+    /// streaming-softmax running state, linear in `b`
+    stream: StreamState,
 }
 
 impl Workspace {
     fn new(b: usize, d: usize) -> Self {
-        Workspace {
-            ks: vec![0.0; b * d],
-            vs: vec![0.0; b * d],
-            logits: vec![0.0; 2 * b * b],
-            tmp: vec![0.0; b * d],
-        }
+        Workspace { ks: vec![0.0; b * d], vs: vec![0.0; b * d], stream: StreamState::new(b) }
     }
+
+    fn f32_elems(&self) -> usize {
+        self.ks.len() + self.vs.len() + self.stream.f32_elems()
+    }
+}
+
+/// The f32 elements one worker's scratch actually allocates for block
+/// shape `(b, d)` — the measured side of `memory::engine_workspace_bytes`.
+/// `tests/engine_props.rs` asserts the two agree, i.e. that the engine
+/// really dropped the `(b, 2b)` logits/probability buffers.
+pub fn workspace_f32_elems(b: usize, d: usize) -> usize {
+    Workspace::new(b, d).f32_elems()
+}
+
+/// One attention instance inside a batched engine call — a
+/// `(request, head)` pair in serving terms. Multi-head callers flatten
+/// heads into one `AttentionReq` each; the engine flattens further into
+/// `(request, head, block)` tasks before touching the pool.
+#[derive(Debug, Clone, Copy)]
+pub struct AttentionReq<'a> {
+    pub q: &'a Mat,
+    pub k: &'a Mat,
+    pub v: &'a Mat,
+    /// balanced `(nb, nb)` sort matrix
+    pub r: &'a Mat,
+    pub nb: usize,
+    pub causal: bool,
 }
 
 /// The parallel blocked engine. Construction is free; `threads == 0`
@@ -116,7 +287,7 @@ impl SinkhornEngine {
         SinkhornEngine { pool: WorkerPool::new(threads) }
     }
 
-    /// Single-threaded fused engine (the "fused" row of `bench engine`).
+    /// Single-threaded streaming engine (the "fused" row of `bench engine`).
     pub fn serial() -> Self {
         Self::new(1)
     }
@@ -132,7 +303,8 @@ impl SinkhornEngine {
 
     /// Sparse Sinkhorn attention over `(ell, d)` q/k/v with balanced sort
     /// matrix `r` — semantics identical to
-    /// [`super::attention::sinkhorn_attention`], output bit-identical.
+    /// [`super::attention::sinkhorn_attention`], output within 1e-5
+    /// max-abs of it (module docs: numerics contract).
     pub fn attention(&self, q: &Mat, k: &Mat, v: &Mat, r: &Mat, nb: usize, causal: bool) -> Mat {
         let mut out = Mat::zeros(q.rows, q.cols);
         self.attention_into(q, k, v, r, nb, causal, &mut out);
@@ -152,27 +324,60 @@ impl SinkhornEngine {
         causal: bool,
         out: &mut Mat,
     ) {
-        check_qkv(q, k, v);
-        assert_eq!((r.rows, r.cols), (nb, nb), "sort matrix must be (nb, nb)");
-        assert_eq!((out.rows, out.cols), (q.rows, q.cols), "output shape");
-        let qb = BlockedView::from_seq(q, nb);
-        let kb = BlockedView::from_seq(k, nb);
-        let vb = BlockedView::from_seq(v, nb);
-        let (b, d) = (qb.b, qb.d);
-        let scale = 1.0 / (d as f32).sqrt();
+        self.attention_batch_into(
+            &[AttentionReq { q, k, v, r, nb, causal }],
+            std::slice::from_mut(out),
+        );
+    }
 
-        let tasks: Vec<(usize, &mut [f32])> = out.data.chunks_mut(b * d).enumerate().collect();
+    /// Batched attention: one [`AttentionReq`] per `(request, head)`,
+    /// outputs written into `outs` (parallel to `reqs`). The work domain
+    /// is flattened to `(request, head, block)` tasks before one
+    /// [`WorkerPool::run`] pass, so a serving batch of many small requests
+    /// saturates every worker instead of running requests serially through
+    /// a per-request fan-out (`server::fallback::classify_batch` feeds its
+    /// whole batch through here).
+    pub fn attention_batch_into(&self, reqs: &[AttentionReq], outs: &mut [Mat]) {
+        assert_eq!(reqs.len(), outs.len(), "one output per request");
+        if reqs.is_empty() {
+            return;
+        }
+        let (mut bmax, mut dmax) = (0, 0);
+        for (rq, out) in reqs.iter().zip(outs.iter()) {
+            check_qkv(rq.q, rq.k, rq.v);
+            assert!(rq.nb > 0, "nb must be positive");
+            assert_eq!(rq.q.rows % rq.nb, 0, "nb must divide ell");
+            assert_eq!((rq.r.rows, rq.r.cols), (rq.nb, rq.nb), "sort matrix must be (nb, nb)");
+            assert_eq!((out.rows, out.cols), (rq.q.rows, rq.q.cols), "output shape");
+            bmax = bmax.max(rq.q.rows / rq.nb);
+            dmax = dmax.max(rq.q.cols);
+        }
+        let mut tasks: Vec<(usize, usize, &mut [f32])> = Vec::new();
+        for (ri, out) in outs.iter_mut().enumerate() {
+            let chunk = (reqs[ri].q.rows / reqs[ri].nb) * reqs[ri].q.cols;
+            for (bi, c) in out.data.chunks_mut(chunk).enumerate() {
+                tasks.push((ri, bi, c));
+            }
+        }
         self.pool.run(
             tasks,
-            || Workspace::new(b, d),
-            |ws, (i, chunk)| block_attention(ws, i, chunk, &qb, &kb, &vb, r, causal, scale),
+            || Workspace::new(bmax, dmax),
+            |ws, (ri, bi, chunk)| {
+                let rq = &reqs[ri];
+                let qb = BlockedView::from_seq(rq.q, rq.nb);
+                let kb = BlockedView::from_seq(rq.k, rq.nb);
+                let vb = BlockedView::from_seq(rq.v, rq.nb);
+                let scale = 1.0 / (qb.d as f32).sqrt();
+                block_attention(ws, bi, chunk, &qb, &kb, &vb, rq.r, rq.causal, scale);
+            },
         );
     }
 
     /// SortCut truncated attention (paper §3.3): every query attends to
     /// the first `n_cut` *sorted* blocks. Semantics identical to
-    /// [`super::attention::sortcut_attention`], output bit-identical, but
-    /// only `n_cut` of the `nb` gather rows are ever computed.
+    /// [`super::attention::sortcut_attention`] within the same 1e-5
+    /// epsilon contract; only `n_cut` of the `nb` gather rows are ever
+    /// computed.
     pub fn sortcut_attention(
         &self,
         q: &Mat,
@@ -218,19 +423,19 @@ impl SinkhornEngine {
         let kcutv = MatView::contiguous(&kcut, n_cut * b, d);
         let vcutv = MatView::contiguous(&vcut, n_cut * b, d);
 
-        // all row operations (logits, softmax, combine) are row-local, so
-        // query blocks parallelize bit-exactly
+        // query blocks stream independently over the shared cut — same
+        // flash loop as the sorted+local path, single segment, no mask
         let tasks: Vec<(usize, &mut [f32])> = out.data.chunks_mut(b * d).enumerate().collect();
         self.pool.run(
             tasks,
-            || vec![0.0f32; b * n_cut * b],
-            |scratch, (i, chunk)| {
+            || StreamState::new(b),
+            |st, (i, chunk)| {
                 let qi = qb.block(i);
-                let mut lg = MatViewMut::contiguous(scratch, b, n_cut * b);
-                matmul_t_scaled_into(&qi, &kcutv, scale, &mut lg);
-                softmax_rows_inplace(&mut lg);
+                chunk.fill(0.0);
+                st.reset(b);
                 let mut y = MatViewMut::contiguous(chunk, b, d);
-                matmul_into(&lg.as_view(), &vcutv, &mut y);
+                stream_segment(&qi, &kcutv, &vcutv, scale, false, st, &mut y);
+                normalize_rows(&mut y, &st.l);
             },
         );
     }
@@ -243,9 +448,10 @@ fn check_qkv(q: &Mat, k: &Mat, v: &Mat) {
     assert_eq!(k.cols, v.cols, "k/v cols");
 }
 
-/// One output block of the fused sorted+local attention. Mirrors the loop
-/// body of the reference `sinkhorn_attention` exactly (see module docs for
-/// the bit-exactness contract).
+/// One `(request, head, block)` task: streaming sorted+local attention for
+/// output block `i` (DESIGN.md §Streaming). `out_chunk` holds the
+/// unnormalized context while streaming and is divided by the final
+/// denominators at the end — it never holds logits.
 #[allow(clippy::too_many_arguments)]
 fn block_attention(
     ws: &mut Workspace,
@@ -263,59 +469,32 @@ fn block_attention(
     let row_support: f32 = rrow.iter().sum();
     let valid = row_support > 1e-6;
 
-    // 1. fused gather of this block's sorted keys/values
-    gather_block_into(rrow, kb, &mut ws.ks);
-    gather_block_into(rrow, vb, &mut ws.vs);
-
+    out_chunk.fill(0.0);
+    ws.stream.reset(b);
     let qi = qb.block(i);
-    // 2. sorted-term logits into the left (b, b) band of the (b, 2b) tile
-    {
-        let mut ls = MatViewMut::new(&mut ws.logits, b, b, 2 * b);
-        if valid {
-            let ksv = MatView::contiguous(&ws.ks, b, d);
-            matmul_t_scaled_into(&qi, &ksv, scale, &mut ls);
-        } else {
-            // no sort support for this block: mask the whole sorted term
-            ls.fill(NEG_INF);
-        }
-    }
-    // 3. local-term logits into the right band, causally masked if asked
-    {
-        let mut ll = MatViewMut::new(&mut ws.logits[b..], b, b, 2 * b);
-        matmul_t_scaled_into(&qi, &kb.block(i), scale, &mut ll);
-        if causal {
-            for t in 0..b {
-                for u in (t + 1)..b {
-                    ll.set(t, u, NEG_INF);
-                }
-            }
-        }
-    }
-    // 4. joint softmax over [sorted | local]
-    {
-        let mut lg = MatViewMut::contiguous(&mut ws.logits, b, 2 * b);
-        softmax_rows_inplace(&mut lg);
-    }
-    // 5. combine: y = P_s @ V_sorted + P_l @ V_local, written in place
     let mut y = MatViewMut::contiguous(out_chunk, b, d);
-    {
-        let ps = MatView::new(&ws.logits, b, b, 2 * b);
-        let vsv = MatView::contiguous(&ws.vs, b, d);
-        matmul_into(&ps, &vsv, &mut y);
+
+    // sorted term: gather this block's sorted K/V, then stream them. A
+    // block with no sort support masks the whole sorted term to NEG_INF in
+    // the reference — exactly zero probability — so here it is skipped.
+    if valid {
+        gather_block_into(rrow, kb, &mut ws.ks[..b * d]);
+        gather_block_into(rrow, vb, &mut ws.vs[..b * d]);
+        let ks = MatView::contiguous(&ws.ks[..b * d], b, d);
+        let vs = MatView::contiguous(&ws.vs[..b * d], b, d);
+        stream_segment(&qi, &ks, &vs, scale, false, &mut ws.stream, &mut y);
     }
-    {
-        let pl = MatView::new(&ws.logits[b..], b, b, 2 * b);
-        let mut t = MatViewMut::contiguous(&mut ws.tmp, b, d);
-        matmul_into(&pl, &vb.block(i), &mut t);
-        add_assign(&mut y, &t.as_view());
-    }
+    // local term, causally bounded per row when asked
+    stream_segment(&qi, &kb.block(i), &vb.block(i), scale, causal, &mut ws.stream, &mut y);
+
+    normalize_rows(&mut y, &ws.stream.l);
 }
 
 #[cfg(test)]
 mod tests {
-    // The heavy bit-exactness property suites (fused == naive, parallel
-    // == fused for any thread count, sortcut == naive, sortcut k = nb)
-    // live in tests/engine_props.rs — only edge cases are covered here.
+    // The heavy property suites (engine within epsilon of naive across
+    // modes/threads/shapes, sortcut cuts, workspace accounting) live in
+    // tests/engine_props.rs — only edge cases are covered here.
     use super::*;
     use crate::sinkhorn::balance::sinkhorn;
     use crate::util::rng::Rng;
@@ -338,6 +517,40 @@ mod tests {
         let mut out = Mat::from_fn(ell, d, |_, _| f32::NAN); // dirty
         eng.attention_into(&q, &k, &v, &r, nb, false, &mut out);
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn batch_mixing_shapes_matches_singles() {
+        // the worker Workspace is sized for the batch max and sliced per
+        // task — mixed (ell, d, nb) requests must reproduce the
+        // one-request path bit for bit
+        let mut rng = Rng::new(0xBA7);
+        let shapes = [(2usize, 3usize, 5usize), (4, 6, 8), (3, 2, 4)];
+        let cases: Vec<(Mat, Mat, Mat, Mat, usize)> = shapes
+            .iter()
+            .map(|&(nb, b, d)| {
+                let ell = nb * b;
+                (
+                    rand_mat(&mut rng, ell, d),
+                    rand_mat(&mut rng, ell, d),
+                    rand_mat(&mut rng, ell, d),
+                    sinkhorn(&rand_mat(&mut rng, nb, nb), 8),
+                    nb,
+                )
+            })
+            .collect();
+        let eng = SinkhornEngine::new(3);
+        let reqs: Vec<AttentionReq> = cases
+            .iter()
+            .map(|(q, k, v, r, nb)| AttentionReq { q, k, v, r, nb: *nb, causal: false })
+            .collect();
+        let mut outs: Vec<Mat> =
+            cases.iter().map(|(q, _, _, _, _)| Mat::zeros(q.rows, q.cols)).collect();
+        eng.attention_batch_into(&reqs, &mut outs);
+        for ((q, k, v, r, nb), got) in cases.iter().zip(&outs) {
+            let want = eng.attention(q, k, v, r, *nb, false);
+            assert_eq!(got, &want);
+        }
     }
 
     #[test]

@@ -1,18 +1,21 @@
 //! Small dense row-major f32 matrices for the pure-Rust reference
 //! implementation of Sparse Sinkhorn Attention (no BLAS offline; sizes
 //! here are tiny — nb x nb sort matrices and b x d tiles), plus the
-//! zero-copy strided views ([`MatView`]/[`MatViewMut`]) and write-into
-//! kernels that back the allocation-free blocked engine
-//! (`sinkhorn::engine`, DESIGN.md §Engine). The views follow the same
-//! row-major shape+stride conventions as `runtime::tensor::HostTensor`
-//! (which bridges into them via `HostTensor::mat_view`).
+//! zero-copy strided views ([`MatView`]/[`MatViewMut`]) and register-tiled
+//! write-into microkernels that back the allocation-free blocked engine
+//! (`sinkhorn::engine`, DESIGN.md §Engine, §Microkernels). The views
+//! follow the same row-major shape+stride conventions as
+//! `runtime::tensor::HostTensor` (which bridges into them via
+//! `HostTensor::mat_view`).
 //!
-//! **Bit-exactness contract:** every `*_into` kernel performs the same
-//! floating-point operations in the same order as the corresponding
-//! owning `Mat` method (`matmul`, `matmul_t` + `scale`, `softmax_rows`),
-//! so the fused engine reproduces the naive reference path bit for bit.
-//! The property tests in `sinkhorn::engine` pin this down; keep the loop
-//! orders in sync when editing either side.
+//! **Numerics contract:** the owning `Mat` methods (`matmul`, `matmul_t`,
+//! `softmax_rows`) are the naive oracle — single accumulator, obvious
+//! order. The `*_into` microkernels split the contraction over
+//! [`LANES`]-wide partial accumulators so LLVM autovectorizes them on
+//! stable Rust, which reorders float summation: their results are
+//! *epsilon-equal* (a few ULPs) to the oracle, not bit-identical. The
+//! engine's property tests (`tests/engine_props.rs`) bound the end-to-end
+//! divergence at 1e-5 max-abs; the tests below bound each kernel.
 
 /// Dense row-major matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -117,12 +120,16 @@ impl Mat {
         }
     }
 
+    /// Largest element-wise |a - b|. NaN anywhere poisons the result to
+    /// NaN (instead of being silently dropped by `f32::max`), so
+    /// tolerance gates like `diff <= TOL` fail on NaN outputs — the
+    /// engine's epsilon gates rely on this.
     pub fn max_abs_diff(&self, other: &Mat) -> f32 {
         self.data
             .iter()
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
-            .fold(0.0, f32::max)
+            .fold(0.0, |acc, d| if d > acc || d.is_nan() { d } else { acc })
     }
 }
 
@@ -176,6 +183,14 @@ impl<'a> MatView<'a> {
     #[inline]
     pub fn row(&self, i: usize) -> &'a [f32] {
         &self.data[i * self.row_stride..i * self.row_stride + self.cols]
+    }
+
+    /// Sub-view of rows `[r0, r0 + n)` — how the streaming engine carves
+    /// key/value tiles out of a segment. Contiguous views only.
+    pub fn row_range(&self, r0: usize, n: usize) -> MatView<'a> {
+        assert_eq!(self.row_stride, self.cols, "row_range needs a contiguous view");
+        assert!(r0 + n <= self.rows, "row range {r0}+{n} > {}", self.rows);
+        MatView::contiguous(&self.data[r0 * self.cols..(r0 + n) * self.cols], n, self.cols)
     }
 
     /// Materialize into an owning `Mat` (test/debug helper).
@@ -251,76 +266,141 @@ impl Mat {
     }
 }
 
-// --- write-into kernels (bit-exact mirrors of the Mat methods) --------------
+// --- register-tiled write-into microkernels (DESIGN.md §Microkernels) -------
+//
+// A plain `acc += a * b` reduction loop is a serial FP dependency chain:
+// LLVM must preserve the summation order and leaves it scalar. The kernels
+// below keep LANES independent partial accumulators (one SIMD register's
+// worth of f32) and unroll rows so each loaded operand is reused from
+// registers; a scalar tail handles shapes not divisible by the tile
+// widths. Stable Rust only — no `std::simd`.
+
+/// Rows of `a` processed per [`matmul_t_scaled_into`] microkernel tile
+/// (each loaded `b` row is reused `MT_TILE_I` times from registers).
+const MT_TILE_I: usize = 4;
+/// Contraction unroll width: 8 f32 lanes = one 256-bit vector register.
+pub const LANES: usize = 8;
+
+/// Fold `LANES` partial accumulators into one sum (fixed lane order).
+#[inline]
+fn hsum(acc: &[f32; LANES]) -> f32 {
+    acc.iter().sum()
+}
+
+/// Dot product with `LANES` independent accumulators + scalar tail.
+#[inline]
+fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f32; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact(LANES);
+    for (xv, yv) in (&mut xc).zip(&mut yc) {
+        for l in 0..LANES {
+            acc[l] += xv[l] * yv[l];
+        }
+    }
+    let mut s = hsum(&acc);
+    for (a, b) in xc.remainder().iter().zip(yc.remainder()) {
+        s += a * b;
+    }
+    s
+}
+
+/// Four simultaneous dot products against one shared `y` row — the
+/// [`matmul_t_scaled_into`] microkernel body. The 4 x `LANES` f32
+/// accumulators stay resident in registers.
+#[inline]
+fn dot4(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], y: &[f32]) -> [f32; 4] {
+    let n = y.len();
+    let mut acc = [[0.0f32; LANES]; 4];
+    let mut k = 0;
+    while k + LANES <= n {
+        let yv = &y[k..k + LANES];
+        let (v0, v1) = (&x0[k..k + LANES], &x1[k..k + LANES]);
+        let (v2, v3) = (&x2[k..k + LANES], &x3[k..k + LANES]);
+        for l in 0..LANES {
+            acc[0][l] += v0[l] * yv[l];
+            acc[1][l] += v1[l] * yv[l];
+            acc[2][l] += v2[l] * yv[l];
+            acc[3][l] += v3[l] * yv[l];
+        }
+        k += LANES;
+    }
+    let mut s = [hsum(&acc[0]), hsum(&acc[1]), hsum(&acc[2]), hsum(&acc[3])];
+    while k < n {
+        s[0] += x0[k] * y[k];
+        s[1] += x1[k] * y[k];
+        s[2] += x2[k] * y[k];
+        s[3] += x3[k] * y[k];
+        k += 1;
+    }
+    s
+}
 
 /// `out = (a @ b^T) * scale`, written into a preallocated view.
 ///
-/// Mirrors `a.matmul_t(b)` followed by `scale()`: identical accumulation
-/// order (`k` innermost), scaling applied to the finished dot product —
-/// multiplying after the sum equals scaling the stored value, so results
-/// are bit-identical to the two-pass reference.
+/// Register-tiled: `MT_TILE_I` (4) rows of `a` against each row of `b`,
+/// the contraction unrolled [`LANES`] wide, with scalar tails for leftover
+/// rows and the non-multiple k remainder — any shape is accepted.
+/// Epsilon-, not bit-equal to `a.matmul_t(b)` + `scale()` (split
+/// accumulators reorder the summation).
 pub fn matmul_t_scaled_into(a: &MatView, b: &MatView, scale: f32, out: &mut MatViewMut) {
     assert_eq!(a.cols, b.cols, "matmul_t dims");
     assert_eq!((out.rows, out.cols), (a.rows, b.rows), "out dims");
-    for i in 0..a.rows {
-        let ar = a.row(i);
+    let mut i = 0;
+    while i + MT_TILE_I <= a.rows {
+        let (x0, x1) = (a.row(i), a.row(i + 1));
+        let (x2, x3) = (a.row(i + 2), a.row(i + 3));
         for j in 0..b.rows {
-            let br = b.row(j);
-            let mut acc = 0.0f32;
-            for k in 0..a.cols {
-                acc += ar[k] * br[k];
+            let s = dot4(x0, x1, x2, x3, b.row(j));
+            for (ti, sv) in s.iter().enumerate() {
+                out.set(i + ti, j, sv * scale);
             }
-            out.set(i, j, acc * scale);
         }
+        i += MT_TILE_I;
+    }
+    while i < a.rows {
+        let xr = a.row(i);
+        for j in 0..b.rows {
+            out.set(i, j, dot(xr, b.row(j)) * scale);
+        }
+        i += 1;
     }
 }
 
-/// `out = probs @ v` (zero-initializing `out` first), same `i-k-j` loop
-/// order and zero-weight skip as `Mat::matmul` — bit-identical results.
-pub fn matmul_into(probs: &MatView, v: &MatView, out: &mut MatViewMut) {
+/// `out += probs @ v` without clearing — the streaming-softmax combine
+/// primitive (`engine::stream_segment`). Tiled 4 wide over the
+/// contraction so each pass over an output row folds in four `v` rows,
+/// keeping the all-zero skip from the naive kernel (sort weights are
+/// near-permutation sparse, and masked streaming probabilities are
+/// exactly zero).
+pub fn matmul_acc_into(probs: &MatView, v: &MatView, out: &mut MatViewMut) {
     assert_eq!(probs.cols, v.rows, "matmul dims");
     assert_eq!((out.rows, out.cols), (probs.rows, v.cols), "out dims");
-    out.fill(0.0);
     for i in 0..probs.rows {
-        for k in 0..probs.cols {
-            let a = probs.at(i, k);
-            if a == 0.0 {
-                continue;
-            }
-            let vr = v.row(k);
-            let or = out.row_mut(i);
-            for j in 0..v.cols {
-                or[j] += a * vr[j];
-            }
-        }
-    }
-}
-
-/// `out += t` elementwise (the reference path's `Mat::add`).
-pub fn add_assign(out: &mut MatViewMut, t: &MatView) {
-    assert_eq!((out.rows, out.cols), (t.rows, t.cols), "add dims");
-    for i in 0..out.rows {
-        let tr = t.row(i);
         let or = out.row_mut(i);
-        for (o, x) in or.iter_mut().zip(tr) {
-            *o += x;
+        let mut k = 0;
+        while k + 4 <= probs.cols {
+            let w = [probs.at(i, k), probs.at(i, k + 1), probs.at(i, k + 2), probs.at(i, k + 3)];
+            if w != [0.0; 4] {
+                let (v0, v1) = (v.row(k), v.row(k + 1));
+                let (v2, v3) = (v.row(k + 2), v.row(k + 3));
+                for ((((o, a), b), c), e) in
+                    or.iter_mut().zip(v0).zip(v1).zip(v2).zip(v3)
+                {
+                    *o += w[0] * a + w[1] * b + w[2] * c + w[3] * e;
+                }
+            }
+            k += 4;
         }
-    }
-}
-
-/// Row-wise softmax in place over the view's full width — the same
-/// max-shift/exp/normalize sequence as `Mat::softmax_rows`.
-pub fn softmax_rows_inplace(x: &mut MatViewMut) {
-    for i in 0..x.rows {
-        let r = x.row_mut(i);
-        let m = r.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0;
-        for v in r.iter_mut() {
-            *v = (*v - m).exp();
-            sum += *v;
-        }
-        for v in r.iter_mut() {
-            *v /= sum;
+        while k < probs.cols {
+            let wk = probs.at(i, k);
+            if wk != 0.0 {
+                for (o, x) in or.iter_mut().zip(v.row(k)) {
+                    *o += wk * x;
+                }
+            }
+            k += 1;
         }
     }
 }
@@ -376,57 +456,85 @@ mod tests {
         let band = MatView::new(&m.data[2..], 6, 2, 4);
         assert_eq!(band.to_mat(), Mat::from_fn(6, 2, |i, j| m[(i, j + 2)]));
         assert_eq!(m.view().to_mat(), m);
+        // contiguous sub-range of a view's rows (streaming key tiles)
+        let rr = m.view().row_range(1, 3);
+        assert_eq!(rr.to_mat(), Mat::from_fn(3, 4, |i, j| m[(i + 1, j)]));
+    }
+
+    /// Kernel tolerance: the microkernels reorder float summation, so a
+    /// few ULPs of divergence from the naive `Mat` oracle are expected —
+    /// bounded by the engine-wide contract constant.
+    const TOL: f32 = crate::sinkhorn::engine::ENGINE_TOL;
+
+    fn assert_close(got: &Mat, want: &Mat, what: &str) {
+        let d = got.max_abs_diff(want);
+        assert!(d <= TOL, "{what}: max abs diff {d}");
     }
 
     #[test]
-    fn matmul_t_scaled_into_is_bit_exact() {
-        let a = demo(3, 5, 2);
-        let b = demo(4, 5, 3);
-        let mut want = a.matmul_t(&b);
-        want.scale(0.25);
-        let mut out = Mat::zeros(3, 4);
-        matmul_t_scaled_into(&a.view(), &b.view(), 0.25, &mut out.view_mut());
-        assert_eq!(out, want); // bitwise: same op order by construction
+    fn matmul_t_scaled_into_matches_reference() {
+        // sweep shapes around the tile widths: row tails (rows % 4 != 0)
+        // and contraction tails (k % LANES != 0), both tiny and multi-tile
+        for (rows, cols, k) in
+            [(3usize, 5usize, 5usize), (4, 4, 8), (7, 9, 13), (8, 3, 16), (1, 1, 1), (12, 6, 23)]
+        {
+            let a = demo(rows, k, 2 + rows as u64);
+            let b = demo(cols, k, 3 + cols as u64);
+            let mut want = a.matmul_t(&b);
+            want.scale(0.25);
+            let mut out = Mat::zeros(rows, cols);
+            matmul_t_scaled_into(&a.view(), &b.view(), 0.25, &mut out.view_mut());
+            assert_close(&out, &want, &format!("matmul_t ({rows},{cols},{k})"));
+        }
     }
 
     #[test]
-    fn matmul_into_is_bit_exact() {
-        let a = demo(3, 4, 4);
-        let b = demo(4, 6, 5);
-        let want = a.matmul(&b);
-        let mut out = Mat::from_fn(3, 6, |_, _| 9.9); // pre-dirty: must be zeroed
-        matmul_into(&a.view(), &b.view(), &mut out.view_mut());
-        assert_eq!(out, want);
+    fn matmul_acc_into_from_zero_matches_reference() {
+        for (rows, k, cols) in [(3usize, 4usize, 6usize), (5, 7, 9), (4, 8, 16), (2, 1, 3)] {
+            let a = demo(rows, k, 4 + rows as u64);
+            let b = demo(k, cols, 5 + cols as u64);
+            let want = a.matmul(&b);
+            let mut out = Mat::zeros(rows, cols);
+            matmul_acc_into(&a.view(), &b.view(), &mut out.view_mut());
+            assert_close(&out, &want, &format!("matmul ({rows},{k},{cols})"));
+        }
     }
 
     #[test]
-    fn softmax_inplace_matches_mat() {
-        let mut a = demo(4, 7, 6);
+    fn matmul_acc_into_accumulates() {
+        let a = demo(5, 6, 11);
+        let b = demo(6, 7, 12);
+        let base = demo(5, 7, 13);
+        let mut want = base.clone();
+        want.add(&a.matmul(&b));
+        let mut out = base.clone();
+        matmul_acc_into(&a.view(), &b.view(), &mut out.view_mut());
+        assert_close(&out, &want, "matmul_acc");
+    }
+
+    #[test]
+    fn max_abs_diff_poisons_on_nan() {
+        let a = demo(2, 3, 20);
         let mut b = a.clone();
-        a.softmax_rows();
-        softmax_rows_inplace(&mut b.view_mut());
-        assert_eq!(a, b);
-    }
-
-    #[test]
-    fn add_assign_matches_add() {
-        let mut a = demo(3, 3, 7);
-        let t = demo(3, 3, 8);
-        let mut want = a.clone();
-        want.add(&t);
-        add_assign(&mut a.view_mut(), &t.view());
-        assert_eq!(a, want);
+        b.data[1] = f32::NAN;
+        let d = a.max_abs_diff(&b);
+        assert!(d.is_nan(), "NaN must not be dropped by the diff gate: {d}");
+        assert!(!(d <= 1e-5), "tolerance gates must fail on NaN");
+        // NaN early in the buffer must survive later larger diffs
+        b.data[5] = 100.0;
+        assert!(a.max_abs_diff(&b).is_nan());
     }
 
     #[test]
     fn strided_write_only_touches_band() {
-        // write a (2,2) product into the left band of a (2,5)-strided buffer
+        // write a (2,3) product into the left band of a (2,5)-strided buffer
         let a = Mat::eye(2);
         let b = demo(2, 3, 9);
         let mut buf = vec![7.0f32; 2 * 5];
         {
             let mut out = MatViewMut::new(&mut buf, 2, 3, 5);
-            matmul_into(&a.view(), &b.view(), &mut out);
+            out.fill(0.0);
+            matmul_acc_into(&a.view(), &b.view(), &mut out);
         }
         for i in 0..2 {
             assert_eq!(&buf[i * 5..i * 5 + 3], b.row(i));

@@ -91,13 +91,18 @@ pub fn kernel_vmem_bytes(b: usize, d: usize) -> usize {
 }
 
 /// Working-set bytes of one `engine::Workspace` — the per-worker scratch
-/// of the pure-Rust blocked engine (DESIGN.md §Perf): two gathered (b, d)
-/// tiles, the (b, 2b) joint-logits tile and the (b, d) combine scratch.
-/// Two (b, d) tiles smaller than [`kernel_vmem_bytes`]: the engine reads
-/// q and the local K/V blocks through zero-copy views instead of staging
-/// them (3 staged tiles + 1 scratch vs the kernel's 5 staged tiles).
+/// of the streaming blocked engine (DESIGN.md §Perf, §Streaming): two
+/// gathered `(b, d)` tiles plus the streaming-softmax state — the
+/// `(b, STREAM_TILE_W)` logit tile and the per-row running max and
+/// denominator. **Linear in `b`**: the pre-streaming engine staged a
+/// `(b, 2b)` joint-logits tile and a `(b, d)` combine scratch
+/// (`(3bd + 2b²)·4` bytes); the flash-style loop reduces scores
+/// `STREAM_TILE_W` keys at a time and accumulates context directly into
+/// the output, so neither buffer exists anymore. The engine's measured
+/// allocation (`engine::workspace_f32_elems`) is asserted equal to this
+/// model in `tests/engine_props.rs`.
 pub fn engine_workspace_bytes(b: usize, d: usize) -> usize {
-    (3 * b * d + 2 * b * b) * 4
+    (2 * b * d + b * super::engine::STREAM_TILE_W + 2 * b) * 4
 }
 
 /// MXU utilization proxy: fraction of the kernel's MACs that land in
@@ -166,10 +171,21 @@ mod tests {
     }
 
     #[test]
-    fn engine_workspace_smaller_than_kernel_vmem() {
-        // the engine stages two (b, d) tiles fewer than the L1 kernel program
+    fn engine_workspace_linear_in_b() {
+        // streaming softmax: no b^2 logits tile left, so doubling the
+        // block size exactly doubles the per-worker scratch
         for (b, d) in [(64, 64), (256, 64), (16, 32)] {
-            assert_eq!(kernel_vmem_bytes(b, d) - engine_workspace_bytes(b, d), 2 * b * d * 4);
+            assert_eq!(engine_workspace_bytes(2 * b, d), 2 * engine_workspace_bytes(b, d));
+        }
+    }
+
+    #[test]
+    fn engine_workspace_beats_materialized_logits() {
+        // the pre-streaming engine staged (3bd + 2b^2) f32s per worker;
+        // the streaming workspace must undercut it at production blocks
+        for (b, d) in [(64, 64), (256, 64), (1024, 64)] {
+            let old = (3 * b * d + 2 * b * b) * 4;
+            assert!(engine_workspace_bytes(b, d) < old, "b={b} d={d}");
         }
     }
 }

@@ -5,8 +5,9 @@
 //! the coordinator side, (2) cross-check artifact numerics end-to-end,
 //! (3) back the §4 memory-complexity analysis with an executable model,
 //! and — since the [`engine`] rework — (4) serve inference on machines
-//! with no compiled HLO artifacts at all, through the parallel blocked
-//! execution engine (DESIGN.md §Engine) that `server::fallback` runs on.
+//! with no compiled HLO artifacts at all, through the streaming blocked
+//! execution engine (DESIGN.md §Engine, §Streaming) that
+//! `server::fallback` runs on.
 
 pub mod attention;
 pub mod balance;
@@ -17,6 +18,6 @@ pub mod pool;
 
 pub use attention::{dense_attention, local_attention, sinkhorn_attention, sortcut_attention};
 pub use balance::{causal_sinkhorn, ds_residual, sinkhorn};
-pub use engine::{BlockedView, SinkhornEngine};
+pub use engine::{AttentionReq, BlockedView, SinkhornEngine};
 pub use matrix::{Mat, MatView, MatViewMut};
 pub use pool::WorkerPool;

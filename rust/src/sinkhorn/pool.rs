@@ -1,14 +1,17 @@
 //! Small std-thread worker pool for the blocked engine (DESIGN.md
-//! §Engine). Blocks of the sorted/local attention computation are
-//! embarrassingly parallel, so the pool does static round-robin
-//! partitioning — no work stealing, no locks, no `Send` output channels —
-//! and joins via `std::thread::scope`, which lets tasks borrow the
-//! caller's buffers (the disjoint `chunks_mut` of the output matrix).
+//! §Engine). The engine flattens its work to `(request, head, block)`
+//! tasks, which are embarrassingly parallel, so the pool does static
+//! round-robin partitioning — no work stealing, no locks, no `Send`
+//! output channels — and joins via `std::thread::scope`, which lets tasks
+//! borrow the caller's buffers (the disjoint `chunks_mut` of the output
+//! matrices).
 //!
 //! Determinism: partitioning is by task index only, every task writes only
 //! its own output chunk, and each worker's scratch state (the engine's
-//! `Workspace`) is private — so results are identical for any thread
-//! count, bit for bit.
+//! `Workspace`) is private and reset per task — so a given engine build
+//! produces identical results for any thread count, bit for bit. (The
+//! engine-vs-naive-reference comparison is a separate, epsilon-level
+//! contract — see `engine`.)
 
 /// Number of worker threads to use when the caller asks for "auto":
 /// `$SINKHORN_THREADS` if set (>= 1), else the machine's available

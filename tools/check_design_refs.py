@@ -12,8 +12,22 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-REF_RE = re.compile(r"DESIGN\.md §([A-Za-z0-9_-]+)")
+# A citation may continue with comma-separated anchors ("DESIGN.md
+# §Engine, §Streaming") — capture the whole run, then pull every anchor
+# out of it, so secondary anchors are verified too.
+REF_RE = re.compile(r"DESIGN\.md ((?:§[A-Za-z0-9_-]+(?:,\s*)?)+)")
+ANCHOR_RE = re.compile(r"§([A-Za-z0-9_-]+)")
 HEADING_RE = re.compile(r"^#{1,6}\s+.*§([A-Za-z0-9_-]+)", re.MULTILINE)
+
+# Anchors the codebase is built around — DESIGN.md must keep these
+# headings even before any citation goes stale (a refactor that drops a
+# section should fail here, not when someone later cites it).
+REQUIRED_ANCHORS = {
+    "1", "2", "4",
+    "Engine", "Perf", "Hardware-Adaptation",
+    # streaming-kernel PR: flash-style softmax + tiled microkernel docs
+    "Streaming", "Microkernels",
+}
 
 
 def main() -> int:
@@ -38,8 +52,9 @@ def main() -> int:
             if path.suffix not in {".rs", ".py", ".md"} or not path.is_file():
                 continue
             for i, line in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
-                for anchor in REF_RE.findall(line):
-                    refs.append((path.relative_to(ROOT), i, anchor))
+                for run in REF_RE.findall(line):
+                    for anchor in ANCHOR_RE.findall(run):
+                        refs.append((path.relative_to(ROOT), i, anchor))
 
     if not refs:
         print("FAIL: found no DESIGN.md § references — scan paths wrong?")
@@ -48,13 +63,17 @@ def main() -> int:
     bad = [(f, i, a) for (f, i, a) in refs if a not in anchors]
     for f, i, a in bad:
         print(f"FAIL: {f}:{i} cites DESIGN.md §{a}, but DESIGN.md has no such section")
+    missing = REQUIRED_ANCHORS - anchors
+    for a in sorted(missing):
+        print(f"FAIL: DESIGN.md lost the required section anchor §{a}")
     print(
         f"checked {len(refs)} references to {len(set(a for _, _, a in refs))} anchors "
         f"({', '.join(sorted(set(a for _, _, a in refs)))}) "
-        f"against {len(anchors)} headings: "
-        + ("FAIL" if bad else "OK")
+        f"against {len(anchors)} headings "
+        f"({len(REQUIRED_ANCHORS)} required): "
+        + ("FAIL" if bad or missing else "OK")
     )
-    return 1 if bad else 0
+    return 1 if bad or missing else 0
 
 
 if __name__ == "__main__":
