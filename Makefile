@@ -4,7 +4,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test check-docs doc-refs fmt-check clippy bench bench-engine serve-fallback artifacts all
+.PHONY: build test check-docs doc-refs fmt-check clippy bench bench-engine bench-decode serve-fallback artifacts all
 
 all: build
 
@@ -40,15 +40,20 @@ clippy:
 		echo "WARNING: clippy SKIPPED — no '$(CARGO)' toolchain on PATH"; \
 	fi
 
-## Regenerate the engine perf numbers: the naive/fused/parallel text table
-## plus machine-readable medians in BENCH_engine.json at the repo root.
-bench: bench-engine
+## Regenerate the perf numbers: the engine naive/fused/parallel table and
+## the decode tokens/sec table, plus machine-readable medians in
+## BENCH_engine.json and BENCH_decode.json at the repo root.
+bench: bench-engine bench-decode
 
 bench-engine:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target engine
 
+bench-decode:
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target decode
+
 ## Serve the pure-Rust fallback engine over TCP (no artifacts needed):
-##   echo "4 8 15 16 23 42" | nc 127.0.0.1 7878
+##   echo "4 8 15 16 23 42" | nc 127.0.0.1 7878     # classify
+##   echo "gen 8 4 8 15 16" | nc 127.0.0.1 7878     # generate 8 tokens
 serve-fallback:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- serve --fallback --port 7878 --wait
 

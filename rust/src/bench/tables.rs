@@ -1,10 +1,12 @@
 //! Per-table bench targets: each regenerates one table/figure of the paper
 //! with paper-vs-measured columns and records it under artifacts/results/.
 //!
-//! Two targets are *runtime-free* — `engine` (pure-Rust blocked engine:
-//! naive vs fused vs parallel) and `memory` (the §4 analytic model) — and
-//! run on any machine; the rest train AOT artifacts and need a PJRT
-//! runtime plus `make artifacts` (DESIGN.md §2).
+//! Three targets are *runtime-free* — `engine` (pure-Rust blocked engine:
+//! naive vs fused vs parallel), `decode` (incremental autoregressive
+//! decoding: full-recompute vs cached vs SortCut, DESIGN.md §Decode) and
+//! `memory` (the §4 analytic model) — and run on any machine; the rest
+//! train AOT artifacts and need a PJRT runtime plus `make artifacts`
+//! (DESIGN.md §2).
 
 use std::collections::HashMap;
 
@@ -12,7 +14,10 @@ use anyhow::{anyhow, Result};
 
 use crate::runtime::{Registry, Runtime};
 use crate::sinkhorn::engine::ENGINE_TOL;
-use crate::sinkhorn::{memory, sinkhorn, sinkhorn_attention, Mat, SinkhornEngine};
+use crate::sinkhorn::{
+    causal_decode_attention, memory, sinkhorn, sinkhorn_attention, DecodeScratch, DecodeState,
+    Mat, SinkhornEngine,
+};
 use crate::util::rng::Rng;
 use crate::util::stats::{percentile, time_iters, Table};
 
@@ -433,6 +438,152 @@ fn write_engine_json(
     Ok(path)
 }
 
+/// One measured decode cell: tokens/sec for one `(ell, path)` pair.
+struct DecodeCell {
+    ell: usize,
+    nb: usize,
+    path: &'static str,
+    toks_per_sec: f64,
+}
+
+/// Decode a whole sequence token by token through the incremental path
+/// (the serving per-request loop: one `DecodeState`, one reused scratch).
+fn decode_run(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    logits: &Mat,
+    b: usize,
+    nb: usize,
+    n_cut: Option<usize>,
+) -> Mat {
+    let mut st = DecodeState::new(b, q.cols, nb, 5, n_cut);
+    let mut scratch = DecodeScratch::new();
+    let mut out = Mat::zeros(q.rows, q.cols);
+    for t in 0..q.rows {
+        st.step_into(q.row(t), k.row(t), v.row(t), logits, &mut scratch, out.row_mut(t));
+    }
+    out
+}
+
+/// `bench decode` — tokens/sec of autoregressive decoding across sequence
+/// lengths (DESIGN.md §Decode): the full-recompute baseline
+/// (`attention::causal_decode_attention`, which rebalances and regathers
+/// the whole prefix for every token — what serving without caches costs)
+/// vs the incremental `DecodeState` path vs incremental + SortCut
+/// truncation. Before timing, the incremental path is asserted within
+/// [`ENGINE_TOL`] of the oracle at the smallest shape, so the table can't
+/// quietly compare different computations. Medians also land
+/// machine-readably in `BENCH_decode.json` at the repo root, next to
+/// `BENCH_engine.json`.
+pub fn decode_table(opts: &BenchOptions) -> Result<String> {
+    let (b, d, cut) = (64usize, 64usize, 2usize);
+    let mut t = Table::new(
+        "decode — autoregressive tokens/sec, b=64 d=64, cut=2 (DESIGN.md §Decode)",
+        &["ell", "nb", "full tok/s", "incr tok/s", "incr+cut tok/s", "incr x", "cut x"],
+    );
+    let mut cells = Vec::new();
+    for &ell in &[512usize, 1024, 4096] {
+        let nb = ell / b;
+        let mut rng = Rng::new(0xDE ^ (ell * 17) as u64);
+        let mk = |rng: &mut Rng| Mat::from_fn(ell, d, |_, _| rng.normal() as f32 * 0.5);
+        let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let logits = Mat::from_fn(nb, nb, |_, _| rng.normal() as f32);
+
+        // correctness gate (cheapest shape): every incremental step within
+        // epsilon of the full-prefix oracle, full-causal and SortCut
+        if ell == 512 {
+            for cutv in [None, Some(cut)] {
+                let oracle = causal_decode_attention(&q, &k, &v, &logits, b, 5, cutv);
+                let got = decode_run(&q, &k, &v, &logits, b, nb, cutv);
+                let diff = got.max_abs_diff(&oracle);
+                anyhow::ensure!(
+                    diff <= ENGINE_TOL,
+                    "incremental decode diverged from the oracle at ell={ell} cut={cutv:?}: \
+                     max-abs {diff}"
+                );
+            }
+        }
+
+        // timing: the full-recompute baseline is O(ell^2), so fewer iters
+        // at the large end (its slowness is the measurement). All three
+        // paths get the same warmup so the ratios don't ride on cold
+        // caches.
+        let iters = if ell >= 4096 { 1 } else { 3 };
+        let mut t_full = time_iters(
+            1,
+            iters,
+            || drop(causal_decode_attention(&q, &k, &v, &logits, b, 5, None)),
+        );
+        let mut t_incr =
+            time_iters(1, iters, || drop(decode_run(&q, &k, &v, &logits, b, nb, None)));
+        let mut t_cut =
+            time_iters(1, iters, || drop(decode_run(&q, &k, &v, &logits, b, nb, Some(cut))));
+        let full = ell as f64 / percentile(&mut t_full, 50.0);
+        let incr = ell as f64 / percentile(&mut t_incr, 50.0);
+        let cutc = ell as f64 / percentile(&mut t_cut, 50.0);
+        t.row(&[
+            ell.to_string(),
+            nb.to_string(),
+            format!("{full:.0}"),
+            format!("{incr:.0}"),
+            format!("{cutc:.0}"),
+            format!("{:.2}x", incr / full),
+            format!("{:.2}x", cutc / full),
+        ]);
+        cells.push(DecodeCell { ell, nb, path: "full_recompute", toks_per_sec: full });
+        cells.push(DecodeCell { ell, nb, path: "incremental", toks_per_sec: incr });
+        cells.push(DecodeCell { ell, nb, path: "incremental_sortcut", toks_per_sec: cutc });
+    }
+    let mut s = t.render();
+    s.push_str(
+        "full = no-cache baseline (attention.rs::causal_decode_attention: per token,\n\
+         rebalance the causal sort matrix over the whole prefix and regather from scratch);\n\
+         incr = incremental DecodeState (cached causal Sinkhorn state, rebalance only at\n\
+         block boundaries, cached sorted K/V, streaming-softmax carry — O(b*d) per step);\n\
+         incr+cut = same with SortCut truncation (cut=2 sorted blocks, append-only cache).\n\
+         Gate: incremental within 1e-5 max-abs of the oracle at every step (ell=512).\n",
+    );
+    save_result(&opts.artifacts, "decode", &s)?;
+    let json_path = write_decode_json(b, d, cut, &cells)?;
+    s.push_str(&format!("machine-readable medians: {}\n", json_path.display()));
+    println!("{s}");
+    Ok(s)
+}
+
+/// Emit the decode bench machine-readably: one row per `(ell, path)` with
+/// the median tokens/sec, written to `BENCH_decode.json` at the repo root
+/// (the decode-side companion of `BENCH_engine.json`).
+fn write_decode_json(
+    b: usize,
+    d: usize,
+    cut: usize,
+    cells: &[DecodeCell],
+) -> Result<std::path::PathBuf> {
+    use crate::util::json::Json;
+    let mut rows = Vec::new();
+    for c in cells {
+        rows.push(Json::Obj(vec![
+            ("ell".into(), Json::from(c.ell)),
+            ("nb".into(), Json::from(c.nb)),
+            ("b".into(), Json::from(b)),
+            ("d".into(), Json::from(d)),
+            ("n_cut".into(), Json::from(if c.path == "incremental_sortcut" { cut } else { 0 })),
+            ("path".into(), Json::from(c.path)),
+            ("threads".into(), Json::from(1usize)),
+            ("tokens_per_sec".into(), Json::from(c.toks_per_sec.round())),
+        ]));
+    }
+    let doc = Json::Obj(vec![
+        ("target".into(), Json::from("decode")),
+        ("unit".into(), Json::from("tokens_per_sec_p50")),
+        ("cells".into(), Json::Arr(rows)),
+    ]);
+    let path = repo_root().join("BENCH_decode.json");
+    std::fs::write(&path, doc.to_string_pretty() + "\n")?;
+    Ok(path)
+}
+
 /// Locate the repo root at runtime: the working directory when it (or an
 /// ancestor, for `cargo run` from `rust/`) contains `rust/Cargo.toml`.
 /// Falls back to the build-time manifest location only when the process
@@ -525,9 +676,9 @@ fn match_variant<'a>(
 }
 
 /// Does a target train AOT artifacts (and therefore need a PJRT runtime
-/// and registry), or is it runtime-free (`engine`, `memory`)?
+/// and registry), or is it runtime-free (`engine`, `decode`, `memory`)?
 pub fn target_needs_runtime(target: &str) -> bool {
-    !matches!(target, "engine" | "memory")
+    !matches!(target, "engine" | "decode" | "memory")
 }
 
 /// Optional runtime + registry bootstrap shared by the CLI and the bench
@@ -546,8 +697,8 @@ pub fn load_backend(artifacts: &std::path::Path, needed: bool) -> (Option<Runtim
 }
 
 /// Dispatch by target name ("table1".."table8", "fig3", "fig4", "memory",
-/// "engine"). `rt`/`reg` may be `None` for runtime-free targets; targets
-/// that train error out cleanly when they are missing.
+/// "engine", "decode"). `rt`/`reg` may be `None` for runtime-free targets;
+/// targets that train error out cleanly when they are missing.
 pub fn run_target(
     rt: Option<&Runtime>,
     reg: Option<&Registry>,
@@ -562,6 +713,7 @@ pub fn run_target(
     if !target_needs_runtime(target) {
         match target {
             "engine" => engine_table(opts)?,
+            "decode" => decode_table(opts)?,
             "memory" => memory_table(opts)?,
             _ => unreachable!(),
         };
@@ -605,5 +757,5 @@ pub fn run_all(rt: Option<&Runtime>, reg: Option<&Registry>, opts: &BenchOptions
 
 pub const ALL_TARGETS: &[&str] = &[
     "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "fig3",
-    "fig4", "memory", "engine",
+    "fig4", "memory", "engine", "decode",
 ];

@@ -4,9 +4,10 @@
 //!   list                         show registered experiments
 //!   train  --exp NAME            train one experiment (AOT graphs, no python)
 //!   eval   --exp NAME --ckpt F   evaluate a checkpoint
-//!   bench  --target tableN|figN|memory|engine|all   regenerate paper tables
+//!   bench  --target tableN|figN|memory|engine|decode|all   regenerate paper tables
 //!   serve  --exp NAME            run the batched inference demo
-//!   serve  --fallback            serve the pure-Rust engine (no artifacts)
+//!   serve  --fallback            serve the pure-Rust engine (no artifacts;
+//!                                classify + gen verbs over TCP — see rust/README.md)
 //!   inspect --exp NAME           dump manifest facts
 
 use std::path::PathBuf;
@@ -59,13 +60,15 @@ USAGE: sinkhorn <subcommand> [flags]
   list                              experiments in the registry
   train  --exp NAME [--steps N] [--seed S] [--ckpt out.ckpt] [--verbose]
   eval   --exp NAME --ckpt F [--eval-batches N]
-  bench  --target table1..table8|fig3|fig4|memory|engine|all
+  bench  --target table1..table8|fig3|fig4|memory|engine|decode|all
          [--scale F] [--steps N] [--fast-decode] [--verbose]
-         (engine + memory run without artifacts/XLA)
+         (engine + decode + memory run without artifacts/XLA)
   serve  --exp NAME | --fallback [--seq-len L] [--nb N] [--threads T]
          [--ckpt F] [--requests N] [--max-batch B] [--max-wait-ms T]
          [--port P] [--wait]
-         (--fallback serves the pure-Rust engine; no artifacts needed)
+         (--fallback serves the pure-Rust engine; no artifacts needed.
+          TCP verbs: '<ids...>' classifies, 'gen <n> <ids...>' decodes —
+          full line protocol in rust/README.md)
   inspect --exp NAME
 
   global: --artifacts DIR (default ./artifacts or $SINKHORN_ARTIFACTS)"

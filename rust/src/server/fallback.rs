@@ -13,12 +13,18 @@
 //! trained (there is no training path without XLA); what it demonstrates
 //! and exercises is the *serving* pipeline and the engine hot path with
 //! production shapes.
+//!
+//! Two serving verbs share the weights: `classify` (batch attention over
+//! the padded sequence, pooled head) and `generate` (token-by-token greedy
+//! decoding on the incremental decode path with a tied-embedding LM head —
+//! DESIGN.md §Decode). Both are exposed through the TCP line protocol
+//! (`super::tcp`, documented in `rust/README.md`).
 
 use anyhow::Result;
 
 use crate::sinkhorn::balance;
 use crate::sinkhorn::matrix::Mat;
-use crate::sinkhorn::{AttentionReq, SinkhornEngine, WorkerPool};
+use crate::sinkhorn::{AttentionReq, DecodeScratch, DecodeState, SinkhornEngine, WorkerPool};
 use crate::util::rng::Rng;
 
 /// Configuration of the fallback classifier.
@@ -220,6 +226,122 @@ impl FallbackModel {
         argmax(&self.class_logits(tokens))
     }
 
+    /// Greedy autoregressive generation on the incremental decode path
+    /// (DESIGN.md §Decode): feed `prompt` through a per-sequence
+    /// [`DecodeState`] token by token, then keep sampling the argmax of
+    /// the tied-embedding LM head (`h_t · Eᵀ` — the same embedding matrix
+    /// that encodes the input, so the model needs no separate output
+    /// projection) until `max_new` tokens exist or the positional table
+    /// runs out. Returns only the newly generated ids.
+    ///
+    /// Capacity rule: the model has `seq_len` positions. The prompt is
+    /// truncated to the first `seq_len - 1` tokens (mirroring `classify`'s
+    /// head-truncation while always leaving room to generate), and the
+    /// number of generated tokens is `min(max_new, seq_len - prompt_len)`.
+    /// An empty prompt decodes from the PAD token 0. Deterministic: same
+    /// prompt, same model seed, same output — batched or not.
+    pub fn generate(&self, prompt: &[i32], max_new: usize) -> Vec<i32> {
+        let mut scratch = DecodeScratch::new();
+        self.generate_one(prompt, max_new, &mut scratch)
+    }
+
+    /// [`Self::generate`] for a batch of `(prompt, max_new)` requests
+    /// (executor entry point): requests fan out over the worker pool, one
+    /// sequence per task, each worker reusing one [`DecodeScratch`]. Per
+    /// sequence the math is identical to the single-request path, so
+    /// batched and single generations agree exactly.
+    pub fn generate_batch(&self, reqs: &[(Vec<i32>, usize)]) -> Vec<Vec<i32>> {
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        let mut outs: Vec<Vec<i32>> = reqs.iter().map(|_| Vec::new()).collect();
+        let tasks: Vec<(usize, &mut Vec<i32>)> = outs.iter_mut().enumerate().collect();
+        self.batch_pool.run(tasks, DecodeScratch::new, |scratch, (i, slot)| {
+            *slot = self.generate_one(&reqs[i].0, reqs[i].1, scratch);
+        });
+        outs
+    }
+
+    /// One sequence's greedy decode loop. Per step: embed the token, the
+    /// engine's incremental step ([`DecodeState::step_into`] — cached
+    /// causal Sinkhorn state, O(b·d)), then the tied LM head when a new
+    /// token is due.
+    ///
+    /// Decode-time SortNet rule (DESIGN.md §Decode): the batch model feeds
+    /// each block's own mean descriptor through the SortNet, but a block's
+    /// descriptor only exists once the block is complete — so here the
+    /// sort-logit row of block `i + 1` is produced from block `i`'s mean
+    /// descriptor the moment block `i` fills. Rows are only ever written
+    /// before the causal balance first reads them, and never rewritten.
+    fn generate_one(&self, prompt: &[i32], max_new: usize, scratch: &mut DecodeScratch) -> Vec<i32> {
+        let (ell_cap, d, nb) = (self.cfg.seq_len, self.cfg.d_model, self.cfg.nb);
+        let b = ell_cap / nb;
+        let seeded = [0i32]; // empty prompt: decode from PAD
+        let prompt: &[i32] = if prompt.is_empty() { &seeded } else { prompt };
+        let keep = prompt.len().min(ell_cap.saturating_sub(1).max(1));
+        let budget = max_new.min(ell_cap - keep);
+        if budget == 0 {
+            return Vec::new();
+        }
+        let mut st = DecodeState::new(b, d, nb, self.cfg.sinkhorn_iters, None);
+        let mut sort_logits = Mat::zeros(nb, nb);
+        let mut desc_acc = vec![0.0f32; d];
+        let mut x = vec![0.0f32; d];
+        let mut ctx = vec![0.0f32; d];
+        let mut h = vec![0.0f32; d];
+        let mut gen: Vec<i32> = Vec::with_capacity(budget);
+        // the final generated token needs no step of its own
+        for t in 0..keep + budget - 1 {
+            let tok = if t < keep { prompt[t] } else { gen[t - keep] };
+            let id = tok.rem_euclid(self.cfg.vocab as i32) as usize;
+            let (er, pr) = (self.embed.row(id), self.pos.row(t));
+            for (c, xo) in x.iter_mut().enumerate() {
+                *xo = er[c] + pr[c];
+            }
+            let q = row_times(&x, &self.wq);
+            let kr = row_times(&x, &self.wk);
+            let vr = row_times(&x, &self.wv);
+            st.step_into(&q, &kr, &vr, &sort_logits, scratch, &mut ctx);
+            for (c, a) in desc_acc.iter_mut().enumerate() {
+                *a += x[c];
+            }
+            if (t + 1) % b == 0 {
+                // block t/b filled: its mean descriptor becomes the next
+                // block's sort-logit row
+                let i = t / b;
+                if i + 1 < nb {
+                    for a in desc_acc.iter_mut() {
+                        *a /= b as f32;
+                    }
+                    let row = row_times(&desc_acc, &self.sortnet);
+                    sort_logits.row_mut(i + 1).copy_from_slice(&row);
+                }
+                desc_acc.fill(0.0);
+            }
+            if t + 1 >= keep {
+                // tied-embedding LM head over h_t = x_t + ctx_t @ wo
+                let proj = row_times(&ctx, &self.wo);
+                for (c, ho) in h.iter_mut().enumerate() {
+                    *ho = x[c] + proj[c];
+                }
+                let (mut best, mut best_v) = (0usize, f32::NEG_INFINITY);
+                for vtok in 0..self.cfg.vocab {
+                    let ev = self.embed.row(vtok);
+                    let mut acc = 0.0f32;
+                    for (c, &hc) in h.iter().enumerate() {
+                        acc += hc * ev[c];
+                    }
+                    if acc > best_v {
+                        best_v = acc;
+                        best = vtok;
+                    }
+                }
+                gen.push(best as i32);
+            }
+        }
+        gen
+    }
+
     /// Labels for a batch of requests (executor entry point) — three
     /// phases, each one pool pass over the whole batch:
     ///
@@ -279,6 +401,24 @@ struct Prep {
     k: Mat,
     v: Mat,
     r: Mat,
+}
+
+/// Row-vector times matrix: `out[j] = Σ_c x[c] * w[c, j]` — the decode
+/// loop's per-token projection (same accumulation order as `Mat::matmul`
+/// on a 1-row left operand, so single and batched paths agree bitwise).
+fn row_times(x: &[f32], w: &Mat) -> Vec<f32> {
+    debug_assert_eq!(x.len(), w.rows);
+    let mut out = vec![0.0f32; w.cols];
+    for (c, &a) in x.iter().enumerate() {
+        if a == 0.0 {
+            continue;
+        }
+        let wr = w.row(c);
+        for (o, &wv) in out.iter_mut().zip(wr) {
+            *o += a * wv;
+        }
+    }
+    out
 }
 
 fn argmax(logits: &[f32]) -> i32 {
@@ -348,6 +488,63 @@ mod tests {
         let batch = m.classify_batch(&reqs);
         for (r, &want) in reqs.iter().zip(&batch) {
             assert_eq!(m.classify(r), want);
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_in_vocab() {
+        let m = model();
+        let prompt: Vec<i32> = (0..10).map(|i| (i * 5) % 64).collect();
+        let a = m.generate(&prompt, 8);
+        let b = m.generate(&prompt, 8);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().all(|&t| (0..m.cfg.vocab as i32).contains(&t)));
+    }
+
+    #[test]
+    fn generate_prefix_stable() {
+        // greedy decoding is incremental: asking for fewer tokens yields a
+        // prefix of asking for more
+        let m = model();
+        let prompt: Vec<i32> = (0..7).map(|i| i * 3 + 1).collect();
+        let long = m.generate(&prompt, 6);
+        for n in 1..6 {
+            assert_eq!(&m.generate(&prompt, n)[..], &long[..n], "n={n}");
+        }
+    }
+
+    #[test]
+    fn generate_respects_capacity() {
+        let m = model(); // seq_len = 32
+        // near-capacity prompt: budget shrinks to the remaining positions
+        let prompt: Vec<i32> = (0..30).map(|i| i % 64).collect();
+        assert_eq!(m.generate(&prompt, 10).len(), 2);
+        // over-capacity prompt: truncated to seq_len - 1, one token left
+        let huge: Vec<i32> = (0..100).map(|i| i % 64).collect();
+        assert_eq!(m.generate(&huge, 10).len(), 1);
+        // zero tokens requested
+        assert!(m.generate(&prompt, 0).is_empty());
+    }
+
+    #[test]
+    fn generate_handles_empty_and_hostile_prompts() {
+        let m = model();
+        assert_eq!(m.generate(&[], 3).len(), 3);
+        let hostile = m.generate(&[i32::MIN, i32::MAX, -1], 4);
+        assert_eq!(hostile.len(), 4);
+        assert!(hostile.iter().all(|&t| (0..m.cfg.vocab as i32).contains(&t)));
+    }
+
+    #[test]
+    fn generate_batch_matches_single() {
+        let m = model();
+        let reqs: Vec<(Vec<i32>, usize)> = (0..5)
+            .map(|s| ((0..8).map(|i| (i * 7 + s) % 64).collect(), 3 + s as usize % 3))
+            .collect();
+        let batch = m.generate_batch(&reqs);
+        for ((prompt, max_new), got) in reqs.iter().zip(&batch) {
+            assert_eq!(&m.generate(prompt, *max_new), got);
         }
     }
 

@@ -1,9 +1,11 @@
 //! Batched inference serving (the L3 "router" role): client threads submit
-//! token sequences; a dynamic batcher groups them; a single executor thread
-//! owning the execution backend classifies whole batches at once. The
-//! backend is either the PJRT runtime over compiled artifacts or, when no
-//! HLO artifact is present, the pure-Rust blocked engine
-//! ([`fallback`] — works on any machine).
+//! requests — classify (token ids → label) or generate (prompt → greedily
+//! decoded ids, DESIGN.md §Decode); a dynamic batcher groups them; a
+//! single executor thread owning the execution backend runs whole batches
+//! at once, split by verb. The backend is either the PJRT runtime over
+//! compiled artifacts (classify only) or, when no HLO artifact is present,
+//! the pure-Rust blocked engine ([`fallback`] — works on any machine,
+//! serves both verbs). TCP line protocol: `rust/README.md`.
 
 pub mod batch;
 pub mod fallback;

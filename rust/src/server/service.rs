@@ -3,15 +3,20 @@
 //! one executor — the vllm-router shape: N frontends -> channel ->
 //! batcher -> executor).
 //!
-//! Two backends serve classification requests (token ids in, predicted
-//! label + timing breakdown out):
+//! Two backends serve inference requests, two verbs each batch can mix:
+//! **classify** (token ids in, predicted label out) and **generate**
+//! (prompt + token budget in, greedily decoded ids out — the incremental
+//! decode path, DESIGN.md §Decode):
 //!
 //! * **Artifacts** — the AOT-compiled XLA eval graph, when the
-//!   experiment's HLO artifacts and a PJRT runtime are available.
+//!   experiment's HLO artifacts and a PJRT runtime are available
+//!   (classify only: the exported graphs have no decode entry, so
+//!   generate requests get a stable per-request error).
 //! * **Pure-Rust fallback** — [`super::fallback::FallbackModel`] on the
 //!   parallel blocked engine, selected automatically when no compiled HLO
 //!   artifact is present (or the build links the offline `xla` stub), so
-//!   the serving stack runs on any machine. See DESIGN.md §Engine.
+//!   the serving stack runs on any machine. Serves both verbs. See
+//!   DESIGN.md §Engine, §Decode.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -26,9 +31,15 @@ use crate::runtime::{Experiment, HostTensor, Runtime, TrainState};
 use super::batch::{gather, BatchPolicy};
 use super::fallback::{FallbackConfig, FallbackModel};
 
+/// What a request asks the executor to do.
+enum Work {
+    Classify(Vec<i32>),
+    Generate { tokens: Vec<i32>, max_new: usize },
+}
+
 /// One inference request.
 struct Request {
-    tokens: Vec<i32>,
+    work: Work,
     enqueued: Instant,
     resp: Sender<Result<Response>>,
 }
@@ -44,7 +55,12 @@ enum Msg {
 /// Server reply.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// classify: the predicted label. generate: the last generated token
+    /// id (0 when the capacity-clamped budget came out empty) — the full
+    /// sequence is in [`Response::gen`].
     pub label: i32,
+    /// `Some(ids)` for generate requests: the newly generated token ids.
+    pub gen: Option<Vec<i32>>,
     /// time spent waiting in the batcher
     pub queue: Duration,
     /// total time from submit to reply
@@ -63,8 +79,18 @@ pub struct ServerHandle {
 impl ServerHandle {
     /// Blocking classify call.
     pub fn classify(&self, tokens: Vec<i32>) -> Result<Response> {
+        self.submit(Work::Classify(tokens))
+    }
+
+    /// Blocking generate call: greedily decode up to `max_new` tokens
+    /// after `tokens` (fallback backend only — see the module docs).
+    pub fn generate(&self, tokens: Vec<i32>, max_new: usize) -> Result<Response> {
+        self.submit(Work::Generate { tokens, max_new })
+    }
+
+    fn submit(&self, work: Work) -> Result<Response> {
         let (rtx, rrx) = channel();
-        let req = Request { tokens, enqueued: Instant::now(), resp: rtx };
+        let req = Request { work, enqueued: Instant::now(), resp: rtx };
         self.tx.send(Msg::Req(req)).map_err(|_| anyhow!("server stopped"))?;
         rrx.recv().map_err(|_| anyhow!("server dropped request"))?
     }
@@ -76,51 +102,100 @@ pub struct Server {
     join: Option<JoinHandle<Result<()>>>,
 }
 
-/// The shared executor: pull batches off the channel under `policy`, hand
-/// the token rows to `classify`, fan the labels back out. Both backends
-/// run this loop; only `classify` differs. Token rows are moved out of
-/// the requests (no per-request copies on this path).
-fn executor_loop(
+/// The shared executor: pull batches off the channel under `policy`, split
+/// each batch by verb, hand classify rows to `classify` and generate
+/// requests to `generate`, fan the results back out. Both backends run
+/// this loop; only the closures differ. `generate: None` (the artifact
+/// backend — its exported graphs have no decode entry) answers every
+/// generate request with a stable per-request error instead of failing the
+/// batch. Token rows are moved out of the requests (no per-request copies
+/// on this path).
+fn executor_loop<C, G>(
     rx: &Receiver<Msg>,
     policy: &BatchPolicy,
-    mut classify: impl FnMut(&[Vec<i32>]) -> Result<Vec<i32>>,
-) -> Result<()> {
+    mut classify: C,
+    mut generate: Option<G>,
+) -> Result<()>
+where
+    C: FnMut(&[Vec<i32>]) -> Result<Vec<i32>>,
+    G: FnMut(&[(Vec<i32>, usize)]) -> Result<Vec<Vec<i32>>>,
+{
     'serve: while let Some(msgs) = gather(rx, policy) {
         let mut stop = false;
-        let mut rows: Vec<Vec<i32>> = Vec::with_capacity(msgs.len());
-        let mut meta: Vec<(Instant, Sender<Result<Response>>)> = Vec::with_capacity(msgs.len());
+        let mut cls_rows: Vec<Vec<i32>> = Vec::new();
+        let mut cls_meta: Vec<(Instant, Sender<Result<Response>>)> = Vec::new();
+        let mut gen_rows: Vec<(Vec<i32>, usize)> = Vec::new();
+        let mut gen_meta: Vec<(Instant, Sender<Result<Response>>)> = Vec::new();
         for m in msgs {
             match m {
-                Msg::Req(r) => {
-                    rows.push(r.tokens);
-                    meta.push((r.enqueued, r.resp));
-                }
+                Msg::Req(r) => match r.work {
+                    Work::Classify(tokens) => {
+                        cls_rows.push(tokens);
+                        cls_meta.push((r.enqueued, r.resp));
+                    }
+                    Work::Generate { tokens, max_new } => {
+                        gen_rows.push((tokens, max_new));
+                        gen_meta.push((r.enqueued, r.resp));
+                    }
+                },
                 Msg::Stop => stop = true,
             }
         }
-        if rows.is_empty() {
+        let n = cls_rows.len() + gen_rows.len();
+        if n == 0 {
             if stop {
                 break 'serve;
             }
             continue;
         }
-        let n = rows.len();
         let exec_start = Instant::now();
-        match classify(&rows) {
-            Ok(labels) => {
-                for (i, (enqueued, resp)) in meta.into_iter().enumerate() {
-                    let _ = resp.send(Ok(Response {
-                        label: labels[i],
-                        queue: exec_start - enqueued,
-                        total: enqueued.elapsed(),
-                        batch_size: n,
-                    }));
+        if !cls_rows.is_empty() {
+            match classify(&cls_rows) {
+                Ok(labels) => {
+                    for (i, (enqueued, resp)) in cls_meta.into_iter().enumerate() {
+                        let _ = resp.send(Ok(Response {
+                            label: labels[i],
+                            gen: None,
+                            queue: exec_start - enqueued,
+                            total: enqueued.elapsed(),
+                            batch_size: n,
+                        }));
+                    }
+                }
+                Err(e) => {
+                    for (_, resp) in cls_meta {
+                        let _ = resp.send(Err(anyhow!("exec failed: {e}")));
+                    }
                 }
             }
-            Err(e) => {
-                for (_, resp) in meta {
-                    let _ = resp.send(Err(anyhow!("exec failed: {e}")));
+        }
+        if !gen_rows.is_empty() {
+            match &mut generate {
+                None => {
+                    for (_, resp) in gen_meta {
+                        let _ = resp.send(Err(anyhow!(
+                            "generate requires the pure-Rust fallback backend"
+                        )));
+                    }
                 }
+                Some(g) => match g(&gen_rows) {
+                    Ok(seqs) => {
+                        for (seq, (enqueued, resp)) in seqs.into_iter().zip(gen_meta) {
+                            let _ = resp.send(Ok(Response {
+                                label: seq.last().copied().unwrap_or(0),
+                                gen: Some(seq),
+                                queue: exec_start - enqueued,
+                                total: enqueued.elapsed(),
+                                batch_size: n,
+                            }));
+                        }
+                    }
+                    Err(e) => {
+                        for (_, resp) in gen_meta {
+                            let _ = resp.send(Err(anyhow!("exec failed: {e}")));
+                        }
+                    }
+                },
             }
         }
         if stop {
@@ -225,22 +300,30 @@ impl Server {
                 }
             };
 
-            executor_loop(&rx, &policy, |rows| {
-                // assemble fixed-shape tensors, padding unused rows
-                let mut toks = Vec::with_capacity(graph_batch * seq_len);
-                for r in rows {
-                    let take = r.len().min(seq_len);
-                    toks.extend_from_slice(&r[..take]);
-                    toks.resize(toks.len() + (seq_len - take), 0);
-                }
-                toks.resize(graph_batch * seq_len, 0);
-                let labels = vec![0i32; graph_batch];
-                let t_tok = HostTensor::i32(&[graph_batch, seq_len], toks);
-                let t_lab = HostTensor::i32(&[graph_batch], labels);
-                let out = exp.eval(&rt, &state.params, &[t_tok.to_literal()?, t_lab.to_literal()?])?;
-                let pred = HostTensor::from_literal(&out[2])?;
-                Ok(pred.as_i32()?[..rows.len()].to_vec())
-            })
+            executor_loop(
+                &rx,
+                &policy,
+                |rows| {
+                    // assemble fixed-shape tensors, padding unused rows
+                    let mut toks = Vec::with_capacity(graph_batch * seq_len);
+                    for r in rows {
+                        let take = r.len().min(seq_len);
+                        toks.extend_from_slice(&r[..take]);
+                        toks.resize(toks.len() + (seq_len - take), 0);
+                    }
+                    toks.resize(graph_batch * seq_len, 0);
+                    let labels = vec![0i32; graph_batch];
+                    let t_tok = HostTensor::i32(&[graph_batch, seq_len], toks);
+                    let t_lab = HostTensor::i32(&[graph_batch], labels);
+                    let out =
+                        exp.eval(&rt, &state.params, &[t_tok.to_literal()?, t_lab.to_literal()?])?;
+                    let pred = HostTensor::from_literal(&out[2])?;
+                    Ok(pred.as_i32()?[..rows.len()].to_vec())
+                },
+                // the exported eval graphs have no incremental decode
+                // entry; generate requests get per-request errors
+                None::<fn(&[(Vec<i32>, usize)]) -> Result<Vec<Vec<i32>>>>,
+            )
         });
 
         match ready_rx.recv() {
@@ -264,7 +347,12 @@ impl Server {
         let seq_len = model.cfg.seq_len;
         let (tx, rx) = channel::<Msg>();
         let join = std::thread::spawn(move || -> Result<()> {
-            executor_loop(&rx, &policy, |rows| Ok(model.classify_batch(rows)))
+            executor_loop(
+                &rx,
+                &policy,
+                |rows| Ok(model.classify_batch(rows)),
+                Some(|reqs: &[(Vec<i32>, usize)]| Ok(model.generate_batch(reqs))),
+            )
         });
         Ok(Server { handle: ServerHandle { tx, seq_len }, join: Some(join) })
     }
@@ -318,6 +406,24 @@ mod tests {
             }
         }
         server2.shutdown().unwrap();
+    }
+
+    /// The generate verb end to end through the batcher: tokens come back,
+    /// match the bare model exactly, and classify still works beside it.
+    #[test]
+    fn fallback_server_generates() {
+        let cfg = FallbackConfig { seq_len: 32, d_model: 16, nb: 4, ..Default::default() };
+        let server = Server::start_fallback(cfg.clone(), BatchPolicy::default()).unwrap();
+        let prompt: Vec<i32> = (0..8).map(|i| i * 3).collect();
+        let r = server.handle.generate(prompt.clone(), 5).unwrap();
+        let toks = r.gen.clone().expect("generate reply carries tokens");
+        assert_eq!(toks.len(), 5);
+        assert_eq!(r.label, *toks.last().unwrap());
+        let model = FallbackModel::new(cfg).unwrap();
+        assert_eq!(model.generate(&prompt, 5), toks);
+        let c = server.handle.classify(prompt).unwrap();
+        assert!(c.label >= 0 && c.gen.is_none());
+        server.shutdown().unwrap();
     }
 
     #[test]

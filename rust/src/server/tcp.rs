@@ -1,19 +1,29 @@
 //! TCP line-protocol frontend for the inference service.
 //!
-//! Protocol (one request per line, UTF-8):
-//!   client: `<id> <id> <id> ...\n`   (space-separated token ids)
-//!   server: `label=<k> batch=<n> queue_us=<q> total_us=<t>\n`
-//!           or `error=<message>\n`
+//! One request per UTF-8 line; the full protocol (every request form and
+//! every reply, with a scripted example) is documented in
+//! `rust/README.md`. Summary:
+//!
+//!   classify:  `<id> <id> <id> ...`            (bare space-separated ids)
+//!   generate:  `gen <max_new> <id> <id> ...`   (prompt ids may be empty)
+//!
+//!   replies:   `label=<k> batch=<n> queue_us=<q> total_us=<t>`
+//!              `tokens=<id>,<id>,... batch=<n> queue_us=<q> total_us=<t>`
+//!              `error=<one stable line>`
+//!
+//! Error replies are deliberately boring: one line, outermost message
+//! only, length-capped ([`error_line`]) — internal context chains and
+//! hostile request bytes never echo back to clients.
 //!
 //! Each accepted connection gets its own thread that forwards requests to
 //! the shared [`ServerHandle`] (the dynamic batcher merges concurrent
-//! streams into executor batches).
+//! streams into executor batches, classify and generate alike).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::thread::JoinHandle;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::service::ServerHandle;
 
@@ -28,16 +38,90 @@ pub struct TcpFrontend {
     _accept_join: JoinHandle<()>,
 }
 
-/// Parse one request line into token ids.
-pub fn parse_request(line: &str) -> Result<Vec<i32>> {
-    line.split_whitespace()
-        .map(|t| t.parse::<i32>().with_context(|| format!("bad token '{t}'")))
-        .collect()
+/// A parsed protocol line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParsedRequest {
+    /// The original bare-ids form: classify the sequence.
+    Classify(Vec<i32>),
+    /// `gen <max_new> <ids...>`: greedily decode up to `max_new` tokens.
+    Generate { max_new: usize, tokens: Vec<i32> },
 }
 
-/// Render a response line.
+/// Longest slice of client input echoed back inside an error message.
+const ECHO_CAP: usize = 24;
+
+/// Clip a client token for inclusion in an error reply: at most
+/// [`ECHO_CAP`] characters, so an overflowing or garbage line cannot
+/// inflate the response.
+fn clip(t: &str) -> String {
+    if t.chars().count() <= ECHO_CAP {
+        t.to_string()
+    } else {
+        let head: String = t.chars().take(ECHO_CAP).collect();
+        format!("{head}...")
+    }
+}
+
+fn parse_id(t: &str) -> Result<i32> {
+    t.parse::<i32>().map_err(|_| anyhow!("bad token '{}'", clip(t)))
+}
+
+/// Parse one request line. Rejections are stable one-line messages:
+/// `empty request`, `bad token '...'` (non-numeric or overflowing ids),
+/// `unknown verb '...'`, `gen needs a token count`, `bad count '...'`.
+pub fn parse_request(line: &str) -> Result<ParsedRequest> {
+    let mut toks = line.split_whitespace();
+    let Some(first) = toks.next() else {
+        bail!("empty request");
+    };
+    if first == "gen" {
+        let n = toks.next().context("gen needs a token count")?;
+        let max_new: usize = n.parse().map_err(|_| anyhow!("bad count '{}'", clip(n)))?;
+        if max_new == 0 {
+            bail!("gen count must be positive");
+        }
+        let tokens = toks.map(parse_id).collect::<Result<Vec<i32>>>()?;
+        return Ok(ParsedRequest::Generate { max_new, tokens });
+    }
+    // bare ids = classify. A leading token that does not even look like a
+    // number is a verb we don't know, not a bad id.
+    if first.parse::<i32>().is_err()
+        && !first.starts_with(|c: char| c.is_ascii_digit() || c == '-' || c == '+')
+    {
+        bail!("unknown verb '{}'", clip(first));
+    }
+    let tokens =
+        std::iter::once(first).chain(toks).map(parse_id).collect::<Result<Vec<i32>>>()?;
+    Ok(ParsedRequest::Classify(tokens))
+}
+
+/// Render a classify response line.
 pub fn format_response(label: i32, batch: usize, queue_us: u128, total_us: u128) -> String {
     format!("label={label} batch={batch} queue_us={queue_us} total_us={total_us}\n")
+}
+
+/// Render a generate response line (`tokens=` stays empty when the
+/// capacity-clamped budget produced nothing).
+pub fn format_gen_response(
+    tokens: &[i32],
+    batch: usize,
+    queue_us: u128,
+    total_us: u128,
+) -> String {
+    let ids =
+        tokens.iter().map(|t| t.to_string()).collect::<Vec<String>>().join(",");
+    format!("tokens={ids} batch={batch} queue_us={queue_us} total_us={total_us}\n")
+}
+
+/// Render an error reply: exactly one line, the *outermost* error message
+/// only (never the `{:#}` context chain, which names internal modules and
+/// file paths), capped at 120 characters. Every `error=` the frontend
+/// emits goes through here.
+pub fn error_line(e: &anyhow::Error) -> String {
+    let msg = e.to_string();
+    let first = msg.lines().next().unwrap_or("internal error");
+    let capped: String = first.chars().take(120).collect();
+    format!("error={capped}\n")
 }
 
 impl TcpFrontend {
@@ -68,17 +152,27 @@ fn serve_conn(stream: TcpStream, handle: ServerHandle) -> Result<()> {
             return Ok(()); // client closed
         }
         let reply = match parse_request(&line) {
-            Err(e) => format!("error={e}\n"),
-            Ok(tokens) if tokens.is_empty() => "error=empty request\n".to_string(),
-            Ok(tokens) => match handle.classify(tokens) {
+            Err(e) => error_line(&e),
+            Ok(ParsedRequest::Classify(tokens)) => match handle.classify(tokens) {
                 Ok(r) => format_response(
                     r.label,
                     r.batch_size,
                     r.queue.as_micros(),
                     r.total.as_micros(),
                 ),
-                Err(e) => format!("error={e}\n"),
+                Err(e) => error_line(&e),
             },
+            Ok(ParsedRequest::Generate { max_new, tokens }) => {
+                match handle.generate(tokens, max_new) {
+                    Ok(r) => format_gen_response(
+                        r.gen.as_deref().unwrap_or(&[]),
+                        r.batch_size,
+                        r.queue.as_micros(),
+                        r.total.as_micros(),
+                    ),
+                    Err(e) => error_line(&e),
+                }
+            }
         };
         writer.write_all(reply.as_bytes())?;
         writer.flush()?;
@@ -90,20 +184,86 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parse_request_valid() {
-        assert_eq!(parse_request("1 2 3\n").unwrap(), vec![1, 2, 3]);
-        assert_eq!(parse_request("  7  \n").unwrap(), vec![7]);
-        assert!(parse_request("1 x 3").is_err());
+    fn parse_classify_valid() {
+        assert_eq!(
+            parse_request("1 2 3\n").unwrap(),
+            ParsedRequest::Classify(vec![1, 2, 3])
+        );
+        assert_eq!(parse_request("  7  \n").unwrap(), ParsedRequest::Classify(vec![7]));
+        assert_eq!(parse_request("-4 +2\n").unwrap(), ParsedRequest::Classify(vec![-4, 2]));
     }
 
     #[test]
-    fn response_format() {
-        let s = format_response(1, 8, 120, 4500);
-        assert_eq!(s, "label=1 batch=8 queue_us=120 total_us=4500\n");
+    fn parse_gen_valid() {
+        assert_eq!(
+            parse_request("gen 5 1 2 3\n").unwrap(),
+            ParsedRequest::Generate { max_new: 5, tokens: vec![1, 2, 3] }
+        );
+        // empty prompt is allowed: the model decodes from PAD
+        assert_eq!(
+            parse_request("gen 2\n").unwrap(),
+            ParsedRequest::Generate { max_new: 2, tokens: vec![] }
+        );
     }
 
     #[test]
-    fn parse_empty_gives_empty_vec() {
-        assert_eq!(parse_request("\n").unwrap(), Vec::<i32>::new());
+    fn parse_rejects_empty_lines() {
+        for line in ["", "\n", "   \n", " \t \n"] {
+            let e = parse_request(line).unwrap_err();
+            assert_eq!(e.to_string(), "empty request", "line {line:?}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_overflowing_ids() {
+        // i32 overflow in classify and gen positions, usize overflow in count
+        let e = parse_request("1 99999999999999999999 3\n").unwrap_err();
+        assert_eq!(e.to_string(), "bad token '99999999999999999999'");
+        let e = parse_request("gen 3 99999999999999999999\n").unwrap_err();
+        assert_eq!(e.to_string(), "bad token '99999999999999999999'");
+        let e = parse_request("gen 99999999999999999999999999 1\n").unwrap_err();
+        assert!(e.to_string().starts_with("bad count '"), "{e}");
+    }
+
+    #[test]
+    fn parse_rejects_unknown_verbs_and_bad_counts() {
+        let e = parse_request("frobnicate 1 2\n").unwrap_err();
+        assert_eq!(e.to_string(), "unknown verb 'frobnicate'");
+        // numeric-looking garbage stays a token error, not a verb error
+        let e = parse_request("12x 3\n").unwrap_err();
+        assert_eq!(e.to_string(), "bad token '12x'");
+        let e = parse_request("gen x 1\n").unwrap_err();
+        assert_eq!(e.to_string(), "bad count 'x'");
+        let e = parse_request("gen 0 1\n").unwrap_err();
+        assert_eq!(e.to_string(), "gen count must be positive");
+        let e = parse_request("gen\n").unwrap_err();
+        assert_eq!(e.to_string(), "gen needs a token count");
+    }
+
+    #[test]
+    fn error_replies_are_one_stable_line() {
+        // hostile input is clipped before it reaches the reply
+        let long = "z".repeat(500);
+        let e = parse_request(&format!("{long} 1\n")).unwrap_err();
+        let reply = error_line(&e);
+        assert!(reply.len() < 60, "echoed too much: {reply}");
+        assert_eq!(reply.matches('\n').count(), 1);
+        assert!(reply.starts_with("error=unknown verb 'zzzz"));
+        // context chains never leak: only the outermost frame is rendered
+        let chained = anyhow::Error::msg("root cause with /internal/path")
+            .context("middle frame")
+            .context("request failed");
+        let reply = error_line(&chained);
+        assert_eq!(reply, "error=request failed\n");
+    }
+
+    #[test]
+    fn response_formats() {
+        assert_eq!(format_response(1, 8, 120, 4500), "label=1 batch=8 queue_us=120 total_us=4500\n");
+        assert_eq!(
+            format_gen_response(&[4, 8, 15], 2, 10, 99),
+            "tokens=4,8,15 batch=2 queue_us=10 total_us=99\n"
+        );
+        assert_eq!(format_gen_response(&[], 1, 0, 1), "tokens= batch=1 queue_us=0 total_us=1\n");
     }
 }

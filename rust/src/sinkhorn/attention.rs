@@ -154,6 +154,125 @@ pub fn dense_attention(q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat {
     logits.matmul(v)
 }
 
+/// Naive full-prefix causal decode oracle (DESIGN.md §Decode): row `t` is
+/// the attention output of token `t` over tokens `0..=t` under the
+/// incremental decode semantics, recomputed from scratch per position —
+/// the obviously-correct reference `decode::DecodeState` is verified
+/// against (`tests/decode_props.rs`) and the `bench --target decode`
+/// full-recompute baseline mirrors.
+///
+/// Semantics per token `t` (block `i = t / b`, `m = i + 1` started blocks):
+///
+/// * `R = causal_sinkhorn(sort_logits[..m, ..m], n_iters, strict = true)` —
+///   strict balancing is prefix-consistent (`balance.rs`), which is what
+///   lets the incremental path cache rows across steps;
+/// * sorted keys: with `n_cut = None`, row `i` of `R` gathered over the
+///   blocks (empty for block 0 — the row has no strict support); with
+///   `n_cut = Some(c)`, rows `0..min(c, m)` — SortCut decoding. Rows
+///   without support are skipped, not zero-gathered;
+/// * local keys: rows `i*b..=t` — the within-block causal window;
+/// * one joint softmax over `[sorted | local]`, like the batch paths.
+///
+/// `ell` need not be a multiple of `b`: the final partial block decodes
+/// like any other in-progress block. `sort_logits` must cover
+/// `ceil(ell / b)` blocks.
+pub fn causal_decode_attention(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    sort_logits: &Mat,
+    b: usize,
+    n_iters: usize,
+    n_cut: Option<usize>,
+) -> Mat {
+    assert!(b > 0, "b must be positive");
+    assert_eq!(q.rows, k.rows, "q/k rows");
+    assert_eq!(q.rows, v.rows, "q/v rows");
+    assert_eq!(q.cols, k.cols, "q/k cols");
+    assert_eq!(k.cols, v.cols, "k/v cols");
+    let (ell, d) = (q.rows, q.cols);
+    let nb = (ell + b - 1) / b;
+    assert!(
+        sort_logits.rows >= nb && sort_logits.cols >= nb,
+        "sort_logits must cover {nb} blocks"
+    );
+    if let Some(c) = n_cut {
+        assert!(c >= 1, "n_cut must be positive");
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Mat::zeros(ell, d);
+    for t in 0..ell {
+        let i = t / b;
+        let m = i + 1;
+        let sub = Mat::from_fn(m, m, |a, c| sort_logits[(a, c)]);
+        let r = super::balance::causal_sinkhorn(&sub, n_iters, true);
+        // gather the sorted segment's keys/values (naive ascending-j order)
+        let rows: Vec<usize> = match n_cut {
+            None => vec![i],
+            Some(c) => (0..c.min(m)).collect(),
+        };
+        let mut ks: Vec<f32> = Vec::new();
+        let mut vs: Vec<f32> = Vec::new();
+        for &row in &rows {
+            let w = r.row(row);
+            if w.iter().sum::<f32>() <= 1e-6 {
+                continue; // no strict support: sorted term masked
+            }
+            let base = ks.len();
+            ks.resize(base + b * d, 0.0);
+            vs.resize(base + b * d, 0.0);
+            for (j, &wv) in w.iter().enumerate() {
+                if wv == 0.0 {
+                    continue; // in particular the in-progress block j == i
+                }
+                for (e, (ko, vo)) in
+                    ks[base..].iter_mut().zip(&mut vs[base..]).enumerate()
+                {
+                    *ko += wv * k.data[j * b * d + e];
+                    *vo += wv * v.data[j * b * d + e];
+                }
+            }
+        }
+        let ns = ks.len() / d;
+        let lo = i * b;
+        let nl = t - lo + 1;
+        // dense joint logits over [sorted | local], one softmax, combine
+        let mut logits = Mat::zeros(1, ns + nl);
+        for u in 0..ns {
+            let mut acc = 0.0f32;
+            for e in 0..d {
+                acc += q[(t, e)] * ks[u * d + e];
+            }
+            logits[(0, u)] = acc * scale;
+        }
+        for u in 0..nl {
+            let mut acc = 0.0f32;
+            for e in 0..d {
+                acc += q[(t, e)] * k[(lo + u, e)];
+            }
+            logits[(0, ns + u)] = acc * scale;
+        }
+        logits.softmax_rows();
+        for u in 0..ns {
+            let p = logits[(0, u)];
+            if p != 0.0 {
+                for e in 0..d {
+                    out[(t, e)] += p * vs[u * d + e];
+                }
+            }
+        }
+        for u in 0..nl {
+            let p = logits[(0, ns + u)];
+            if p != 0.0 {
+                for e in 0..d {
+                    out[(t, e)] += p * v[(lo + u, e)];
+                }
+            }
+        }
+    }
+    out
+}
+
 /// SortCut attention: queries attend to the first `n_cut` sorted blocks.
 ///
 /// Only the first `n_cut` sort rows are mixed, straight into one
@@ -355,6 +474,55 @@ mod tests {
         let vc = Blocked { blocks: vs.blocks[..2].to_vec() }.to_seq();
         let want = dense_attention(&q, &kc, &vc, false);
         assert!(y.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn decode_oracle_matches_batch_causal_at_complete_lengths() {
+        // at ell = nb*b the per-step decode semantics collapse onto the
+        // batch causal path (same strict R up to prefix-balance fp noise,
+        // same [sorted | local-causal] joint softmax)
+        forall(12, 0xDC0, gen_case, |c| {
+            let r = causal_sinkhorn(&c.logits, 6, true);
+            let batch = sinkhorn_attention(&c.q, &c.k, &c.v, &r, c.nb, true);
+            let b = c.q.rows / c.nb;
+            let dec = causal_decode_attention(&c.q, &c.k, &c.v, &c.logits, b, 6, None);
+            let diff = batch.max_abs_diff(&dec);
+            if diff < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("decode oracle vs batch causal diff {diff}"))
+            }
+        });
+    }
+
+    #[test]
+    fn decode_oracle_is_causal_on_partial_tails() {
+        // perturbing the last token must not move any earlier row, even
+        // when the sequence ends mid-block
+        let mut rng = Rng::new(0xDC1);
+        let (b, d, ell) = (4usize, 6usize, 14usize); // partial tail of 2
+        let nb = (ell + b - 1) / b;
+        let q = rand_mat(&mut rng, ell, d);
+        let k = rand_mat(&mut rng, ell, d);
+        let v = rand_mat(&mut rng, ell, d);
+        let logits = rand_mat(&mut rng, nb, nb);
+        for cut in [None, Some(1), Some(2)] {
+            let y1 = causal_decode_attention(&q, &k, &v, &logits, b, 5, cut);
+            let (mut k2, mut v2) = (k.clone(), v.clone());
+            for c in 0..d {
+                k2[(ell - 1, c)] += 3.0;
+                v2[(ell - 1, c)] -= 2.0;
+            }
+            let y2 = causal_decode_attention(&q, &k2, &v2, &logits, b, 5, cut);
+            for t in 0..ell - 1 {
+                for c in 0..d {
+                    assert!(
+                        (y1[(t, c)] - y2[(t, c)]).abs() < 1e-5,
+                        "cut={cut:?}: position {t} saw the future"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -241,6 +241,114 @@ mod tests {
         );
     }
 
+    /// Max |row sum - 1| over rows that have causal support (row 0 has
+    /// none in strict mode and is excluded — its sum is pinned to 0).
+    fn causal_row_residual(s: &Mat, strict: bool) -> f32 {
+        let mut worst = 0.0f32;
+        for i in 0..s.rows {
+            if strict && i == 0 {
+                continue;
+            }
+            let r: f32 = s.row(i).iter().sum();
+            worst = worst.max((r - 1.0).abs());
+        }
+        worst
+    }
+
+    #[test]
+    fn causal_supported_rows_approach_stochastic() {
+        // the decoder's rebalance primitive: after enough iterations every
+        // row with causal support must be (approximately) a probability
+        // distribution over its visible source blocks
+        forall(
+            24,
+            0xC5,
+            |g| {
+                let n = 2 + g.usize(0, 5);
+                rand_logits(g, n)
+            },
+            |l| {
+                for strict in [false, true] {
+                    let s = causal_sinkhorn(l, 30, strict);
+                    let r = causal_row_residual(&s, strict);
+                    if r > 0.1 {
+                        return Err(format!("row residual {r} (strict={strict})"));
+                    }
+                    if strict {
+                        let r0: f32 = s.row(0).iter().sum();
+                        if r0 != 0.0 {
+                            return Err(format!("strict row 0 must be empty, sums to {r0}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn causal_row_residual_monotone_over_iters() {
+        // more balancing never moves the supported rows further from
+        // stochastic — the ds_residual_decreases_with_iters analogue under
+        // the causal mask
+        forall(
+            20,
+            0xC6,
+            |g| {
+                let n = 3 + g.usize(0, 4);
+                rand_logits(g, n)
+            },
+            |l| {
+                for strict in [false, true] {
+                    let r1 = causal_row_residual(&causal_sinkhorn(l, 1, strict), strict);
+                    let r5 = causal_row_residual(&causal_sinkhorn(l, 5, strict), strict);
+                    let r20 = causal_row_residual(&causal_sinkhorn(l, 20, strict), strict);
+                    if !(r5 <= r1 + 1e-4 && r20 <= r5 + 1e-4) {
+                        return Err(format!("not monotone (strict={strict}): {r1} {r5} {r20}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn causal_prefix_consistent() {
+        // THE decode-enabling property (DESIGN.md §Decode): balancing the
+        // top-left (m, m) corner of the logits agrees with the top-left of
+        // the full balance — entry (i, j) only ever depends on logits rows
+        // <= i — so the incremental decoder may cache balanced rows across
+        // block boundaries instead of rebalancing the whole history
+        forall(
+            24,
+            0xC7,
+            |g| {
+                let n = 2 + g.usize(0, 5);
+                rand_logits(g, n)
+            },
+            |l| {
+                for strict in [false, true] {
+                    let full = causal_sinkhorn(l, 6, strict);
+                    for m in 1..=l.rows {
+                        let sub_logits = Mat::from_fn(m, m, |i, j| l[(i, j)]);
+                        let sub = causal_sinkhorn(&sub_logits, 6, strict);
+                        for i in 0..m {
+                            for j in 0..m {
+                                let d = (sub[(i, j)] - full[(i, j)]).abs();
+                                if d > 1e-5 {
+                                    return Err(format!(
+                                        "prefix m={m} diverges at ({i},{j}) by {d} (strict={strict})"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn zero_iters_is_row_softmax() {
         let l = Mat::from_vec(2, 2, vec![0.0, 0.0, 1.0, 3.0]);

@@ -1,0 +1,404 @@
+//! Incremental autoregressive decoding for Sparse Sinkhorn Attention
+//! (DESIGN.md §Decode).
+//!
+//! The batch paths ([`super::attention`], [`super::engine`]) recompute the
+//! whole sequence's attention on every call — O(ℓ·b·d) per token if a
+//! server replayed them once per generated token. This module is the
+//! serving decode path: a per-sequence [`DecodeState`] caches everything
+//! that survives from step to step, so producing one more token costs
+//! O(b·d):
+//!
+//! * **K/V cache** — the new token's projected key/value rows are appended
+//!   into preallocated block-aligned buffers; nothing earlier is touched.
+//! * **Cached causal Sinkhorn state** — the balanced sort matrix `R` is
+//!   recomputed (Causal Sinkhorn Balancing, [`causal_sinkhorn`] with
+//!   `strict = true`) only when a block boundary fills. This is sound
+//!   because strict-causal balancing is *prefix-consistent*: `R[i, j]`
+//!   depends only on logits rows `<= i`, so the `(m, m)` balance of the
+//!   first `m` blocks agrees with the top-left of any larger balance
+//!   (pinned by `balance.rs::causal_prefix_consistent` and the float32
+//!   simulation in EXPERIMENTS.md). Between boundaries the cached rows are
+//!   reused as-is.
+//! * **Cached sorted K/V** — the gathered sorted blocks the current token
+//!   attends to are materialized once per boundary ([`gather_block_into`]
+//!   over the complete blocks) and then reused for every token of the
+//!   block. Strictness guarantees the gather never reads the in-progress
+//!   block (its weight is exactly zero).
+//! * **Streaming-softmax carry** — each step runs the engine's
+//!   `stream_segment` twice (sorted segment, then the local causal
+//!   window), carrying the running max/denominator between them in a
+//!   caller-provided `StreamState`; the `(1, keys)` logits are never
+//!   materialized.
+//!
+//! **SortCut decoding** (paper §3.3): with `n_cut = Some(c)` every token
+//! attends to `[first c sorted blocks | local causal window]` instead of
+//! its own block's sorted row. Prefix-consistency makes the cut cache
+//! *append-only*: once row `j < c` of `R` exists it never changes, so each
+//! boundary only gathers the newly live rows — and once the cut is
+//! complete, later boundaries skip rebalancing altogether (no balanced
+//! row would ever be read again).
+//!
+//! **Contract** (`tests/decode_props.rs`): every step's output matches the
+//! naive full-prefix oracle [`causal_decode_attention`] within
+//! [`ENGINE_TOL`](super::engine::ENGINE_TOL) — including steps that cross
+//! a block boundary and every `n_cut` — and a batch of sequences decoded
+//! through [`SinkhornEngine::decode_step_into`] is bit-identical for any
+//! thread count. Memory is accounted analytically by
+//! [`memory::decode_state_bytes`] and asserted against
+//! [`DecodeState::f32_elems`].
+//!
+//! [`causal_sinkhorn`]: super::balance::causal_sinkhorn
+//! [`causal_decode_attention`]: super::attention::causal_decode_attention
+//! [`SinkhornEngine::decode_step_into`]: super::engine::SinkhornEngine::decode_step_into
+//! [`memory::decode_state_bytes`]: super::memory::decode_state_bytes
+
+use super::balance::causal_sinkhorn;
+use super::engine::{gather_block_into, normalize_rows, BlockedView, StreamState};
+use super::matrix::{Mat, MatView, MatViewMut};
+
+/// Row-support threshold below which a balanced sort row is treated as
+/// empty and its sorted term masked — the same cutoff the batch paths use.
+const SUPPORT_EPS: f32 = 1e-6;
+
+/// Per-sequence incremental decode state (DESIGN.md §Decode): the
+/// block-aligned K/V cache, the cached strict-causal balanced sort matrix,
+/// and the gathered sorted K/V the current tokens attend to. Everything is
+/// preallocated at construction; a step allocates only when a block
+/// boundary rebalances the (tiny) sort matrix.
+pub struct DecodeState {
+    /// rows per block
+    b: usize,
+    /// model dim
+    d: usize,
+    /// capacity in blocks (sequence capacity = `nb_cap * b` tokens)
+    nb_cap: usize,
+    /// Sinkhorn balance iterations per rebalance
+    n_iters: usize,
+    /// `Some(c)`: SortCut decoding over the first `c` sorted blocks;
+    /// `None`: full causal decoding over the token's own sorted row
+    n_cut: Option<usize>,
+    /// appended keys, block-aligned: token `t`'s row lives at `t * d`
+    k: Vec<f32>,
+    /// appended values, same layout
+    v: Vec<f32>,
+    /// tokens appended so far
+    len: usize,
+    /// cached balanced sort matrix: top-left `(balanced, balanced)` of this
+    /// preallocated `(nb_cap, nb_cap)` buffer holds
+    /// `causal_sinkhorn(logits[..balanced, ..balanced], n_iters, strict)`
+    r: Mat,
+    /// blocks covered by the cached balance (0 before the first step)
+    balanced: usize,
+    /// gathered sorted keys the current tokens attend to: `(b, d)` in full
+    /// mode, up to `(n_cut * b, d)` in SortCut mode
+    sk: Vec<f32>,
+    /// gathered sorted values, same layout
+    sv: Vec<f32>,
+    /// valid key rows in `sk`/`sv`
+    sorted_rows: usize,
+    /// SortCut: balanced rows already consumed into the cut cache
+    /// (append-only — prefix-consistency keeps earlier rows stable)
+    cut_rows: usize,
+}
+
+impl DecodeState {
+    /// Fresh state for a sequence of up to `nb_cap * b` tokens.
+    pub fn new(b: usize, d: usize, nb_cap: usize, n_iters: usize, n_cut: Option<usize>) -> Self {
+        assert!(b > 0 && d > 0 && nb_cap > 0, "b, d, nb_cap must be positive");
+        if let Some(c) = n_cut {
+            assert!((1..=nb_cap).contains(&c), "n_cut must be in 1..=nb_cap, got {c}");
+        }
+        let cache_blocks = n_cut.unwrap_or(1);
+        DecodeState {
+            b,
+            d,
+            nb_cap,
+            n_iters,
+            n_cut,
+            k: vec![0.0; nb_cap * b * d],
+            v: vec![0.0; nb_cap * b * d],
+            len: 0,
+            r: Mat::zeros(nb_cap, nb_cap),
+            balanced: 0,
+            sk: vec![0.0; cache_blocks * b * d],
+            sv: vec![0.0; cache_blocks * b * d],
+            sorted_rows: 0,
+            cut_rows: 0,
+        }
+    }
+
+    /// Tokens decoded so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Token capacity (`nb_cap * b`).
+    pub fn capacity(&self) -> usize {
+        self.nb_cap * self.b
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.b
+    }
+
+    /// f32 elements this state allocates — the measured side of
+    /// [`super::memory::decode_state_bytes`], asserted equal in
+    /// `tests/decode_props.rs`.
+    pub fn f32_elems(&self) -> usize {
+        self.k.len() + self.v.len() + self.r.data.len() + self.sk.len() + self.sv.len()
+    }
+
+    /// Append one token and compute its attention output. This is the
+    /// serving entry: `server::fallback::generate_batch` fans whole
+    /// sequences over its pool and drives each one serially through here
+    /// with a per-worker [`DecodeScratch`].
+    /// [`super::engine::SinkhornEngine::decode_step_into`] is the
+    /// alternative *lockstep* entry — one step across a batch of
+    /// sequences at a time — and is bit-identical to this path
+    /// (`tests/decode_props.rs`).
+    pub fn step_into(
+        &mut self,
+        q_row: &[f32],
+        k_row: &[f32],
+        v_row: &[f32],
+        sort_logits: &Mat,
+        scratch: &mut DecodeScratch,
+        out: &mut [f32],
+    ) {
+        self.step_with(q_row, k_row, v_row, sort_logits, &mut scratch.stream, out);
+    }
+
+    /// The decode step (DESIGN.md §Decode): append K/V, rebalance on a
+    /// filled block boundary, stream `[sorted | local causal]`.
+    ///
+    /// `sort_logits` is the caller-maintained raw sort-logit matrix; only
+    /// its top-left `(m, m)` corner is read, where `m` is the number of
+    /// blocks started — rows for unstarted blocks may hold anything.
+    pub(crate) fn step_with(
+        &mut self,
+        q_row: &[f32],
+        k_row: &[f32],
+        v_row: &[f32],
+        sort_logits: &Mat,
+        stream: &mut StreamState,
+        out: &mut [f32],
+    ) {
+        let (b, d) = (self.b, self.d);
+        assert!(self.len < self.capacity(), "decode capacity exhausted ({} tokens)", self.len);
+        assert_eq!(q_row.len(), d, "q row must have d elements");
+        assert_eq!(k_row.len(), d, "k row must have d elements");
+        assert_eq!(v_row.len(), d, "v row must have d elements");
+        assert_eq!(out.len(), d, "out row must have d elements");
+        let t = self.len;
+        let i = t / b; // the token's block
+        self.k[t * d..(t + 1) * d].copy_from_slice(k_row);
+        self.v[t * d..(t + 1) * d].copy_from_slice(v_row);
+        self.len += 1;
+
+        // Rebalance-on-boundary rule: the first token of block i makes m =
+        // i + 1 blocks live; re-run Causal Sinkhorn Balancing over their
+        // logits and refresh the gathered sorted cache. Every other step
+        // reuses the caches untouched. Under SortCut, once the cut cache is
+        // complete (cut_rows == c) no balanced row is ever read again —
+        // prefix-stability froze them — so boundaries stop rebalancing
+        // entirely and the per-step cost truly stops growing with the
+        // prefix.
+        let m = i + 1;
+        let cache_live = match self.n_cut {
+            None => true,
+            Some(c) => self.cut_rows < c,
+        };
+        if self.balanced < m && !cache_live {
+            self.balanced = m;
+        }
+        if self.balanced < m {
+            assert!(
+                sort_logits.rows >= m && sort_logits.cols >= m,
+                "sort_logits must cover the {m} started blocks (got {}x{})",
+                sort_logits.rows,
+                sort_logits.cols
+            );
+            let sub = Mat::from_fn(m, m, |a, c| sort_logits[(a, c)]);
+            let rm = causal_sinkhorn(&sub, self.n_iters, true);
+            for row in 0..m {
+                self.r.row_mut(row)[..m].copy_from_slice(rm.row(row));
+            }
+            self.balanced = m;
+            // strict rows never weight the in-progress block, so gathering
+            // over the first m blocks only ever reads complete ones (the
+            // tail of block i is still zero-initialized and unused)
+            let blocks = BlockedView::from_slice(&self.k[..m * b * d], m, b, d);
+            let vblocks = BlockedView::from_slice(&self.v[..m * b * d], m, b, d);
+            match self.n_cut {
+                None => {
+                    // full causal: cache block i's own sorted row
+                    let w = &self.r.row(i)[..m];
+                    if w.iter().sum::<f32>() > SUPPORT_EPS {
+                        gather_block_into(w, &blocks, &mut self.sk[..b * d]);
+                        gather_block_into(w, &vblocks, &mut self.sv[..b * d]);
+                        self.sorted_rows = b;
+                    } else {
+                        self.sorted_rows = 0; // block 0: no sorted term
+                    }
+                }
+                Some(c) => {
+                    // SortCut: append the newly live cut rows (rows already
+                    // cached are prefix-stable — module docs)
+                    for j in self.cut_rows..c.min(m) {
+                        let w = &self.r.row(j)[..m];
+                        if w.iter().sum::<f32>() > SUPPORT_EPS {
+                            let o = self.sorted_rows * d;
+                            gather_block_into(w, &blocks, &mut self.sk[o..o + b * d]);
+                            gather_block_into(w, &vblocks, &mut self.sv[o..o + b * d]);
+                            self.sorted_rows += b;
+                        }
+                        self.cut_rows = j + 1;
+                    }
+                }
+            }
+        }
+
+        // Streamed joint softmax for the single-row query: sorted segment
+        // (if any), then the local causal window — rows i*b..=t of the K/V
+        // cache. The causal bound is the segment length itself, so no mask
+        // flag is needed.
+        let scale = 1.0 / (d as f32).sqrt();
+        out.fill(0.0);
+        stream.reset(1);
+        let qv = MatView::contiguous(q_row, 1, d);
+        let mut y = MatViewMut::contiguous(out, 1, d);
+        if self.sorted_rows > 0 {
+            let ks = MatView::contiguous(&self.sk[..self.sorted_rows * d], self.sorted_rows, d);
+            let vs = MatView::contiguous(&self.sv[..self.sorted_rows * d], self.sorted_rows, d);
+            stream_segment_one(&qv, &ks, &vs, scale, stream, &mut y);
+        }
+        let lo = i * b;
+        let nl = t - lo + 1;
+        let lk = MatView::contiguous(&self.k[lo * d..(t + 1) * d], nl, d);
+        let lv = MatView::contiguous(&self.v[lo * d..(t + 1) * d], nl, d);
+        stream_segment_one(&qv, &lk, &lv, scale, stream, &mut y);
+        normalize_rows(&mut y, &stream.l);
+    }
+}
+
+/// Thin wrapper so the engine's `stream_segment` reads as a decode step:
+/// single-row query, no in-segment causal mask (the local segment is
+/// already bounded to the visible rows).
+fn stream_segment_one(
+    q: &MatView,
+    kseg: &MatView,
+    vseg: &MatView,
+    scale: f32,
+    st: &mut StreamState,
+    y: &mut MatViewMut,
+) {
+    super::engine::stream_segment(q, kseg, vseg, scale, false, st, y);
+}
+
+/// Per-step scratch for the serial decode entry ([`DecodeState::step_into`]):
+/// the streaming-softmax carry for a single-row query. Reused across steps
+/// and sequences; the engine's batched entry uses its per-worker
+/// `Workspace` instead.
+pub struct DecodeScratch {
+    stream: StreamState,
+}
+
+impl DecodeScratch {
+    pub fn new() -> Self {
+        DecodeScratch { stream: StreamState::new(1) }
+    }
+}
+
+impl Default for DecodeScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The heavy property suites (incremental == oracle across shapes,
+    // boundaries and cuts; thread bit-invariance; memory accounting) live
+    // in tests/decode_props.rs — only edge cases are covered here.
+    use super::*;
+    use crate::sinkhorn::attention::causal_decode_attention;
+    use crate::util::rng::Rng;
+
+    fn rand_rows(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| rng.normal() as f32 * 0.5)
+    }
+
+    #[test]
+    fn first_block_is_local_only_and_matches_oracle() {
+        let (b, d, nb) = (3usize, 5usize, 2usize);
+        let mut rng = Rng::new(0xDEC0);
+        let q = rand_rows(&mut rng, b, d);
+        let k = rand_rows(&mut rng, b, d);
+        let v = rand_rows(&mut rng, b, d);
+        let logits = rand_rows(&mut rng, nb, nb);
+        let want = causal_decode_attention(&q, &k, &v, &logits, b, 4, None);
+        let mut st = DecodeState::new(b, d, nb, 4, None);
+        let mut scratch = DecodeScratch::new();
+        let mut out = vec![0.0f32; d];
+        for t in 0..b {
+            st.step_into(q.row(t), k.row(t), v.row(t), &logits, &mut scratch, &mut out);
+            assert_eq!(st.sorted_rows, 0, "block 0 has no sorted support");
+            for (c, &got) in out.iter().enumerate() {
+                assert!((got - want[(t, c)]).abs() <= 1e-5, "t={t} c={c}");
+            }
+        }
+        assert_eq!(st.len(), b);
+    }
+
+    #[test]
+    #[should_panic(expected = "decode capacity exhausted")]
+    fn overflowing_capacity_panics() {
+        let mut st = DecodeState::new(2, 3, 1, 2, None);
+        let mut scratch = DecodeScratch::new();
+        let (row, logits) = (vec![0.0f32; 3], Mat::zeros(1, 1));
+        let mut out = vec![0.0f32; 3];
+        for _ in 0..3 {
+            st.step_into(&row, &row, &row, &logits, &mut scratch, &mut out);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "n_cut must be in 1..=nb_cap")]
+    fn rejects_oversized_cut() {
+        DecodeState::new(2, 3, 2, 2, Some(3));
+    }
+
+    #[test]
+    fn sortcut_cache_is_append_only() {
+        let (b, d, nb) = (2usize, 4usize, 4usize);
+        let mut rng = Rng::new(0xDEC1);
+        let ell = nb * b;
+        let q = rand_rows(&mut rng, ell, d);
+        let k = rand_rows(&mut rng, ell, d);
+        let v = rand_rows(&mut rng, ell, d);
+        let logits = rand_rows(&mut rng, nb, nb);
+        let mut st = DecodeState::new(b, d, nb, 4, Some(2));
+        let mut scratch = DecodeScratch::new();
+        let mut out = vec![0.0f32; d];
+        let mut snapshot: Option<Vec<f32>> = None;
+        for t in 0..ell {
+            st.step_into(q.row(t), k.row(t), v.row(t), &logits, &mut scratch, &mut out);
+            if st.sorted_rows == 2 * b {
+                // the full cut is live: its contents must never change again
+                match &snapshot {
+                    None => snapshot = Some(st.sk[..2 * b * d].to_vec()),
+                    Some(s) => assert_eq!(&st.sk[..2 * b * d], &s[..], "cut cache moved at t={t}"),
+                }
+            }
+        }
+        assert!(snapshot.is_some(), "cut never filled");
+    }
+}

@@ -22,6 +22,10 @@
 //!   (`memory::engine_workspace_bytes`).
 //! * **SortCut** (paper §3.3) — gathers only the first `n_cut` sorted
 //!   blocks and streams every query block over them through the same loop.
+//! * **Incremental decode** (DESIGN.md §Decode) —
+//!   [`SinkhornEngine::decode_step_into`] steps a batch of
+//!   [`super::decode::DecodeState`]s one token each: cached causal sort
+//!   state, rebalance only at block boundaries, O(b·d) per step.
 //! * **Worker pool** — work is flattened to `(request, head, block)` tasks
 //!   ([`SinkhornEngine::attention_batch_into`]) and fanned out over
 //!   [`WorkerPool`], one private `Workspace` per worker. Inner loops
@@ -37,6 +41,7 @@
 //! `tests/engine_props.rs` pins both halves; `bench engine` re-checks the
 //! epsilon gate before every timing run.
 
+use super::decode::DecodeState;
 use super::matrix::{matmul_acc_into, matmul_t_scaled_into, Mat, MatView, MatViewMut};
 use super::pool::WorkerPool;
 
@@ -70,6 +75,15 @@ impl<'a> BlockedView<'a> {
         assert!(nb > 0, "nb must be positive");
         assert_eq!(x.rows % nb, 0, "nb must divide ell");
         BlockedView { nb, b: x.rows / nb, d: x.cols, data: &x.data }
+    }
+
+    /// View a raw block-aligned buffer as `nb` blocks of `(b, d)` — how the
+    /// incremental decoder ([`super::decode`]) exposes the prefix of its
+    /// appended K/V cache to [`gather_block_into`] without owning a `Mat`.
+    pub fn from_slice(data: &'a [f32], nb: usize, b: usize, d: usize) -> Self {
+        assert!(nb > 0, "nb must be positive");
+        assert_eq!(data.len(), nb * b * d, "buffer must hold exactly nb*b*d elements");
+        BlockedView { nb, b, d, data }
     }
 
     /// Block `i` as a strided matrix view.
@@ -119,21 +133,22 @@ pub fn gather_block_into(weights: &[f32], src: &BlockedView, out: &mut [f32]) {
 /// Per-row running state of the streaming softmax — max `m`, denominator
 /// `l`, and the `(b, STREAM_TILE_W)` logit/probability tile. Everything
 /// here is linear in `b`; this is what replaced the `(b, 2b)` joint-logits
-/// buffer.
-struct StreamState {
-    m: Vec<f32>,
-    l: Vec<f32>,
+/// buffer. Crate-visible so the incremental decoder ([`super::decode`])
+/// can carry the same state between its sorted and local segments.
+pub(crate) struct StreamState {
+    pub(crate) m: Vec<f32>,
+    pub(crate) l: Vec<f32>,
     stile: Vec<f32>,
 }
 
 impl StreamState {
-    fn new(b: usize) -> Self {
+    pub(crate) fn new(b: usize) -> Self {
         StreamState { m: vec![0.0; b], l: vec![0.0; b], stile: vec![0.0; b * STREAM_TILE_W] }
     }
 
     /// Prepare for a fresh query block of `b` rows (buffers may be sized
     /// for a larger block when the batch mixes shapes).
-    fn reset(&mut self, b: usize) {
+    pub(crate) fn reset(&mut self, b: usize) {
         self.m[..b].fill(f32::NEG_INFINITY);
         self.l[..b].fill(0.0);
     }
@@ -158,7 +173,7 @@ impl StreamState {
 /// there, `exp(-1e9 - m)` underflows to zero probability.
 ///
 /// The caller divides `out` rows by `l` after the last segment.
-fn stream_segment(
+pub(crate) fn stream_segment(
     q: &MatView,
     kseg: &MatView,
     vseg: &MatView,
@@ -218,7 +233,7 @@ fn stream_segment(
 /// Divide each accumulated context row by its softmax denominator. A zero
 /// denominator (only possible when a row saw no keys at all, which the
 /// always-visible local diagonal prevents) leaves the zero row in place.
-fn normalize_rows(y: &mut MatViewMut, l: &[f32]) {
+pub(crate) fn normalize_rows(y: &mut MatViewMut, l: &[f32]) {
     for t in 0..y.rows {
         let lt = l[t];
         if lt > 0.0 {
@@ -439,6 +454,58 @@ impl SinkhornEngine {
             },
         );
     }
+
+    /// One incremental autoregressive decode step for a batch of sequences
+    /// (DESIGN.md §Decode): each [`DecodeReq`] appends one token's K/V rows
+    /// to its [`DecodeState`], rebalances the causal sort matrix if a block
+    /// boundary filled, and streams the new token's query over
+    /// `[cached sorted blocks | local causal window]` — O(b·d) per step
+    /// instead of recomputing full-prefix attention.
+    ///
+    /// Sequences fan out over the worker pool, one per task; the
+    /// per-worker `Workspace`'s streaming state is reused as the step's
+    /// softmax carry (queries are single rows, so the scratch is sized
+    /// `(1, d)`).
+    /// Outputs are bit-identical across thread counts for the same reason
+    /// the batch path's are: every step owns its state and output, and the
+    /// per-step math never depends on worker placement. Each step matches
+    /// the naive full-prefix oracle
+    /// [`super::attention::causal_decode_attention`] within [`ENGINE_TOL`]
+    /// (`tests/decode_props.rs`).
+    pub fn decode_step_into(&self, reqs: Vec<DecodeReq>) {
+        if reqs.is_empty() {
+            return;
+        }
+        let mut dmax = 0;
+        for rq in &reqs {
+            let d = rq.state.d();
+            assert_eq!(rq.q.len(), d, "q row must have d elements");
+            assert_eq!(rq.k.len(), d, "k row must have d elements");
+            assert_eq!(rq.v.len(), d, "v row must have d elements");
+            assert_eq!(rq.out.len(), d, "out row must have d elements");
+            dmax = dmax.max(d);
+        }
+        self.pool.run(
+            reqs,
+            || Workspace::new(1, dmax),
+            |ws, rq| {
+                rq.state.step_with(rq.q, rq.k, rq.v, rq.sort_logits, &mut ws.stream, rq.out);
+            },
+        );
+    }
+}
+
+/// One sequence's slice of a batched decode step: the per-sequence
+/// [`DecodeState`], the new token's projected q/k/v rows (`d` elements
+/// each), the caller-maintained sort-logit matrix (rows become live as
+/// blocks complete — DESIGN.md §Decode), and the `d`-element output row.
+pub struct DecodeReq<'a> {
+    pub state: &'a mut DecodeState,
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub sort_logits: &'a Mat,
+    pub out: &'a mut [f32],
 }
 
 fn check_qkv(q: &Mat, k: &Mat, v: &Mat) {

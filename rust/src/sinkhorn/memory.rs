@@ -105,6 +105,33 @@ pub fn engine_workspace_bytes(b: usize, d: usize) -> usize {
     (2 * b * d + b * super::engine::STREAM_TILE_W + 2 * b) * 4
 }
 
+/// Working-set bytes of one per-sequence `decode::DecodeState` at token
+/// capacity `nb_cap * b` (DESIGN.md §Decode): the block-aligned K/V cache
+/// (`2·nb_cap·b·d`), the cached balanced sort matrix (`nb_cap²`), and the
+/// gathered sorted-K/V cache — one block in full-causal mode, `n_cut`
+/// blocks under SortCut (`2·cache·b·d`). Linear in the sequence capacity
+/// (the KV cache) but — the decode win — *constant per step*: no `(ℓ, ℓ)`
+/// or even `(b, 2b)` score buffer ever exists, and the per-step scratch is
+/// just the engine workspace at query rows = 1
+/// (`engine_workspace_bytes(1, d)`). The decoder's measured allocation
+/// (`decode::DecodeState::f32_elems`) is asserted equal to this model in
+/// `tests/decode_props.rs`.
+pub fn decode_state_bytes(b: usize, d: usize, nb_cap: usize, n_cut: Option<usize>) -> usize {
+    let cache_blocks = n_cut.unwrap_or(1);
+    (2 * nb_cap * b * d + nb_cap * nb_cap + 2 * cache_blocks * b * d) * 4
+}
+
+/// Multiply-accumulates of one incremental decode step (DESIGN.md
+/// §Decode): the 1-row query against the cached sorted segment
+/// (`cut_blocks·b` keys; 1 in full-causal mode) plus at most `b` local
+/// keys, for both the logit and the combine contraction — independent of
+/// the sequence length, which is the whole point vs the
+/// O(ℓ·b·d)-per-token full-recompute baseline that `bench --target
+/// decode` measures.
+pub fn decode_step_macs(b: usize, d: usize, cut_blocks: usize) -> usize {
+    2 * (cut_blocks + 1) * b * d
+}
+
 /// MXU utilization proxy: fraction of the kernel's MACs that land in
 /// >=8x8x8-shaped matmuls (all of them, for b,d >= 8 — the point is the
 /// tiles are MXU-shaped by construction).
@@ -168,6 +195,34 @@ mod tests {
     fn mxu_fraction_full_for_mxu_shaped_tiles() {
         assert_eq!(mxu_mac_fraction(64, 64), 1.0);
         assert!(mxu_mac_fraction(4, 64) < 1.0);
+    }
+
+    #[test]
+    fn decode_step_cost_is_sequence_length_free() {
+        let (b, d) = (64, 64);
+        // full-causal: one cached sorted block + the local window, both
+        // contractions — no term grows with the prefix length
+        assert_eq!(decode_step_macs(b, d, 1), 2 * 2 * b * d);
+        // sortcut widens only the cached segment, not the local window
+        assert_eq!(decode_step_macs(b, d, 4), 2 * 5 * b * d);
+        // the dense incremental alternative scores the whole prefix per
+        // token: 2·ell·d MACs — already 32x the sinkhorn step at ell=4096
+        let dense_step = 2 * 4096 * d;
+        assert!(dense_step >= 32 * decode_step_macs(b, d, 1));
+    }
+
+    #[test]
+    fn decode_state_dominated_by_kv_cache() {
+        // the cached sort matrix + gathered blocks must stay a small
+        // constant factor over the unavoidable KV cache
+        for (b, d, nb) in [(64usize, 64usize, 16usize), (128, 64, 32)] {
+            let kv_only = 2 * nb * b * d * 4;
+            let full = decode_state_bytes(b, d, nb, None);
+            let cut = decode_state_bytes(b, d, nb, Some(4));
+            assert!(full < kv_only * 2, "b={b}");
+            assert!(cut < kv_only * 2, "b={b}");
+            assert!(cut > full, "sortcut caches more gathered blocks");
+        }
     }
 
     #[test]

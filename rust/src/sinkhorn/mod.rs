@@ -7,17 +7,23 @@
 //! and — since the [`engine`] rework — (4) serve inference on machines
 //! with no compiled HLO artifacts at all, through the streaming blocked
 //! execution engine (DESIGN.md §Engine, §Streaming) that
-//! `server::fallback` runs on.
+//! `server::fallback` runs on, including (5) token-by-token autoregressive
+//! generation through the incremental [`decode`] path (DESIGN.md §Decode).
 
 pub mod attention;
 pub mod balance;
+pub mod decode;
 pub mod engine;
 pub mod matrix;
 pub mod memory;
 pub mod pool;
 
-pub use attention::{dense_attention, local_attention, sinkhorn_attention, sortcut_attention};
+pub use attention::{
+    causal_decode_attention, dense_attention, local_attention, sinkhorn_attention,
+    sortcut_attention,
+};
 pub use balance::{causal_sinkhorn, ds_residual, sinkhorn};
-pub use engine::{AttentionReq, BlockedView, SinkhornEngine};
+pub use decode::{DecodeScratch, DecodeState};
+pub use engine::{AttentionReq, BlockedView, DecodeReq, SinkhornEngine};
 pub use matrix::{Mat, MatView, MatViewMut};
 pub use pool::WorkerPool;

@@ -1,0 +1,234 @@
+//! Property tests for the incremental autoregressive decode path against
+//! the naive full-prefix oracle — run with no artifacts and no XLA, in
+//! every build. The contract under test (DESIGN.md §Decode):
+//!
+//! 1. for every step `t` of a decoded sequence, the incremental
+//!    `decode_step_into` output matches `attention::causal_decode_attention`
+//!    (which recomputes the whole prefix from scratch per position) within
+//!    1e-5 max-abs — including steps that cross a block boundary, partial
+//!    final blocks, and every SortCut width;
+//! 2. a batch of sequences decoded through the engine is bit-identical for
+//!    any thread count, and the engine entry is bit-identical to the
+//!    serial `DecodeState::step_into` scratch entry;
+//! 3. the per-sequence state's real allocation matches the analytic model
+//!    `memory::decode_state_bytes` — the KV cache plus a constant-size
+//!    sorted cache, never a score matrix.
+
+use sinkhorn::sinkhorn::engine::ENGINE_TOL as TOL;
+use sinkhorn::sinkhorn::memory::decode_state_bytes;
+use sinkhorn::sinkhorn::{
+    causal_decode_attention, DecodeReq, DecodeScratch, DecodeState, Mat, SinkhornEngine,
+};
+use sinkhorn::util::prop::{forall, Gen};
+use sinkhorn::util::rng::Rng;
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.normal() as f32 * 0.5)
+}
+
+struct Case {
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    logits: Mat,
+    b: usize,
+    nb: usize,
+    /// decoded length; may end mid-block
+    total: usize,
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Case(b={}, nb={}, d={}, total={})",
+            self.b,
+            self.nb,
+            self.q.cols,
+            self.total
+        )
+    }
+}
+
+fn case_with(rng: &mut Rng, nb: usize, b: usize, d: usize, total: usize) -> Case {
+    let ell = nb * b;
+    Case {
+        q: rand_mat(rng, ell, d),
+        k: rand_mat(rng, ell, d),
+        v: rand_mat(rng, ell, d),
+        logits: rand_mat(rng, nb, nb),
+        b,
+        nb,
+        total,
+    }
+}
+
+fn gen_case(g: &mut Gen) -> Case {
+    let nb = 2 + g.usize(0, 4);
+    let b = 2 + g.usize(0, 5);
+    let d = 4 + g.usize(0, 8);
+    let ell = nb * b;
+    // half the cases stop mid-block to cover partial tails
+    let total = if g.usize(0, 2) == 0 { ell } else { ell - g.usize(1, b) };
+    let mut rng = Rng::new(g.rng.next_u64());
+    case_with(&mut rng, nb, b, d, total)
+}
+
+/// Decode `c` step by step through the engine entry; return the stacked
+/// per-step outputs.
+fn decode_all(c: &Case, eng: &SinkhornEngine, n_cut: Option<usize>) -> Mat {
+    let d = c.q.cols;
+    let mut st = DecodeState::new(c.b, d, c.nb, 5, n_cut);
+    let mut out = Mat::zeros(c.total, d);
+    for t in 0..c.total {
+        let mut row = vec![0.0f32; d];
+        eng.decode_step_into(vec![DecodeReq {
+            state: &mut st,
+            q: c.q.row(t),
+            k: c.k.row(t),
+            v: c.v.row(t),
+            sort_logits: &c.logits,
+            out: &mut row,
+        }]);
+        out.row_mut(t).copy_from_slice(&row);
+    }
+    out
+}
+
+#[test]
+fn incremental_matches_full_prefix_oracle() {
+    // every step, every block boundary, full-causal and a random SortCut
+    forall(20, 0xDEC2, gen_case, |c| {
+        let oracle_full = causal_decode_attention(&c.q, &c.k, &c.v, &c.logits, c.b, 5, None);
+        let got = decode_all(c, &SinkhornEngine::serial(), None);
+        for t in 0..c.total {
+            for e in 0..c.q.cols {
+                let d = (got[(t, e)] - oracle_full[(t, e)]).abs();
+                if d > TOL {
+                    return Err(format!("full-causal step {t} diverged by {d}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn incremental_matches_oracle_for_every_sortcut_width() {
+    let mut rng = Rng::new(0xDEC3);
+    for (nb, b, d) in [(3usize, 4usize, 8usize), (4, 3, 5), (2, 34, 9), (5, 2, 16)] {
+        let total = nb * b - b / 2; // always end mid-block
+        let c = case_with(&mut rng, nb, b, d, total.max(1));
+        for cut in 1..=nb {
+            let oracle = causal_decode_attention(&c.q, &c.k, &c.v, &c.logits, b, 5, Some(cut));
+            let got = decode_all(&c, &SinkhornEngine::serial(), Some(cut));
+            for t in 0..c.total {
+                for e in 0..d {
+                    let dv = (got[(t, e)] - oracle[(t, e)]).abs();
+                    assert!(
+                        dv <= TOL,
+                        "nb={nb} b={b} cut={cut} step {t}: diverged by {dv}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_decode_is_thread_invariant_bitwise() {
+    // a batch of sequences stepped in lockstep must produce identical
+    // bytes for every thread count (the SINKHORN_THREADS guarantee)
+    let mut rng = Rng::new(0xDEC4);
+    let cases: Vec<Case> = (0..5)
+        .map(|i| {
+            let (nb, b, d) = (2 + i % 3, 2 + i, 4 + 2 * i);
+            let total = nb * b - i.min(b - 1);
+            case_with(&mut rng, nb, b, d, total)
+        })
+        .collect();
+    let cuts: Vec<Option<usize>> = (0..cases.len())
+        .map(|i| if i % 2 == 0 { None } else { Some(1 + i % 2) })
+        .collect();
+    let run = |threads: usize| -> Vec<Mat> {
+        let eng = SinkhornEngine::new(threads);
+        let mut states: Vec<DecodeState> = cases
+            .iter()
+            .zip(&cuts)
+            .map(|(c, cut)| DecodeState::new(c.b, c.q.cols, c.nb, 5, *cut))
+            .collect();
+        let mut outs: Vec<Mat> = cases.iter().map(|c| Mat::zeros(c.total, c.q.cols)).collect();
+        let max_t = cases.iter().map(|c| c.total).max().unwrap();
+        for t in 0..max_t {
+            let mut reqs = Vec::new();
+            for ((c, st), out) in cases.iter().zip(states.iter_mut()).zip(outs.iter_mut()) {
+                if t < c.total {
+                    let d = c.q.cols;
+                    reqs.push(DecodeReq {
+                        state: st,
+                        q: c.q.row(t),
+                        k: c.k.row(t),
+                        v: c.v.row(t),
+                        sort_logits: &c.logits,
+                        out: &mut out.data[t * d..(t + 1) * d],
+                    });
+                }
+            }
+            eng.decode_step_into(reqs);
+        }
+        outs
+    };
+    let serial = run(1);
+    for threads in [2usize, 3, 7] {
+        assert_eq!(run(threads), serial, "threads={threads} diverged bitwise");
+    }
+}
+
+#[test]
+fn engine_entry_matches_serial_scratch_entry_bitwise() {
+    let mut rng = Rng::new(0xDEC5);
+    let c = case_with(&mut rng, 3, 4, 6, 11);
+    let via_engine = decode_all(&c, &SinkhornEngine::serial(), Some(2));
+    let d = c.q.cols;
+    let mut st = DecodeState::new(c.b, d, c.nb, 5, Some(2));
+    let mut scratch = DecodeScratch::new();
+    let mut via_scratch = Mat::zeros(c.total, d);
+    for t in 0..c.total {
+        let mut row = vec![0.0f32; d];
+        st.step_into(c.q.row(t), c.k.row(t), c.v.row(t), &c.logits, &mut scratch, &mut row);
+        via_scratch.row_mut(t).copy_from_slice(&row);
+    }
+    assert_eq!(via_engine, via_scratch);
+}
+
+#[test]
+fn state_allocation_matches_memory_model() {
+    for (b, d, nb, cut) in [
+        (8usize, 8usize, 4usize, None),
+        (64, 64, 16, None),
+        (64, 64, 16, Some(2)),
+        (16, 32, 8, Some(8)),
+    ] {
+        let st = DecodeState::new(b, d, nb, 5, cut);
+        assert_eq!(
+            st.f32_elems() * 4,
+            decode_state_bytes(b, d, nb, cut),
+            "accounting drifted at b={b} d={d} nb={nb} cut={cut:?}"
+        );
+        assert_eq!(st.capacity(), nb * b);
+        assert!(st.is_empty());
+    }
+}
+
+#[test]
+fn decode_state_never_allocates_scores() {
+    // the state is the KV cache + constant-size sorted cache: growing the
+    // capacity grows it linearly, growing the block count quadratically
+    // only through the tiny (nb, nb) sort matrix
+    let base = decode_state_bytes(64, 64, 16, None);
+    let double_cap = decode_state_bytes(64, 64, 32, None);
+    assert!(double_cap < 2 * base + 32 * 32 * 4 + 4);
+    // and it undercuts one materialized (ell, ell) causal score matrix
+    let ell = 16 * 64;
+    assert!(base < ell * ell * 4 / 4, "state must stay far below O(ell^2) scores");
+}

@@ -1,7 +1,10 @@
 #!/usr/bin/env python3
 """Verify that every `DESIGN.md §<anchor>` citation in rust/src/ names a
 section that actually exists in DESIGN.md (the repo's docs used to cite
-seven sections that didn't exist — this check keeps them resolvable).
+seven sections that didn't exist — this check keeps them resolvable),
+and that every `BENCH_<name>.json` EXPERIMENTS.md promises can actually
+be regenerated — i.e. `<name>` is a registered `bench --target` arm in
+rust/src/bench/tables.rs::ALL_TARGETS.
 
 Usage: python3 tools/check_design_refs.py [--all]
   --all also scans python/, examples/, rust/tests/ and rust/benches/
@@ -27,7 +30,39 @@ REQUIRED_ANCHORS = {
     "Engine", "Perf", "Hardware-Adaptation",
     # streaming-kernel PR: flash-style softmax + tiled microkernel docs
     "Streaming", "Microkernels",
+    # incremental-decode PR: cached causal Sinkhorn state + SortCut decode
+    "Decode",
 }
+
+BENCH_JSON_RE = re.compile(r"BENCH_([A-Za-z0-9_]+)\.json")
+
+
+def check_bench_targets() -> list:
+    """Every BENCH_<name>.json named in EXPERIMENTS.md must have a
+    matching `bench --target <name>` arm (tables.rs ALL_TARGETS), or the
+    doc promises a file nothing can regenerate."""
+    experiments = ROOT / "EXPERIMENTS.md"
+    tables = ROOT / "rust" / "src" / "bench" / "tables.rs"
+    errors = []
+    if not experiments.exists():
+        return ["EXPERIMENTS.md does not exist"]
+    if not tables.exists():
+        return ["rust/src/bench/tables.rs does not exist"]
+    names = set(BENCH_JSON_RE.findall(experiments.read_text(encoding="utf-8")))
+    src = tables.read_text(encoding="utf-8")
+    m = re.search(r"ALL_TARGETS[^=]*=\s*&\[(.*?)\]", src, re.DOTALL)
+    if not m:
+        return ["tables.rs has no ALL_TARGETS list"]
+    targets = set(re.findall(r'"([A-Za-z0-9_]+)"', m.group(1)))
+    for name in sorted(names):
+        if name not in targets:
+            errors.append(
+                f"EXPERIMENTS.md names BENCH_{name}.json but 'bench --target {name}' "
+                f"is not a registered target (tables.rs ALL_TARGETS: {sorted(targets)})"
+            )
+    if not names:
+        errors.append("EXPERIMENTS.md names no BENCH_*.json files — scan regex wrong?")
+    return errors
 
 
 def main() -> int:
@@ -66,14 +101,18 @@ def main() -> int:
     missing = REQUIRED_ANCHORS - anchors
     for a in sorted(missing):
         print(f"FAIL: DESIGN.md lost the required section anchor §{a}")
+    bench_errors = check_bench_targets()
+    for msg in bench_errors:
+        print(f"FAIL: {msg}")
     print(
         f"checked {len(refs)} references to {len(set(a for _, _, a in refs))} anchors "
         f"({', '.join(sorted(set(a for _, _, a in refs)))}) "
         f"against {len(anchors)} headings "
-        f"({len(REQUIRED_ANCHORS)} required): "
-        + ("FAIL" if bad or missing else "OK")
+        f"({len(REQUIRED_ANCHORS)} required) "
+        f"+ EXPERIMENTS.md BENCH_*.json targets: "
+        + ("FAIL" if bad or missing or bench_errors else "OK")
     )
-    return 1 if bad or missing else 0
+    return 1 if bad or missing or bench_errors else 0
 
 
 if __name__ == "__main__":
