@@ -1,12 +1,19 @@
 # Sparse Sinkhorn Attention — repo-level targets.
-# `check-docs` is the CI documentation gate; the rest are conveniences.
+# `make ci` aggregates every gate (.github/workflows/ci.yml runs it);
+# `doc-refs` is the toolchain-free subset that must pass anywhere.
 
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test check-docs doc-refs fmt-check clippy bench bench-engine bench-decode serve-fallback artifacts all
+.PHONY: build test check-docs doc-refs fmt-check clippy ci bench bench-engine bench-decode bench-model bench-smoke serve-fallback artifacts all
 
 all: build
+
+## The full CI gate set (.github/workflows/ci.yml `rust` job): build,
+## tests, format, lint, docs + reference checks, and a smoke pass of the
+## runtime-free bench targets (tiny shapes, correctness gates on, no
+## BENCH_*.json pollution).
+ci: build test fmt-check clippy check-docs bench-smoke
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -19,9 +26,12 @@ test:
 check-docs: doc-refs
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --manifest-path $(MANIFEST)
 
-## The reference check alone needs no Rust toolchain (plain python3).
+## The reference checks alone need no Rust toolchain (plain python3):
+## DESIGN.md anchors + every committed BENCH_*.json against the schema and
+## the registered bench targets (the CI `docs` job runs exactly this).
 doc-refs:
 	python3 tools/check_design_refs.py --all
+	python3 tools/check_bench_json.py
 
 ## Formatting gate. Loudly skipped when no Rust toolchain is on PATH (the
 ## offline build container), like the toolchain half of check-docs.
@@ -40,16 +50,31 @@ clippy:
 		echo "WARNING: clippy SKIPPED — no '$(CARGO)' toolchain on PATH"; \
 	fi
 
-## Regenerate the perf numbers: the engine naive/fused/parallel table and
-## the decode tokens/sec table, plus machine-readable medians in
-## BENCH_engine.json and BENCH_decode.json at the repo root.
-bench: bench-engine bench-decode
+## Regenerate the perf numbers: the engine naive/fused/parallel table, the
+## decode tokens/sec table and the model depth-sweep table, plus
+## machine-readable medians in BENCH_engine.json, BENCH_decode.json and
+## BENCH_model.json at the repo root.
+bench: bench-engine bench-decode bench-model
 
 bench-engine:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target engine
 
 bench-decode:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target decode
+
+bench-model:
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target model
+
+## CI smoke benches: every runtime-free target (engine, decode, model at
+## tiny shapes with one rep; memory is analytic and already instant) — the
+## correctness gates (engine vs naive oracle, decode vs full-prefix
+## oracle, stack vs per-layer oracle) still run, but the real BENCH_*.json
+## files are left untouched.
+bench-smoke:
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target engine --smoke
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target decode --smoke
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target model --smoke
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target memory --smoke
 
 ## Serve the pure-Rust fallback engine over TCP (no artifacts needed):
 ##   echo "4 8 15 16 23 42" | nc 127.0.0.1 7878     # classify

@@ -23,6 +23,7 @@ fn main() -> anyhow::Result<()> {
         // teacher-forced seq2seq eval keeps the bench fast; the example
         // sort_seq2seq and `sinkhorn bench table1` do true greedy decode
         fast_decode: !args.has("full-decode"),
+        smoke: args.bool("smoke"),
     };
     // runtime-free targets (engine, memory) run even without artifacts/XLA
     let target = args.str("target", "all");

@@ -27,6 +27,10 @@ pub struct BenchOptions {
     pub verbose: bool,
     /// use teacher-forced seq2seq eval (fast) instead of true greedy decode
     pub fast_decode: bool,
+    /// CI smoke mode: tiny shapes, one rep, correctness gates still on —
+    /// and no `BENCH_*.json` emission, so the real perf trajectory files
+    /// are never polluted by smoke numbers (`make bench-smoke`)
+    pub smoke: bool,
 }
 
 impl Default for BenchOptions {
@@ -39,6 +43,7 @@ impl Default for BenchOptions {
             eval_batches: 4,
             verbose: false,
             fast_decode: false,
+            smoke: false,
         }
     }
 }

@@ -15,8 +15,8 @@ use anyhow::{anyhow, Result};
 use crate::runtime::{Registry, Runtime};
 use crate::sinkhorn::engine::ENGINE_TOL;
 use crate::sinkhorn::{
-    causal_decode_attention, memory, sinkhorn, sinkhorn_attention, DecodeScratch, DecodeState,
-    Mat, SinkhornEngine,
+    causal_decode_attention, memory, reference_stack_forward, sinkhorn, sinkhorn_attention,
+    DecodeScratch, DecodeState, Mat, SinkhornEngine, SinkhornStack, StackConfig, WorkerPool,
 };
 use crate::util::rng::Rng;
 use crate::util::stats::{percentile, time_iters, Table};
@@ -329,16 +329,21 @@ pub fn engine_table(opts: &BenchOptions) -> Result<String> {
     let d = 64;
     let par = SinkhornEngine::auto();
     let fused = SinkhornEngine::serial();
+    // smoke mode (CI): one tiny shape, one rep — the correctness gates
+    // still run, the timing columns are non-representative by design
+    let (ells, nbs): (&[usize], &[usize]) =
+        if opts.smoke { (&[128], &[4]) } else { (&[512, 1024, 4096], &[4, 8, 16]) };
     let mut t = Table::new(
         &format!(
-            "engine — sorted+local attention wall-clock, d={d} (parallel: {} threads)",
-            par.threads()
+            "engine — sorted+local attention wall-clock, d={d} (parallel: {} threads){}",
+            par.threads(),
+            if opts.smoke { " [SMOKE]" } else { "" }
         ),
         &["ell", "nb", "naive ms", "fused ms", "parallel ms", "fused x", "parallel x"],
     );
     let mut cells = Vec::new();
-    for &ell in &[512usize, 1024, 4096] {
-        for &nb in &[4usize, 8, 16] {
+    for &ell in ells {
+        for &nb in nbs {
             let mut rng = Rng::new(0xB0 ^ (ell * 31 + nb) as u64);
             let mk = |rng: &mut Rng| Mat::from_fn(ell, d, |_, _| rng.normal() as f32 * 0.5);
             let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
@@ -359,7 +364,13 @@ pub fn engine_table(opts: &BenchOptions) -> Result<String> {
 
             // timing: fewer iters at the large end (naive is slow there —
             // that's the point)
-            let iters = if ell >= 4096 { 3 } else { 5 };
+            let iters = if opts.smoke {
+                1
+            } else if ell >= 4096 {
+                3
+            } else {
+                5
+            };
             let mut out = Mat::zeros(ell, d);
             let mut t_naive =
                 time_iters(1, iters, || drop(sinkhorn_attention(&q, &k, &v, &r, nb, false)));
@@ -393,8 +404,12 @@ pub fn engine_table(opts: &BenchOptions) -> Result<String> {
          Gate: engine within 1e-5 max-abs of naive; parallel == fused bit for bit.\n",
     );
     save_result(&opts.artifacts, "engine", &s)?;
-    let json_path = write_engine_json(d, par.threads(), &cells)?;
-    s.push_str(&format!("machine-readable medians: {}\n", json_path.display()));
+    if opts.smoke {
+        s.push_str("smoke run: BENCH_engine.json left untouched\n");
+    } else {
+        let json_path = write_engine_json(d, par.threads(), &cells)?;
+        s.push_str(&format!("machine-readable medians: {}\n", json_path.display()));
+    }
     println!("{s}");
     Ok(s)
 }
@@ -478,12 +493,16 @@ fn decode_run(
 /// `BENCH_engine.json`.
 pub fn decode_table(opts: &BenchOptions) -> Result<String> {
     let (b, d, cut) = (64usize, 64usize, 2usize);
+    let ells: &[usize] = if opts.smoke { &[256] } else { &[512, 1024, 4096] };
     let mut t = Table::new(
-        "decode — autoregressive tokens/sec, b=64 d=64, cut=2 (DESIGN.md §Decode)",
+        &format!(
+            "decode — autoregressive tokens/sec, b=64 d=64, cut=2 (DESIGN.md §Decode){}",
+            if opts.smoke { " [SMOKE]" } else { "" }
+        ),
         &["ell", "nb", "full tok/s", "incr tok/s", "incr+cut tok/s", "incr x", "cut x"],
     );
     let mut cells = Vec::new();
-    for &ell in &[512usize, 1024, 4096] {
+    for &ell in ells {
         let nb = ell / b;
         let mut rng = Rng::new(0xDE ^ (ell * 17) as u64);
         let mk = |rng: &mut Rng| Mat::from_fn(ell, d, |_, _| rng.normal() as f32 * 0.5);
@@ -492,7 +511,7 @@ pub fn decode_table(opts: &BenchOptions) -> Result<String> {
 
         // correctness gate (cheapest shape): every incremental step within
         // epsilon of the full-prefix oracle, full-causal and SortCut
-        if ell == 512 {
+        if ell == 512 || opts.smoke {
             for cutv in [None, Some(cut)] {
                 let oracle = causal_decode_attention(&q, &k, &v, &logits, b, 5, cutv);
                 let got = decode_run(&q, &k, &v, &logits, b, nb, cutv);
@@ -509,7 +528,7 @@ pub fn decode_table(opts: &BenchOptions) -> Result<String> {
         // at the large end (its slowness is the measurement). All three
         // paths get the same warmup so the ratios don't ride on cold
         // caches.
-        let iters = if ell >= 4096 { 1 } else { 3 };
+        let iters = if ell >= 4096 || opts.smoke { 1 } else { 3 };
         let mut t_full = time_iters(
             1,
             iters,
@@ -545,8 +564,12 @@ pub fn decode_table(opts: &BenchOptions) -> Result<String> {
          Gate: incremental within 1e-5 max-abs of the oracle at every step (ell=512).\n",
     );
     save_result(&opts.artifacts, "decode", &s)?;
-    let json_path = write_decode_json(b, d, cut, &cells)?;
-    s.push_str(&format!("machine-readable medians: {}\n", json_path.display()));
+    if opts.smoke {
+        s.push_str("smoke run: BENCH_decode.json left untouched\n");
+    } else {
+        let json_path = write_decode_json(b, d, cut, &cells)?;
+        s.push_str(&format!("machine-readable medians: {}\n", json_path.display()));
+    }
     println!("{s}");
     Ok(s)
 }
@@ -580,6 +603,162 @@ fn write_decode_json(
         ("cells".into(), Json::Arr(rows)),
     ]);
     let path = repo_root().join("BENCH_decode.json");
+    std::fs::write(&path, doc.to_string_pretty() + "\n")?;
+    Ok(path)
+}
+
+/// One measured model cell: wall-clock for one `(depth, mode)` pair.
+struct ModelCell {
+    depth: usize,
+    mode: &'static str,
+    threads: usize,
+    ms: f64,
+}
+
+/// `bench model` — wall-clock of the full multi-layer Sinkhorn Transformer
+/// stack (DESIGN.md §Model) across depths, single-sequence vs batched
+/// serving. Before timing, every depth's engine stack is asserted within
+/// [`ENGINE_TOL`] of the naive per-layer oracle
+/// (`attention::reference_stack_forward`) and the batch path bit-equal to
+/// the single path, so the table can't quietly compare different
+/// computations. Medians land machine-readably in `BENCH_model.json` at
+/// the repo root, next to the engine and decode trajectories.
+pub fn model_table(opts: &BenchOptions) -> Result<String> {
+    // full transformer layers (pre-LN + GELU FFN), multi-head; smoke mode
+    // shrinks every dimension and runs one rep
+    let (ell, depths, heads, d, d_ff, batch_n): (usize, &[usize], usize, usize, usize, usize) =
+        if opts.smoke { (128, &[1, 2], 2, 32, 64, 2) } else { (512, &[1, 2, 4], 4, 64, 128, 8) };
+    let nb = 8;
+    let pool = WorkerPool::new(0);
+    let mut t = Table::new(
+        &format!(
+            "model — depth-L stack forward wall-clock, ell={ell} d={d} heads={heads} \
+             d_ff={d_ff} nb={nb} (batch={batch_n}, pool: {} threads){}",
+            pool.threads(),
+            if opts.smoke { " [SMOKE]" } else { "" }
+        ),
+        &["depth", "params", "single ms", "batch ms", "batch ms/seq", "batch x"],
+    );
+    let mut cells = Vec::new();
+    for &depth in depths {
+        let cfg = StackConfig {
+            seq_len: ell,
+            d_model: d,
+            n_heads: heads,
+            depth,
+            d_ff,
+            nb,
+            sinkhorn_iters: 5,
+            causal: false,
+            n_cut: None,
+        };
+        let mut stack =
+            SinkhornStack::seeded(cfg.clone(), 0x40DE1 ^ depth as u64, SinkhornEngine::auto())?;
+        let mut rng = Rng::new(0x40 ^ (depth * 13) as u64);
+        let x0 = Mat::from_fn(ell, d, |_, _| rng.normal() as f32 * 0.5);
+
+        // correctness gates: engine stack within epsilon of the naive
+        // per-layer oracle; batch path bit-equal to the single path
+        let want = reference_stack_forward(&x0, &stack.cfg, &stack.layers);
+        let mut got = x0.clone();
+        stack.forward(&mut got);
+        let diff = got.max_abs_diff(&want);
+        anyhow::ensure!(
+            diff <= ENGINE_TOL,
+            "stack diverged from the per-layer oracle at depth={depth}: max-abs {diff}"
+        );
+        let mut xs: Vec<Mat> = (0..batch_n).map(|_| x0.clone()).collect();
+        stack.forward_batch(&mut xs, &pool);
+        for (i, xb) in xs.iter().enumerate() {
+            anyhow::ensure!(
+                xb == &got,
+                "batch forward must equal the single forward bit for bit (depth={depth}, seq {i})"
+            );
+        }
+
+        let iters = if opts.smoke { 1 } else { 5 };
+        let mut x = x0.clone();
+        let mut t_single = time_iters(1, iters, || {
+            x.data.copy_from_slice(&x0.data);
+            stack.forward(&mut x);
+        });
+        let mut t_batch = time_iters(1, iters, || {
+            for xb in xs.iter_mut() {
+                xb.data.copy_from_slice(&x0.data);
+            }
+            stack.forward_batch(&mut xs, &pool);
+        });
+        let single = percentile(&mut t_single, 50.0) * 1e3;
+        let batch = percentile(&mut t_batch, 50.0) * 1e3;
+        t.row(&[
+            depth.to_string(),
+            stack.n_params().to_string(),
+            format!("{single:.2}"),
+            format!("{batch:.2}"),
+            format!("{:.2}", batch / batch_n as f64),
+            format!("{:.2}x", single * batch_n as f64 / batch),
+        ]);
+        let single_threads = stack.engine().threads();
+        cells.push(ModelCell { depth, mode: "single", threads: single_threads, ms: single });
+        cells.push(ModelCell { depth, mode: "batch", threads: pool.threads(), ms: batch });
+    }
+    let mut s = t.render();
+    s.push_str(&format!(
+        "single = one sequence through SinkhornStack::forward (parallel engine over\n\
+         (head, block) tasks, pooled per-worker workspaces reused across layers);\n\
+         batch = {batch_n} sequences through forward_batch (request-parallel workers when\n\
+         the batch fills the pool, sequential block-parallel otherwise);\n\
+         batch x = throughput gain vs {batch_n} single passes.\n\
+         Gate: stack within 1e-5 max-abs of the naive per-layer oracle at every depth;\n\
+         batch bit-equal to single.\n",
+    ));
+    save_result(&opts.artifacts, "model", &s)?;
+    if opts.smoke {
+        s.push_str("smoke run: BENCH_model.json left untouched\n");
+    } else {
+        let json_path = write_model_json(ell, nb, d, d_ff, heads, batch_n, &cells)?;
+        s.push_str(&format!("machine-readable medians: {}\n", json_path.display()));
+    }
+    println!("{s}");
+    Ok(s)
+}
+
+/// Emit the model bench machine-readably: one row per `(depth, mode)` with
+/// the median ns/iter, written to `BENCH_model.json` at the repo root (the
+/// stack-side companion of `BENCH_engine.json`/`BENCH_decode.json`).
+#[allow(clippy::too_many_arguments)]
+fn write_model_json(
+    ell: usize,
+    nb: usize,
+    d: usize,
+    d_ff: usize,
+    heads: usize,
+    batch_n: usize,
+    cells: &[ModelCell],
+) -> Result<std::path::PathBuf> {
+    use crate::util::json::Json;
+    let mut rows = Vec::new();
+    for c in cells {
+        rows.push(Json::Obj(vec![
+            ("depth".into(), Json::from(c.depth)),
+            ("heads".into(), Json::from(heads)),
+            ("ell".into(), Json::from(ell)),
+            ("nb".into(), Json::from(nb)),
+            ("b".into(), Json::from(ell / nb)),
+            ("d".into(), Json::from(d)),
+            ("d_ff".into(), Json::from(d_ff)),
+            ("mode".into(), Json::from(c.mode)),
+            ("batch".into(), Json::from(if c.mode == "batch" { batch_n } else { 1 })),
+            ("threads".into(), Json::from(c.threads)),
+            ("ns_per_iter".into(), Json::from((c.ms * 1e6).round())),
+        ]));
+    }
+    let doc = Json::Obj(vec![
+        ("target".into(), Json::from("model")),
+        ("unit".into(), Json::from("ns_per_iter_p50")),
+        ("cells".into(), Json::Arr(rows)),
+    ]);
+    let path = repo_root().join("BENCH_model.json");
     std::fs::write(&path, doc.to_string_pretty() + "\n")?;
     Ok(path)
 }
@@ -676,16 +855,20 @@ fn match_variant<'a>(
 }
 
 /// Does a target train AOT artifacts (and therefore need a PJRT runtime
-/// and registry), or is it runtime-free (`engine`, `decode`, `memory`)?
+/// and registry), or is it runtime-free (`engine`, `decode`, `model`,
+/// `memory`)?
 pub fn target_needs_runtime(target: &str) -> bool {
-    !matches!(target, "engine" | "decode" | "memory")
+    !matches!(target, "engine" | "decode" | "model" | "memory")
 }
 
 /// Optional runtime + registry bootstrap shared by the CLI and the bench
 /// harness: skipped entirely when `needed` is false (runtime-free
 /// targets), and the root cause is printed once when a component is
 /// unavailable — the downstream skip messages only say "unavailable".
-pub fn load_backend(artifacts: &std::path::Path, needed: bool) -> (Option<Runtime>, Option<Registry>) {
+pub fn load_backend(
+    artifacts: &std::path::Path,
+    needed: bool,
+) -> (Option<Runtime>, Option<Registry>) {
     if !needed {
         return (None, None);
     }
@@ -708,12 +891,15 @@ pub fn run_target(
     // validate the name first: a typo'd target must say "unknown", not
     // "needs a PJRT runtime"
     if !ALL_TARGETS.contains(&target) {
-        anyhow::bail!("unknown bench target '{target}' (expected one of {ALL_TARGETS:?}, or 'all')");
+        anyhow::bail!(
+            "unknown bench target '{target}' (expected one of {ALL_TARGETS:?}, or 'all')"
+        );
     }
     if !target_needs_runtime(target) {
         match target {
             "engine" => engine_table(opts)?,
             "decode" => decode_table(opts)?,
+            "model" => model_table(opts)?,
             "memory" => memory_table(opts)?,
             _ => unreachable!(),
         };
@@ -757,5 +943,5 @@ pub fn run_all(rt: Option<&Runtime>, reg: Option<&Registry>, opts: &BenchOptions
 
 pub const ALL_TARGETS: &[&str] = &[
     "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "fig3",
-    "fig4", "memory", "engine", "decode",
+    "fig4", "memory", "engine", "decode", "model",
 ];

@@ -60,15 +60,17 @@ USAGE: sinkhorn <subcommand> [flags]
   list                              experiments in the registry
   train  --exp NAME [--steps N] [--seed S] [--ckpt out.ckpt] [--verbose]
   eval   --exp NAME --ckpt F [--eval-batches N]
-  bench  --target table1..table8|fig3|fig4|memory|engine|decode|all
-         [--scale F] [--steps N] [--fast-decode] [--verbose]
-         (engine + decode + memory run without artifacts/XLA)
+  bench  --target table1..table8|fig3|fig4|memory|engine|decode|model|all
+         [--scale F] [--steps N] [--fast-decode] [--smoke] [--verbose]
+         (engine + decode + model + memory run without artifacts/XLA;
+          --smoke = tiny CI shapes, gates on, BENCH_*.json untouched)
   serve  --exp NAME | --fallback [--seq-len L] [--nb N] [--threads T]
+         [--depth L] [--heads H] [--d-ff F]
          [--ckpt F] [--requests N] [--max-batch B] [--max-wait-ms T]
          [--port P] [--wait]
-         (--fallback serves the pure-Rust engine; no artifacts needed.
-          TCP verbs: '<ids...>' classifies, 'gen <n> <ids...>' decodes —
-          full line protocol in rust/README.md)
+         (--fallback serves the pure-Rust stack; no artifacts needed.
+          TCP verbs: '<ids...>' classifies, 'gen <n> <ids...>' decodes,
+          'model' describes — full line protocol in rust/README.md)
   inspect --exp NAME
 
   global: --artifacts DIR (default ./artifacts or $SINKHORN_ARTIFACTS)"
@@ -156,6 +158,7 @@ fn cmd_bench(args: &Args, artifacts: &PathBuf) -> Result<()> {
         eval_batches: args.usize("eval-batches", 4)?,
         verbose: args.bool("verbose"),
         fast_decode: args.bool("fast-decode"),
+        smoke: args.bool("smoke"),
     };
     // runtime + registry are optional (and skipped entirely for the
     // runtime-free targets): engine/memory run on any machine, including
@@ -189,12 +192,15 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
             seq_len,
             nb: args.usize("nb", sinkhorn::server::FallbackConfig::blocks_for(seq_len))?,
             threads: args.usize("threads", 0)?,
+            depth: args.usize("depth", 1)?,
+            n_heads: args.usize("heads", 1)?,
+            d_ff: args.usize("d-ff", 0)?,
             seed,
             ..Default::default()
         };
         println!(
-            "serving pure-Rust fallback engine (seq_len {}, nb {})",
-            cfg.seq_len, cfg.nb
+            "serving pure-Rust fallback stack (seq_len {}, nb {}, depth {}, heads {}, d_ff {})",
+            cfg.seq_len, cfg.nb, cfg.depth, cfg.n_heads, cfg.d_ff
         );
         Server::start_fallback(cfg, policy)?
     } else {
@@ -264,7 +270,8 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
         let p50 = sinkhorn::util::stats::percentile(&mut latencies.clone(), 50.0);
         let p99 = sinkhorn::util::stats::percentile(&mut latencies.clone(), 99.0);
         println!(
-            "served {n_requests} requests in {total:.2}s ({:.1} req/s) | p50 {p50:.2}ms p99 {p99:.2}ms",
+            "served {n_requests} requests in {total:.2}s ({:.1} req/s) | p50 {p50:.2}ms \
+             p99 {p99:.2}ms",
             n_requests as f64 / total
         );
     }

@@ -1,33 +1,39 @@
-//! Pure-Rust inference fallback: a single-layer Sinkhorn-attention
-//! classifier that runs entirely on the blocked engine
-//! (`sinkhorn::engine`, DESIGN.md §Engine) — no XLA, no compiled
-//! artifacts, no Python. The server selects it when an experiment's HLO
-//! artifacts (or the PJRT runtime itself) are unavailable, so the full
-//! serving stack — TCP frontend, dynamic batcher, executor — works on any
-//! machine straight from `cargo run`.
+//! Pure-Rust inference fallback: a Sinkhorn Transformer stack
+//! ([`SinkhornStack`], DESIGN.md §Model) over the blocked streaming engine
+//! — no XLA, no compiled artifacts, no Python. The server selects it when
+//! an experiment's HLO artifacts (or the PJRT runtime itself) are
+//! unavailable, so the full serving stack — TCP frontend, dynamic batcher,
+//! executor — works on any machine straight from `cargo run`.
 //!
 //! The model is deliberately small and deterministic from its seed:
-//! embedding + sinusoid-free learned-style positional table, one
-//! multi-part attention step (SortNet -> Sinkhorn balance -> blocked
-//! sorted+local attention), residual mean-pool, linear head. It is not
-//! trained (there is no training path without XLA); what it demonstrates
-//! and exercises is the *serving* pipeline and the engine hot path with
-//! production shapes.
+//! embedding + learned-style positional table, a depth-`L` stack of
+//! Sinkhorn Transformer layers (per-layer SortNet → multi-head blocked
+//! sorted+local attention → residual → optional pre-LN GELU FFN), then a
+//! task head. It is not trained (there is no training path without XLA);
+//! what it demonstrates and exercises is the *serving* pipeline and the
+//! engine hot path with production shapes.
 //!
-//! Two serving verbs share the weights: `classify` (batch attention over
-//! the padded sequence, pooled head) and `generate` (token-by-token greedy
-//! decoding on the incremental decode path with a tied-embedding LM head —
+//! The default configuration (`depth = 1`, one head, no FFN) is
+//! **bit-identical** to the historical pre-stack single-layer fallback:
+//! same seeded weights in the same RNG order, same naive-order
+//! projections, same engine attention path (`tests/model_props.rs` and the
+//! unit tests below pin this). Deeper configurations stack full pre-LN
+//! transformer layers.
+//!
+//! Two serving verbs share the weights: `classify` (batch stack forward,
+//! pooled head) and `generate` (token-by-token greedy decoding on the
+//! depth-L incremental decode path with a tied-embedding LM head —
 //! DESIGN.md §Decode). Both are exposed through the TCP line protocol
-//! (`super::tcp`, documented in `rust/README.md`).
+//! (`super::tcp`, documented in `rust/README.md`), alongside the `model`
+//! info verb that reports this configuration.
 
 use anyhow::Result;
 
-use crate::sinkhorn::balance;
-use crate::sinkhorn::matrix::Mat;
-use crate::sinkhorn::{AttentionReq, DecodeScratch, DecodeState, SinkhornEngine, WorkerPool};
+use crate::sinkhorn::model::{StackConfig, TransformerLayer};
+use crate::sinkhorn::{Mat, SinkhornEngine, SinkhornStack, WorkerPool};
 use crate::util::rng::Rng;
 
-/// Configuration of the fallback classifier.
+/// Configuration of the fallback model.
 #[derive(Debug, Clone)]
 pub struct FallbackConfig {
     /// token ids are wrapped into `[0, vocab)` so any client input is safe
@@ -43,6 +49,12 @@ pub struct FallbackConfig {
     pub seed: u64,
     /// engine worker threads (0 = auto)
     pub threads: usize,
+    /// transformer layers (1 = the historical single-layer model)
+    pub depth: usize,
+    /// attention heads per layer; must divide `d_model`
+    pub n_heads: usize,
+    /// FFN hidden width; 0 = bare attention layers (the historical shape)
+    pub d_ff: usize,
 }
 
 impl Default for FallbackConfig {
@@ -60,14 +72,19 @@ impl Default for FallbackConfig {
             sinkhorn_iters: 5,
             seed: 17,
             threads: 0,
+            depth: 1,
+            n_heads: 1,
+            d_ff: 0,
         }
     }
 }
 
-/// f32-element work below which the engine's per-call thread spawn costs
-/// more than it buys: per request for the single-request engine choice,
-/// per *batch* (total flattened work) for `classify_batch`. One constant
-/// so the two heuristics cannot drift apart.
+/// f32-element work (depth × seq_len × d_model) below which the engine's
+/// per-call thread spawn costs more than it buys for a *single* request —
+/// below it "auto" picks the serial engine. Large batches parallelize at
+/// request granularity over `batch_pool`; batches too small to fill the
+/// pool run sequentially on this same engine, so the cutoff governs them
+/// too (`SinkhornStack::forward_batch`).
 const SERIAL_WORK_CUTOFF: usize = 1 << 17;
 
 impl FallbackConfig {
@@ -81,29 +98,43 @@ impl FallbackConfig {
         }
         1
     }
+
+    /// The historical pre-stack shape: one bare single-head layer. This is
+    /// the configuration whose outputs are pinned bit-identical to the
+    /// pre-stack fallback.
+    fn legacy_shape(&self) -> bool {
+        self.depth == 1 && self.n_heads == 1 && self.d_ff == 0
+    }
+
+    fn stack_config(&self) -> StackConfig {
+        StackConfig {
+            seq_len: self.seq_len,
+            d_model: self.d_model,
+            n_heads: self.n_heads,
+            depth: self.depth,
+            d_ff: self.d_ff,
+            nb: self.nb,
+            sinkhorn_iters: self.sinkhorn_iters,
+            causal: false,
+            n_cut: None,
+        }
+    }
 }
 
-/// The deterministic fallback classifier.
+/// The deterministic fallback model: embeddings + a [`SinkhornStack`] +
+/// task heads (linear classifier; tied-embedding LM head for decode).
 pub struct FallbackModel {
     pub cfg: FallbackConfig,
-    engine: SinkhornEngine,
-    /// request-level parallelism for the batched prep/head phases
+    /// request-level parallelism for the batched paths: each worker runs
+    /// whole requests through the stack with a private scratch (depth-L
+    /// stacks make request tasks coarse enough to saturate the pool)
     batch_pool: WorkerPool,
-    /// batched attention phase: the whole batch's `(request, head, block)`
-    /// tasks land in one pool pass (`SinkhornEngine::attention_batch_into`),
-    /// so serving traffic saturates the workers even though each single
-    /// request is too small to justify a per-request fan-out
-    batch_engine: SinkhornEngine,
     /// (vocab, d) token embeddings
     embed: Mat,
     /// (seq_len, d) positional table
     pos: Mat,
-    wq: Mat,
-    wk: Mat,
-    wv: Mat,
-    wo: Mat,
-    /// (d, nb) SortNet head: block descriptor -> destination-block logits
-    sortnet: Mat,
+    /// the depth-L Sinkhorn Transformer stack
+    stack: SinkhornStack,
     /// (d, n_classes) classification head
     w_cls: Mat,
 }
@@ -116,6 +147,8 @@ impl FallbackModel {
         if cfg.vocab == 0 || cfg.n_classes == 0 {
             anyhow::bail!("fallback: vocab and n_classes must be positive");
         }
+        let scfg = cfg.stack_config();
+        scfg.validate()?;
         let d = cfg.d_model;
         let mut rng = Rng::new(cfg.seed);
         let mut init = |rows: usize, cols: usize, scale: f64| {
@@ -126,46 +159,84 @@ impl FallbackModel {
         // At serving shapes (seq_len ~128) one request's blocks are
         // microseconds of work — below the pool's per-call thread-spawn
         // cost — so for *single* requests "auto" means serial unless the
-        // request is big enough for the parallel engine to pay off. An
-        // explicit threads count wins. Batches don't use this engine:
-        // `classify_batch` amortizes the spawn over the whole batch's
-        // (request, head, block) tasks via `batch_engine`.
-        let engine = if cfg.threads == 0 && cfg.seq_len * cfg.d_model < SERIAL_WORK_CUTOFF {
+        // request (depth included) is big enough for the parallel engine
+        // to pay off. An explicit threads count wins. Batches fan whole
+        // requests over `batch_pool` instead.
+        let single_work = cfg.depth * cfg.seq_len * cfg.d_model;
+        let engine = if cfg.threads == 0 && single_work < SERIAL_WORK_CUTOFF {
             SinkhornEngine::serial()
         } else {
             SinkhornEngine::new(cfg.threads)
         };
+        // The legacy shape must draw its weights with exactly the
+        // historical fork sequence (embed, pos, wq, wk, wv, wo, sortnet,
+        // w_cls) so the depth-1 model stays bit-identical to the pre-stack
+        // fallback; deeper/wider stacks seed per layer instead.
+        let embed = init(cfg.vocab, d, 0.1);
+        let pos = init(cfg.seq_len, d, 0.05);
+        let layers: Vec<TransformerLayer> = if cfg.legacy_shape() {
+            vec![TransformerLayer::bare_single_head(
+                init(d, d, wscale),
+                init(d, d, wscale),
+                init(d, d, wscale),
+                init(d, d, wscale),
+                init(d, cfg.nb, wscale),
+            )]
+        } else {
+            // non-legacy shapes have no bitwise heritage: seed the layers
+            // from their own stream (`init` still holds the main rng)
+            let mut layer_rng = Rng::new(cfg.seed ^ 0x57AC_11A9);
+            (0..cfg.depth)
+                .map(|l| {
+                    let mut lr = layer_rng.fork(0x57AC + l as u64);
+                    TransformerLayer::seeded(&scfg, &mut lr)
+                })
+                .collect()
+        };
+        let w_cls = init(d, cfg.n_classes, wscale);
+        let stack = SinkhornStack::new(scfg, layers, engine)?;
         Ok(FallbackModel {
-            engine,
             batch_pool: WorkerPool::new(cfg.threads),
-            batch_engine: SinkhornEngine::new(cfg.threads),
-            embed: init(cfg.vocab, d, 0.1),
-            pos: init(cfg.seq_len, d, 0.05),
-            wq: init(d, d, wscale),
-            wk: init(d, d, wscale),
-            wv: init(d, d, wscale),
-            wo: init(d, d, wscale),
-            sortnet: init(d, cfg.nb, wscale),
-            w_cls: init(d, cfg.n_classes, wscale),
+            embed,
+            pos,
+            stack,
+            w_cls,
             cfg,
         })
     }
 
-    /// Class logits for one request (tokens are wrapped into the vocab and
-    /// padded/truncated to `seq_len`). Batched traffic goes through
-    /// [`Self::classify_batch`] instead — same math, pooled scheduling.
-    pub fn class_logits(&self, tokens: &[i32]) -> Vec<f32> {
-        let p = self.prep(tokens);
-        let mut ctx = Mat::zeros(self.cfg.seq_len, self.cfg.d_model);
-        self.engine.attention_into(&p.q, &p.k, &p.v, &p.r, self.cfg.nb, false, &mut ctx);
-        self.head(&p.x, &ctx)
+    /// One-line `key=value` description of the served model (the TCP
+    /// `model` verb's payload — `super::tcp`).
+    pub fn describe(&self) -> String {
+        let c = &self.cfg;
+        format!(
+            "backend=fallback depth={} heads={} d_model={} d_ff={} nb={} seq_len={} vocab={} \
+             classes={} sinkhorn_iters={} engine_threads={} batch_workers={} params={}",
+            c.depth,
+            c.n_heads,
+            c.d_model,
+            c.d_ff,
+            c.nb,
+            c.seq_len,
+            c.vocab,
+            c.n_classes,
+            c.sinkhorn_iters,
+            self.stack.engine().threads(),
+            self.batch_pool.threads(),
+            self.n_params(),
+        )
     }
 
-    /// Per-request prelude shared by the single and batched paths: embed
-    /// tokens, project q/k/v, and balance the SortNet's sort matrix.
-    fn prep(&self, tokens: &[i32]) -> Prep {
-        let (ell, d, nb) = (self.cfg.seq_len, self.cfg.d_model, self.cfg.nb);
-        // embed + position
+    /// Total parameters (embeddings + stack + classifier head; the LM head
+    /// is tied to the embeddings).
+    pub fn n_params(&self) -> usize {
+        self.embed.data.len() + self.pos.data.len() + self.stack.n_params() + self.w_cls.data.len()
+    }
+
+    /// Embed tokens (wrapped into the vocab, padded/truncated to
+    /// `seq_len`) plus positions.
+    fn embed_seq(&self, tokens: &[i32]) -> Mat {
+        let (ell, d) = (self.cfg.seq_len, self.cfg.d_model);
         let mut x = Mat::zeros(ell, d);
         for t in 0..ell {
             let tok = tokens.get(t).copied().unwrap_or(0); // PAD
@@ -175,42 +246,23 @@ impl FallbackModel {
                 *o = er[c] + pr[c];
             }
         }
-        let q = x.matmul(&self.wq);
-        let k = x.matmul(&self.wk);
-        let v = x.matmul(&self.wv);
-        // SortNet: mean-pooled block descriptors -> (nb, nb) logits -> balance
-        let b = ell / nb;
-        let mut blk = Mat::zeros(nb, d);
-        for i in 0..nb {
-            for t in 0..b {
-                let xr = x.row(i * b + t);
-                for (c, o) in blk.row_mut(i).iter_mut().enumerate() {
-                    *o += xr[c];
-                }
-            }
-        }
-        blk.scale(1.0 / b as f32);
-        let r = balance::sinkhorn(&blk.matmul(&self.sortnet), self.cfg.sinkhorn_iters);
-        Prep { x, q, k, v, r }
+        x
     }
 
-    /// Output projection, residual mean-pool and classification head over
-    /// a computed attention context.
-    fn head(&self, x: &Mat, attn_ctx: &Mat) -> Vec<f32> {
+    /// Mean-pool the stack's final hidden states and apply the linear
+    /// classification head.
+    fn pool_head(&self, y: &Mat) -> Vec<f32> {
         let (ell, d) = (self.cfg.seq_len, self.cfg.d_model);
-        let ctx = attn_ctx.matmul(&self.wo);
-        // residual + mean pool
         let mut h = vec![0.0f32; d];
         for t in 0..ell {
-            let (xr, cr) = (x.row(t), ctx.row(t));
+            let yr = y.row(t);
             for c in 0..d {
-                h[c] += xr[c] + cr[c];
+                h[c] += yr[c];
             }
         }
         for v in &mut h {
             *v /= ell as f32;
         }
-        // linear head
         let mut logits = vec![0.0f32; self.cfg.n_classes];
         for (c, &hc) in h.iter().enumerate() {
             let wr = self.w_cls.row(c);
@@ -221,18 +273,47 @@ impl FallbackModel {
         logits
     }
 
+    /// Class logits for one request. Batched traffic goes through
+    /// [`Self::classify_batch`] instead — same math per request.
+    pub fn class_logits(&self, tokens: &[i32]) -> Vec<f32> {
+        let mut x = self.embed_seq(tokens);
+        let mut scratch = self.stack.new_scratch();
+        self.stack.forward_with(&mut x, self.stack.engine(), &mut scratch);
+        self.pool_head(&x)
+    }
+
     /// Predicted label for one request.
     pub fn classify(&self, tokens: &[i32]) -> i32 {
         argmax(&self.class_logits(tokens))
     }
 
-    /// Greedy autoregressive generation on the incremental decode path
-    /// (DESIGN.md §Decode): feed `prompt` through a per-sequence
-    /// [`DecodeState`] token by token, then keep sampling the argmax of
-    /// the tied-embedding LM head (`h_t · Eᵀ` — the same embedding matrix
-    /// that encodes the input, so the model needs no separate output
-    /// projection) until `max_new` tokens exist or the positional table
-    /// runs out. Returns only the newly generated ids.
+    /// Labels for a batch of requests (executor entry point): embed
+    /// request-parallel, run the whole batch through
+    /// [`SinkhornStack::forward_batch`] (request-level tasks, one private
+    /// scratch per worker, serial engine inside the pool), then pool the
+    /// heads. Per-request math is identical to the single-request path, so
+    /// batched and single labels agree exactly.
+    pub fn classify_batch(&self, batch: &[Vec<i32>]) -> Vec<i32> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let mut xs: Vec<Mat> = batch.iter().map(|toks| self.embed_seq(toks)).collect();
+        self.stack.forward_batch(&mut xs, &self.batch_pool);
+        let mut labels = vec![0i32; batch.len()];
+        let tasks: Vec<(usize, &mut i32)> = labels.iter_mut().enumerate().collect();
+        self.batch_pool.run(tasks, || (), |_, (i, slot)| {
+            *slot = argmax(&self.pool_head(&xs[i]));
+        });
+        labels
+    }
+
+    /// Greedy autoregressive generation on the depth-L incremental decode
+    /// path (DESIGN.md §Model, §Decode): feed `prompt` through a
+    /// per-sequence [`crate::sinkhorn::StackDecodeState`] token by token,
+    /// then keep sampling the argmax of the tied-embedding LM head
+    /// (`h_t · Eᵀ` — the same embedding matrix that encodes the input)
+    /// until `max_new` tokens exist or the positional table runs out.
+    /// Returns only the newly generated ids.
     ///
     /// Capacity rule: the model has `seq_len` positions. The prompt is
     /// truncated to the first `seq_len - 1` tokens (mirroring `classify`'s
@@ -241,13 +322,13 @@ impl FallbackModel {
     /// An empty prompt decodes from the PAD token 0. Deterministic: same
     /// prompt, same model seed, same output — batched or not.
     pub fn generate(&self, prompt: &[i32], max_new: usize) -> Vec<i32> {
-        let mut scratch = DecodeScratch::new();
+        let mut scratch = self.stack.new_decode_scratch();
         self.generate_one(prompt, max_new, &mut scratch)
     }
 
     /// [`Self::generate`] for a batch of `(prompt, max_new)` requests
     /// (executor entry point): requests fan out over the worker pool, one
-    /// sequence per task, each worker reusing one [`DecodeScratch`]. Per
+    /// sequence per task, each worker reusing one decode scratch. Per
     /// sequence the math is identical to the single-request path, so
     /// batched and single generations agree exactly.
     pub fn generate_batch(&self, reqs: &[(Vec<i32>, usize)]) -> Vec<Vec<i32>> {
@@ -256,26 +337,27 @@ impl FallbackModel {
         }
         let mut outs: Vec<Vec<i32>> = reqs.iter().map(|_| Vec::new()).collect();
         let tasks: Vec<(usize, &mut Vec<i32>)> = outs.iter_mut().enumerate().collect();
-        self.batch_pool.run(tasks, DecodeScratch::new, |scratch, (i, slot)| {
-            *slot = self.generate_one(&reqs[i].0, reqs[i].1, scratch);
-        });
+        self.batch_pool.run(
+            tasks,
+            || self.stack.new_decode_scratch(),
+            |scratch, (i, slot)| {
+                *slot = self.generate_one(&reqs[i].0, reqs[i].1, scratch);
+            },
+        );
         outs
     }
 
-    /// One sequence's greedy decode loop. Per step: embed the token, the
-    /// engine's incremental step ([`DecodeState::step_into`] — cached
-    /// causal Sinkhorn state, O(b·d)), then the tied LM head when a new
-    /// token is due.
-    ///
-    /// Decode-time SortNet rule (DESIGN.md §Decode): the batch model feeds
-    /// each block's own mean descriptor through the SortNet, but a block's
-    /// descriptor only exists once the block is complete — so here the
-    /// sort-logit row of block `i + 1` is produced from block `i`'s mean
-    /// descriptor the moment block `i` fills. Rows are only ever written
-    /// before the causal balance first reads them, and never rewritten.
-    fn generate_one(&self, prompt: &[i32], max_new: usize, scratch: &mut DecodeScratch) -> Vec<i32> {
-        let (ell_cap, d, nb) = (self.cfg.seq_len, self.cfg.d_model, self.cfg.nb);
-        let b = ell_cap / nb;
+    /// One sequence's greedy decode loop. Per step: embed the token, one
+    /// [`SinkhornStack::decode_step`] through every layer (cached causal
+    /// Sinkhorn state per layer per head, O(depth·b·d)), then the tied LM
+    /// head when a new token is due.
+    fn generate_one(
+        &self,
+        prompt: &[i32],
+        max_new: usize,
+        scratch: &mut crate::sinkhorn::StackDecodeScratch,
+    ) -> Vec<i32> {
+        let (ell_cap, d) = (self.cfg.seq_len, self.cfg.d_model);
         let seeded = [0i32]; // empty prompt: decode from PAD
         let prompt: &[i32] = if prompt.is_empty() { &seeded } else { prompt };
         let keep = prompt.len().min(ell_cap.saturating_sub(1).max(1));
@@ -283,11 +365,8 @@ impl FallbackModel {
         if budget == 0 {
             return Vec::new();
         }
-        let mut st = DecodeState::new(b, d, nb, self.cfg.sinkhorn_iters, None);
-        let mut sort_logits = Mat::zeros(nb, nb);
-        let mut desc_acc = vec![0.0f32; d];
+        let mut st = self.stack.decode_state();
         let mut x = vec![0.0f32; d];
-        let mut ctx = vec![0.0f32; d];
         let mut h = vec![0.0f32; d];
         let mut gen: Vec<i32> = Vec::with_capacity(budget);
         // the final generated token needs no step of its own
@@ -298,32 +377,9 @@ impl FallbackModel {
             for (c, xo) in x.iter_mut().enumerate() {
                 *xo = er[c] + pr[c];
             }
-            let q = row_times(&x, &self.wq);
-            let kr = row_times(&x, &self.wk);
-            let vr = row_times(&x, &self.wv);
-            st.step_into(&q, &kr, &vr, &sort_logits, scratch, &mut ctx);
-            for (c, a) in desc_acc.iter_mut().enumerate() {
-                *a += x[c];
-            }
-            if (t + 1) % b == 0 {
-                // block t/b filled: its mean descriptor becomes the next
-                // block's sort-logit row
-                let i = t / b;
-                if i + 1 < nb {
-                    for a in desc_acc.iter_mut() {
-                        *a /= b as f32;
-                    }
-                    let row = row_times(&desc_acc, &self.sortnet);
-                    sort_logits.row_mut(i + 1).copy_from_slice(&row);
-                }
-                desc_acc.fill(0.0);
-            }
+            self.stack.decode_step(&mut st, &x, scratch, &mut h);
             if t + 1 >= keep {
-                // tied-embedding LM head over h_t = x_t + ctx_t @ wo
-                let proj = row_times(&ctx, &self.wo);
-                for (c, ho) in h.iter_mut().enumerate() {
-                    *ho = x[c] + proj[c];
-                }
+                // tied-embedding LM head over the final hidden row
                 let (mut best, mut best_v) = (0usize, f32::NEG_INFINITY);
                 for vtok in 0..self.cfg.vocab {
                     let ev = self.embed.row(vtok);
@@ -341,84 +397,6 @@ impl FallbackModel {
         }
         gen
     }
-
-    /// Labels for a batch of requests (executor entry point) — three
-    /// phases, each one pool pass over the whole batch:
-    ///
-    /// 1. **prep** (request-parallel): embedding, q/k/v projections,
-    ///    SortNet balance;
-    /// 2. **attention** (batch×block-parallel): the batch is flattened to
-    ///    `(request, head, block)` tasks via
-    ///    [`SinkhornEngine::attention_batch_into`], so even a batch of
-    ///    small requests keeps every worker busy — the previous scheme ran
-    ///    whole requests serially through a per-request engine;
-    /// 3. **head** (request-parallel): output projection, pooling, argmax.
-    ///
-    /// The per-block math is identical to the single-request path, so
-    /// batched and single labels agree exactly.
-    pub fn classify_batch(&self, batch: &[Vec<i32>]) -> Vec<i32> {
-        if batch.is_empty() {
-            return Vec::new();
-        }
-        let (ell, d, nb) = (self.cfg.seq_len, self.cfg.d_model, self.cfg.nb);
-        // phase 1 — prep
-        let mut preps: Vec<Option<Prep>> = batch.iter().map(|_| None).collect();
-        {
-            let tasks: Vec<(usize, &mut Option<Prep>)> = preps.iter_mut().enumerate().collect();
-            self.batch_pool.run(tasks, || (), |_, (i, slot)| *slot = Some(self.prep(&batch[i])));
-        }
-        let preps: Vec<Prep> = preps.into_iter().map(|p| p.expect("prep phase ran")).collect();
-        // phase 2 — attention over the flattened task domain
-        let reqs: Vec<AttentionReq> = preps
-            .iter()
-            .map(|p| AttentionReq { q: &p.q, k: &p.k, v: &p.v, r: &p.r, nb, causal: false })
-            .collect();
-        let mut ctxs: Vec<Mat> = batch.iter().map(|_| Mat::zeros(ell, d)).collect();
-        // a batch whose *total* flattened work sits below the thread-spawn
-        // payoff runs serially — same cutoff as the single-request engine
-        // choice, scaled by batch size; an explicit threads count still
-        // wins via batch_engine
-        if self.cfg.threads == 0 && batch.len() * ell * d < SERIAL_WORK_CUTOFF {
-            SinkhornEngine::serial().attention_batch_into(&reqs, &mut ctxs);
-        } else {
-            self.batch_engine.attention_batch_into(&reqs, &mut ctxs);
-        }
-        // phase 3 — heads
-        let mut labels = vec![0i32; batch.len()];
-        let tasks: Vec<(usize, &mut i32)> = labels.iter_mut().enumerate().collect();
-        self.batch_pool.run(tasks, || (), |_, (i, slot)| {
-            *slot = argmax(&self.head(&preps[i].x, &ctxs[i]));
-        });
-        labels
-    }
-}
-
-/// Per-request tensors produced by the prep phase and consumed by the
-/// attention + head phases.
-struct Prep {
-    x: Mat,
-    q: Mat,
-    k: Mat,
-    v: Mat,
-    r: Mat,
-}
-
-/// Row-vector times matrix: `out[j] = Σ_c x[c] * w[c, j]` — the decode
-/// loop's per-token projection (same accumulation order as `Mat::matmul`
-/// on a 1-row left operand, so single and batched paths agree bitwise).
-fn row_times(x: &[f32], w: &Mat) -> Vec<f32> {
-    debug_assert_eq!(x.len(), w.rows);
-    let mut out = vec![0.0f32; w.cols];
-    for (c, &a) in x.iter().enumerate() {
-        if a == 0.0 {
-            continue;
-        }
-        let wr = w.row(c);
-        for (o, &wv) in out.iter_mut().zip(wr) {
-            *o += a * wv;
-        }
-    }
-    out
 }
 
 fn argmax(logits: &[f32]) -> i32 {
@@ -434,6 +412,7 @@ fn argmax(logits: &[f32]) -> i32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sinkhorn::balance;
 
     fn model() -> FallbackModel {
         FallbackModel::new(FallbackConfig {
@@ -441,6 +420,20 @@ mod tests {
             d_model: 16,
             nb: 4,
             vocab: 64,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn deep_model() -> FallbackModel {
+        FallbackModel::new(FallbackConfig {
+            seq_len: 32,
+            d_model: 16,
+            nb: 4,
+            vocab: 64,
+            depth: 2,
+            n_heads: 2,
+            d_ff: 32,
             ..Default::default()
         })
         .unwrap()
@@ -454,24 +447,77 @@ mod tests {
         assert_eq!(a.classify(&toks), b.classify(&toks));
     }
 
+    /// The depth-1 default must reproduce the *pre-stack* fallback math
+    /// bitwise: embed + position, q/k/v via `Mat::matmul`, SortNet from
+    /// mean-pooled block descriptors, one engine attention pass, `ctx @
+    /// wo`, residual mean-pool, linear head — the historical inline body,
+    /// reconstructed here from the model's own weights.
+    #[test]
+    fn depth1_stack_matches_legacy_inline_math_bitwise() {
+        let m = model();
+        let layer = &m.stack.layers[0];
+        let (ell, d, nb) = (m.cfg.seq_len, m.cfg.d_model, m.cfg.nb);
+        let toks: Vec<i32> = (0..32).map(|i| (i * 11 + 3) % 64).collect();
+        // legacy prep
+        let x = m.embed_seq(&toks);
+        let q = x.matmul(&layer.wq[0]);
+        let k = x.matmul(&layer.wk[0]);
+        let v = x.matmul(&layer.wv[0]);
+        let b = ell / nb;
+        let mut blk = Mat::zeros(nb, d);
+        for i in 0..nb {
+            for t in 0..b {
+                let xr = x.row(i * b + t);
+                for (c, o) in blk.row_mut(i).iter_mut().enumerate() {
+                    *o += xr[c];
+                }
+            }
+        }
+        blk.scale(1.0 / b as f32);
+        let r = balance::sinkhorn(&blk.matmul(&layer.sortnet), m.cfg.sinkhorn_iters);
+        let mut ctx = Mat::zeros(ell, d);
+        m.stack.engine().attention_into(&q, &k, &v, &r, nb, false, &mut ctx);
+        // legacy head
+        let ctxp = ctx.matmul(&layer.wo[0]);
+        let mut h = vec![0.0f32; d];
+        for t in 0..ell {
+            let (xr, cr) = (x.row(t), ctxp.row(t));
+            for c in 0..d {
+                h[c] += xr[c] + cr[c];
+            }
+        }
+        for hv in &mut h {
+            *hv /= ell as f32;
+        }
+        let mut want = vec![0.0f32; m.cfg.n_classes];
+        for (c, &hc) in h.iter().enumerate() {
+            let wr = m.w_cls.row(c);
+            for (j, l) in want.iter_mut().enumerate() {
+                *l += hc * wr[j];
+            }
+        }
+        assert_eq!(m.class_logits(&toks), want, "depth-1 stack drifted from the legacy math");
+    }
+
     #[test]
     fn labels_in_range_and_inputs_matter() {
-        let m = model();
-        let mut seen = std::collections::HashSet::new();
-        for s in 0..24 {
-            let toks: Vec<i32> = (0..32).map(|i| (i * (s + 3) + s) % 64).collect();
-            let label = m.classify(&toks);
-            assert!((0..m.cfg.n_classes as i32).contains(&label));
-            let lg = m.class_logits(&toks);
-            assert!(lg.iter().all(|x| x.is_finite()));
-            seen.insert(format!("{lg:?}"));
+        for m in [model(), deep_model()] {
+            let mut seen = std::collections::HashSet::new();
+            for s in 0..24 {
+                let toks: Vec<i32> = (0..32).map(|i| (i * (s + 3) + s) % 64).collect();
+                let label = m.classify(&toks);
+                assert!((0..m.cfg.n_classes as i32).contains(&label));
+                let lg = m.class_logits(&toks);
+                assert!(lg.iter().all(|x| x.is_finite()));
+                seen.insert(format!("{lg:?}"));
+            }
+            assert!(seen.len() > 1, "logits must depend on the input (depth {})", m.cfg.depth);
         }
-        assert!(seen.len() > 1, "logits must depend on the input");
     }
 
     #[test]
     fn handles_short_long_and_hostile_token_ids() {
-        let m = model();
+        let m = deep_model();
         // short (padded), long (truncated), out-of-range ids (wrapped)
         let short = m.classify(&[1, 2, 3]);
         let long = m.classify(&vec![5; 500]);
@@ -483,34 +529,38 @@ mod tests {
 
     #[test]
     fn batch_matches_single() {
-        let m = model();
-        let reqs: Vec<Vec<i32>> = (0..5).map(|s| (0..32).map(|i| (i + s) % 64).collect()).collect();
-        let batch = m.classify_batch(&reqs);
-        for (r, &want) in reqs.iter().zip(&batch) {
-            assert_eq!(m.classify(r), want);
+        for m in [model(), deep_model()] {
+            let reqs: Vec<Vec<i32>> =
+                (0..5).map(|s| (0..32).map(|i| (i + s) % 64).collect()).collect();
+            let batch = m.classify_batch(&reqs);
+            for (r, &want) in reqs.iter().zip(&batch) {
+                assert_eq!(m.classify(r), want, "depth {}", m.cfg.depth);
+            }
         }
     }
 
     #[test]
     fn generate_is_deterministic_and_in_vocab() {
-        let m = model();
-        let prompt: Vec<i32> = (0..10).map(|i| (i * 5) % 64).collect();
-        let a = m.generate(&prompt, 8);
-        let b = m.generate(&prompt, 8);
-        assert_eq!(a, b);
-        assert_eq!(a.len(), 8);
-        assert!(a.iter().all(|&t| (0..m.cfg.vocab as i32).contains(&t)));
+        for m in [model(), deep_model()] {
+            let prompt: Vec<i32> = (0..10).map(|i| (i * 5) % 64).collect();
+            let a = m.generate(&prompt, 8);
+            let b = m.generate(&prompt, 8);
+            assert_eq!(a, b);
+            assert_eq!(a.len(), 8);
+            assert!(a.iter().all(|&t| (0..m.cfg.vocab as i32).contains(&t)));
+        }
     }
 
     #[test]
     fn generate_prefix_stable() {
         // greedy decoding is incremental: asking for fewer tokens yields a
-        // prefix of asking for more
-        let m = model();
-        let prompt: Vec<i32> = (0..7).map(|i| i * 3 + 1).collect();
-        let long = m.generate(&prompt, 6);
-        for n in 1..6 {
-            assert_eq!(&m.generate(&prompt, n)[..], &long[..n], "n={n}");
+        // prefix of asking for more — through the full depth-L stack
+        for m in [model(), deep_model()] {
+            let prompt: Vec<i32> = (0..7).map(|i| i * 3 + 1).collect();
+            let long = m.generate(&prompt, 6);
+            for n in 1..6 {
+                assert_eq!(&m.generate(&prompt, n)[..], &long[..n], "depth {} n={n}", m.cfg.depth);
+            }
         }
     }
 
@@ -538,14 +588,25 @@ mod tests {
 
     #[test]
     fn generate_batch_matches_single() {
-        let m = model();
-        let reqs: Vec<(Vec<i32>, usize)> = (0..5)
-            .map(|s| ((0..8).map(|i| (i * 7 + s) % 64).collect(), 3 + s as usize % 3))
-            .collect();
-        let batch = m.generate_batch(&reqs);
-        for ((prompt, max_new), got) in reqs.iter().zip(&batch) {
-            assert_eq!(&m.generate(prompt, *max_new), got);
+        for m in [model(), deep_model()] {
+            let reqs: Vec<(Vec<i32>, usize)> = (0..5)
+                .map(|s| ((0..8).map(|i| (i * 7 + s) % 64).collect(), 3 + s as usize % 3))
+                .collect();
+            let batch = m.generate_batch(&reqs);
+            for ((prompt, max_new), got) in reqs.iter().zip(&batch) {
+                assert_eq!(&m.generate(prompt, *max_new), got, "depth {}", m.cfg.depth);
+            }
         }
+    }
+
+    #[test]
+    fn describe_reports_the_stack_shape() {
+        let m = deep_model();
+        let s = m.describe();
+        for want in ["backend=fallback", "depth=2", "heads=2", "d_ff=32", "seq_len=32"] {
+            assert!(s.contains(want), "describe() missing {want}: {s}");
+        }
+        assert_eq!(s.lines().count(), 1, "describe() must stay one line");
     }
 
     #[test]
@@ -559,5 +620,13 @@ mod tests {
     fn rejects_bad_config() {
         assert!(FallbackModel::new(FallbackConfig { seq_len: 30, nb: 8, ..Default::default() })
             .is_err());
+        // n_heads must divide d_model
+        assert!(FallbackModel::new(FallbackConfig {
+            d_model: 64,
+            n_heads: 3,
+            d_ff: 16,
+            ..Default::default()
+        })
+        .is_err());
     }
 }

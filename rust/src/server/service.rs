@@ -35,6 +35,8 @@ use super::fallback::{FallbackConfig, FallbackModel};
 enum Work {
     Classify(Vec<i32>),
     Generate { tokens: Vec<i32>, max_new: usize },
+    /// report the served model's configuration (one `key=value` line)
+    Info,
 }
 
 /// One inference request.
@@ -61,6 +63,9 @@ pub struct Response {
     pub label: i32,
     /// `Some(ids)` for generate requests: the newly generated token ids.
     pub gen: Option<Vec<i32>>,
+    /// `Some(line)` for model-info requests: the served model described as
+    /// one `key=value` line (depth/heads/config — the TCP `model` verb).
+    pub info: Option<String>,
     /// time spent waiting in the batcher
     pub queue: Duration,
     /// total time from submit to reply
@@ -88,6 +93,12 @@ impl ServerHandle {
         self.submit(Work::Generate { tokens, max_new })
     }
 
+    /// Blocking model-info call: the served model's configuration as one
+    /// `key=value` line ([`Response::info`] — the TCP `model` verb).
+    pub fn model_info(&self) -> Result<Response> {
+        self.submit(Work::Info)
+    }
+
     fn submit(&self, work: Work) -> Result<Response> {
         let (rtx, rrx) = channel();
         let req = Request { work, enqueued: Instant::now(), resp: rtx };
@@ -108,11 +119,13 @@ pub struct Server {
 /// this loop; only the closures differ. `generate: None` (the artifact
 /// backend — its exported graphs have no decode entry) answers every
 /// generate request with a stable per-request error instead of failing the
-/// batch. Token rows are moved out of the requests (no per-request copies
-/// on this path).
+/// batch. Model-info requests are answered from the precomputed `info`
+/// line without touching the backend. Token rows are moved out of the
+/// requests (no per-request copies on this path).
 fn executor_loop<C, G>(
     rx: &Receiver<Msg>,
     policy: &BatchPolicy,
+    info: &str,
     mut classify: C,
     mut generate: Option<G>,
 ) -> Result<()>
@@ -126,6 +139,7 @@ where
         let mut cls_meta: Vec<(Instant, Sender<Result<Response>>)> = Vec::new();
         let mut gen_rows: Vec<(Vec<i32>, usize)> = Vec::new();
         let mut gen_meta: Vec<(Instant, Sender<Result<Response>>)> = Vec::new();
+        let mut info_meta: Vec<(Instant, Sender<Result<Response>>)> = Vec::new();
         for m in msgs {
             match m {
                 Msg::Req(r) => match r.work {
@@ -137,11 +151,12 @@ where
                         gen_rows.push((tokens, max_new));
                         gen_meta.push((r.enqueued, r.resp));
                     }
+                    Work::Info => info_meta.push((r.enqueued, r.resp)),
                 },
                 Msg::Stop => stop = true,
             }
         }
-        let n = cls_rows.len() + gen_rows.len();
+        let n = cls_rows.len() + gen_rows.len() + info_meta.len();
         if n == 0 {
             if stop {
                 break 'serve;
@@ -149,6 +164,16 @@ where
             continue;
         }
         let exec_start = Instant::now();
+        for (enqueued, resp) in info_meta {
+            let _ = resp.send(Ok(Response {
+                label: 0,
+                gen: None,
+                info: Some(info.to_string()),
+                queue: exec_start - enqueued,
+                total: enqueued.elapsed(),
+                batch_size: n,
+            }));
+        }
         if !cls_rows.is_empty() {
             match classify(&cls_rows) {
                 Ok(labels) => {
@@ -156,6 +181,7 @@ where
                         let _ = resp.send(Ok(Response {
                             label: labels[i],
                             gen: None,
+                            info: None,
                             queue: exec_start - enqueued,
                             total: enqueued.elapsed(),
                             batch_size: n,
@@ -184,6 +210,7 @@ where
                             let _ = resp.send(Ok(Response {
                                 label: seq.last().copied().unwrap_or(0),
                                 gen: Some(seq),
+                                info: None,
                                 queue: exec_start - enqueued,
                                 total: enqueued.elapsed(),
                                 batch_size: n,
@@ -224,8 +251,13 @@ impl Server {
         let artifacts_present = artifacts.join("registry.json").exists();
         // start_artifact reports executor startup failures (missing
         // manifest, stub/broken PJRT runtime, bad artifacts) synchronously
-        match Self::start_artifact(artifacts, exp_name.clone(), checkpoint.clone(), policy, init_seed)
-        {
+        match Self::start_artifact(
+            artifacts,
+            exp_name.clone(),
+            checkpoint.clone(),
+            policy,
+            init_seed,
+        ) {
             Ok(server) => Ok(server),
             Err(e) if checkpoint.is_some() => {
                 Err(e.context(format!("'{exp_name}' needs its artifacts to restore a checkpoint")))
@@ -300,9 +332,14 @@ impl Server {
                 }
             };
 
+            let info = format!(
+                "backend=artifact exp={} seq_len={} graph_batch={} verbs=classify",
+                exp_name, seq_len, graph_batch
+            );
             executor_loop(
                 &rx,
                 &policy,
+                &info,
                 |rows| {
                     // assemble fixed-shape tensors, padding unused rows
                     let mut toks = Vec::with_capacity(graph_batch * seq_len);
@@ -347,9 +384,11 @@ impl Server {
         let seq_len = model.cfg.seq_len;
         let (tx, rx) = channel::<Msg>();
         let join = std::thread::spawn(move || -> Result<()> {
+            let info = model.describe();
             executor_loop(
                 &rx,
                 &policy,
+                &info,
                 |rows| Ok(model.classify_batch(rows)),
                 Some(|reqs: &[(Vec<i32>, usize)]| Ok(model.generate_batch(reqs))),
             )
@@ -423,6 +462,29 @@ mod tests {
         assert_eq!(model.generate(&prompt, 5), toks);
         let c = server.handle.classify(prompt).unwrap();
         assert!(c.label >= 0 && c.gen.is_none());
+        server.shutdown().unwrap();
+    }
+
+    /// The model-info verb end to end: the reply carries the fallback
+    /// stack's configuration as one `key=value` line.
+    #[test]
+    fn fallback_server_reports_model_info() {
+        let cfg = FallbackConfig {
+            seq_len: 32,
+            d_model: 16,
+            nb: 4,
+            depth: 2,
+            n_heads: 2,
+            d_ff: 32,
+            ..Default::default()
+        };
+        let server = Server::start_fallback(cfg, BatchPolicy::default()).unwrap();
+        let r = server.handle.model_info().unwrap();
+        let info = r.info.expect("model-info reply carries the description");
+        for want in ["backend=fallback", "depth=2", "heads=2", "seq_len=32"] {
+            assert!(info.contains(want), "info missing {want}: {info}");
+        }
+        assert!(r.gen.is_none());
         server.shutdown().unwrap();
     }
 

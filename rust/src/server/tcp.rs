@@ -6,9 +6,11 @@
 //!
 //!   classify:  `<id> <id> <id> ...`            (bare space-separated ids)
 //!   generate:  `gen <max_new> <id> <id> ...`   (prompt ids may be empty)
+//!   info:      `model`                          (served model description)
 //!
 //!   replies:   `label=<k> batch=<n> queue_us=<q> total_us=<t>`
 //!              `tokens=<id>,<id>,... batch=<n> queue_us=<q> total_us=<t>`
+//!              `backend=<fallback|artifact> <key>=<value> ...`
 //!              `error=<one stable line>`
 //!
 //! Error replies are deliberately boring: one line, outermost message
@@ -45,6 +47,8 @@ pub enum ParsedRequest {
     Classify(Vec<i32>),
     /// `gen <max_new> <ids...>`: greedily decode up to `max_new` tokens.
     Generate { max_new: usize, tokens: Vec<i32> },
+    /// `model`: describe the served model (backend, depth, heads, config).
+    ModelInfo,
 }
 
 /// Longest slice of client input echoed back inside an error message.
@@ -68,12 +72,19 @@ fn parse_id(t: &str) -> Result<i32> {
 
 /// Parse one request line. Rejections are stable one-line messages:
 /// `empty request`, `bad token '...'` (non-numeric or overflowing ids),
-/// `unknown verb '...'`, `gen needs a token count`, `bad count '...'`.
+/// `unknown verb '...'`, `gen needs a token count`, `bad count '...'`,
+/// `model takes no arguments`.
 pub fn parse_request(line: &str) -> Result<ParsedRequest> {
     let mut toks = line.split_whitespace();
     let Some(first) = toks.next() else {
         bail!("empty request");
     };
+    if first == "model" {
+        if toks.next().is_some() {
+            bail!("model takes no arguments");
+        }
+        return Ok(ParsedRequest::ModelInfo);
+    }
     if first == "gen" {
         let n = toks.next().context("gen needs a token count")?;
         let max_new: usize = n.parse().map_err(|_| anyhow!("bad count '{}'", clip(n)))?;
@@ -173,6 +184,11 @@ fn serve_conn(stream: TcpStream, handle: ServerHandle) -> Result<()> {
                     Err(e) => error_line(&e),
                 }
             }
+            Ok(ParsedRequest::ModelInfo) => match handle.model_info() {
+                // the payload is already one `key=value ...` line
+                Ok(r) => format!("{}\n", r.info.as_deref().unwrap_or("backend=unknown")),
+                Err(e) => error_line(&e),
+            },
         };
         writer.write_all(reply.as_bytes())?;
         writer.flush()?;
@@ -204,6 +220,14 @@ mod tests {
             parse_request("gen 2\n").unwrap(),
             ParsedRequest::Generate { max_new: 2, tokens: vec![] }
         );
+    }
+
+    #[test]
+    fn parse_model_info_valid_and_strict() {
+        assert_eq!(parse_request("model\n").unwrap(), ParsedRequest::ModelInfo);
+        assert_eq!(parse_request("  model  \n").unwrap(), ParsedRequest::ModelInfo);
+        let e = parse_request("model 1 2\n").unwrap_err();
+        assert_eq!(e.to_string(), "model takes no arguments");
     }
 
     #[test]
@@ -259,7 +283,10 @@ mod tests {
 
     #[test]
     fn response_formats() {
-        assert_eq!(format_response(1, 8, 120, 4500), "label=1 batch=8 queue_us=120 total_us=4500\n");
+        assert_eq!(
+            format_response(1, 8, 120, 4500),
+            "label=1 batch=8 queue_us=120 total_us=4500\n"
+        );
         assert_eq!(
             format_gen_response(&[4, 8, 15], 2, 10, 99),
             "tokens=4,8,15 batch=2 queue_us=10 total_us=99\n"

@@ -11,7 +11,8 @@
 //! property tests (`tests/engine_props.rs`) compare against.
 
 use super::balance::NEG_INF;
-use super::matrix::Mat;
+use super::matrix::{gelu, Mat, LN_EPS};
+use super::model::{StackConfig, TransformerLayer};
 
 /// Blocked sequence: `nb` blocks of a `(b, d)` matrix each.
 #[derive(Debug, Clone)]
@@ -306,6 +307,175 @@ pub fn sortcut_attention(q: &Mat, k: &Mat, v: &Mat, r: &Mat, nb: usize, n_cut: u
         }
     }
     dense_attention(q, &kcut, &vcut, false)
+}
+
+// --- naive per-layer stack oracles (DESIGN.md §Model) -----------------------
+//
+// The multi-layer stack (`super::model::SinkhornStack`) runs on the
+// streaming engine and the tiled microkernels; these two functions are its
+// obviously-correct references, built from the naive attention paths above
+// and single-accumulator LayerNorm — one materialized `Mat` per
+// intermediate, no views, no workspaces. `tests/model_props.rs` pins the
+// engine stack within `ENGINE_TOL` of them.
+
+/// Single-accumulator LayerNorm — the oracle counterpart of the
+/// `LANES`-split `matrix::layernorm_into` (same `LN_EPS`, same affine
+/// form, naive summation order).
+fn naive_layernorm(x: &Mat, gamma: &[f32], beta: &[f32]) -> Mat {
+    let n = x.cols as f32;
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let mut mean = 0.0f32;
+        for &v in x.row(i) {
+            mean += v;
+        }
+        mean /= n;
+        let mut var = 0.0f32;
+        for &v in x.row(i) {
+            var += (v - mean) * (v - mean);
+        }
+        var /= n;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for (j, o) in out.row_mut(i).iter_mut().enumerate() {
+            *o = (x[(i, j)] - mean) * inv * gamma[j] + beta[j];
+        }
+    }
+    out
+}
+
+/// One layer of the stack in oracle form, shared by the forward and decode
+/// references: pre-norm (if any) → per-layer SortNet descriptors →
+/// per-head attention via `attend` → summed output projections → residual
+/// → pre-norm GELU FFN (if any). `attend(h, qh, kh, vh)` supplies the
+/// attention semantics (batch sorted+local, SortCut, or per-step causal
+/// decode).
+fn reference_layer(
+    x: &Mat,
+    layer: &TransformerLayer,
+    attend: impl Fn(&Mat, &Mat, &Mat, &Mat) -> Mat,
+) -> Mat {
+    let h = match &layer.ln1 {
+        Some(ln) => naive_layernorm(x, &ln.gamma, &ln.beta),
+        None => x.clone(),
+    };
+    let mut y = x.clone();
+    for hd in 0..layer.wq.len() {
+        let qh = h.matmul(&layer.wq[hd]);
+        let kh = h.matmul(&layer.wk[hd]);
+        let vh = h.matmul(&layer.wv[hd]);
+        let ctx = attend(&h, &qh, &kh, &vh);
+        y.add(&ctx.matmul(&layer.wo[hd]));
+    }
+    if let Some(ffn) = &layer.ffn {
+        let h2 = naive_layernorm(&y, &ffn.ln.gamma, &ffn.ln.beta);
+        let mut a = h2.matmul(&ffn.w1);
+        for i in 0..a.rows {
+            for (o, &bv) in a.row_mut(i).iter_mut().zip(&ffn.b1) {
+                *o = gelu(*o + bv);
+            }
+        }
+        let mut f = a.matmul(&ffn.w2);
+        for i in 0..f.rows {
+            for (o, &bv) in f.row_mut(i).iter_mut().zip(&ffn.b2) {
+                *o += bv;
+            }
+        }
+        y.add(&f);
+    }
+    y
+}
+
+/// Mean-pooled block descriptors → SortNet logits (the layer's raw sort
+/// matrix before balancing).
+fn reference_sort_logits(h: &Mat, sortnet: &Mat, nb: usize) -> Mat {
+    let b = h.rows / nb;
+    let mut blk = Mat::zeros(nb, h.cols);
+    for i in 0..nb {
+        for t in 0..b {
+            let xr = h.row(i * b + t);
+            for (c, o) in blk.row_mut(i).iter_mut().enumerate() {
+                *o += xr[c];
+            }
+        }
+    }
+    blk.scale(1.0 / b as f32);
+    blk.matmul(sortnet)
+}
+
+/// Naive per-layer oracle for the full stack forward
+/// (`super::model::SinkhornStack::forward`): every layer built from the
+/// naive attention paths ([`sinkhorn_attention`] / [`sortcut_attention`])
+/// and single-accumulator LayerNorm. The engine stack must match this
+/// within `ENGINE_TOL` (`tests/model_props.rs`).
+pub fn reference_stack_forward(x: &Mat, cfg: &StackConfig, layers: &[TransformerLayer]) -> Mat {
+    let mut y = x.clone();
+    for layer in layers {
+        y = reference_layer(&y, layer, |h, qh, kh, vh| {
+            let logits = reference_sort_logits(h, &layer.sortnet, cfg.nb);
+            let r = if cfg.causal {
+                super::balance::causal_sinkhorn(&logits, cfg.sinkhorn_iters, true)
+            } else {
+                super::balance::sinkhorn(&logits, cfg.sinkhorn_iters)
+            };
+            match cfg.n_cut {
+                Some(c) => sortcut_attention(qh, kh, vh, &r, cfg.nb, c),
+                None => sinkhorn_attention(qh, kh, vh, &r, cfg.nb, cfg.causal),
+            }
+        });
+    }
+    y
+}
+
+/// Naive full-prefix oracle for the stack's incremental decode
+/// (`super::model::SinkhornStack::decode_step`): `x` holds the embedded
+/// rows of the whole decoded prefix; row `t` of the result is the final
+/// hidden state the incremental path must produce at step `t` (within
+/// `ENGINE_TOL`). Per layer the decode-time SortNet rule is replayed over
+/// the full prefix — block `i`'s mean pre-norm descriptor becomes
+/// sort-logit row `i + 1` — and every head runs the per-step full-prefix
+/// oracle [`causal_decode_attention`]. Sound because rows of the raw logit
+/// matrix are written before the strict-causal balance first reads them
+/// and never rewritten, so the final matrix reproduces, at every position,
+/// exactly what the incremental path saw (module docs of
+/// `super::decode`).
+pub fn reference_stack_decode(x: &Mat, cfg: &StackConfig, layers: &[TransformerLayer]) -> Mat {
+    let b = cfg.block_rows();
+    let nb = cfg.nb;
+    let mut y = x.clone();
+    for layer in layers {
+        // replay the decode-time SortNet rule over the whole prefix
+        let h = match &layer.ln1 {
+            Some(ln) => naive_layernorm(&y, &ln.gamma, &ln.beta),
+            None => y.clone(),
+        };
+        let mut sort_logits = Mat::zeros(nb, nb);
+        let mut desc = vec![0.0f32; y.cols];
+        for t in 0..y.rows {
+            for (c, a) in desc.iter_mut().enumerate() {
+                *a += h[(t, c)];
+            }
+            if (t + 1) % b == 0 {
+                let i = t / b;
+                if i + 1 < nb {
+                    for a in desc.iter_mut() {
+                        *a /= b as f32;
+                    }
+                    let mut row = vec![0.0f32; nb];
+                    for (c, &a) in desc.iter().enumerate() {
+                        for (o, &wv) in row.iter_mut().zip(layer.sortnet.row(c)) {
+                            *o += a * wv;
+                        }
+                    }
+                    sort_logits.row_mut(i + 1).copy_from_slice(&row);
+                }
+                desc.fill(0.0);
+            }
+        }
+        y = reference_layer(&y, layer, |_, qh, kh, vh| {
+            causal_decode_attention(qh, kh, vh, &sort_logits, b, cfg.sinkhorn_iters, cfg.n_cut)
+        });
+    }
+    y
 }
 
 #[cfg(test)]

@@ -303,6 +303,92 @@ fn stream_segment_one(
     super::engine::stream_segment(q, kseg, vseg, scale, false, st, y);
 }
 
+/// One layer's incremental decode state inside a depth-L stack
+/// (DESIGN.md §Model, §Decode): one [`DecodeState`] per attention head —
+/// each head owns its K/V cache and cached balanced sort matrix in its
+/// head dimension — plus the *caller-maintained* raw sort-logit matrix the
+/// heads share (the layer has one SortNet; rows become live as blocks
+/// complete, exactly like the single-layer decode rule). The
+/// prefix-consistency argument is unchanged per head: every head balances
+/// the same logits with the same strict-causal iteration, so each head's
+/// caches stay sound independently, and the layer adds no new coupling.
+pub struct LayerDecodeState {
+    heads: Vec<DecodeState>,
+    /// raw per-layer sort logits; the model writes row `i + 1` when block
+    /// `i` completes (`sinkhorn::model::SinkhornStack::decode_step`)
+    pub sort_logits: Mat,
+}
+
+impl LayerDecodeState {
+    /// Fresh per-layer state: `n_heads` head caches of block shape
+    /// `(b, d_head)` with `nb_cap` blocks of capacity each.
+    pub fn new(
+        n_heads: usize,
+        b: usize,
+        d_head: usize,
+        nb_cap: usize,
+        n_iters: usize,
+        n_cut: Option<usize>,
+    ) -> Self {
+        assert!(n_heads > 0, "n_heads must be positive");
+        LayerDecodeState {
+            heads: (0..n_heads)
+                .map(|_| DecodeState::new(b, d_head, nb_cap, n_iters, n_cut))
+                .collect(),
+            sort_logits: Mat::zeros(nb_cap, nb_cap),
+        }
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// Tokens decoded so far (all heads advance in lockstep).
+    pub fn len(&self) -> usize {
+        self.heads[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.heads[0].capacity()
+    }
+
+    /// f32 elements this layer state allocates — the measured side of
+    /// [`super::memory::stack_decode_state_bytes`] (per layer), asserted
+    /// in `tests/model_props.rs`.
+    pub fn f32_elems(&self) -> usize {
+        self.heads.iter().map(DecodeState::f32_elems).sum::<usize>() + self.sort_logits.data.len()
+    }
+
+    /// Step every head one token: `q`/`k`/`v`/`out` are flat
+    /// `n_heads * d_head` rows (head-major), each head's slice fed through
+    /// its own [`DecodeState::step_into`] against the shared sort logits.
+    pub fn step_heads(
+        &mut self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        scratch: &mut DecodeScratch,
+        out: &mut [f32],
+    ) {
+        let LayerDecodeState { heads, sort_logits } = self;
+        let dh = heads[0].d();
+        let flat = heads.len() * dh;
+        assert_eq!(q.len(), flat, "q must hold n_heads * d_head elements");
+        assert_eq!(k.len(), flat, "k must hold n_heads * d_head elements");
+        assert_eq!(v.len(), flat, "v must hold n_heads * d_head elements");
+        assert_eq!(out.len(), flat, "out must hold n_heads * d_head elements");
+        for (h, head) in heads.iter_mut().enumerate() {
+            let s = h * dh..(h + 1) * dh;
+            let (qs, ks, vs) = (&q[s.clone()], &k[s.clone()], &v[s.clone()]);
+            head.step_into(qs, ks, vs, sort_logits, scratch, &mut out[s]);
+        }
+    }
+}
+
 /// Per-step scratch for the serial decode entry ([`DecodeState::step_into`]):
 /// the streaming-softmax carry for a single-row query. Reused across steps
 /// and sequences; the engine's batched entry uses its per-worker

@@ -275,6 +275,44 @@ pub fn workspace_f32_elems(b: usize, d: usize) -> usize {
     Workspace::new(b, d).f32_elems()
 }
 
+/// A caller-owned set of per-worker engine workspaces, reusable across
+/// engine calls: the layer stack (`sinkhorn::model`) sizes one set for its
+/// deepest layer and feeds it to [`SinkhornEngine::attention_chunks_into`]
+/// once per layer, so a depth-L forward pass allocates its attention
+/// scratch exactly once instead of L times. `attention_batch_into` remains
+/// the self-contained entry that builds a throwaway set per call.
+pub struct EngineWorkspaces {
+    spaces: Vec<Workspace>,
+    /// largest block rows the workspaces are sized for
+    b: usize,
+    /// largest model dim the workspaces are sized for
+    d: usize,
+}
+
+impl EngineWorkspaces {
+    /// One workspace per worker of an engine with `threads` workers
+    /// (`threads == 0` is clamped to 1 — workspaces are per *worker*, and
+    /// a pool never runs with fewer than one), each sized for block shape
+    /// `(b, d)`.
+    pub fn new(threads: usize, b: usize, d: usize) -> Self {
+        EngineWorkspaces {
+            spaces: (0..threads.max(1)).map(|_| Workspace::new(b, d)).collect(),
+            b,
+            d,
+        }
+    }
+
+    /// Total f32 elements across all per-worker workspaces — the measured
+    /// side of the stack's scratch accounting (`memory::stack_scratch_elems`).
+    pub fn f32_elems(&self) -> usize {
+        self.spaces.iter().map(Workspace::f32_elems).sum()
+    }
+
+    fn fits(&self, b: usize, d: usize, workers: usize) -> bool {
+        self.b >= b && self.d >= d && self.spaces.len() >= workers
+    }
+}
+
 /// One attention instance inside a batched engine call — a
 /// `(request, head)` pair in serving terms. Multi-head callers flatten
 /// heads into one `AttentionReq` each; the engine flattens further into
@@ -359,33 +397,68 @@ impl SinkhornEngine {
         }
         let (mut bmax, mut dmax) = (0, 0);
         for (rq, out) in reqs.iter().zip(outs.iter()) {
+            assert_eq!((out.rows, out.cols), (rq.q.rows, rq.q.cols), "output shape");
+            bmax = bmax.max(rq.q.rows / rq.nb.max(1));
+            dmax = dmax.max(rq.q.cols);
+        }
+        let mut ws = EngineWorkspaces::new(self.threads(), bmax, dmax);
+        let chunks: Vec<&mut [f32]> = outs.iter_mut().map(|o| o.data.as_mut_slice()).collect();
+        self.attention_chunks_into(reqs, chunks, &mut ws);
+    }
+
+    /// The reusable-workspace core of [`Self::attention_batch_into`]: one
+    /// flat output buffer per request (length `ell * d`) and a
+    /// caller-owned [`EngineWorkspaces`] that survives the call. The layer
+    /// stack calls this once per layer with the same workspace set and
+    /// with output slices into its pooled activation buffers, so a forward
+    /// pass re-allocates neither scratch nor outputs
+    /// (DESIGN.md §Model). Identical math and task order to
+    /// `attention_batch_into` — the two entries are bit-identical.
+    pub fn attention_chunks_into(
+        &self,
+        reqs: &[AttentionReq],
+        outs: Vec<&mut [f32]>,
+        ws: &mut EngineWorkspaces,
+    ) {
+        assert_eq!(reqs.len(), outs.len(), "one output per request");
+        if reqs.is_empty() {
+            return;
+        }
+        let (mut bmax, mut dmax, mut n_tasks) = (0, 0, 0);
+        for (rq, out) in reqs.iter().zip(outs.iter()) {
             check_qkv(rq.q, rq.k, rq.v);
             assert!(rq.nb > 0, "nb must be positive");
             assert_eq!(rq.q.rows % rq.nb, 0, "nb must divide ell");
             assert_eq!((rq.r.rows, rq.r.cols), (rq.nb, rq.nb), "sort matrix must be (nb, nb)");
-            assert_eq!((out.rows, out.cols), (rq.q.rows, rq.q.cols), "output shape");
+            assert_eq!(out.len(), rq.q.rows * rq.q.cols, "output buffer length");
             bmax = bmax.max(rq.q.rows / rq.nb);
             dmax = dmax.max(rq.q.cols);
+            n_tasks += rq.nb;
         }
+        assert!(
+            ws.fits(bmax, dmax, self.threads().min(n_tasks).max(1)),
+            "EngineWorkspaces sized (b={}, d={}, workers={}) cannot serve (b={bmax}, d={dmax}, \
+             threads={})",
+            ws.b,
+            ws.d,
+            ws.spaces.len(),
+            self.threads()
+        );
         let mut tasks: Vec<(usize, usize, &mut [f32])> = Vec::new();
-        for (ri, out) in outs.iter_mut().enumerate() {
+        for (ri, out) in outs.into_iter().enumerate() {
             let chunk = (reqs[ri].q.rows / reqs[ri].nb) * reqs[ri].q.cols;
-            for (bi, c) in out.data.chunks_mut(chunk).enumerate() {
+            for (bi, c) in out.chunks_mut(chunk).enumerate() {
                 tasks.push((ri, bi, c));
             }
         }
-        self.pool.run(
-            tasks,
-            || Workspace::new(bmax, dmax),
-            |ws, (ri, bi, chunk)| {
-                let rq = &reqs[ri];
-                let qb = BlockedView::from_seq(rq.q, rq.nb);
-                let kb = BlockedView::from_seq(rq.k, rq.nb);
-                let vb = BlockedView::from_seq(rq.v, rq.nb);
-                let scale = 1.0 / (qb.d as f32).sqrt();
-                block_attention(ws, bi, chunk, &qb, &kb, &vb, rq.r, rq.causal, scale);
-            },
-        );
+        self.pool.run_with(tasks, &mut ws.spaces, |w, (ri, bi, chunk)| {
+            let rq = &reqs[ri];
+            let qb = BlockedView::from_seq(rq.q, rq.nb);
+            let kb = BlockedView::from_seq(rq.k, rq.nb);
+            let vb = BlockedView::from_seq(rq.v, rq.nb);
+            let scale = 1.0 / (qb.d as f32).sqrt();
+            block_attention(w, bi, chunk, &qb, &kb, &vb, rq.r, rq.causal, scale);
+        });
     }
 
     /// SortCut truncated attention (paper §3.3): every query attends to

@@ -405,6 +405,180 @@ pub fn matmul_acc_into(probs: &MatView, v: &MatView, out: &mut MatViewMut) {
     }
 }
 
+/// `out += a @ b` in the *naive oracle's* accumulation order — row `i`,
+/// then the contraction index `k` (skipping zero `a` entries), then `j` —
+/// i.e. exactly the loop of [`Mat::matmul`], written into a preallocated
+/// view. Chained from a zeroed `out` this is bit-identical to
+/// `Mat::matmul`, and summing several products into one `out` is
+/// bit-identical to `matmul` + [`Mat::add`] per term. The layer stack
+/// (`sinkhorn::model`) uses it for the q/k/v and output projections so a
+/// depth-1 stack reproduces the historical single-layer fallback bitwise;
+/// the FFN path, which has no bitwise heritage, uses the faster tiled
+/// [`matmul_acc_into`] instead.
+pub fn matmul_acc_ordered_into(a: &MatView, b: &MatView, out: &mut MatViewMut) {
+    assert_eq!(a.cols, b.rows, "matmul dims");
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols), "out dims");
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let or = out.row_mut(i);
+        for (k, &av) in ar.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            for (o, &bv) in or.iter_mut().zip(b.row(k)) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Row-vector times matrix: `out[j] = Σ_c x[c] * w[c, j]`, skipping zero
+/// `x` entries — the decode loop's per-token projection. Same accumulation
+/// order as [`Mat::matmul`] on a 1-row left operand, so the single-row and
+/// batched projection paths agree bitwise.
+pub fn row_times(x: &[f32], w: &Mat) -> Vec<f32> {
+    debug_assert_eq!(x.len(), w.rows);
+    let mut out = vec![0.0f32; w.cols];
+    row_times_into(x, w, &mut out);
+    out
+}
+
+/// [`row_times`] into a preallocated output (the stack's decode hot path).
+pub fn row_times_into(x: &[f32], w: &Mat, out: &mut [f32]) {
+    out.fill(0.0);
+    row_times_acc_into(x, w, out);
+}
+
+/// `out += x * w` without clearing — the accumulating form of
+/// [`row_times_into`] (same order), which the decode loop's multi-head
+/// output projection folds one head at a time into a shared row.
+pub fn row_times_acc_into(x: &[f32], w: &Mat, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), w.rows);
+    debug_assert_eq!(out.len(), w.cols);
+    for (c, &a) in x.iter().enumerate() {
+        if a == 0.0 {
+            continue;
+        }
+        for (o, &wv) in out.iter_mut().zip(w.row(c)) {
+            *o += a * wv;
+        }
+    }
+}
+
+// --- fused layer kernels (DESIGN.md §Model) ---------------------------------
+//
+// The transformer stack's non-matmul per-row work, written in the same
+// register-tiled style as the microkernels above: LANES-wide split
+// accumulators for the LayerNorm reductions (so LLVM autovectorizes the
+// mean/variance passes), element-wise GELU, and the broadcast bias init
+// that turns `matmul_acc_into` into a fused matmul+bias. Like the tiled
+// matmuls, the split-accumulator LayerNorm reorders float summation and is
+// epsilon-, not bit-equal to a single-accumulator reference.
+
+/// LayerNorm variance floor (shared by the kernel and the naive oracle in
+/// `attention::reference_stack_forward`, so the two paths differ only in
+/// summation order).
+pub const LN_EPS: f32 = 1e-5;
+
+/// Sum a slice with `LANES` independent partial accumulators + scalar
+/// tail — the vectorizable reduction both LayerNorm passes use.
+#[inline]
+fn sum_lanes(xs: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut c = xs.chunks_exact(LANES);
+    for v in &mut c {
+        for l in 0..LANES {
+            acc[l] += v[l];
+        }
+    }
+    let mut s = hsum(&acc);
+    for x in c.remainder() {
+        s += x;
+    }
+    s
+}
+
+/// Sum of squared deviations from `mean`, `LANES`-split like [`sum_lanes`].
+#[inline]
+fn sumsq_dev_lanes(xs: &[f32], mean: f32) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut c = xs.chunks_exact(LANES);
+    for v in &mut c {
+        for l in 0..LANES {
+            let d = v[l] - mean;
+            acc[l] += d * d;
+        }
+    }
+    let mut s = hsum(&acc);
+    for x in c.remainder() {
+        let d = x - mean;
+        s += d * d;
+    }
+    s
+}
+
+/// Row-wise LayerNorm with affine parameters, written into a preallocated
+/// view: `out[i, j] = (x[i, j] - mean_i) / sqrt(var_i + LN_EPS) * gamma[j]
+/// + beta[j]`. One fused pass per row computes mean, variance and the
+/// normalized affine output; the reductions use `LANES`-split accumulators
+/// (register-tiled style), so results are epsilon-equal to a
+/// single-accumulator reference.
+pub fn layernorm_into(x: &MatView, gamma: &[f32], beta: &[f32], out: &mut MatViewMut) {
+    assert_eq!(gamma.len(), x.cols, "gamma len");
+    assert_eq!(beta.len(), x.cols, "beta len");
+    assert_eq!((out.rows, out.cols), (x.rows, x.cols), "out dims");
+    let n = x.cols as f32;
+    for i in 0..x.rows {
+        let xr = x.row(i);
+        let mean = sum_lanes(xr) / n;
+        let var = sumsq_dev_lanes(xr, mean) / n;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        let or = out.row_mut(i);
+        for ((o, &xv), (&g, &bt)) in or.iter_mut().zip(xr).zip(gamma.iter().zip(beta)) {
+            *o = (xv - mean) * inv * g + bt;
+        }
+    }
+}
+
+/// [`layernorm_into`] for a single row (the decode loop's per-token form —
+/// same kernel, same op order, so decode and batch prefill agree).
+pub fn layernorm_row_into(x: &[f32], gamma: &[f32], beta: &[f32], out: &mut [f32]) {
+    let xv = MatView::contiguous(x, 1, x.len());
+    let mut ov = MatViewMut::contiguous(out, 1, x.len());
+    layernorm_into(&xv, gamma, beta, &mut ov);
+}
+
+/// GELU, tanh approximation (the transformer-standard form):
+/// `0.5 x (1 + tanh(sqrt(2/pi) (x + 0.044715 x^3)))`. Element-wise, so the
+/// kernel and any reference implementation agree bitwise.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Element-wise [`gelu`] written into a preallocated view (the FFN
+/// activation pass).
+pub fn gelu_into(x: &MatView, out: &mut MatViewMut) {
+    assert_eq!((out.rows, out.cols), (x.rows, x.cols), "out dims");
+    for i in 0..x.rows {
+        for (o, &xv) in out.row_mut(i).iter_mut().zip(x.row(i)) {
+            *o = gelu(xv);
+        }
+    }
+}
+
+/// Broadcast `bias` into every row of `out` — the accumulator init that
+/// fuses the bias add into the matmul: `bias_rows_into(b, out)` followed by
+/// [`matmul_acc_into`]`(x, w, out)` computes `x @ w + b` with no separate
+/// bias pass over the output.
+pub fn bias_rows_into(bias: &[f32], out: &mut MatViewMut) {
+    assert_eq!(bias.len(), out.cols, "bias len");
+    for i in 0..out.rows {
+        out.row_mut(i).copy_from_slice(bias);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -523,6 +697,126 @@ mod tests {
         // NaN early in the buffer must survive later larger diffs
         b.data[5] = 100.0;
         assert!(a.max_abs_diff(&b).is_nan());
+    }
+
+    #[test]
+    fn matmul_acc_ordered_is_bitwise_matmul() {
+        // the oracle-order kernel must be *bit*-identical to Mat::matmul
+        // from a zeroed output, and to matmul + add when accumulating —
+        // the depth-1 stack-vs-legacy-fallback equivalence rides on this
+        let a = demo(5, 7, 31);
+        let b = demo(7, 4, 32);
+        let want = a.matmul(&b);
+        let mut out = Mat::zeros(5, 4);
+        matmul_acc_ordered_into(&a.view(), &b.view(), &mut out.view_mut());
+        assert_eq!(out, want);
+        let a2 = demo(5, 6, 33);
+        let b2 = demo(6, 4, 34);
+        let mut want2 = want.clone();
+        want2.add(&a2.matmul(&b2));
+        matmul_acc_ordered_into(&a2.view(), &b2.view(), &mut out.view_mut());
+        assert_eq!(out, want2);
+    }
+
+    #[test]
+    fn row_times_matches_one_row_matmul_bitwise() {
+        let w = demo(6, 9, 35);
+        let x = demo(1, 6, 36);
+        let want = x.matmul(&w);
+        assert_eq!(row_times(x.row(0), &w), want.row(0));
+        let mut out = vec![f32::NAN; 9]; // dirty buffer must be overwritten
+        row_times_into(x.row(0), &w, &mut out);
+        assert_eq!(&out, want.row(0));
+    }
+
+    #[test]
+    fn layernorm_rows_are_normalized_and_affine() {
+        let x = demo(5, 11, 40); // 11: off the 8-lane tile
+        let gamma = vec![1.0f32; 11];
+        let beta = vec![0.0f32; 11];
+        let mut out = Mat::zeros(5, 11);
+        layernorm_into(&x.view(), &gamma, &beta, &mut out.view_mut());
+        for i in 0..5 {
+            let m: f32 = out.row(i).iter().sum::<f32>() / 11.0;
+            let v: f32 = out.row(i).iter().map(|&y| (y - m) * (y - m)).sum::<f32>() / 11.0;
+            assert!(m.abs() < 1e-5, "row {i} mean {m}");
+            assert!((v - 1.0).abs() < 1e-3, "row {i} var {v}");
+        }
+        // affine params shift and scale
+        let gamma2 = vec![2.0f32; 11];
+        let beta2 = vec![0.5f32; 11];
+        let mut out2 = Mat::zeros(5, 11);
+        layernorm_into(&x.view(), &gamma2, &beta2, &mut out2.view_mut());
+        for (a, b) in out.data.iter().zip(&out2.data) {
+            assert!((2.0 * a + 0.5 - b).abs() <= 1e-5);
+        }
+        // the single-row decode form is the same kernel
+        let mut row = vec![0.0f32; 11];
+        layernorm_row_into(x.row(2), &gamma, &beta, &mut row);
+        assert_eq!(&row, out.row(2));
+    }
+
+    #[test]
+    fn layernorm_within_epsilon_of_naive_reduction() {
+        // split-accumulator mean/variance vs the single-accumulator
+        // reference — tail lengths straddle the LANES tile
+        for cols in [5usize, 8, 17, 64] {
+            let x = demo(3, cols, 41 + cols as u64);
+            let gamma: Vec<f32> = (0..cols).map(|j| 0.5 + j as f32 * 0.01).collect();
+            let beta: Vec<f32> = (0..cols).map(|j| j as f32 * 0.02 - 0.1).collect();
+            let mut got = Mat::zeros(3, cols);
+            layernorm_into(&x.view(), &gamma, &beta, &mut got.view_mut());
+            let mut want = Mat::zeros(3, cols);
+            for i in 0..3 {
+                let mut mean = 0.0f32;
+                for &v in x.row(i) {
+                    mean += v;
+                }
+                mean /= cols as f32;
+                let mut var = 0.0f32;
+                for &v in x.row(i) {
+                    var += (v - mean) * (v - mean);
+                }
+                var /= cols as f32;
+                let inv = 1.0 / (var + LN_EPS).sqrt();
+                for j in 0..cols {
+                    want[(i, j)] = (x[(i, j)] - mean) * inv * gamma[j] + beta[j];
+                }
+            }
+            assert_close(&got, &want, &format!("layernorm cols={cols}"));
+        }
+    }
+
+    #[test]
+    fn gelu_known_values_and_odd_shape() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+        assert!((gelu(-1.0) + 0.1588).abs() < 1e-3);
+        assert!(gelu(10.0) - 10.0 < 1e-3 && gelu(10.0) <= 10.0);
+        assert!(gelu(-10.0).abs() < 1e-3);
+        let x = demo(3, 7, 50);
+        let mut out = Mat::zeros(3, 7);
+        gelu_into(&x.view(), &mut out.view_mut());
+        for (o, &xv) in out.data.iter().zip(&x.data) {
+            assert_eq!(*o, gelu(xv));
+        }
+    }
+
+    #[test]
+    fn bias_rows_then_matmul_acc_is_fused_bias_matmul() {
+        let x = demo(4, 6, 51);
+        let w = demo(6, 9, 52);
+        let bias: Vec<f32> = (0..9).map(|j| j as f32 * 0.1 - 0.3).collect();
+        let mut out = Mat::from_fn(4, 9, |_, _| f32::NAN); // dirty
+        bias_rows_into(&bias, &mut out.view_mut());
+        matmul_acc_into(&x.view(), &w.view(), &mut out.view_mut());
+        let mut want = x.matmul(&w);
+        for i in 0..4 {
+            for (o, &b) in want.row_mut(i).iter_mut().zip(&bias) {
+                *o += b;
+            }
+        }
+        assert_close(&out, &want, "fused matmul+bias");
     }
 
     #[test]

@@ -132,6 +132,71 @@ pub fn decode_step_macs(b: usize, d: usize, cut_blocks: usize) -> usize {
     2 * (cut_blocks + 1) * b * d
 }
 
+/// Parameter count of a depth-L [`SinkhornStack`]'s layers (DESIGN.md
+/// §Model) — per layer: per-head q/k/v/output projections (`4·d²` f32
+/// regardless of the head split), the SortNet head (`d·nb`), and, for
+/// full layers (`d_ff > 0`), two LayerNorms plus the GELU FFN. Embeddings
+/// and task heads belong to the caller. The stack's measured
+/// `SinkhornStack::n_params` is asserted equal in `tests/model_props.rs`.
+///
+/// [`SinkhornStack`]: super::model::SinkhornStack
+pub fn stack_params(cfg: &super::model::StackConfig) -> usize {
+    let (d, dh) = (cfg.d_model, cfg.d_head());
+    let proj = 3 * cfg.n_heads * d * dh + cfg.n_heads * dh * d;
+    let per_layer = proj
+        + d * cfg.nb
+        + if cfg.d_ff > 0 {
+            2 * d // ln1
+            + 2 * d // ffn ln
+            + d * cfg.d_ff + cfg.d_ff // w1 + b1
+            + cfg.d_ff * d + d // w2 + b2
+        } else {
+            0
+        };
+    cfg.depth * per_layer
+}
+
+/// Working-set f32 elements of one `model::StackScratch` with `threads`
+/// per-worker engine workspaces (DESIGN.md §Model, §Perf): the pooled
+/// activation buffers — LayerNorm image, per-head q/k/v/context tiles,
+/// summed projection, FFN pre/post rows, block descriptors — plus
+/// `threads` engine workspaces at the layer block shape
+/// `(seq_len / nb, d_head)`. Sized once for the deepest layer and reused
+/// across every layer of a forward pass. Asserted equal to the measured
+/// `StackScratch::f32_elems` in `tests/model_props.rs`.
+pub fn stack_scratch_elems(cfg: &super::model::StackConfig, threads: usize) -> usize {
+    let (ell, d) = (cfg.seq_len, cfg.d_model);
+    let b = cfg.block_rows();
+    ell * d // h
+        + 4 * cfg.n_heads * ell * cfg.d_head() // qh/kh/vh/ctx
+        + ell * d // proj
+        + 2 * ell * cfg.d_ff // ff_pre + ff_act
+        + if cfg.d_ff > 0 { ell * d } else { 0 } // ff_out
+        + cfg.nb * d // blk
+        + threads.max(1) * super::engine::workspace_f32_elems(b, cfg.d_head())
+}
+
+/// Working-set bytes of a depth-L `model::StackDecodeState` (DESIGN.md
+/// §Model, §Decode): per layer, one single-layer decode state per head
+/// ([`decode_state_bytes`] at the head dimension), the layer's raw
+/// `(nb, nb)` sort-logit matrix, and the `d_model`-wide running block
+/// descriptor. Still linear in the sequence capacity (the per-head KV
+/// caches) and constant per step. Asserted equal to the measured
+/// `StackDecodeState::f32_elems` in `tests/model_props.rs`.
+pub fn stack_decode_state_bytes(
+    depth: usize,
+    n_heads: usize,
+    b: usize,
+    d_head: usize,
+    nb_cap: usize,
+    n_cut: Option<usize>,
+) -> usize {
+    depth
+        * (n_heads * decode_state_bytes(b, d_head, nb_cap, n_cut)
+            + nb_cap * nb_cap * 4
+            + n_heads * d_head * 4)
+}
+
 /// MXU utilization proxy: fraction of the kernel's MACs that land in
 /// >=8x8x8-shaped matmuls (all of them, for b,d >= 8 — the point is the
 /// tiles are MXU-shaped by construction).

@@ -8,7 +8,10 @@
 //! with no compiled HLO artifacts at all, through the streaming blocked
 //! execution engine (DESIGN.md §Engine, §Streaming) that
 //! `server::fallback` runs on, including (5) token-by-token autoregressive
-//! generation through the incremental [`decode`] path (DESIGN.md §Decode).
+//! generation through the incremental [`decode`] path (DESIGN.md §Decode),
+//! and (6) the full multi-layer, multi-head Sinkhorn Transformer stack
+//! ([`model`], DESIGN.md §Model) that composes all of the above into the
+//! depth-L architecture the paper's results come from.
 
 pub mod attention;
 pub mod balance;
@@ -16,14 +19,19 @@ pub mod decode;
 pub mod engine;
 pub mod matrix;
 pub mod memory;
+pub mod model;
 pub mod pool;
 
 pub use attention::{
-    causal_decode_attention, dense_attention, local_attention, sinkhorn_attention,
-    sortcut_attention,
+    causal_decode_attention, dense_attention, local_attention, reference_stack_decode,
+    reference_stack_forward, sinkhorn_attention, sortcut_attention,
 };
 pub use balance::{causal_sinkhorn, ds_residual, sinkhorn};
-pub use decode::{DecodeScratch, DecodeState};
-pub use engine::{AttentionReq, BlockedView, DecodeReq, SinkhornEngine};
+pub use decode::{DecodeScratch, DecodeState, LayerDecodeState};
+pub use engine::{AttentionReq, BlockedView, DecodeReq, EngineWorkspaces, SinkhornEngine};
 pub use matrix::{Mat, MatView, MatViewMut};
+pub use model::{
+    SinkhornStack, StackConfig, StackDecodeScratch, StackDecodeState, StackScratch,
+    TransformerLayer,
+};
 pub use pool::WorkerPool;

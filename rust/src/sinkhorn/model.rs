@@ -1,0 +1,873 @@
+//! Multi-layer, multi-head Sinkhorn Transformer forward stack on the
+//! pure-Rust streaming engine (DESIGN.md §Model).
+//!
+//! The paper's results all come from a *stacked* Sinkhorn Transformer;
+//! until this module the fallback model was a single attention step bolted
+//! to a head. [`SinkhornStack`] is the real depth-L model:
+//!
+//! * **[`TransformerLayer`]** — pre-LayerNorm → per-layer SortNet →
+//!   multi-head blocked Sinkhorn attention (every head streams through
+//!   [`SinkhornEngine`]'s sorted+local path, sharing the layer's balanced
+//!   sort matrix) → per-head output projection summed into the residual →
+//!   pre-LayerNorm GELU FFN. Layers can also be *bare* (no LayerNorm, no
+//!   FFN, one head): a depth-1 bare stack reproduces the historical
+//!   single-layer fallback **bitwise**, which `server::fallback` relies on.
+//! * **[`SinkhornStack`]** — owns the per-layer weights plus one pooled
+//!   set of per-worker engine workspaces ([`EngineWorkspaces`]) and
+//!   activation buffers ([`StackScratch`]) sized once for the deepest
+//!   layer, so a forward pass allocates nothing per layer beyond the tiny
+//!   `(nb, nb)` balanced sort matrix.
+//! * **Incremental decode** — [`SinkhornStack::decode_step`] runs the full
+//!   depth-L model one token at a time over a [`StackDecodeState`]
+//!   (`Vec<`[`LayerDecodeState`]`>`): per layer, per head, the same cached
+//!   causal Sinkhorn state as the single-layer path (DESIGN.md §Decode),
+//!   with per-layer sort-logit rows produced by the decode-time SortNet
+//!   rule (block `i`'s mean descriptor becomes row `i + 1` the moment
+//!   block `i` fills). The prefix-consistency argument is per head and
+//!   per layer, so stacking adds no new soundness obligations.
+//!
+//! **Numerics contract** (`tests/model_props.rs`): the stack matches the
+//! naive per-layer oracle [`reference_stack_forward`] within
+//! [`ENGINE_TOL`](super::engine::ENGINE_TOL) on the property-test shapes
+//! (tile tails, multi-tile blocks, SortCut), stays bit-identical across
+//! thread counts, and the incremental decode matches the full-prefix
+//! per-layer oracle [`reference_stack_decode`] at every step. Projections
+//! run in the naive oracle's accumulation order
+//! ([`matmul_acc_ordered_into`]) to preserve the depth-1 bitwise
+//! equivalence; the FFN, which has no bitwise heritage, uses the tiled
+//! microkernels (fused bias + matmul, `LANES`-split LayerNorm — DESIGN.md
+//! §Microkernels).
+//!
+//! [`reference_stack_forward`]: super::attention::reference_stack_forward
+//! [`reference_stack_decode`]: super::attention::reference_stack_decode
+
+use anyhow::Result;
+
+use super::balance::{causal_sinkhorn, sinkhorn};
+use super::decode::{DecodeScratch, LayerDecodeState};
+use super::engine::{AttentionReq, EngineWorkspaces, SinkhornEngine};
+use super::matrix::{
+    bias_rows_into, gelu, gelu_into, layernorm_into, layernorm_row_into, matmul_acc_into,
+    matmul_acc_ordered_into, row_times, row_times_acc_into, row_times_into, Mat, MatView,
+    MatViewMut,
+};
+use super::pool::WorkerPool;
+use crate::util::rng::Rng;
+
+/// Shape of a [`SinkhornStack`].
+#[derive(Debug, Clone)]
+pub struct StackConfig {
+    /// fixed sequence length the stack's buffers are sized for
+    pub seq_len: usize,
+    pub d_model: usize,
+    /// attention heads per layer; must divide `d_model`
+    pub n_heads: usize,
+    /// number of [`TransformerLayer`]s
+    pub depth: usize,
+    /// FFN hidden width; `0` disables LayerNorm + FFN entirely (*bare*
+    /// layers — the historical single-layer fallback shape)
+    pub d_ff: usize,
+    /// sort blocks; must divide `seq_len`
+    pub nb: usize,
+    /// Sinkhorn balance iterations per sort matrix
+    pub sinkhorn_iters: usize,
+    /// strict-causal sort + within-block causal mask on the local term
+    pub causal: bool,
+    /// `Some(c)`: SortCut attention over the first `c` sorted blocks
+    /// (paper §3.3; non-causal forward only — causal truncation is the
+    /// decode path's job)
+    pub n_cut: Option<usize>,
+}
+
+impl StackConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// rows per block
+    pub fn block_rows(&self) -> usize {
+        self.seq_len / self.nb
+    }
+
+    /// Bare layers (no LayerNorm, no FFN) — the legacy single-layer shape.
+    pub fn bare_layers(&self) -> bool {
+        self.d_ff == 0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.depth == 0 {
+            anyhow::bail!("stack: depth must be positive");
+        }
+        if self.n_heads == 0 || self.d_model % self.n_heads != 0 {
+            anyhow::bail!(
+                "stack: n_heads {} must be positive and divide d_model {}",
+                self.n_heads,
+                self.d_model
+            );
+        }
+        if self.nb == 0 || self.seq_len % self.nb != 0 {
+            anyhow::bail!(
+                "stack: nb {} must be positive and divide seq_len {}",
+                self.nb,
+                self.seq_len
+            );
+        }
+        if let Some(c) = self.n_cut {
+            if !(1..=self.nb).contains(&c) {
+                anyhow::bail!("stack: n_cut {c} must be in 1..={}", self.nb);
+            }
+            if self.causal {
+                anyhow::bail!(
+                    "stack: causal + n_cut is not a batch-forward mode (SortCut decoding \
+                     handles causal truncation — DESIGN.md §Decode)"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// LayerNorm affine parameters.
+#[derive(Debug, Clone)]
+pub struct LayerNorm {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+}
+
+impl LayerNorm {
+    /// Identity-initialized (`gamma = 1`, `beta = 0`).
+    pub fn identity(d: usize) -> Self {
+        LayerNorm { gamma: vec![1.0; d], beta: vec![0.0; d] }
+    }
+
+    fn n_params(&self) -> usize {
+        self.gamma.len() + self.beta.len()
+    }
+}
+
+/// Pre-norm GELU feed-forward block: `x + W2 gelu(W1 ln(x) + b1) + b2`.
+#[derive(Debug, Clone)]
+pub struct Ffn {
+    pub ln: LayerNorm,
+    /// `(d_model, d_ff)`
+    pub w1: Mat,
+    pub b1: Vec<f32>,
+    /// `(d_ff, d_model)`
+    pub w2: Mat,
+    pub b2: Vec<f32>,
+}
+
+impl Ffn {
+    fn n_params(&self) -> usize {
+        self.ln.n_params()
+            + self.w1.data.len()
+            + self.b1.len()
+            + self.w2.data.len()
+            + self.b2.len()
+    }
+}
+
+/// One layer of the stack: optional pre-LayerNorm, per-head q/k/v/output
+/// projections, the layer's SortNet head, and an optional FFN block.
+/// `ln1`/`ffn` are `None` together in *bare* mode (`StackConfig::d_ff == 0`).
+#[derive(Debug, Clone)]
+pub struct TransformerLayer {
+    /// pre-attention LayerNorm (`None` in bare mode)
+    pub ln1: Option<LayerNorm>,
+    /// per-head `(d_model, d_head)` query projections
+    pub wq: Vec<Mat>,
+    pub wk: Vec<Mat>,
+    pub wv: Vec<Mat>,
+    /// per-head `(d_head, d_model)` output projections, summed over heads
+    pub wo: Vec<Mat>,
+    /// `(d_model, nb)` SortNet head: block descriptor → destination logits
+    pub sortnet: Mat,
+    /// feed-forward block (`None` in bare mode)
+    pub ffn: Option<Ffn>,
+}
+
+impl TransformerLayer {
+    /// The historical single-layer fallback shape: one head, full-width
+    /// projections, no LayerNorm, no FFN. A depth-1 stack of this layer is
+    /// bit-identical to the pre-stack fallback forward.
+    pub fn bare_single_head(wq: Mat, wk: Mat, wv: Mat, wo: Mat, sortnet: Mat) -> Self {
+        TransformerLayer {
+            ln1: None,
+            wq: vec![wq],
+            wk: vec![wk],
+            wv: vec![wv],
+            wo: vec![wo],
+            sortnet,
+            ffn: None,
+        }
+    }
+
+    /// Deterministically seeded layer for `cfg` (identity LayerNorms, zero
+    /// biases, `1/sqrt(fan_in)`-scaled weights).
+    pub fn seeded(cfg: &StackConfig, rng: &mut Rng) -> Self {
+        let (d, dh) = (cfg.d_model, cfg.d_head());
+        let wscale = 1.0 / (d as f64).sqrt();
+        let mut init = |rows: usize, cols: usize, scale: f64, tag: u64| {
+            let mut r = rng.fork(tag.wrapping_mul(0x9E37).wrapping_add((rows * 31 + cols) as u64));
+            Mat::from_fn(rows, cols, |_, _| (r.normal() * scale) as f32)
+        };
+        let mut head_mats = |rows: usize, cols: usize, tag0: u64| -> Vec<Mat> {
+            (0..cfg.n_heads).map(|h| init(rows, cols, wscale, tag0 + h as u64)).collect()
+        };
+        let wq = head_mats(d, dh, 0x100);
+        let wk = head_mats(d, dh, 0x200);
+        let wv = head_mats(d, dh, 0x300);
+        let wo = head_mats(dh, d, 0x400);
+        let sortnet = init(d, cfg.nb, wscale, 0x500);
+        let (ln1, ffn) = if cfg.bare_layers() {
+            (None, None)
+        } else {
+            let ffn = Ffn {
+                ln: LayerNorm::identity(d),
+                w1: init(d, cfg.d_ff, wscale, 0x600),
+                b1: vec![0.0; cfg.d_ff],
+                w2: init(cfg.d_ff, d, 1.0 / (cfg.d_ff as f64).sqrt(), 0x700),
+                b2: vec![0.0; d],
+            };
+            (Some(LayerNorm::identity(d)), Some(ffn))
+        };
+        TransformerLayer { ln1, wq, wk, wv, wo, sortnet, ffn }
+    }
+
+    /// Measured parameter count (asserted against the analytic
+    /// `memory::stack_params` model in `tests/model_props.rs`).
+    pub fn n_params(&self) -> usize {
+        let proj: usize = self
+            .wq
+            .iter()
+            .chain(&self.wk)
+            .chain(&self.wv)
+            .chain(&self.wo)
+            .map(|m| m.data.len())
+            .sum();
+        proj
+            + self.sortnet.data.len()
+            + self.ln1.as_ref().map_or(0, LayerNorm::n_params)
+            + self.ffn.as_ref().map_or(0, Ffn::n_params)
+    }
+
+    fn check_shapes(&self, cfg: &StackConfig) -> Result<()> {
+        let (d, dh) = (cfg.d_model, cfg.d_head());
+        for (name, ws, rows, cols) in [
+            ("wq", &self.wq, d, dh),
+            ("wk", &self.wk, d, dh),
+            ("wv", &self.wv, d, dh),
+            ("wo", &self.wo, dh, d),
+        ] {
+            if ws.len() != cfg.n_heads {
+                anyhow::bail!("layer {name}: {} heads, config says {}", ws.len(), cfg.n_heads);
+            }
+            for m in ws.iter() {
+                if (m.rows, m.cols) != (rows, cols) {
+                    anyhow::bail!("layer {name}: ({}, {}) != ({rows}, {cols})", m.rows, m.cols);
+                }
+            }
+        }
+        if (self.sortnet.rows, self.sortnet.cols) != (d, cfg.nb) {
+            anyhow::bail!("layer sortnet must be (d_model, nb)");
+        }
+        if cfg.bare_layers() != (self.ln1.is_none() && self.ffn.is_none()) {
+            anyhow::bail!("layer LayerNorm/FFN presence must match StackConfig::d_ff");
+        }
+        if let Some(ffn) = &self.ffn {
+            if (ffn.w1.rows, ffn.w1.cols) != (d, cfg.d_ff)
+                || (ffn.w2.rows, ffn.w2.cols) != (cfg.d_ff, d)
+                || ffn.b1.len() != cfg.d_ff
+                || ffn.b2.len() != d
+            {
+                anyhow::bail!("layer FFN shapes must match (d_model, d_ff)");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Pooled activation + engine scratch for one forward pass, sized once for
+/// the stack's (deepest) layer shape and reused across layers, calls and —
+/// when the caller keeps it per worker — requests. The engine half is the
+/// per-worker [`EngineWorkspaces`] the attention phase streams through.
+pub struct StackScratch {
+    /// LayerNorm output / projection source, `(ell, d)`
+    h: Mat,
+    /// per-head projected queries/keys/values/contexts, `(ell, d_head)` each
+    qh: Vec<Mat>,
+    kh: Vec<Mat>,
+    vh: Vec<Mat>,
+    ctx: Vec<Mat>,
+    /// summed output projection, `(ell, d)`
+    proj: Mat,
+    /// FFN pre-activation and activation, `(ell, d_ff)`
+    ff_pre: Mat,
+    ff_act: Mat,
+    /// FFN output, `(ell, d)` (empty in bare mode)
+    ff_out: Mat,
+    /// mean-pooled block descriptors, `(nb, d)`
+    blk: Mat,
+    /// per-worker engine workspaces, sized `(block_rows, d_head)`
+    ws: EngineWorkspaces,
+}
+
+impl StackScratch {
+    /// Scratch for `cfg` with one engine workspace per `threads` workers.
+    pub fn new(cfg: &StackConfig, threads: usize) -> Self {
+        let (ell, d, dh) = (cfg.seq_len, cfg.d_model, cfg.d_head());
+        let head_bufs = || (0..cfg.n_heads).map(|_| Mat::zeros(ell, dh)).collect::<Vec<Mat>>();
+        StackScratch {
+            h: Mat::zeros(ell, d),
+            qh: head_bufs(),
+            kh: head_bufs(),
+            vh: head_bufs(),
+            ctx: head_bufs(),
+            proj: Mat::zeros(ell, d),
+            ff_pre: Mat::zeros(ell, cfg.d_ff),
+            ff_act: Mat::zeros(ell, cfg.d_ff),
+            ff_out: Mat::zeros(ell, if cfg.bare_layers() { 0 } else { d }),
+            blk: Mat::zeros(cfg.nb, d),
+            ws: EngineWorkspaces::new(threads, cfg.block_rows(), dh),
+        }
+    }
+
+    /// f32 elements this scratch allocates — the measured side of
+    /// `memory::stack_scratch_elems`, asserted in `tests/model_props.rs`.
+    pub fn f32_elems(&self) -> usize {
+        let heads: usize = self
+            .qh
+            .iter()
+            .chain(&self.kh)
+            .chain(&self.vh)
+            .chain(&self.ctx)
+            .map(|m| m.data.len())
+            .sum();
+        self.h.data.len()
+            + heads
+            + self.proj.data.len()
+            + self.ff_pre.data.len()
+            + self.ff_act.data.len()
+            + self.ff_out.data.len()
+            + self.blk.data.len()
+            + self.ws.f32_elems()
+    }
+}
+
+/// The depth-L Sinkhorn Transformer stack (DESIGN.md §Model): per-layer
+/// weights, the engine that streams every head's attention, and one owned
+/// [`StackScratch`] for the single-user [`Self::forward`] entry. Shared
+/// (`&self`) entries take an explicit scratch so server workers can hold
+/// one each.
+pub struct SinkhornStack {
+    pub cfg: StackConfig,
+    pub layers: Vec<TransformerLayer>,
+    engine: SinkhornEngine,
+    scratch: StackScratch,
+}
+
+impl SinkhornStack {
+    /// Wrap explicit layers (shape-checked against `cfg`).
+    pub fn new(
+        cfg: StackConfig,
+        layers: Vec<TransformerLayer>,
+        engine: SinkhornEngine,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        if layers.len() != cfg.depth {
+            anyhow::bail!("stack: {} layers, config says depth {}", layers.len(), cfg.depth);
+        }
+        for layer in &layers {
+            layer.check_shapes(&cfg)?;
+        }
+        let scratch = StackScratch::new(&cfg, engine.threads());
+        Ok(SinkhornStack { cfg, layers, engine, scratch })
+    }
+
+    /// A deterministically seeded stack (the bench + test constructor).
+    pub fn seeded(cfg: StackConfig, seed: u64, engine: SinkhornEngine) -> Result<Self> {
+        cfg.validate()?;
+        let mut rng = Rng::new(seed);
+        let layers = (0..cfg.depth)
+            .map(|l| {
+                let mut lr = rng.fork(0x57AC + l as u64);
+                TransformerLayer::seeded(&cfg, &mut lr)
+            })
+            .collect();
+        Self::new(cfg, layers, engine)
+    }
+
+    pub fn engine(&self) -> &SinkhornEngine {
+        &self.engine
+    }
+
+    /// Total stack parameters (layers only — embeddings and task heads
+    /// belong to the caller).
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(TransformerLayer::n_params).sum()
+    }
+
+    /// A fresh scratch sized for this stack (per-worker callers hold one
+    /// each; [`Self::forward`] uses the stack's own).
+    pub fn new_scratch(&self) -> StackScratch {
+        StackScratch::new(&self.cfg, self.engine.threads())
+    }
+
+    /// Forward pass in place over `x` (`(seq_len, d_model)` hidden states
+    /// in, final hidden states out), using the stack's own scratch.
+    pub fn forward(&mut self, x: &mut Mat) {
+        let SinkhornStack { cfg, layers, engine, scratch } = self;
+        check_input(cfg, x);
+        for layer in layers.iter() {
+            layer_forward(cfg, layer, x, engine, scratch);
+        }
+    }
+
+    /// [`Self::forward`] with a caller-owned scratch and engine — the
+    /// shared-`&self` entry server workers use (one scratch per worker;
+    /// per-request engines stay serial inside a request-parallel pool).
+    /// Bit-identical to `forward` for any engine thread count.
+    pub fn forward_with(&self, x: &mut Mat, engine: &SinkhornEngine, scratch: &mut StackScratch) {
+        check_input(&self.cfg, x);
+        for layer in &self.layers {
+            layer_forward(&self.cfg, layer, x, engine, scratch);
+        }
+    }
+
+    /// Forward a batch of sequences. Batches with at least one request
+    /// per pool worker fan out request-parallel — one sequence per task,
+    /// each worker reusing one private scratch and running the engine
+    /// serially, so there are no nested thread pools and every worker
+    /// carries whole L-layer requests. Smaller batches cannot fill the
+    /// pool that way, so they run sequentially on the caller's thread
+    /// through the stack's own engine — block-level parallelism per
+    /// request, exactly the single-request scheduling, including its
+    /// serial-below-the-spawn-payoff choice for tiny models. Either
+    /// schedule is bit-identical to [`Self::forward_with`] per request
+    /// (engine thread invariance), so batched and single forwards always
+    /// agree bitwise.
+    pub fn forward_batch(&self, xs: &mut [Mat], pool: &WorkerPool) {
+        if xs.is_empty() {
+            return;
+        }
+        if xs.len() < pool.threads() {
+            let mut scratch = self.new_scratch();
+            for x in xs.iter_mut() {
+                self.forward_with(x, &self.engine, &mut scratch);
+            }
+            return;
+        }
+        let serial = SinkhornEngine::serial();
+        let tasks: Vec<&mut Mat> = xs.iter_mut().collect();
+        pool.run(
+            tasks,
+            || StackScratch::new(&self.cfg, 1),
+            |scratch, x| self.forward_with(x, &serial, scratch),
+        );
+    }
+
+    /// Fresh per-sequence incremental decode state: one
+    /// [`LayerDecodeState`] per layer (per-head K/V caches + the layer's
+    /// sort-logit matrix) plus per-layer descriptor accumulators.
+    pub fn decode_state(&self) -> StackDecodeState {
+        let cfg = &self.cfg;
+        StackDecodeState {
+            layers: (0..cfg.depth)
+                .map(|_| {
+                    LayerDecodeState::new(
+                        cfg.n_heads,
+                        cfg.block_rows(),
+                        cfg.d_head(),
+                        cfg.nb,
+                        cfg.sinkhorn_iters,
+                        cfg.n_cut,
+                    )
+                })
+                .collect(),
+            desc: (0..cfg.depth).map(|_| vec![0.0; cfg.d_model]).collect(),
+            len: 0,
+        }
+    }
+
+    /// Per-step decode scratch (hold one per worker / sequence driver).
+    pub fn new_decode_scratch(&self) -> StackDecodeScratch {
+        StackDecodeScratch::new(&self.cfg)
+    }
+
+    /// One incremental decode step of the full depth-L stack (DESIGN.md
+    /// §Model, §Decode): `x_row` is the embedded token (`d_model`
+    /// elements), `out` receives the final hidden row. Per layer:
+    /// pre-norm, per-head q/k/v rows, every head's cached causal decode
+    /// step against the layer's sort logits, output projection + residual,
+    /// FFN — and at each block boundary the completed block's mean
+    /// descriptor becomes the *next* block's sort-logit row (the
+    /// decode-time SortNet rule, now per layer). O(depth · b · d) per
+    /// step; matches [`reference_stack_decode`] within
+    /// [`ENGINE_TOL`](super::engine::ENGINE_TOL) at every step
+    /// (`tests/model_props.rs`).
+    ///
+    /// [`reference_stack_decode`]: super::attention::reference_stack_decode
+    pub fn decode_step(
+        &self,
+        st: &mut StackDecodeState,
+        x_row: &[f32],
+        scratch: &mut StackDecodeScratch,
+        out: &mut [f32],
+    ) {
+        let cfg = &self.cfg;
+        let (d, dh, heads, nb) = (cfg.d_model, cfg.d_head(), cfg.n_heads, cfg.nb);
+        let b = cfg.block_rows();
+        assert_eq!(st.layers.len(), cfg.depth, "decode state depth mismatch");
+        assert_eq!(x_row.len(), d, "x row must have d_model elements");
+        assert_eq!(out.len(), d, "out row must have d_model elements");
+        assert!(st.len < cfg.seq_len, "decode capacity exhausted ({} tokens)", st.len);
+        let t = st.len;
+        scratch.x.copy_from_slice(x_row);
+        for (l, layer) in self.layers.iter().enumerate() {
+            // pre-norm (bare layers read the residual stream directly)
+            let h: &[f32] = match &layer.ln1 {
+                Some(ln) => {
+                    layernorm_row_into(&scratch.x, &ln.gamma, &ln.beta, &mut scratch.h);
+                    &scratch.h
+                }
+                None => &scratch.x,
+            };
+            for hd in 0..heads {
+                let s = hd * dh..(hd + 1) * dh;
+                row_times_into(h, &layer.wq[hd], &mut scratch.q[s.clone()]);
+                row_times_into(h, &layer.wk[hd], &mut scratch.k[s.clone()]);
+                row_times_into(h, &layer.wv[hd], &mut scratch.v[s]);
+            }
+            st.layers[l].step_heads(
+                &scratch.q,
+                &scratch.k,
+                &scratch.v,
+                &mut scratch.stream,
+                &mut scratch.ctx,
+            );
+            // descriptor accumulation + decode-time SortNet rule: block
+            // i's mean descriptor becomes sort-logit row i + 1 the moment
+            // block i fills (rows are written before the causal balance
+            // first reads them, and never rewritten)
+            for (c, a) in st.desc[l].iter_mut().enumerate() {
+                *a += h[c];
+            }
+            if (t + 1) % b == 0 {
+                let i = t / b;
+                if i + 1 < nb {
+                    let dacc = &mut st.desc[l];
+                    for a in dacc.iter_mut() {
+                        *a /= b as f32;
+                    }
+                    let row = row_times(dacc, &layer.sortnet);
+                    st.layers[l].sort_logits.row_mut(i + 1).copy_from_slice(&row);
+                }
+                st.desc[l].fill(0.0);
+            }
+            // per-head output projection summed into the residual stream
+            scratch.proj.fill(0.0);
+            for hd in 0..heads {
+                row_times_acc_into(
+                    &scratch.ctx[hd * dh..(hd + 1) * dh],
+                    &layer.wo[hd],
+                    &mut scratch.proj,
+                );
+            }
+            for (c, xo) in scratch.x.iter_mut().enumerate() {
+                *xo += scratch.proj[c];
+            }
+            if let Some(ffn) = &layer.ffn {
+                layernorm_row_into(&scratch.x, &ffn.ln.gamma, &ffn.ln.beta, &mut scratch.h);
+                scratch.ff_pre.copy_from_slice(&ffn.b1);
+                {
+                    let hv = MatView::contiguous(&scratch.h, 1, d);
+                    let mut pre = MatViewMut::contiguous(&mut scratch.ff_pre, 1, cfg.d_ff);
+                    matmul_acc_into(&hv, &ffn.w1.view(), &mut pre);
+                }
+                for (o, &p) in scratch.ff_act.iter_mut().zip(scratch.ff_pre.iter()) {
+                    *o = gelu(p);
+                }
+                scratch.ff_out.copy_from_slice(&ffn.b2);
+                {
+                    let av = MatView::contiguous(&scratch.ff_act, 1, cfg.d_ff);
+                    let mut ov = MatViewMut::contiguous(&mut scratch.ff_out, 1, d);
+                    matmul_acc_into(&av, &ffn.w2.view(), &mut ov);
+                }
+                for (xo, &f) in scratch.x.iter_mut().zip(scratch.ff_out.iter()) {
+                    *xo += f;
+                }
+            }
+        }
+        st.len += 1;
+        out.copy_from_slice(&scratch.x);
+    }
+}
+
+/// Per-sequence incremental decode state for the whole stack: one
+/// [`LayerDecodeState`] per layer plus the per-layer running
+/// block-descriptor accumulators (mean of the layer's pre-norm inputs over
+/// the in-progress block).
+pub struct StackDecodeState {
+    layers: Vec<LayerDecodeState>,
+    desc: Vec<Vec<f32>>,
+    len: usize,
+}
+
+impl StackDecodeState {
+    /// Tokens decoded so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// f32 elements across all layers — the measured side of
+    /// `memory::stack_decode_state_bytes`, asserted in
+    /// `tests/model_props.rs`.
+    pub fn f32_elems(&self) -> usize {
+        self.layers.iter().map(LayerDecodeState::f32_elems).sum::<usize>()
+            + self.desc.iter().map(Vec::len).sum::<usize>()
+    }
+}
+
+/// Per-step scratch rows for [`SinkhornStack::decode_step`]: the residual
+/// stream, pre-norm output, flat head-major q/k/v/context rows, FFN rows,
+/// and the streaming-softmax carry. One per sequence driver, reused across
+/// steps.
+pub struct StackDecodeScratch {
+    x: Vec<f32>,
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ctx: Vec<f32>,
+    proj: Vec<f32>,
+    ff_pre: Vec<f32>,
+    ff_act: Vec<f32>,
+    ff_out: Vec<f32>,
+    stream: DecodeScratch,
+}
+
+impl StackDecodeScratch {
+    pub fn new(cfg: &StackConfig) -> Self {
+        let d = cfg.d_model;
+        StackDecodeScratch {
+            x: vec![0.0; d],
+            h: vec![0.0; d],
+            q: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+            ctx: vec![0.0; d],
+            proj: vec![0.0; d],
+            ff_pre: vec![0.0; cfg.d_ff],
+            ff_act: vec![0.0; cfg.d_ff],
+            ff_out: vec![0.0; if cfg.bare_layers() { 0 } else { d }],
+            stream: DecodeScratch::new(),
+        }
+    }
+}
+
+fn check_input(cfg: &StackConfig, x: &Mat) {
+    assert_eq!(x.rows, cfg.seq_len, "stack input rows must equal seq_len");
+    assert_eq!(x.cols, cfg.d_model, "stack input cols must equal d_model");
+}
+
+/// One layer's forward pass over `x` in place (free function so the owned
+/// and shared entries can split borrows of `SinkhornStack`).
+fn layer_forward(
+    cfg: &StackConfig,
+    layer: &TransformerLayer,
+    x: &mut Mat,
+    engine: &SinkhornEngine,
+    scratch: &mut StackScratch,
+) {
+    let (d, nb, heads) = (cfg.d_model, cfg.nb, cfg.n_heads);
+    let b = cfg.block_rows();
+    // 1. pre-norm + SortNet + per-head projections, all read-only over the
+    // residual stream (or its LayerNorm image)
+    let r = {
+        let src: &Mat = match &layer.ln1 {
+            Some(ln) => {
+                layernorm_into(&x.view(), &ln.gamma, &ln.beta, &mut scratch.h.view_mut());
+                &scratch.h
+            }
+            None => &*x,
+        };
+        // SortNet: mean-pooled block descriptors → (nb, nb) logits →
+        // balance (the legacy fallback loop, kept bit-for-bit)
+        scratch.blk.data.fill(0.0);
+        for i in 0..nb {
+            for t in 0..b {
+                let xr = src.row(i * b + t);
+                for (c, o) in scratch.blk.row_mut(i).iter_mut().enumerate() {
+                    *o += xr[c];
+                }
+            }
+        }
+        scratch.blk.scale(1.0 / b as f32);
+        let logits = scratch.blk.matmul(&layer.sortnet);
+        let r = if cfg.causal {
+            causal_sinkhorn(&logits, cfg.sinkhorn_iters, true)
+        } else {
+            sinkhorn(&logits, cfg.sinkhorn_iters)
+        };
+        // per-head projections in the naive oracle's accumulation order
+        // (bit-compatible with the legacy `Mat::matmul` path)
+        let srcv = src.view();
+        for h in 0..heads {
+            scratch.qh[h].data.fill(0.0);
+            matmul_acc_ordered_into(&srcv, &layer.wq[h].view(), &mut scratch.qh[h].view_mut());
+            scratch.kh[h].data.fill(0.0);
+            matmul_acc_ordered_into(&srcv, &layer.wk[h].view(), &mut scratch.kh[h].view_mut());
+            scratch.vh[h].data.fill(0.0);
+            matmul_acc_ordered_into(&srcv, &layer.wv[h].view(), &mut scratch.vh[h].view_mut());
+        }
+        r
+    };
+    // 2. multi-head attention: all heads through one engine call (the
+    // reusable per-layer entry — pooled workspaces, no per-layer allocs)
+    match cfg.n_cut {
+        None => {
+            let reqs: Vec<AttentionReq> = (0..heads)
+                .map(|h| AttentionReq {
+                    q: &scratch.qh[h],
+                    k: &scratch.kh[h],
+                    v: &scratch.vh[h],
+                    r: &r,
+                    nb,
+                    causal: cfg.causal,
+                })
+                .collect();
+            let outs: Vec<&mut [f32]> =
+                scratch.ctx.iter_mut().map(|m| m.data.as_mut_slice()).collect();
+            engine.attention_chunks_into(&reqs, outs, &mut scratch.ws);
+        }
+        Some(c) => {
+            for h in 0..heads {
+                engine.sortcut_attention_into(
+                    &scratch.qh[h],
+                    &scratch.kh[h],
+                    &scratch.vh[h],
+                    &r,
+                    nb,
+                    c,
+                    &mut scratch.ctx[h],
+                );
+            }
+        }
+    }
+    // 3. per-head output projection summed into the residual stream
+    scratch.proj.data.fill(0.0);
+    for h in 0..heads {
+        let ctxv = scratch.ctx[h].view();
+        matmul_acc_ordered_into(&ctxv, &layer.wo[h].view(), &mut scratch.proj.view_mut());
+    }
+    x.add(&scratch.proj);
+    // 4. pre-norm GELU FFN on the tiled kernels (fused bias + matmul)
+    if let Some(ffn) = &layer.ffn {
+        layernorm_into(&x.view(), &ffn.ln.gamma, &ffn.ln.beta, &mut scratch.h.view_mut());
+        bias_rows_into(&ffn.b1, &mut scratch.ff_pre.view_mut());
+        matmul_acc_into(&scratch.h.view(), &ffn.w1.view(), &mut scratch.ff_pre.view_mut());
+        gelu_into(&scratch.ff_pre.view(), &mut scratch.ff_act.view_mut());
+        bias_rows_into(&ffn.b2, &mut scratch.ff_out.view_mut());
+        matmul_acc_into(&scratch.ff_act.view(), &ffn.w2.view(), &mut scratch.ff_out.view_mut());
+        x.add(&scratch.ff_out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The heavy property suites (stack vs the naive per-layer oracle,
+    // depth-1 bitwise legacy equivalence, incremental decode vs the
+    // full-prefix oracle, thread invariance, memory accounting) live in
+    // tests/model_props.rs — only construction edge cases are covered
+    // here.
+    use super::*;
+
+    fn cfg(depth: usize, heads: usize, d_ff: usize) -> StackConfig {
+        StackConfig {
+            seq_len: 12,
+            d_model: 8,
+            n_heads: heads,
+            depth,
+            d_ff,
+            nb: 3,
+            sinkhorn_iters: 4,
+            causal: false,
+            n_cut: None,
+        }
+    }
+
+    #[test]
+    fn seeded_stack_is_deterministic() {
+        let a = SinkhornStack::seeded(cfg(2, 2, 16), 7, SinkhornEngine::serial()).unwrap();
+        let b = SinkhornStack::seeded(cfg(2, 2, 16), 7, SinkhornEngine::serial()).unwrap();
+        assert_eq!(a.n_params(), b.n_params());
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.sortnet, lb.sortnet);
+            assert_eq!(la.wq[0], lb.wq[0]);
+            assert_eq!(la.ffn.as_ref().unwrap().w1, lb.ffn.as_ref().unwrap().w1);
+        }
+        // different layers get different weights
+        assert_ne!(a.layers[0].wq[0], a.layers[1].wq[0]);
+        assert_ne!(a.layers[0].wq[0], a.layers[0].wk[0]);
+        assert_ne!(a.layers[0].wq[0], a.layers[0].wq[1]);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(StackConfig { n_heads: 3, ..cfg(1, 1, 0) }.validate().is_err()); // 3 ∤ 8
+        assert!(StackConfig { depth: 0, ..cfg(1, 1, 0) }.validate().is_err());
+        assert!(StackConfig { nb: 5, ..cfg(1, 1, 0) }.validate().is_err()); // 5 ∤ 12
+        assert!(StackConfig { n_cut: Some(4), ..cfg(1, 1, 0) }.validate().is_err()); // > nb
+        assert!(StackConfig { n_cut: Some(2), causal: true, ..cfg(1, 1, 0) }
+            .validate()
+            .is_err());
+        assert!(cfg(2, 2, 16).validate().is_ok());
+    }
+
+    #[test]
+    fn stack_rejects_mismatched_layers() {
+        let c1 = cfg(1, 1, 0);
+        let c2 = cfg(2, 2, 16);
+        let mut rng = Rng::new(3);
+        let bare = TransformerLayer::seeded(&c1, &mut rng);
+        // depth mismatch
+        let eng = SinkhornEngine::serial();
+        assert!(SinkhornStack::new(c2.clone(), vec![bare.clone()], eng).is_err());
+        // shape mismatch (bare layer against a full config)
+        assert!(SinkhornStack::new(
+            c2,
+            vec![bare.clone(), bare],
+            SinkhornEngine::serial()
+        )
+        .is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "seq_len")]
+    fn forward_rejects_wrong_length() {
+        let mut stack = SinkhornStack::seeded(cfg(1, 1, 0), 5, SinkhornEngine::serial()).unwrap();
+        let mut x = Mat::zeros(8, 8);
+        stack.forward(&mut x);
+    }
+
+    #[test]
+    #[should_panic(expected = "decode capacity exhausted")]
+    fn decode_overflow_panics() {
+        let stack = SinkhornStack::seeded(cfg(1, 1, 0), 5, SinkhornEngine::serial()).unwrap();
+        let mut st = stack.decode_state();
+        let mut scratch = stack.new_decode_scratch();
+        let row = vec![0.1f32; 8];
+        let mut out = vec![0.0f32; 8];
+        for _ in 0..13 {
+            stack.decode_step(&mut st, &row, &mut scratch, &mut out);
+        }
+    }
+}

@@ -84,6 +84,50 @@ impl WorkerPool {
             }
         });
     }
+
+    /// [`Self::run`] with *caller-owned* worker states: `states[i]` is
+    /// handed to worker `i` as its private scratch, mutated in place, and
+    /// survives the call — how the layer stack (`sinkhorn::model`) reuses
+    /// one set of per-worker engine `Workspace`s across every layer of a
+    /// forward pass instead of re-allocating them per `run`. `states` must
+    /// hold at least one state per worker the call will use (at most
+    /// [`Self::threads`]); extra states are left untouched. The same
+    /// determinism argument as `run` applies: partitioning is by task
+    /// index only, and states must not influence results (scratch only).
+    pub fn run_with<T, S, W>(&self, tasks: Vec<T>, states: &mut [S], work: W)
+    where
+        T: Send,
+        S: Send,
+        W: Fn(&mut S, T) + Sync,
+    {
+        let n_workers = self.threads.min(tasks.len()).max(1);
+        assert!(
+            states.len() >= n_workers,
+            "run_with needs {n_workers} worker states, got {}",
+            states.len()
+        );
+        if n_workers == 1 {
+            let state = &mut states[0];
+            for t in tasks {
+                work(state, t);
+            }
+            return;
+        }
+        let mut buckets: Vec<Vec<T>> = (0..n_workers).map(|_| Vec::new()).collect();
+        for (i, t) in tasks.into_iter().enumerate() {
+            buckets[i % n_workers].push(t);
+        }
+        let work = &work;
+        std::thread::scope(|scope| {
+            for (bucket, state) in buckets.into_iter().zip(states.iter_mut()) {
+                scope.spawn(move || {
+                    for t in bucket {
+                        work(state, t);
+                    }
+                });
+            }
+        });
+    }
 }
 
 #[cfg(test)]
@@ -141,5 +185,33 @@ mod tests {
     #[test]
     fn auto_threads_at_least_one() {
         assert!(auto_threads() >= 1);
+    }
+
+    #[test]
+    fn run_with_reuses_caller_states_across_calls() {
+        // the per-worker states survive the call and keep their mutations —
+        // the cross-layer workspace-reuse contract of the model stack
+        let mut states = vec![0usize; 3];
+        let pool = WorkerPool::new(3);
+        for round in 1..=4 {
+            let mut out = vec![0usize; 12];
+            let tasks: Vec<(usize, &mut usize)> = out.iter_mut().enumerate().collect();
+            pool.run_with(tasks, &mut states, |s, (i, slot)| {
+                *s += 1;
+                *slot = i + 1;
+            });
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i + 1, "round {round}");
+            }
+        }
+        // 4 rounds x 12 tasks accumulated into the same three states
+        assert_eq!(states.iter().sum::<usize>(), 48);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker states")]
+    fn run_with_rejects_too_few_states() {
+        let mut states = vec![0u8; 1];
+        WorkerPool::new(4).run_with(vec![1, 2, 3, 4, 5], &mut states, |_, _| {});
     }
 }

@@ -1,0 +1,333 @@
+//! Property tests for the multi-layer Sinkhorn Transformer stack against
+//! its naive per-layer oracles — run with no artifacts and no XLA, in
+//! every build. The contract under test (DESIGN.md §Model):
+//!
+//! 1. a depth-1 *bare* stack (one head, no LayerNorm, no FFN) reproduces
+//!    the historical single-layer fallback math **bitwise** — naive-order
+//!    projections, engine attention, `ctx @ wo`, residual;
+//! 2. the full engine stack (pre-LN, multi-head, GELU FFN, depth L)
+//!    matches the naive per-layer oracle
+//!    `attention::reference_stack_forward` within 1e-5 max-abs across
+//!    tile-tail shapes, multi-tile blocks and SortCut widths;
+//! 3. the incremental depth-L decode (`SinkhornStack::decode_step`)
+//!    matches the full-prefix per-layer oracle
+//!    `attention::reference_stack_decode` at every step, including steps
+//!    that cross block boundaries and partial final blocks;
+//! 4. the stack is bit-identical across engine thread counts, and the
+//!    batched forward is bit-identical to the single forward;
+//! 5. parameters, forward scratch and decode state match the analytic
+//!    `memory` models exactly.
+
+use sinkhorn::sinkhorn::engine::{ENGINE_TOL as TOL, STREAM_TILE_W};
+use sinkhorn::sinkhorn::memory::{stack_decode_state_bytes, stack_params, stack_scratch_elems};
+use sinkhorn::sinkhorn::model::StackScratch;
+use sinkhorn::sinkhorn::{
+    reference_stack_decode, reference_stack_forward, sinkhorn_attention, Mat, SinkhornEngine,
+    SinkhornStack, StackConfig, WorkerPool,
+};
+use sinkhorn::util::prop::{forall, Gen};
+use sinkhorn::util::rng::Rng;
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.normal() as f32 * 0.5)
+}
+
+fn cfg(
+    nb: usize,
+    b: usize,
+    d_model: usize,
+    n_heads: usize,
+    depth: usize,
+    d_ff: usize,
+) -> StackConfig {
+    StackConfig {
+        seq_len: nb * b,
+        d_model,
+        n_heads,
+        depth,
+        d_ff,
+        nb,
+        sinkhorn_iters: 5,
+        causal: false,
+        n_cut: None,
+    }
+}
+
+struct Case {
+    cfg: StackConfig,
+    x: Mat,
+    seed: u64,
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let c = &self.cfg;
+        write!(
+            f,
+            "Case(nb={}, b={}, d={}, heads={}, depth={}, d_ff={}, cut={:?})",
+            c.nb,
+            c.block_rows(),
+            c.d_model,
+            c.n_heads,
+            c.depth,
+            c.d_ff,
+            c.n_cut
+        )
+    }
+}
+
+fn gen_case(g: &mut Gen) -> Case {
+    // heads * head-dim straddles the microkernel tile widths; half the
+    // cases get an FFN, a third get SortCut
+    let nb = 2 + g.usize(0, 3);
+    let b = 2 + g.usize(0, 4);
+    let n_heads = 1 + g.usize(0, 2);
+    let d_head = 2 + g.usize(0, 5);
+    let d_model = n_heads * d_head;
+    let depth = 1 + g.usize(0, 2);
+    let d_ff = if g.usize(0, 2) == 0 { 0 } else { d_model * 2 + 1 };
+    let mut c = cfg(nb, b, d_model, n_heads, depth, d_ff);
+    if g.usize(0, 3) == 0 {
+        c.n_cut = Some(1 + g.usize(0, nb - 1));
+    }
+    let mut rng = Rng::new(g.rng.next_u64());
+    let x = rand_mat(&mut rng, c.seq_len, c.d_model);
+    Case { cfg: c, x, seed: rng.next_u64() }
+}
+
+fn forward(case: &Case, threads: usize) -> Mat {
+    let mut stack =
+        SinkhornStack::seeded(case.cfg.clone(), case.seed, SinkhornEngine::new(threads)).unwrap();
+    let mut x = case.x.clone();
+    stack.forward(&mut x);
+    x
+}
+
+#[test]
+fn stack_matches_per_layer_oracle_across_shapes() {
+    forall(24, 0x40DE, gen_case, |c| {
+        let stack = SinkhornStack::seeded(c.cfg.clone(), c.seed, SinkhornEngine::serial()).unwrap();
+        let want = reference_stack_forward(&c.x, &stack.cfg, &stack.layers);
+        let got = forward(c, 1);
+        let diff = got.max_abs_diff(&want);
+        if diff > TOL {
+            return Err(format!("stack vs per-layer oracle max-abs {diff}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn stack_handles_multi_tile_blocks_and_tile_tails() {
+    // fixed shapes targeting the seams: b > STREAM_TILE_W (one block spans
+    // several streaming key tiles), head dims off the 4/8-wide kernel
+    // tiles, depth with and without FFN
+    let shapes = [
+        (2usize, STREAM_TILE_W + 3, 2usize, 7usize, 2usize, 0usize),
+        (3, STREAM_TILE_W + 1, 1, 9, 1, 19),
+        (2, 5, 3, 3, 3, 13),
+        (4, 3, 2, 2, 2, 0),
+    ];
+    let mut rng = Rng::new(0x40DF);
+    for (nb, b, heads, d_head, depth, d_ff) in shapes {
+        let c = cfg(nb, b, heads * d_head, heads, depth, d_ff);
+        let x = rand_mat(&mut rng, c.seq_len, c.d_model);
+        let case = Case { cfg: c, x, seed: rng.next_u64() };
+        let stack =
+            SinkhornStack::seeded(case.cfg.clone(), case.seed, SinkhornEngine::serial()).unwrap();
+        let want = reference_stack_forward(&case.x, &stack.cfg, &stack.layers);
+        let got = forward(&case, 1);
+        let diff = got.max_abs_diff(&want);
+        assert!(
+            diff <= TOL,
+            "shape (nb={nb}, b={b}, heads={heads}, d_head={d_head}, depth={depth}, \
+             d_ff={d_ff}): max-abs {diff}"
+        );
+    }
+}
+
+#[test]
+fn stack_sortcut_matches_oracle_for_every_cut() {
+    let mut rng = Rng::new(0x40E0);
+    let base = cfg(4, 3, 8, 2, 2, 17);
+    let x = rand_mat(&mut rng, base.seq_len, base.d_model);
+    for cut in 1..=base.nb {
+        let mut c = base.clone();
+        c.n_cut = Some(cut);
+        let case = Case { cfg: c, x: x.clone(), seed: 0xC07 + cut as u64 };
+        let stack =
+            SinkhornStack::seeded(case.cfg.clone(), case.seed, SinkhornEngine::serial()).unwrap();
+        let want = reference_stack_forward(&case.x, &stack.cfg, &stack.layers);
+        let got = forward(&case, 1);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff <= TOL, "cut={cut}: max-abs {diff}");
+    }
+}
+
+#[test]
+fn stack_is_thread_invariant_bitwise_and_batch_equals_single() {
+    forall(10, 0x40E1, gen_case, |c| {
+        let serial = forward(c, 1);
+        for threads in [2usize, 5] {
+            let got = forward(c, threads);
+            if got != serial {
+                return Err(format!(
+                    "threads={threads}: stack not thread-invariant (max diff {})",
+                    got.max_abs_diff(&serial)
+                ));
+            }
+        }
+        // batched forward: same bits for every request
+        let stack =
+            SinkhornStack::seeded(c.cfg.clone(), c.seed, SinkhornEngine::new(3)).unwrap();
+        let mut xs: Vec<Mat> = (0..3).map(|_| c.x.clone()).collect();
+        stack.forward_batch(&mut xs, &WorkerPool::new(2));
+        for (i, xb) in xs.iter().enumerate() {
+            if xb != &serial {
+                return Err(format!("batch seq {i} diverged from the single forward"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The depth-1 bare stack must be bit-identical to the historical
+/// single-layer fallback math, reconstructed operation by operation from
+/// the same weights: q/k/v via `Mat::matmul`, SortNet over mean-pooled
+/// block descriptors, one engine attention pass, `ctx @ wo`, residual.
+#[test]
+fn bare_depth1_stack_is_bitwise_legacy_single_layer() {
+    let mut rng = Rng::new(0x40E2);
+    for (nb, b, d) in [(4usize, 8usize, 16usize), (2, 5, 7), (3, 4, 12)] {
+        let c = cfg(nb, b, d, 1, 1, 0);
+        let x = rand_mat(&mut rng, c.seq_len, d);
+        let mut stack =
+            SinkhornStack::seeded(c.clone(), 0xB17 ^ d as u64, SinkhornEngine::serial()).unwrap();
+        let layer = stack.layers[0].clone();
+        // legacy math
+        let q = x.matmul(&layer.wq[0]);
+        let k = x.matmul(&layer.wk[0]);
+        let v = x.matmul(&layer.wv[0]);
+        let mut blk = Mat::zeros(nb, d);
+        for i in 0..nb {
+            for t in 0..b {
+                let xr = x.row(i * b + t);
+                for (cc, o) in blk.row_mut(i).iter_mut().enumerate() {
+                    *o += xr[cc];
+                }
+            }
+        }
+        blk.scale(1.0 / b as f32);
+        let r = sinkhorn::sinkhorn::balance::sinkhorn(
+            &blk.matmul(&layer.sortnet),
+            c.sinkhorn_iters,
+        );
+        let eng = SinkhornEngine::serial();
+        let ctx = eng.attention(&q, &k, &v, &r, nb, false);
+        let mut want = x.clone();
+        want.add(&ctx.matmul(&layer.wo[0]));
+        // the oracle-equivalence sanity check: legacy math is also the
+        // naive attention path up to epsilon
+        let naive = sinkhorn_attention(&q, &k, &v, &r, nb, false);
+        assert!(ctx.max_abs_diff(&naive) <= TOL);
+        // stack forward, bit for bit
+        let mut got = x.clone();
+        stack.forward(&mut got);
+        assert_eq!(got, want, "bare depth-1 stack drifted from the legacy math (nb={nb})");
+    }
+}
+
+#[test]
+fn incremental_stack_decode_matches_full_prefix_oracle() {
+    // every step, block boundaries, partial final blocks, with and
+    // without FFN/heads/SortCut
+    let mut rng = Rng::new(0x40E3);
+    let shapes: [(usize, usize, usize, usize, usize, usize, Option<usize>); 4] = [
+        (3, 4, 1, 6, 1, 0, None),       // bare single layer (legacy shape)
+        (3, 3, 2, 4, 2, 11, None),      // full layers, 2 heads, depth 2
+        (2, 5, 1, 9, 3, 7, Some(1)),    // SortCut decode, depth 3
+        (4, 2, 2, 3, 2, 0, Some(2)),    // bare multi-head SortCut
+    ];
+    for (nb, b, heads, d_head, depth, d_ff, cut) in shapes {
+        let mut c = cfg(nb, b, heads * d_head, heads, depth, d_ff);
+        c.n_cut = cut;
+        let total = nb * b - b / 2; // end mid-block
+        let stack =
+            SinkhornStack::seeded(c.clone(), 0xDE60 ^ depth as u64, SinkhornEngine::serial())
+                .unwrap();
+        let x = rand_mat(&mut rng, total, c.d_model);
+        let want = reference_stack_decode(&x, &stack.cfg, &stack.layers);
+        let mut st = stack.decode_state();
+        let mut scratch = stack.new_decode_scratch();
+        let mut out = vec![0.0f32; c.d_model];
+        for t in 0..total {
+            stack.decode_step(&mut st, x.row(t), &mut scratch, &mut out);
+            for (e, &got) in out.iter().enumerate() {
+                let dv = (got - want[(t, e)]).abs();
+                assert!(
+                    dv <= TOL,
+                    "shape (nb={nb}, b={b}, heads={heads}, depth={depth}, d_ff={d_ff}, \
+                     cut={cut:?}) step {t} col {e}: diverged by {dv}"
+                );
+            }
+        }
+        assert_eq!(st.len(), total);
+    }
+}
+
+#[test]
+fn decode_is_deterministic_across_scratch_reuse() {
+    // one scratch driving two sequences back to back must reproduce a
+    // fresh-scratch run bit for bit (the per-worker reuse contract)
+    let c = cfg(3, 4, 8, 2, 2, 16);
+    let stack = SinkhornStack::seeded(c.clone(), 99, SinkhornEngine::serial()).unwrap();
+    let mut rng = Rng::new(0x40E4);
+    let x = rand_mat(&mut rng, c.seq_len, c.d_model);
+    let run = |scratch: &mut sinkhorn::sinkhorn::StackDecodeScratch| -> Vec<Vec<f32>> {
+        let mut st = stack.decode_state();
+        let mut out = vec![0.0f32; c.d_model];
+        (0..c.seq_len)
+            .map(|t| {
+                stack.decode_step(&mut st, x.row(t), scratch, &mut out);
+                out.clone()
+            })
+            .collect()
+    };
+    let mut scratch = stack.new_decode_scratch();
+    let first = run(&mut scratch);
+    let reused = run(&mut scratch); // same scratch, fresh state
+    assert_eq!(first, reused);
+}
+
+#[test]
+fn params_scratch_and_decode_state_match_memory_models() {
+    for (nb, b, heads, d_head, depth, d_ff, cut) in [
+        (4usize, 8usize, 1usize, 16usize, 1usize, 0usize, None),
+        (4, 8, 2, 8, 2, 32, None),
+        (2, 16, 4, 4, 3, 64, Some(2)),
+    ] {
+        let mut c = cfg(nb, b, heads * d_head, heads, depth, d_ff);
+        c.n_cut = cut;
+        let stack = SinkhornStack::seeded(c.clone(), 5, SinkhornEngine::new(3)).unwrap();
+        assert_eq!(
+            stack.n_params(),
+            stack_params(&c),
+            "param accounting drifted at depth={depth}"
+        );
+        for threads in [1usize, 3] {
+            assert_eq!(
+                StackScratch::new(&c, threads).f32_elems(),
+                stack_scratch_elems(&c, threads),
+                "scratch accounting drifted (threads={threads})"
+            );
+        }
+        let st = stack.decode_state();
+        assert_eq!(
+            st.f32_elems() * 4,
+            stack_decode_state_bytes(depth, heads, b, d_head, nb, cut),
+            "decode-state accounting drifted at depth={depth}"
+        );
+        assert!(st.is_empty());
+        assert_eq!(st.depth(), depth);
+    }
+}

@@ -1,0 +1,173 @@
+#!/usr/bin/env python3
+"""Validate the machine-readable bench outputs (`BENCH_<name>.json` at the
+repo root) against their schema and against the registered bench targets.
+
+The BENCH_*.json files are the repo's perf trajectory: successive PRs
+regenerate them and diff. This gate keeps them honest:
+
+* every `BENCH_<name>.json` must correspond to a registered
+  `bench --target <name>` arm (rust/src/bench/tables.rs ALL_TARGETS), or
+  the file claims a provenance nothing can regenerate;
+* the document must parse and carry `{target, unit, cells}` with
+  `target == <name>` and a non-empty cell list;
+* every cell must carry the target's required keys with sane types
+  (positive shape integers, a non-empty path/mode string, a positive
+  metric).
+
+Needs no Rust toolchain — `make doc-refs` runs it in every environment
+(both CI jobs, via `check-docs`, and the offline container). Zero
+committed files is a pass: smoke benches deliberately emit no JSON, so
+the gate only ever sees files produced by a real `make bench` run.
+
+Usage: python3 tools/check_bench_json.py [FILE...]
+Exit code 0 when every file validates, 1 otherwise.
+"""
+import json
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# Per-target cell schema: key -> "int" (positive integer), "num" (positive
+# number), "str" (non-empty string), "uint" (integer >= 0).
+CELL_SCHEMAS = {
+    "engine": {
+        "ell": "int",
+        "nb": "int",
+        "b": "int",
+        "d": "int",
+        "path": "str",
+        "threads": "int",
+        "ns_per_iter": "num",
+    },
+    "decode": {
+        "ell": "int",
+        "nb": "int",
+        "b": "int",
+        "d": "int",
+        "n_cut": "uint",
+        "path": "str",
+        "threads": "int",
+        "tokens_per_sec": "num",
+    },
+    "model": {
+        "depth": "int",
+        "heads": "int",
+        "ell": "int",
+        "nb": "int",
+        "b": "int",
+        "d": "int",
+        "d_ff": "uint",
+        "mode": "str",
+        "batch": "int",
+        "threads": "int",
+        "ns_per_iter": "num",
+    },
+}
+
+
+def registered_targets() -> set:
+    tables = ROOT / "rust" / "src" / "bench" / "tables.rs"
+    if not tables.exists():
+        return set()
+    m = re.search(r"ALL_TARGETS[^=]*=\s*&\[(.*?)\]", tables.read_text(encoding="utf-8"), re.DOTALL)
+    if not m:
+        return set()
+    return set(re.findall(r'"([A-Za-z0-9_]+)"', m.group(1)))
+
+
+def check_value(kind: str, v) -> bool:
+    if kind == "int":
+        return isinstance(v, (int, float)) and not isinstance(v, bool) and v == int(v) and v > 0
+    if kind == "uint":
+        return isinstance(v, (int, float)) and not isinstance(v, bool) and v == int(v) and v >= 0
+    if kind == "num":
+        return isinstance(v, (int, float)) and not isinstance(v, bool) and v > 0
+    if kind == "str":
+        return isinstance(v, str) and len(v) > 0
+    raise AssertionError(f"unknown schema kind {kind}")
+
+
+def check_file(path: Path, targets: set) -> list:
+    errors = []
+    name = re.fullmatch(r"BENCH_([A-Za-z0-9_]+)\.json", path.name)
+    if not name:
+        return [f"{path.name}: not a BENCH_<name>.json file"]
+    target = name.group(1)
+    if targets and target not in targets:
+        errors.append(
+            f"{path.name}: '{target}' is not a registered bench target "
+            f"(tables.rs ALL_TARGETS: {sorted(targets)})"
+        )
+    schema = CELL_SCHEMAS.get(target)
+    if schema is None:
+        errors.append(
+            f"{path.name}: no cell schema registered for '{target}' — add one to "
+            f"tools/check_bench_json.py when adding a JSON-emitting bench target"
+        )
+        return errors
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        return errors + [f"{path.name}: does not parse as JSON ({e})"]
+    if not isinstance(doc, dict):
+        return errors + [f"{path.name}: top level must be an object"]
+    if doc.get("target") != target:
+        errors.append(f"{path.name}: top-level target={doc.get('target')!r}, want {target!r}")
+    if not isinstance(doc.get("unit"), str) or not doc.get("unit"):
+        errors.append(f"{path.name}: missing/empty 'unit' string")
+    cells = doc.get("cells")
+    if not isinstance(cells, list) or not cells:
+        errors.append(f"{path.name}: 'cells' must be a non-empty array")
+        return errors
+    for i, cell in enumerate(cells):
+        if not isinstance(cell, dict):
+            errors.append(f"{path.name}: cells[{i}] must be an object")
+            continue
+        for key, kind in schema.items():
+            if key not in cell:
+                errors.append(f"{path.name}: cells[{i}] missing '{key}'")
+            elif not check_value(kind, cell[key]):
+                errors.append(
+                    f"{path.name}: cells[{i}].{key}={cell[key]!r} fails the '{kind}' check"
+                )
+        extra = set(cell) - set(schema)
+        if extra:
+            errors.append(
+                f"{path.name}: cells[{i}] has unknown keys {sorted(extra)} — extend the "
+                f"schema in tools/check_bench_json.py alongside the emitter"
+            )
+    return errors
+
+
+def main() -> int:
+    args = [Path(a) for a in sys.argv[1:]]
+    files = args if args else sorted(ROOT.glob("BENCH_*.json"))
+    targets = registered_targets()
+    if not targets:
+        print("FAIL: could not read ALL_TARGETS from rust/src/bench/tables.rs")
+        return 1
+    errors = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: no such file")
+            continue
+        errors.extend(check_file(f, targets))
+    for msg in errors:
+        print(f"FAIL: {msg}")
+    if not files:
+        print(
+            "checked 0 BENCH_*.json files (none committed — the offline container "
+            "has no toolchain to generate them): OK"
+        )
+        return 0
+    print(
+        f"checked {len(files)} BENCH_*.json file(s) against {len(targets)} registered "
+        f"targets: " + ("FAIL" if errors else "OK")
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,6 +32,8 @@ REQUIRED_ANCHORS = {
     "Streaming", "Microkernels",
     # incremental-decode PR: cached causal Sinkhorn state + SortCut decode
     "Decode",
+    # model-stack PR: multi-layer multi-head transformer stack + CI
+    "Model",
 }
 
 BENCH_JSON_RE = re.compile(r"BENCH_([A-Za-z0-9_]+)\.json")
