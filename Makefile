@@ -5,15 +5,16 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test check-docs doc-refs fmt-check clippy ci bench bench-engine bench-decode bench-model bench-smoke serve-fallback artifacts all
+.PHONY: build test check-docs doc-refs fmt-check clippy ci bench bench-engine bench-decode bench-model bench-serve bench-smoke serve-smoke serve-fallback artifacts all
 
 all: build
 
 ## The full CI gate set (.github/workflows/ci.yml `rust` job): build,
-## tests, format, lint, docs + reference checks, and a smoke pass of the
+## tests, format, lint, docs + reference checks, a smoke pass of the
 ## runtime-free bench targets (tiny shapes, correctness gates on, no
-## BENCH_*.json pollution).
-ci: build test fmt-check clippy check-docs bench-smoke
+## BENCH_*.json pollution), and the TCP serve smoke (scripted classify +
+## streamed gen against a live fallback server).
+ci: build test fmt-check clippy check-docs bench-smoke serve-smoke
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -51,10 +52,11 @@ clippy:
 	fi
 
 ## Regenerate the perf numbers: the engine naive/fused/parallel table, the
-## decode tokens/sec table and the model depth-sweep table, plus
-## machine-readable medians in BENCH_engine.json, BENCH_decode.json and
-## BENCH_model.json at the repo root.
-bench: bench-engine bench-decode bench-model
+## decode tokens/sec table, the model depth-sweep table and the serve
+## offered-load sweep (request-batch vs continuous scheduler), plus
+## machine-readable medians in BENCH_engine.json, BENCH_decode.json,
+## BENCH_model.json and BENCH_serve.json at the repo root.
+bench: bench-engine bench-decode bench-model bench-serve
 
 bench-engine:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target engine
@@ -65,16 +67,33 @@ bench-decode:
 bench-model:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target model
 
-## CI smoke benches: every runtime-free target (engine, decode, model at
-## tiny shapes with one rep; memory is analytic and already instant) — the
-## correctness gates (engine vs naive oracle, decode vs full-prefix
-## oracle, stack vs per-layer oracle) still run, but the real BENCH_*.json
-## files are left untouched.
+bench-serve:
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target serve
+
+## CI smoke benches: every runtime-free target (engine, decode, model and
+## serve at tiny shapes with one rep; memory is analytic and already
+## instant) — the correctness gates (engine vs naive oracle, decode vs
+## full-prefix oracle, stack vs per-layer oracle, scheduler vs
+## single-request generate) still run, but the real BENCH_*.json files
+## are left untouched.
 bench-smoke:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target engine --smoke
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target decode --smoke
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target model --smoke
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target serve --smoke
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target memory --smoke
+
+## End-to-end TCP smoke (wired into `make ci`): spawn the fallback server
+## on an ephemeral port, run scripted classify + *streamed* gen + model +
+## stable-error traffic through the real socket path, assert every reply
+## (tools/serve_smoke.py). Loudly skipped without a Rust toolchain, like
+## fmt-check — the script runs the built `sinkhorn serve` binary.
+serve-smoke:
+	@if command -v $(CARGO) >/dev/null 2>&1; then \
+		CARGO=$(CARGO) python3 tools/serve_smoke.py; \
+	else \
+		echo "WARNING: serve-smoke SKIPPED — no '$(CARGO)' toolchain on PATH"; \
+	fi
 
 ## Serve the pure-Rust fallback engine over TCP (no artifacts needed):
 ##   echo "4 8 15 16 23 42" | nc 127.0.0.1 7878     # classify

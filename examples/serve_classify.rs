@@ -36,7 +36,11 @@ fn main() -> Result<()> {
         artifacts.clone(),
         exp_name.clone(),
         None,
-        BatchPolicy { max_batch: 32, max_wait: std::time::Duration::from_millis(4) },
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_millis(4),
+            ..Default::default()
+        },
         11,
     )?;
 

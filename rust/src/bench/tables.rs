@@ -1,12 +1,14 @@
 //! Per-table bench targets: each regenerates one table/figure of the paper
 //! with paper-vs-measured columns and records it under artifacts/results/.
 //!
-//! Three targets are *runtime-free* — `engine` (pure-Rust blocked engine:
+//! Five targets are *runtime-free* — `engine` (pure-Rust blocked engine:
 //! naive vs fused vs parallel), `decode` (incremental autoregressive
-//! decoding: full-recompute vs cached vs SortCut, DESIGN.md §Decode) and
-//! `memory` (the §4 analytic model) — and run on any machine; the rest
-//! train AOT artifacts and need a PJRT runtime plus `make artifacts`
-//! (DESIGN.md §2).
+//! decoding: full-recompute vs cached vs SortCut, DESIGN.md §Decode),
+//! `model` (the depth-L stack forward, DESIGN.md §Model), `serve` (the
+//! serving executor under offered load: request-batch waves vs the
+//! continuous-batching scheduler, DESIGN.md §Scheduler) and `memory` (the
+//! §4 analytic model) — and run on any machine; the rest train AOT
+//! artifacts and need a PJRT runtime plus `make artifacts` (DESIGN.md §2).
 
 use std::collections::HashMap;
 
@@ -763,6 +765,234 @@ fn write_model_json(
     Ok(path)
 }
 
+/// One measured serve cell: one `(offered load, executor mode)` pair.
+struct ServeCell {
+    mode: &'static str,
+    sessions: usize,
+    prompt_len: usize,
+    gen_len: usize,
+    slots: usize,
+    toks_per_sec: f64,
+    p50_tok_ms: f64,
+    p95_tok_ms: f64,
+    occupancy: f64,
+}
+
+/// `bench serve` — the serving executor under offered load (DESIGN.md
+/// §Scheduler): N concurrent clients fire mixed-length generate requests
+/// at a fallback server running either the legacy **request-batch** wave
+/// executor or the **continuous-batching** scheduler, and the sweep
+/// reports aggregate tokens/s, p50/p95 per-token latency, and slot
+/// occupancy per `(sessions × prompt/gen length, mode)` cell.
+///
+/// Per-token latency is the inter-arrival gap of streamed tokens (first
+/// token: submit → arrival); the request-batch executor streams nothing,
+/// so its tokens are accounted at `total / n_tokens` each — which is the
+/// honest number: every token of a wave arrives when the whole wave
+/// does. Occupancy is `Σ per-request service time / (wall · slots)`.
+///
+/// Before timing anything, every reply is gated against the
+/// single-request oracle: the scheduler's output must equal
+/// `FallbackModel::generate` exactly, per request, regardless of what
+/// shared its ticks — the bench cannot quietly compare different
+/// computations. Medians land machine-readably in `BENCH_serve.json` at
+/// the repo root, next to the engine/decode/model trajectories.
+pub fn serve_table(opts: &BenchOptions) -> Result<String> {
+    use crate::server::{BatchPolicy, ExecMode, FallbackConfig, FallbackModel, Server};
+    use std::time::{Duration, Instant};
+    let (seq_len, d_model, nb, depth, heads, d_ff): (usize, usize, usize, usize, usize, usize) =
+        if opts.smoke { (32, 16, 4, 1, 1, 0) } else { (128, 32, 8, 2, 2, 64) };
+    let slots = 8usize;
+    let cfg = FallbackConfig {
+        seq_len,
+        d_model,
+        nb,
+        depth,
+        n_heads: heads,
+        d_ff,
+        vocab: 64,
+        ..Default::default()
+    };
+    let oracle = FallbackModel::new(cfg.clone())?;
+    // offered-load grid: (concurrent clients, base prompt len, base gen len)
+    let loads: &[(usize, usize, usize)] =
+        if opts.smoke { &[(3, 4, 3)] } else { &[(4, 8, 8), (8, 8, 16), (16, 16, 24)] };
+    let reqs_per_client = if opts.smoke { 1 } else { 3 };
+    let mut t = Table::new(
+        &format!(
+            "serve — offered-load sweep, depth={depth} heads={heads} d={d_model} \
+             seq_len={seq_len} ({slots} slots){}",
+            if opts.smoke { " [SMOKE]" } else { "" }
+        ),
+        &["mode", "sessions", "prompt", "gen", "tok/s", "p50 tok ms", "p95 tok ms", "occupancy"],
+    );
+    let mut cells = Vec::new();
+    for &(n_clients, plen, glen) in loads {
+        for (mode, mode_name) in
+            [(ExecMode::RequestBatch, "request_batch"), (ExecMode::Continuous, "continuous")]
+        {
+            let policy = BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(1),
+                mode,
+                max_sessions: slots,
+                queue_depth: 4096,
+                mem_budget: 0,
+            };
+            let server = Server::start_fallback(cfg.clone(), policy)?;
+            // precompute every client's prompts, budgets and the oracle
+            // generations *before* the timed window — inside it the gate
+            // is a pure comparison, so oracle CPU never contends with the
+            // load being measured
+            let expected: Vec<Vec<(Vec<i32>, usize, Vec<i32>)>> = (0..n_clients)
+                .map(|c| {
+                    (0..reqs_per_client)
+                        .map(|r| {
+                            let p: Vec<i32> = (0..plen + (c % 3))
+                                .map(|i| ((i * 7 + c + r) % 64) as i32)
+                                .collect();
+                            let want_n = match (c + r) % 3 {
+                                0 => (glen / 2).max(1),
+                                1 => glen,
+                                _ => glen * 2,
+                            };
+                            let want = oracle.generate(&p, want_n);
+                            (p, want_n, want)
+                        })
+                        .collect()
+                })
+                .collect();
+            let t0 = Instant::now();
+            // each client fires mixed-length requests back to back: every
+            // third asks for a 2x generation, so wave executors
+            // head-of-line block on it while the scheduler backfills
+            let results: Vec<(usize, Vec<f64>, f64)> = std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for (c, plan) in expected.iter().enumerate() {
+                    let h = server.handle.clone();
+                    handles.push(scope.spawn(move || {
+                        let mut token_lat_ms: Vec<f64> = Vec::new();
+                        let mut n_tokens = 0usize;
+                        let mut service_s = 0.0f64;
+                        for (r, (p, want_n, want)) in plan.iter().enumerate() {
+                            let submit = Instant::now();
+                            let (toks, resp) = h.generate_streaming(p.clone(), *want_n).unwrap();
+                            let mut prev = submit;
+                            let mut ids = Vec::new();
+                            for (_i, id) in toks.iter() {
+                                let now = Instant::now();
+                                token_lat_ms.push((now - prev).as_secs_f64() * 1e3);
+                                prev = now;
+                                ids.push(id);
+                            }
+                            let rsp = resp.recv().unwrap().unwrap();
+                            let full = rsp.gen.clone().unwrap_or_default();
+                            // oracle gate: identical to single-request decode
+                            assert_eq!(
+                                &full, want,
+                                "serve bench oracle gate: scheduler output diverged \
+                                 from single-request generate (client {c}, req {r})"
+                            );
+                            if ids.is_empty() {
+                                // request-batch: no token events — every token
+                                // of the wave arrives with the summary
+                                let per =
+                                    rsp.total.as_secs_f64() * 1e3 / full.len().max(1) as f64;
+                                token_lat_ms.extend(std::iter::repeat(per).take(full.len()));
+                            } else {
+                                assert_eq!(ids, full, "streamed ids must match the summary");
+                            }
+                            n_tokens += full.len();
+                            service_s += (rsp.total - rsp.queue).as_secs_f64();
+                        }
+                        (n_tokens, token_lat_ms, service_s)
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            server.shutdown()?;
+            let total_tokens: usize = results.iter().map(|r| r.0).sum();
+            let mut lat: Vec<f64> = results.iter().flat_map(|r| r.1.iter().copied()).collect();
+            let service_total: f64 = results.iter().map(|r| r.2).sum();
+            anyhow::ensure!(total_tokens > 0, "serve bench produced no tokens");
+            let toks_per_sec = total_tokens as f64 / wall;
+            let p50 = percentile(&mut lat, 50.0).max(1e-6);
+            let p95 = percentile(&mut lat, 95.0).max(1e-6);
+            let occupancy = (service_total / (wall * slots as f64)).max(1e-6);
+            t.row(&[
+                mode_name.to_string(),
+                n_clients.to_string(),
+                plen.to_string(),
+                glen.to_string(),
+                format!("{toks_per_sec:.0}"),
+                format!("{p50:.3}"),
+                format!("{p95:.3}"),
+                format!("{occupancy:.3}"),
+            ]);
+            cells.push(ServeCell {
+                mode: mode_name,
+                sessions: n_clients,
+                prompt_len: plen,
+                gen_len: glen,
+                slots,
+                toks_per_sec,
+                p50_tok_ms: p50,
+                p95_tok_ms: p95,
+                occupancy,
+            });
+        }
+    }
+    let mut s = t.render();
+    s.push_str(
+        "request_batch = legacy wave executor (each gathered batch of generations runs\n\
+         to completion; arrivals mid-flight wait for the whole wave);\n\
+         continuous = token-level scheduler (session table, one fused (session, layer,\n\
+         head) engine pass per tick, admission between ticks, slots freed immediately).\n\
+         gen column = base budget; each client mixes 0.5x/1x/2x of it per request.\n\
+         Gate: every reply bit-equal to single-request generate (the scheduler oracle).\n",
+    );
+    save_result(&opts.artifacts, "serve", &s)?;
+    if opts.smoke {
+        s.push_str("smoke run: BENCH_serve.json left untouched\n");
+    } else {
+        let json_path = write_serve_json(&cells)?;
+        s.push_str(&format!("machine-readable medians: {}\n", json_path.display()));
+    }
+    println!("{s}");
+    Ok(s)
+}
+
+/// Emit the serve bench machine-readably: one row per `(load, mode)` with
+/// throughput, per-token latency percentiles and occupancy, written to
+/// `BENCH_serve.json` at the repo root (the serving-side companion of the
+/// engine/decode/model trajectories).
+fn write_serve_json(cells: &[ServeCell]) -> Result<std::path::PathBuf> {
+    use crate::util::json::Json;
+    let mut rows = Vec::new();
+    for c in cells {
+        rows.push(Json::Obj(vec![
+            ("mode".into(), Json::from(c.mode)),
+            ("sessions".into(), Json::from(c.sessions)),
+            ("prompt_len".into(), Json::from(c.prompt_len)),
+            ("gen_len".into(), Json::from(c.gen_len)),
+            ("slots".into(), Json::from(c.slots)),
+            ("tokens_per_sec".into(), Json::from(c.toks_per_sec)),
+            ("p50_tok_ms".into(), Json::from(c.p50_tok_ms)),
+            ("p95_tok_ms".into(), Json::from(c.p95_tok_ms)),
+            ("occupancy".into(), Json::from(c.occupancy)),
+        ]));
+    }
+    let doc = Json::Obj(vec![
+        ("target".into(), Json::from("serve")),
+        ("unit".into(), Json::from("tokens_per_sec")),
+        ("cells".into(), Json::Arr(rows)),
+    ]);
+    let path = repo_root().join("BENCH_serve.json");
+    std::fs::write(&path, doc.to_string_pretty() + "\n")?;
+    Ok(path)
+}
+
 /// Locate the repo root at runtime: the working directory when it (or an
 /// ancestor, for `cargo run` from `rust/`) contains `rust/Cargo.toml`.
 /// Falls back to the build-time manifest location only when the process
@@ -856,9 +1086,9 @@ fn match_variant<'a>(
 
 /// Does a target train AOT artifacts (and therefore need a PJRT runtime
 /// and registry), or is it runtime-free (`engine`, `decode`, `model`,
-/// `memory`)?
+/// `serve`, `memory`)?
 pub fn target_needs_runtime(target: &str) -> bool {
-    !matches!(target, "engine" | "decode" | "model" | "memory")
+    !matches!(target, "engine" | "decode" | "model" | "serve" | "memory")
 }
 
 /// Optional runtime + registry bootstrap shared by the CLI and the bench
@@ -900,6 +1130,7 @@ pub fn run_target(
             "engine" => engine_table(opts)?,
             "decode" => decode_table(opts)?,
             "model" => model_table(opts)?,
+            "serve" => serve_table(opts)?,
             "memory" => memory_table(opts)?,
             _ => unreachable!(),
         };
@@ -943,5 +1174,5 @@ pub fn run_all(rt: Option<&Runtime>, reg: Option<&Registry>, opts: &BenchOptions
 
 pub const ALL_TARGETS: &[&str] = &[
     "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "fig3",
-    "fig4", "memory", "engine", "decode", "model",
+    "fig4", "memory", "engine", "decode", "model", "serve",
 ];

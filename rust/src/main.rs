@@ -4,7 +4,7 @@
 //!   list                         show registered experiments
 //!   train  --exp NAME            train one experiment (AOT graphs, no python)
 //!   eval   --exp NAME --ckpt F   evaluate a checkpoint
-//!   bench  --target tableN|figN|memory|engine|decode|all   regenerate paper tables
+//!   bench  --target tableN|figN|memory|engine|decode|model|serve|all   regenerate paper tables
 //!   serve  --exp NAME            run the batched inference demo
 //!   serve  --fallback            serve the pure-Rust engine (no artifacts;
 //!                                classify + gen verbs over TCP — see rust/README.md)
@@ -18,7 +18,7 @@ use sinkhorn::bench::{self, tables};
 use sinkhorn::coordinator::{self, Checkpoint, TrainOptions};
 use sinkhorn::data::TaskData;
 use sinkhorn::runtime::{artifacts_dir, Experiment, Registry, Runtime};
-use sinkhorn::server::{BatchPolicy, Server};
+use sinkhorn::server::{BatchPolicy, ExecMode, Server};
 use sinkhorn::util::cli::Args;
 
 fn main() {
@@ -60,17 +60,25 @@ USAGE: sinkhorn <subcommand> [flags]
   list                              experiments in the registry
   train  --exp NAME [--steps N] [--seed S] [--ckpt out.ckpt] [--verbose]
   eval   --exp NAME --ckpt F [--eval-batches N]
-  bench  --target table1..table8|fig3|fig4|memory|engine|decode|model|all
+  bench  --target table1..table8|fig3|fig4|memory|engine|decode|model|serve|all
          [--scale F] [--steps N] [--fast-decode] [--smoke] [--verbose]
-         (engine + decode + model + memory run without artifacts/XLA;
-          --smoke = tiny CI shapes, gates on, BENCH_*.json untouched)
+         (engine + decode + model + serve + memory run without
+          artifacts/XLA; --smoke = tiny CI shapes, gates on,
+          BENCH_*.json untouched)
   serve  --exp NAME | --fallback [--seq-len L] [--nb N] [--threads T]
          [--depth L] [--heads H] [--d-ff F]
          [--ckpt F] [--requests N] [--max-batch B] [--max-wait-ms T]
-         [--port P] [--wait]
+         [--max-sessions S] [--queue-depth Q] [--mem-budget-mb M]
+         [--request-batch] [--port P] [--wait]
          (--fallback serves the pure-Rust stack; no artifacts needed.
-          TCP verbs: '<ids...>' classifies, 'gen <n> <ids...>' decodes,
-          'model' describes — full line protocol in rust/README.md)
+          The continuous-batching scheduler multiplexes generations
+          token by token: --max-sessions caps concurrent decode slots,
+          --mem-budget-mb budgets them by real decode-state bytes,
+          --queue-depth bounds the admission queue (overflow -> busy=),
+          --request-batch falls back to the legacy wave executor.
+          TCP verbs: '<ids...>' classifies, 'gen <n> <ids...>' streams
+          'tok <i> <id>' lines then the 'tokens=' summary, 'model'
+          describes — full line protocol in rust/README.md)
   inspect --exp NAME
 
   global: --artifacts DIR (default ./artifacts or $SINKHORN_ARTIFACTS)"
@@ -182,6 +190,17 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
     let policy = BatchPolicy {
         max_batch: args.usize("max-batch", 32)?,
         max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 5)?),
+        // the continuous-batching scheduler is the default executor for
+        // the pure-Rust backend (DESIGN.md §Scheduler); --request-batch
+        // selects the legacy wave executor
+        mode: if args.bool("request-batch") {
+            ExecMode::RequestBatch
+        } else {
+            ExecMode::Continuous
+        },
+        max_sessions: args.usize("max-sessions", 8)?,
+        queue_depth: args.usize("queue-depth", 64)?,
+        mem_budget: args.usize("mem-budget-mb", 0)?.saturating_mul(1 << 20),
     };
     let seed = args.u64("seed", 17)?;
     // --fallback forces the pure-Rust engine backend; otherwise Server

@@ -1,24 +1,70 @@
-//! Dynamic batcher: groups inference requests into fixed-shape batches
-//! under a (max_batch, max_wait) policy — the classic serving trade-off
-//! between latency and throughput. Graphs are shape-specialized, so the
-//! executor always runs full `batch_size` tensors; short batches are
-//! padded with dummy rows that are dropped on the way out.
+//! Dynamic batcher: groups inference requests into batches under a
+//! (max_batch, max_wait) policy — the classic serving trade-off between
+//! latency and throughput. How a gathered batch is *executed* depends on
+//! the executor mode ([`ExecMode`], DESIGN.md §Scheduler):
+//!
+//! * the **artifact** executor runs shape-specialized compiled graphs, so
+//!   it assembles full `batch_size` tensors and pads short batches with
+//!   dummy rows that are dropped on the way out;
+//! * the pure-Rust **request-batch** executor runs each gathered batch to
+//!   completion (no padding — the fallback paths take ragged rows
+//!   directly), which head-of-line-blocks on the longest generation;
+//! * the **continuous** scheduler uses gathering only for intake when its
+//!   session table is idle; admitted generations are advanced token by
+//!   token, one batched engine pass per tick, under the policy's
+//!   slot/queue/memory dimensions below.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
-/// Batching policy.
+/// Which executor loop the pure-Rust backend runs (DESIGN.md §Scheduler).
+/// The artifact backend always uses the request-batch loop — its compiled
+/// graphs have no incremental decode entry to tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Token-level continuous batching: a session table, one batched
+    /// decode tick at a time, admission control, immediate slot reuse.
+    Continuous,
+    /// The legacy wave executor: each gathered batch of generate requests
+    /// runs to completion before the next is pulled (kept for the
+    /// `bench --target serve` comparison and as an escape hatch).
+    RequestBatch,
+}
+
+/// Batching + scheduling policy.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
-    /// Target batch size (must equal the compiled graph's batch dim).
+    /// Target intake batch size (the artifact executor clamps this to the
+    /// compiled graph's batch dim; the scheduler uses it as the per-tick
+    /// intake drain bound).
     pub max_batch: usize,
-    /// Max time the first request in a batch waits for company.
+    /// Max time the first request in a gathered batch waits for company.
     pub max_wait: Duration,
+    /// Executor mode for the pure-Rust backend.
+    pub mode: ExecMode,
+    /// Continuous scheduler: slot cap on concurrently active decode
+    /// sessions (the memory budget below can clamp it further).
+    pub max_sessions: usize,
+    /// Continuous scheduler: bound on generations waiting for a slot;
+    /// arrivals beyond `slots + queue_depth` in flight get the stable
+    /// busy reply instead of waiting unboundedly.
+    pub queue_depth: usize,
+    /// Continuous scheduler: decode-state memory budget in bytes
+    /// (`memory::stack_decode_state_bytes` per session); `0` = no memory
+    /// clamp, slots are capped by `max_sessions` alone.
+    pub mem_budget: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(5) }
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(5),
+            mode: ExecMode::Continuous,
+            max_sessions: 8,
+            queue_depth: 64,
+            mem_budget: 0,
+        }
     }
 }
 
@@ -62,7 +108,8 @@ mod tests {
         for i in 0..10 {
             tx.send(i).unwrap();
         }
-        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) };
+        let policy =
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50), ..Default::default() };
         let b = gather(&rx, &policy).unwrap();
         assert_eq!(b, vec![0, 1, 2, 3]);
         let b = gather(&rx, &policy).unwrap();
@@ -74,7 +121,11 @@ mod tests {
         let (tx, rx) = channel();
         tx.send(1).unwrap();
         tx.send(2).unwrap();
-        let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(10) };
+        let policy = BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(10),
+            ..Default::default()
+        };
         let t0 = Instant::now();
         let b = gather(&rx, &policy).unwrap();
         assert_eq!(b, vec![1, 2]);
@@ -83,7 +134,9 @@ mod tests {
 
     #[test]
     fn clamped_caps_but_keeps_wait() {
-        let p = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(9) }.clamped(16);
+        let base =
+            BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(9), ..Default::default() };
+        let p = base.clamped(16);
         assert_eq!(p.max_batch, 16);
         assert_eq!(p.max_wait, Duration::from_millis(9));
         assert_eq!(BatchPolicy::default().clamped(1000).max_batch, 32);
@@ -125,7 +178,8 @@ mod tests {
             }));
         }
         drop(tx);
-        let policy = BatchPolicy { max_batch: 9, max_wait: Duration::from_millis(1) };
+        let policy =
+            BatchPolicy { max_batch: 9, max_wait: Duration::from_millis(1), ..Default::default() };
         let mut seen = std::collections::HashSet::new();
         while let Some(batch) = gather(&rx, &policy) {
             assert!(batch.len() <= 9);
@@ -146,7 +200,8 @@ mod tests {
             tx.send(i).unwrap();
         }
         drop(tx);
-        let policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+        let policy =
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1), ..Default::default() };
         let mut count = 0;
         while let Some(b) = gather(&rx, &policy) {
             assert_eq!(b.len(), 1);

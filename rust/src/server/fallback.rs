@@ -372,30 +372,186 @@ impl FallbackModel {
         // the final generated token needs no step of its own
         for t in 0..keep + budget - 1 {
             let tok = if t < keep { prompt[t] } else { gen[t - keep] };
-            let id = tok.rem_euclid(self.cfg.vocab as i32) as usize;
-            let (er, pr) = (self.embed.row(id), self.pos.row(t));
-            for (c, xo) in x.iter_mut().enumerate() {
-                *xo = er[c] + pr[c];
-            }
+            self.embed_token_into(tok, t, &mut x);
             self.stack.decode_step(&mut st, &x, scratch, &mut h);
             if t + 1 >= keep {
-                // tied-embedding LM head over the final hidden row
-                let (mut best, mut best_v) = (0usize, f32::NEG_INFINITY);
-                for vtok in 0..self.cfg.vocab {
-                    let ev = self.embed.row(vtok);
-                    let mut acc = 0.0f32;
-                    for (c, &hc) in h.iter().enumerate() {
-                        acc += hc * ev[c];
-                    }
-                    if acc > best_v {
-                        best_v = acc;
-                        best = vtok;
-                    }
-                }
-                gen.push(best as i32);
+                gen.push(self.lm_argmax(&h));
             }
         }
         gen
+    }
+
+    /// Embed one token at position `t` (`embed[tok mod vocab] + pos[t]`)
+    /// into `x` — the per-step half of [`Self::embed_seq`], shared by the
+    /// serial decode loop and the scheduler's session steps so the two
+    /// paths are the same float ops in the same order.
+    fn embed_token_into(&self, tok: i32, t: usize, x: &mut [f32]) {
+        let id = tok.rem_euclid(self.cfg.vocab as i32) as usize;
+        let (er, pr) = (self.embed.row(id), self.pos.row(t));
+        for (c, xo) in x.iter_mut().enumerate() {
+            *xo = er[c] + pr[c];
+        }
+    }
+
+    /// Greedy tied-embedding LM head: argmax over `h · Eᵀ` (the same
+    /// embedding matrix that encodes the input), accumulated in vocab
+    /// order — the historical `generate` head loop, bit for bit.
+    pub fn lm_argmax(&self, h: &[f32]) -> i32 {
+        let (mut best, mut best_v) = (0usize, f32::NEG_INFINITY);
+        for vtok in 0..self.cfg.vocab {
+            let ev = self.embed.row(vtok);
+            let mut acc = 0.0f32;
+            for (c, &hc) in h.iter().enumerate() {
+                acc += hc * ev[c];
+            }
+            if acc > best_v {
+                best_v = acc;
+                best = vtok;
+            }
+        }
+        best as i32
+    }
+
+    /// Open a decode session for the continuous-batching scheduler
+    /// (DESIGN.md §Scheduler): allocate the per-sequence
+    /// [`crate::sinkhorn::StackDecodeState`] and pin the capacity rule —
+    /// the *same* clamping as [`Self::generate`] (prompt truncated to the
+    /// first `seq_len - 1` tokens, budget clamped to the remaining
+    /// positions, empty prompts decode from PAD) — so a session stepped to
+    /// completion emits exactly `generate(prompt, max_new)`, bit for bit,
+    /// regardless of what other sessions share its ticks.
+    pub fn open_session(&self, prompt: &[i32], max_new: usize) -> GenSession {
+        let (ell_cap, d) = (self.cfg.seq_len, self.cfg.d_model);
+        let seeded = [0i32]; // empty prompt: decode from PAD
+        let prompt: &[i32] = if prompt.is_empty() { &seeded } else { prompt };
+        let keep = prompt.len().min(ell_cap.saturating_sub(1).max(1));
+        let budget = max_new.min(ell_cap - keep);
+        GenSession {
+            st: self.stack.decode_state(),
+            prompt: prompt[..keep].to_vec(),
+            budget,
+            gen: Vec::with_capacity(budget),
+            x: vec![0.0; d],
+            h: vec![0.0; d],
+        }
+    }
+
+    /// Scratch for [`Self::step_sessions`] (one per scheduler, reused
+    /// across every tick).
+    pub fn new_batch_scratch(&self) -> crate::sinkhorn::StackBatchScratch {
+        self.stack.new_batch_scratch()
+    }
+
+    /// Bytes of decode state one session holds at full capacity — the
+    /// analytic [`crate::sinkhorn::memory::stack_decode_state_bytes`]
+    /// model at this stack's shape, which the scheduler's admission
+    /// control budgets against (DESIGN.md §Scheduler).
+    pub fn session_state_bytes(&self) -> usize {
+        let c = &self.stack.cfg;
+        crate::sinkhorn::memory::stack_decode_state_bytes(
+            c.depth,
+            c.n_heads,
+            c.block_rows(),
+            c.d_head(),
+            c.nb,
+            c.n_cut,
+        )
+    }
+
+    /// Advance every session one token — the scheduler's tick (DESIGN.md
+    /// §Scheduler). Embeds each session's next token (prompt tokens first,
+    /// then its own greedy continuations), drives all sessions through one
+    /// [`SinkhornStack::decode_step_batch`] (the fused `(session, layer,
+    /// head)` engine pass), then samples the tied LM head for sessions
+    /// past their prompt. Returns the token each session emitted this tick
+    /// (`None` while a session is still consuming its prompt — prefill
+    /// rides the same tick loop).
+    ///
+    /// Per session the math is identical to [`Self::generate`]'s serial
+    /// loop, so streams are bit-identical to single-request generation for
+    /// any cohort composition, arrival order, or retirement pattern
+    /// (`tests/decode_props.rs`).
+    pub fn step_sessions(
+        &self,
+        sessions: &mut [&mut GenSession],
+        scratch: &mut crate::sinkhorn::StackBatchScratch,
+    ) -> Vec<Option<i32>> {
+        use crate::sinkhorn::StackStepReq;
+        if sessions.is_empty() {
+            return Vec::new();
+        }
+        for s in sessions.iter_mut() {
+            assert!(!s.done(), "step_sessions called on a finished session");
+            let t = s.st.len();
+            let tok =
+                if t < s.prompt.len() { s.prompt[t] } else { s.gen[t - s.prompt.len()] };
+            self.embed_token_into(tok, t, &mut s.x);
+        }
+        let reqs: Vec<StackStepReq> = sessions
+            .iter_mut()
+            .map(|s| {
+                let GenSession { st, x, h, .. } = &mut **s;
+                StackStepReq { st, x: x.as_slice(), out: h.as_mut_slice() }
+            })
+            .collect();
+        self.stack.decode_step_batch(reqs, scratch);
+        sessions
+            .iter_mut()
+            .map(|s| {
+                let t = s.st.len() - 1; // the step just taken
+                if t + 1 >= s.prompt.len() {
+                    let id = self.lm_argmax(&s.h);
+                    s.gen.push(id);
+                    Some(id)
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+}
+
+/// One in-flight generation inside the continuous-batching scheduler
+/// (DESIGN.md §Scheduler): the per-sequence depth-L decode state, the
+/// capacity-clamped prompt, the greedy continuations emitted so far, and
+/// the session's embedded-input/hidden rows. Created by
+/// [`FallbackModel::open_session`], advanced one token per tick by
+/// [`FallbackModel::step_sessions`], retired when [`GenSession::done`].
+pub struct GenSession {
+    st: crate::sinkhorn::StackDecodeState,
+    prompt: Vec<i32>,
+    budget: usize,
+    gen: Vec<i32>,
+    x: Vec<f32>,
+    h: Vec<f32>,
+}
+
+impl GenSession {
+    /// All budgeted tokens emitted — the session can retire. A session
+    /// whose budget clamped to zero (capacity-filled model) is done
+    /// before its first tick.
+    pub fn done(&self) -> bool {
+        self.gen.len() >= self.budget
+    }
+
+    /// Tokens emitted so far (a prefix of the final generation).
+    pub fn generated(&self) -> &[i32] {
+        &self.gen
+    }
+
+    /// Retire the session, yielding its full generation.
+    pub fn into_generated(self) -> Vec<i32> {
+        self.gen
+    }
+
+    /// The capacity-clamped token budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Tokens fed through the stack so far (prompt + continuations).
+    pub fn pos(&self) -> usize {
+        self.st.len()
     }
 }
 
@@ -597,6 +753,71 @@ mod tests {
                 assert_eq!(&m.generate(prompt, *max_new), got, "depth {}", m.cfg.depth);
             }
         }
+    }
+
+    /// Sessions stepped in mixed cohorts (different prompt lengths and
+    /// budgets, so they retire mid-wave while survivors keep ticking) must
+    /// reproduce single-request `generate` exactly — the scheduler's
+    /// core correctness contract (DESIGN.md §Scheduler).
+    #[test]
+    fn sessions_stepped_in_cohorts_match_generate() {
+        for m in [model(), deep_model()] {
+            let reqs: Vec<(Vec<i32>, usize)> = (0..6)
+                .map(|s| {
+                    let plen = 1 + (s * 5) % 11;
+                    let toks = (0..plen).map(|i| ((i * 7 + s) % 64) as i32).collect();
+                    (toks, 2 + s % 5)
+                })
+                .collect();
+            let want: Vec<Vec<i32>> =
+                reqs.iter().map(|(p, n)| m.generate(p, *n)).collect();
+            let mut sessions: Vec<GenSession> =
+                reqs.iter().map(|(p, n)| m.open_session(p, *n)).collect();
+            let mut scratch = m.new_batch_scratch();
+            loop {
+                let mut live: Vec<&mut GenSession> =
+                    sessions.iter_mut().filter(|s| !s.done()).collect();
+                if live.is_empty() {
+                    break;
+                }
+                m.step_sessions(&mut live, &mut scratch);
+            }
+            for ((sess, w), (p, _)) in sessions.into_iter().zip(&want).zip(&reqs) {
+                assert_eq!(
+                    &sess.into_generated(),
+                    w,
+                    "depth {} prompt {p:?} diverged from single-request generate",
+                    m.cfg.depth
+                );
+            }
+        }
+    }
+
+    /// `open_session` applies exactly `generate`'s capacity rule: prompt
+    /// truncation, budget clamping, empty-prompt PAD seeding.
+    #[test]
+    fn open_session_mirrors_generate_capacity_rule() {
+        let m = model(); // seq_len = 32
+        assert_eq!(m.open_session(&(0..30).map(|i| i % 64).collect::<Vec<_>>(), 10).budget(), 2);
+        let huge: Vec<i32> = (0..100).map(|i| i % 64).collect();
+        let s = m.open_session(&huge, 10);
+        assert_eq!(s.budget(), 1);
+        assert!(!s.done());
+        let zero = m.open_session(&[1, 2], 0);
+        assert_eq!(zero.budget(), 0);
+        assert!(zero.done(), "zero-budget session retires before its first tick");
+        // empty prompt seeds PAD: one prompt token, still generates
+        let empty = m.open_session(&[], 3);
+        assert_eq!(empty.budget(), 3);
+        assert_eq!(empty.pos(), 0);
+    }
+
+    #[test]
+    fn session_state_bytes_matches_memory_model() {
+        let m = deep_model();
+        let c = crate::sinkhorn::memory::stack_decode_state_bytes(2, 2, 8, 8, 4, None);
+        assert_eq!(m.session_state_bytes(), c);
+        assert!(m.session_state_bytes() > 0);
     }
 
     #[test]

@@ -1,18 +1,21 @@
 //! Batched inference serving (the L3 "router" role): client threads submit
 //! requests — classify (token ids → label) or generate (prompt → greedily
-//! decoded ids, DESIGN.md §Decode); a dynamic batcher groups them; a
-//! single executor thread owning the execution backend runs whole batches
-//! at once, split by verb. The backend is either the PJRT runtime over
-//! compiled artifacts (classify only) or, when no HLO artifact is present,
-//! the pure-Rust blocked engine ([`fallback`] — works on any machine,
-//! serves both verbs). TCP line protocol: `rust/README.md`.
+//! decoded ids, DESIGN.md §Decode, optionally streamed token by token); a
+//! single executor thread owning the execution backend serves them. The
+//! pure-Rust backend ([`fallback`] — works on any machine, serves every
+//! verb) runs a token-level **continuous-batching scheduler** by default:
+//! a session table advances all in-flight generations one token per tick,
+//! with memory-budgeted admission control (DESIGN.md §Scheduler). The
+//! PJRT runtime over compiled artifacts (classify only) and the
+//! [`batch::ExecMode::RequestBatch`] escape hatch run the legacy
+//! wave executor instead. TCP line protocol: `rust/README.md`.
 
 pub mod batch;
 pub mod fallback;
 pub mod service;
 pub mod tcp;
 
-pub use batch::{gather, BatchPolicy};
-pub use fallback::{FallbackConfig, FallbackModel};
-pub use service::{Response, Server, ServerHandle};
+pub use batch::{gather, BatchPolicy, ExecMode};
+pub use fallback::{FallbackConfig, FallbackModel, GenSession};
+pub use service::{Response, Server, ServerHandle, TokenEvent, BUSY_MSG};
 pub use tcp::TcpFrontend;

@@ -9,9 +9,20 @@
 //!   info:      `model`                          (served model description)
 //!
 //!   replies:   `label=<k> batch=<n> queue_us=<q> total_us=<t>`
+//!              `tok <i> <id>` (zero or more, streamed per generated token)
 //!              `tokens=<id>,<id>,... batch=<n> queue_us=<q> total_us=<t>`
 //!              `backend=<fallback|artifact> <key>=<value> ...`
+//!              `busy=generation queue full`
 //!              `error=<one stable line>`
+//!
+//! A `gen` request is the protocol's one multi-line reply (DESIGN.md
+//! §Scheduler): under the continuous scheduler the frontend writes one
+//! `tok <i> <id>` line the moment token `i` is produced, then the
+//! historical `tokens=...` summary line — kept for compatibility, so a
+//! client that only reads the summary still works by skipping `tok `
+//! lines (the request-batch executor and the artifact backend emit no
+//! `tok ` lines at all). Admission overflow gets the stable one-line
+//! `busy=` reply ([`busy_line`]).
 //!
 //! Error replies are deliberately boring: one line, outermost message
 //! only, length-capped ([`error_line`]) — internal context chains and
@@ -27,7 +38,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::service::ServerHandle;
+use super::service::{ServerHandle, BUSY_MSG};
 
 /// A listening TCP frontend. The acceptor runs as a detached daemon
 /// thread for the lifetime of the process: `TcpListener::incoming` has no
@@ -135,6 +146,27 @@ pub fn error_line(e: &anyhow::Error) -> String {
     format!("error={capped}\n")
 }
 
+/// The stable admission-overflow reply (DESIGN.md §Scheduler): scripts
+/// match on this exact line to implement backoff.
+pub fn busy_line() -> String {
+    format!("busy={BUSY_MSG}\n")
+}
+
+/// Render a generate-path failure: admission overflow gets the stable
+/// [`busy_line`]; everything else the ordinary [`error_line`].
+pub fn gen_error_line(e: &anyhow::Error) -> String {
+    if e.to_string() == BUSY_MSG {
+        busy_line()
+    } else {
+        error_line(e)
+    }
+}
+
+/// One streamed token line: `tok <index> <id>` (DESIGN.md §Scheduler).
+pub fn format_tok_line(index: usize, id: i32) -> String {
+    format!("tok {index} {id}\n")
+}
+
 impl TcpFrontend {
     /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and serve.
     pub fn start(addr: &str, handle: ServerHandle) -> Result<TcpFrontend> {
@@ -174,14 +206,29 @@ fn serve_conn(stream: TcpStream, handle: ServerHandle) -> Result<()> {
                 Err(e) => error_line(&e),
             },
             Ok(ParsedRequest::Generate { max_new, tokens }) => {
-                match handle.generate(tokens, max_new) {
-                    Ok(r) => format_gen_response(
-                        r.gen.as_deref().unwrap_or(&[]),
-                        r.batch_size,
-                        r.queue.as_micros(),
-                        r.total.as_micros(),
-                    ),
-                    Err(e) => error_line(&e),
+                // the streamed reply: one `tok <i> <id>` line per produced
+                // token (flushed immediately — the continuous scheduler
+                // emits them as its ticks complete), then the historical
+                // `tokens=` summary line for compatibility
+                match handle.generate_streaming(tokens, max_new) {
+                    Err(e) => gen_error_line(&e),
+                    Ok((toks, resp)) => {
+                        for (i, id) in toks.iter() {
+                            writer.write_all(format_tok_line(i, id).as_bytes())?;
+                            writer.flush()?;
+                        }
+                        // the token channel closed: the summary reply is due
+                        match resp.recv() {
+                            Ok(Ok(r)) => format_gen_response(
+                                r.gen.as_deref().unwrap_or(&[]),
+                                r.batch_size,
+                                r.queue.as_micros(),
+                                r.total.as_micros(),
+                            ),
+                            Ok(Err(e)) => gen_error_line(&e),
+                            Err(_) => gen_error_line(&anyhow!("server dropped request")),
+                        }
+                    }
                 }
             }
             Ok(ParsedRequest::ModelInfo) => match handle.model_info() {
@@ -292,5 +339,65 @@ mod tests {
             "tokens=4,8,15 batch=2 queue_us=10 total_us=99\n"
         );
         assert_eq!(format_gen_response(&[], 1, 0, 1), "tokens= batch=1 queue_us=0 total_us=1\n");
+        assert_eq!(format_tok_line(0, 42), "tok 0 42\n");
+        assert_eq!(format_tok_line(7, -3), "tok 7 -3\n");
+    }
+
+    #[test]
+    fn busy_maps_to_its_own_stable_line() {
+        assert_eq!(busy_line(), "busy=generation queue full\n");
+        // the scheduler's admission error maps to busy=, nothing else does
+        assert_eq!(gen_error_line(&anyhow!("{}", BUSY_MSG)), busy_line());
+        let other = anyhow!("exec failed: boom");
+        assert_eq!(gen_error_line(&other), error_line(&other));
+        assert_eq!(busy_line().matches('\n').count(), 1);
+    }
+
+    /// End to end over a real socket: a `gen` request streams `tok` lines
+    /// (indices in order, ids matching the summary), then the `tokens=`
+    /// summary; classify stays single-line on the same connection.
+    #[test]
+    fn tcp_gen_streams_tok_lines_then_summary() {
+        use crate::server::{BatchPolicy, FallbackConfig, Server};
+        use std::io::{BufRead, BufReader, Write};
+        let cfg = FallbackConfig { seq_len: 32, d_model: 16, nb: 4, ..Default::default() };
+        let server = Server::start_fallback(cfg, BatchPolicy::default()).unwrap();
+        let fe = TcpFrontend::start("127.0.0.1:0", server.handle.clone()).unwrap();
+        let mut conn = std::net::TcpStream::connect(fe.addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        conn.write_all(b"gen 4 1 2 3\n").unwrap();
+        let mut tok_ids = Vec::new();
+        let summary = loop {
+            let mut l = String::new();
+            reader.read_line(&mut l).unwrap();
+            if let Some(rest) = l.strip_prefix("tok ") {
+                let mut parts = rest.split_whitespace();
+                let idx: usize = parts.next().unwrap().parse().unwrap();
+                let id: i32 = parts.next().unwrap().parse().unwrap();
+                assert_eq!(idx, tok_ids.len(), "tok indices must stream in order");
+                tok_ids.push(id);
+            } else {
+                break l;
+            }
+        };
+        assert!(summary.starts_with("tokens="), "got: {summary}");
+        assert_eq!(tok_ids.len(), 4);
+        let summary_ids: Vec<i32> = summary
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .trim_start_matches("tokens=")
+            .split(',')
+            .map(|t| t.parse().unwrap())
+            .collect();
+        assert_eq!(tok_ids, summary_ids, "streamed ids must match the summary line");
+        // the connection stays usable for single-line verbs
+        conn.write_all(b"5 6 7\n").unwrap();
+        let mut l = String::new();
+        reader.read_line(&mut l).unwrap();
+        assert!(l.starts_with("label="), "got: {l}");
+        drop(conn);
+        drop(fe);
+        server.shutdown().unwrap();
     }
 }

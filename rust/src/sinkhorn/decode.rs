@@ -343,6 +343,15 @@ impl LayerDecodeState {
         self.heads.len()
     }
 
+    /// Split the layer state into its per-head decode states and the
+    /// shared sort-logit matrix — the borrow shape the batched stack step
+    /// needs (DESIGN.md §Scheduler): each head state becomes one mutable
+    /// engine decode task while every task reads the layer's logits.
+    pub fn split_heads(&mut self) -> (&mut [DecodeState], &Mat) {
+        let LayerDecodeState { heads, sort_logits } = self;
+        (heads.as_mut_slice(), &*sort_logits)
+    }
+
     /// Tokens decoded so far (all heads advance in lockstep).
     pub fn len(&self) -> usize {
         self.heads[0].len()

@@ -545,7 +545,29 @@ impl SinkhornEngine {
     /// the naive full-prefix oracle
     /// [`super::attention::causal_decode_attention`] within [`ENGINE_TOL`]
     /// (`tests/decode_props.rs`).
+    ///
+    /// This entry allocates a throwaway workspace set per call; repeated
+    /// callers (the stack's batched step, the serving scheduler's tick
+    /// loop) use [`Self::decode_steps_with`] with a pooled
+    /// [`EngineWorkspaces`] instead — the two are bit-identical.
     pub fn decode_step_into(&self, reqs: Vec<DecodeReq>) {
+        if reqs.is_empty() {
+            return;
+        }
+        let dmax = reqs.iter().map(|rq| rq.state.d()).max().unwrap_or(1);
+        let mut ws = EngineWorkspaces::new(self.threads().min(reqs.len()).max(1), 1, dmax);
+        self.decode_steps_with(reqs, &mut ws);
+    }
+
+    /// The reusable-workspace core of [`Self::decode_step_into`]
+    /// (DESIGN.md §Decode, §Scheduler): the `(sequence, head)` decode tasks
+    /// fan out over the pool with one caller-owned per-worker `Workspace`
+    /// each, so a scheduler ticking thousands of times reuses one
+    /// [`EngineWorkspaces`] instead of allocating streaming state per
+    /// token. Identical math and task partitioning to `decode_step_into` —
+    /// the two entries are bit-identical — and, like every engine entry,
+    /// bit-identical across thread counts.
+    pub fn decode_steps_with(&self, reqs: Vec<DecodeReq>, ws: &mut EngineWorkspaces) {
         if reqs.is_empty() {
             return;
         }
@@ -558,13 +580,19 @@ impl SinkhornEngine {
             assert_eq!(rq.out.len(), d, "out row must have d elements");
             dmax = dmax.max(d);
         }
-        self.pool.run(
-            reqs,
-            || Workspace::new(1, dmax),
-            |ws, rq| {
-                rq.state.step_with(rq.q, rq.k, rq.v, rq.sort_logits, &mut ws.stream, rq.out);
-            },
+        let workers = self.threads().min(reqs.len()).max(1);
+        assert!(
+            ws.fits(1, dmax, workers),
+            "EngineWorkspaces sized (b={}, d={}, workers={}) cannot serve decode steps \
+             (d={dmax}, threads={})",
+            ws.b,
+            ws.d,
+            ws.spaces.len(),
+            self.threads()
         );
+        self.pool.run_with(reqs, &mut ws.spaces, |w, rq| {
+            rq.state.step_with(rq.q, rq.k, rq.v, rq.sort_logits, &mut w.stream, rq.out);
+        });
     }
 }
 

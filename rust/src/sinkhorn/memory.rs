@@ -197,6 +197,23 @@ pub fn stack_decode_state_bytes(
             + n_heads * d_head * 4)
 }
 
+/// Admission math of the continuous-batching decode scheduler (DESIGN.md
+/// §Scheduler): how many concurrent sessions a decode-state byte budget
+/// admits, given the per-session cost [`stack_decode_state_bytes`] and
+/// the operator's slot cap. `budget_bytes == 0` means "no memory clamp"
+/// (slots are bounded by `slot_cap` alone); the result is never zero — a
+/// server that can admit nothing serves nothing, so one slot is always
+/// granted and the operator's budget is treated as a floor of one
+/// session.
+pub fn admitted_sessions(budget_bytes: usize, session_bytes: usize, slot_cap: usize) -> usize {
+    let by_mem = if budget_bytes == 0 {
+        slot_cap
+    } else {
+        (budget_bytes / session_bytes.max(1)).min(slot_cap)
+    };
+    by_mem.max(1)
+}
+
 /// MXU utilization proxy: fraction of the kernel's MACs that land in
 /// >=8x8x8-shaped matmuls (all of them, for b,d >= 8 — the point is the
 /// tiles are MXU-shaped by construction).
@@ -288,6 +305,22 @@ mod tests {
             assert!(cut < kv_only * 2, "b={b}");
             assert!(cut > full, "sortcut caches more gathered blocks");
         }
+    }
+
+    #[test]
+    fn admission_math_clamps_by_memory_and_slots() {
+        let per = stack_decode_state_bytes(2, 2, 8, 8, 4, None);
+        // no budget: slot cap rules
+        assert_eq!(admitted_sessions(0, per, 8), 8);
+        // budget for exactly 3 sessions, cap above it: memory rules
+        assert_eq!(admitted_sessions(3 * per + per / 2, per, 8), 3);
+        // budget for many, cap below: slots rule
+        assert_eq!(admitted_sessions(100 * per, per, 4), 4);
+        // starvation floor: even a zero/undersized budget grants one slot
+        assert_eq!(admitted_sessions(1, per, 8), 1);
+        assert_eq!(admitted_sessions(per - 1, per, 8), 1);
+        // degenerate per-session cost cannot divide by zero
+        assert_eq!(admitted_sessions(1024, 0, 8), 8);
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub use decode::{DecodeScratch, DecodeState, LayerDecodeState};
 pub use engine::{AttentionReq, BlockedView, DecodeReq, EngineWorkspaces, SinkhornEngine};
 pub use matrix::{Mat, MatView, MatViewMut};
 pub use model::{
-    SinkhornStack, StackConfig, StackDecodeScratch, StackDecodeState, StackScratch,
-    TransformerLayer,
+    SinkhornStack, StackBatchScratch, StackConfig, StackDecodeScratch, StackDecodeState,
+    StackScratch, StackStepReq, TransformerLayer,
 };
 pub use pool::WorkerPool;

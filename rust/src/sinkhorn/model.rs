@@ -45,7 +45,7 @@ use anyhow::Result;
 
 use super::balance::{causal_sinkhorn, sinkhorn};
 use super::decode::{DecodeScratch, LayerDecodeState};
-use super::engine::{AttentionReq, EngineWorkspaces, SinkhornEngine};
+use super::engine::{AttentionReq, DecodeReq, EngineWorkspaces, SinkhornEngine};
 use super::matrix::{
     bias_rows_into, gelu, gelu_into, layernorm_into, layernorm_row_into, matmul_acc_into,
     matmul_acc_ordered_into, row_times, row_times_acc_into, row_times_into, Mat, MatView,
@@ -601,6 +601,167 @@ impl SinkhornStack {
         st.len += 1;
         out.copy_from_slice(&scratch.x);
     }
+
+    /// Scratch for [`Self::decode_step_batch`]: per-session row buffers
+    /// (grown on demand as the session count rises) plus one pooled
+    /// [`EngineWorkspaces`] the engine's decode tasks stream through. One
+    /// per scheduler, reused across every tick.
+    pub fn new_batch_scratch(&self) -> StackBatchScratch {
+        StackBatchScratch {
+            per: Vec::new(),
+            ws: EngineWorkspaces::new(self.engine.threads(), 1, self.cfg.d_head()),
+        }
+    }
+
+    /// One incremental decode step for a *batch of sessions* (DESIGN.md
+    /// §Scheduler): every [`StackStepReq`] advances its own
+    /// [`StackDecodeState`] by one token, exactly like
+    /// [`Self::decode_step`], but the per-head attention steps of **all**
+    /// sessions are flattened into one fused `(session, head)` task list
+    /// per layer and driven through the engine's pooled decode entry
+    /// ([`SinkhornEngine::decode_steps_with`]) — not a loop over
+    /// `decode_step`. The serving scheduler's tick loop is the consumer:
+    /// one call here advances every active session by one token.
+    ///
+    /// Per layer: phase A runs each session's pre-norm + per-head q/k/v
+    /// row projections (cheap row kernels, caller thread); phase B is the
+    /// fused engine pass over `sessions × heads` cached-causal decode
+    /// tasks; phase C applies each session's descriptor accumulation,
+    /// decode-time SortNet rule, output projection + residual, and FFN.
+    /// Every per-session operation is the same kernel in the same order as
+    /// `decode_step`, and the engine's decode tasks are placement-
+    /// independent, so the batched step is **bit-identical** to stepping
+    /// each session alone, for any cohort composition and any thread count
+    /// (`tests/decode_props.rs`).
+    pub fn decode_step_batch(&self, mut reqs: Vec<StackStepReq>, scratch: &mut StackBatchScratch) {
+        let cfg = &self.cfg;
+        if reqs.is_empty() {
+            return;
+        }
+        let (d, dh, heads, nb) = (cfg.d_model, cfg.d_head(), cfg.n_heads, cfg.nb);
+        let b = cfg.block_rows();
+        while scratch.per.len() < reqs.len() {
+            scratch.per.push(StackDecodeScratch::new(cfg));
+        }
+        for (r, sc) in reqs.iter_mut().zip(scratch.per.iter_mut()) {
+            assert_eq!(r.st.layers.len(), cfg.depth, "decode state depth mismatch");
+            assert_eq!(r.x.len(), d, "x row must have d_model elements");
+            assert_eq!(r.out.len(), d, "out row must have d_model elements");
+            assert!(r.st.len < cfg.seq_len, "decode capacity exhausted ({} tokens)", r.st.len);
+            sc.x.copy_from_slice(r.x);
+        }
+        for (l, layer) in self.layers.iter().enumerate() {
+            // phase A: pre-norm + per-head q/k/v projection rows, per session
+            for sc in scratch.per[..reqs.len()].iter_mut() {
+                let h: &[f32] = match &layer.ln1 {
+                    Some(ln) => {
+                        layernorm_row_into(&sc.x, &ln.gamma, &ln.beta, &mut sc.h);
+                        &sc.h
+                    }
+                    None => &sc.x,
+                };
+                for hd in 0..heads {
+                    let s = hd * dh..(hd + 1) * dh;
+                    row_times_into(h, &layer.wq[hd], &mut sc.q[s.clone()]);
+                    row_times_into(h, &layer.wk[hd], &mut sc.k[s.clone()]);
+                    row_times_into(h, &layer.wv[hd], &mut sc.v[s]);
+                }
+            }
+            // phase B: the fused (session, head) decode task list, one
+            // engine pass over the pooled workspaces
+            let mut dreqs: Vec<DecodeReq> = Vec::with_capacity(reqs.len() * heads);
+            for (r, sc) in reqs.iter_mut().zip(scratch.per.iter_mut()) {
+                let (hstates, sort_logits) = r.st.layers[l].split_heads();
+                for (hd, (hstate, ctx)) in
+                    hstates.iter_mut().zip(sc.ctx.chunks_mut(dh)).enumerate()
+                {
+                    let s = hd * dh..(hd + 1) * dh;
+                    dreqs.push(DecodeReq {
+                        state: hstate,
+                        q: &sc.q[s.clone()],
+                        k: &sc.k[s.clone()],
+                        v: &sc.v[s],
+                        sort_logits,
+                        out: ctx,
+                    });
+                }
+            }
+            self.engine.decode_steps_with(dreqs, &mut scratch.ws);
+            // phase C: descriptor + SortNet rule, output projection, FFN
+            for (r, sc) in reqs.iter_mut().zip(scratch.per.iter_mut()) {
+                let t = r.st.len;
+                let h: &[f32] = if layer.ln1.is_some() { &sc.h } else { &sc.x };
+                for (c, a) in r.st.desc[l].iter_mut().enumerate() {
+                    *a += h[c];
+                }
+                if (t + 1) % b == 0 {
+                    let i = t / b;
+                    if i + 1 < nb {
+                        let dacc = &mut r.st.desc[l];
+                        for a in dacc.iter_mut() {
+                            *a /= b as f32;
+                        }
+                        let row = row_times(dacc, &layer.sortnet);
+                        r.st.layers[l].sort_logits.row_mut(i + 1).copy_from_slice(&row);
+                    }
+                    r.st.desc[l].fill(0.0);
+                }
+                sc.proj.fill(0.0);
+                for hd in 0..heads {
+                    let ctx = &sc.ctx[hd * dh..(hd + 1) * dh];
+                    row_times_acc_into(ctx, &layer.wo[hd], &mut sc.proj);
+                }
+                for (c, xo) in sc.x.iter_mut().enumerate() {
+                    *xo += sc.proj[c];
+                }
+                if let Some(ffn) = &layer.ffn {
+                    layernorm_row_into(&sc.x, &ffn.ln.gamma, &ffn.ln.beta, &mut sc.h);
+                    sc.ff_pre.copy_from_slice(&ffn.b1);
+                    {
+                        let hv = MatView::contiguous(&sc.h, 1, d);
+                        let mut pre = MatViewMut::contiguous(&mut sc.ff_pre, 1, cfg.d_ff);
+                        matmul_acc_into(&hv, &ffn.w1.view(), &mut pre);
+                    }
+                    for (o, &p) in sc.ff_act.iter_mut().zip(sc.ff_pre.iter()) {
+                        *o = gelu(p);
+                    }
+                    sc.ff_out.copy_from_slice(&ffn.b2);
+                    {
+                        let av = MatView::contiguous(&sc.ff_act, 1, cfg.d_ff);
+                        let mut ov = MatViewMut::contiguous(&mut sc.ff_out, 1, d);
+                        matmul_acc_into(&av, &ffn.w2.view(), &mut ov);
+                    }
+                    for (xo, &f) in sc.x.iter_mut().zip(sc.ff_out.iter()) {
+                        *xo += f;
+                    }
+                }
+            }
+        }
+        for (r, sc) in reqs.iter_mut().zip(scratch.per.iter()) {
+            r.st.len += 1;
+            r.out.copy_from_slice(&sc.x);
+        }
+    }
+}
+
+/// One session's slice of a batched stack decode step
+/// ([`SinkhornStack::decode_step_batch`], DESIGN.md §Scheduler): its
+/// per-sequence depth-L state, the embedded input row (`d_model`
+/// elements), and the output row the final hidden state lands in.
+pub struct StackStepReq<'a> {
+    pub st: &'a mut StackDecodeState,
+    pub x: &'a [f32],
+    pub out: &'a mut [f32],
+}
+
+/// Pooled scratch for [`SinkhornStack::decode_step_batch`]: one
+/// [`StackDecodeScratch`]-worth of row buffers per session (grown on
+/// demand, never shrunk) plus the per-worker engine workspaces the fused
+/// `(session, head)` decode tasks stream through. The serving scheduler
+/// holds exactly one, for its whole lifetime.
+pub struct StackBatchScratch {
+    per: Vec<StackDecodeScratch>,
+    ws: EngineWorkspaces,
 }
 
 /// Per-sequence incremental decode state for the whole stack: one

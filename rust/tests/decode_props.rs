@@ -12,7 +12,14 @@
 //!    serial `DecodeState::step_into` scratch entry;
 //! 3. the per-sequence state's real allocation matches the analytic model
 //!    `memory::decode_state_bytes` — the KV cache plus a constant-size
-//!    sorted cache, never a score matrix.
+//!    sorted cache, never a score matrix;
+//! 4. the continuous-batching scheduler's building blocks (DESIGN.md
+//!    §Scheduler): the stack's fused batched step is bit-identical to
+//!    serial `decode_step`s for staggered cohorts, and randomized
+//!    arrival/length schedules driven through the session machinery —
+//!    with sessions retiring mid-wave while survivors keep ticking —
+//!    reproduce single-request `generate` exactly for slot counts
+//!    {1, 2, 8} and engine thread counts {1, 3}.
 
 use sinkhorn::sinkhorn::engine::ENGINE_TOL as TOL;
 use sinkhorn::sinkhorn::memory::decode_state_bytes;
@@ -217,6 +224,195 @@ fn state_allocation_matches_memory_model() {
         );
         assert_eq!(st.capacity(), nb * b);
         assert!(st.is_empty());
+    }
+}
+
+/// The scheduler's model-layer primitive: `decode_step_batch` over
+/// staggered cohorts (sessions joining at different ticks, leaving at
+/// different lengths) is bit-identical to stepping each sequence alone
+/// through `decode_step` — bare, full, and SortCut stacks.
+#[test]
+fn stack_batched_step_is_bitwise_equal_to_serial_steps() {
+    use sinkhorn::sinkhorn::{SinkhornStack, StackConfig, StackStepReq};
+    let mut rng = Rng::new(0x5BA7);
+    for (depth, heads, d_ff, n_cut) in
+        [(1usize, 1usize, 0usize, None), (2, 2, 16, None), (2, 2, 16, Some(2))]
+    {
+        let cfg = StackConfig {
+            seq_len: 12,
+            d_model: 8,
+            n_heads: heads,
+            depth,
+            d_ff,
+            nb: 3,
+            sinkhorn_iters: 4,
+            causal: false,
+            n_cut,
+        };
+        let stack = SinkhornStack::seeded(cfg, 0xBEE5, SinkhornEngine::new(3)).unwrap();
+        let totals = [12usize, 7, 10]; // mixed lengths, some mid-block
+        let starts = [0usize, 3, 1]; // staggered arrivals
+        let rows: Vec<Mat> = totals.iter().map(|&n| rand_mat(&mut rng, n, 8)).collect();
+        // serial oracle: each sequence stepped alone
+        let serial: Vec<Mat> = rows
+            .iter()
+            .map(|x| {
+                let mut st = stack.decode_state();
+                let mut scratch = stack.new_decode_scratch();
+                let mut out = Mat::zeros(x.rows, x.cols);
+                for t in 0..x.rows {
+                    stack.decode_step(&mut st, x.row(t), &mut scratch, out.row_mut(t));
+                }
+                out
+            })
+            .collect();
+        // batched: whoever is live at a tick steps together
+        let mut states: Vec<_> = rows.iter().map(|_| stack.decode_state()).collect();
+        let mut outs: Vec<Mat> = rows.iter().map(|x| Mat::zeros(x.rows, x.cols)).collect();
+        let mut scratch = stack.new_batch_scratch();
+        let last_tick = starts.iter().zip(&totals).map(|(s, t)| s + t).max().unwrap();
+        for tick in 0..last_tick {
+            let mut reqs: Vec<StackStepReq> = Vec::new();
+            for (i, (st, out)) in states.iter_mut().zip(outs.iter_mut()).enumerate() {
+                if tick >= starts[i] && tick - starts[i] < totals[i] {
+                    let t = tick - starts[i];
+                    reqs.push(StackStepReq { st, x: rows[i].row(t), out: out.row_mut(t) });
+                }
+            }
+            stack.decode_step_batch(reqs, &mut scratch);
+        }
+        for (i, (got, want)) in outs.iter().zip(&serial).enumerate() {
+            assert_eq!(
+                got, want,
+                "depth={depth} heads={heads} cut={n_cut:?}: cohort-stepped sequence {i} \
+                 drifted from serial decode_step"
+            );
+        }
+    }
+}
+
+/// The scheduler interleaving suite (DESIGN.md §Scheduler): randomized
+/// arrival/length schedules driven through the session machinery must
+/// reproduce the single-request oracle bit-exactly — every emitted token
+/// extends the oracle stream (checked per tick), retiring a session
+/// mid-wave never perturbs survivors, and the result is invariant to the
+/// slot count and the engine thread count.
+#[test]
+fn scheduler_interleavings_match_single_request_generate() {
+    use sinkhorn::server::{FallbackConfig, FallbackModel, GenSession};
+    let mut rng = Rng::new(0x5EED5);
+    for trial in 0..3u64 {
+        let n_req = 6 + (trial as usize % 3);
+        let schedule: Vec<(Vec<i32>, usize, usize)> = (0..n_req)
+            .map(|_| {
+                let plen = 1 + (rng.next_u64() % 10) as usize;
+                let prompt: Vec<i32> =
+                    (0..plen).map(|_| (rng.next_u64() % 64) as i32).collect();
+                let max_new = 1 + (rng.next_u64() % 6) as usize;
+                let arrive = (rng.next_u64() % 8) as usize;
+                (prompt, max_new, arrive)
+            })
+            .collect();
+        let mut baseline: Option<Vec<Vec<i32>>> = None;
+        for threads in [1usize, 3] {
+            let model = FallbackModel::new(FallbackConfig {
+                seq_len: 32,
+                d_model: 16,
+                nb: 4,
+                vocab: 64,
+                depth: 2,
+                n_heads: 2,
+                d_ff: 32,
+                threads,
+                ..Default::default()
+            })
+            .unwrap();
+            let oracle: Vec<Vec<i32>> =
+                schedule.iter().map(|(p, n, _)| model.generate(p, *n)).collect();
+            match &baseline {
+                None => baseline = Some(oracle.clone()),
+                Some(b) => {
+                    assert_eq!(&oracle, b, "threads={threads} changed single-request generate")
+                }
+            }
+            for slots in [1usize, 2, 8] {
+                let mut sessions: Vec<Option<GenSession>> =
+                    schedule.iter().map(|_| None).collect();
+                let mut finished: Vec<Option<Vec<i32>>> =
+                    schedule.iter().map(|_| None).collect();
+                let mut emitted: Vec<Vec<i32>> = schedule.iter().map(|_| Vec::new()).collect();
+                let mut scratch = model.new_batch_scratch();
+                let mut tick = 0usize;
+                loop {
+                    assert!(tick < 10_000, "scheduler simulation failed to converge");
+                    // admission in arrival order as slots free up
+                    let active_n = sessions.iter().filter(|s| s.is_some()).count();
+                    let mut free = slots.saturating_sub(active_n);
+                    for (i, (p, n, arrive)) in schedule.iter().enumerate() {
+                        if free == 0 {
+                            break;
+                        }
+                        if *arrive <= tick && sessions[i].is_none() && finished[i].is_none() {
+                            let s = model.open_session(p, *n);
+                            if s.done() {
+                                finished[i] = Some(s.into_generated());
+                            } else {
+                                sessions[i] = Some(s);
+                                free -= 1;
+                            }
+                        }
+                    }
+                    // one tick over the live cohort
+                    let mut idx: Vec<usize> = Vec::new();
+                    let mut live: Vec<&mut GenSession> = Vec::new();
+                    for (i, s) in sessions.iter_mut().enumerate() {
+                        if let Some(sess) = s.as_mut() {
+                            idx.push(i);
+                            live.push(sess);
+                        }
+                    }
+                    if live.is_empty() {
+                        if finished.iter().all(|f| f.is_some()) {
+                            break;
+                        }
+                        tick += 1; // idle tick: waiting on a later arrival
+                        continue;
+                    }
+                    let toks = model.step_sessions(&mut live, &mut scratch);
+                    drop(live);
+                    for (&i, e) in idx.iter().zip(&toks) {
+                        if let Some(id) = e {
+                            emitted[i].push(*id);
+                            // per-tick stream check: every emitted token
+                            // extends the single-request stream exactly
+                            assert_eq!(
+                                &emitted[i][..],
+                                &oracle[i][..emitted[i].len()],
+                                "trial {trial} threads {threads} slots {slots}: session {i}'s \
+                                 stream diverged at token {}",
+                                emitted[i].len() - 1
+                            );
+                        }
+                    }
+                    // retire finished sessions mid-wave; survivors keep
+                    // their slots and their state untouched
+                    for &i in &idx {
+                        if sessions[i].as_ref().is_some_and(GenSession::done) {
+                            finished[i] = Some(sessions[i].take().unwrap().into_generated());
+                        }
+                    }
+                    tick += 1;
+                }
+                for (i, f) in finished.iter().enumerate() {
+                    assert_eq!(
+                        f.as_ref().unwrap(),
+                        &oracle[i],
+                        "trial {trial} threads {threads} slots {slots}: session {i} final \
+                         stream diverged from single-request generate"
+                    );
+                }
+            }
+        }
     }
 }
 

@@ -165,7 +165,11 @@ fn server_classifies_batches_concurrently() {
         dir,
         "sstw__sortcut_2x4".into(),
         None,
-        BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(3) },
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(3),
+            ..Default::default()
+        },
         7,
     )
     .unwrap();
@@ -200,7 +204,11 @@ fn tcp_frontend_roundtrip() {
         dir,
         "sstw__sinkhorn_b8".into(),
         None,
-        BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(2) },
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: std::time::Duration::from_millis(2),
+            ..Default::default()
+        },
         3,
     )
     .unwrap();

@@ -64,6 +64,17 @@ CELL_SCHEMAS = {
         "threads": "int",
         "ns_per_iter": "num",
     },
+    "serve": {
+        "mode": "str",
+        "sessions": "int",
+        "prompt_len": "int",
+        "gen_len": "int",
+        "slots": "int",
+        "tokens_per_sec": "num",
+        "p50_tok_ms": "num",
+        "p95_tok_ms": "num",
+        "occupancy": "num",
+    },
 }
 
 

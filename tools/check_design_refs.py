@@ -34,6 +34,8 @@ REQUIRED_ANCHORS = {
     "Decode",
     # model-stack PR: multi-layer multi-head transformer stack + CI
     "Model",
+    # scheduler PR: continuous-batching decode scheduler + admission
+    "Scheduler",
 }
 
 BENCH_JSON_RE = re.compile(r"BENCH_([A-Za-z0-9_]+)\.json")

@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""End-to-end TCP smoke test of the serving stack (`make serve-smoke`,
+wired into `make ci`): spawn the pure-Rust fallback server on an
+ephemeral port, drive the line protocol over a real socket — classify,
+a *streamed* generation (`tok <i> <id>` lines then the `tokens=`
+summary), the `model` info verb, and the stable error replies — and
+assert every reply shape. This is the one gate that exercises the
+process boundary: CLI flag parsing, the TCP frontend, the continuous
+scheduler, and the streaming protocol together (DESIGN.md §Scheduler).
+
+Needs a Rust toolchain (it runs the built `sinkhorn serve` binary); the
+Makefile target skips loudly when `cargo` is absent, like fmt-check.
+
+Usage: python3 tools/serve_smoke.py
+Env: CARGO (default "cargo").
+Exit code 0 on success, 1 on any failed assertion.
+"""
+import os
+import re
+import socket
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+CARGO = os.environ.get("CARGO", "cargo")
+ADDR_RE = re.compile(r"tcp frontend listening on 127\.0\.0\.1:(\d+)")
+
+
+def fail(msg: str) -> None:
+    print(f"FAIL: {msg}")
+    sys.exit(1)
+
+
+def main() -> int:
+    cmd = [
+        CARGO, "run", "--release", "--manifest-path", str(ROOT / "rust" / "Cargo.toml"),
+        "--", "serve", "--fallback", "--port", "0", "--wait",
+        "--seq-len", "32", "--max-sessions", "4",
+    ]
+    print("+ " + " ".join(cmd))
+    proc = subprocess.Popen(
+        cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, cwd=ROOT
+    )
+    port = None
+    deadline = time.time() + 600  # first run may compile
+    try:
+        while time.time() < deadline:
+            line = proc.stdout.readline()
+            if not line:
+                fail(f"server exited early (rc={proc.poll()})")
+            sys.stdout.write(f"[server] {line}")
+            m = ADDR_RE.search(line)
+            if m:
+                port = int(m.group(1))
+                break
+        if port is None:
+            fail("server never announced its TCP port")
+
+        sock = socket.create_connection(("127.0.0.1", port), timeout=30)
+        f = sock.makefile("rw", encoding="utf-8", newline="\n")
+
+        def send(line: str) -> None:
+            f.write(line + "\n")
+            f.flush()
+
+        def recv() -> str:
+            reply = f.readline().rstrip("\n")
+            print(f"[client] {reply}")
+            return reply
+
+        # classify: one stable label= line
+        send("4 8 15 16 23 42")
+        reply = recv()
+        if not reply.startswith("label="):
+            fail(f"classify reply: {reply!r}")
+
+        # streamed generation: exactly 4 `tok <i> <id>` lines (indices in
+        # order), then the `tokens=` summary whose ids match the stream
+        send("gen 4 1 2 3")
+        tok_ids = []
+        while True:
+            reply = recv()
+            if reply.startswith("tok "):
+                idx, tid = reply.split()[1:3]
+                if int(idx) != len(tok_ids):
+                    fail(f"tok indices out of order: {reply!r}")
+                tok_ids.append(int(tid))
+            else:
+                break
+        if not reply.startswith("tokens="):
+            fail(f"gen summary reply: {reply!r}")
+        summary_ids = [int(t) for t in reply.split()[0][len("tokens="):].split(",") if t]
+        if len(tok_ids) != 4 or tok_ids != summary_ids:
+            fail(f"streamed ids {tok_ids} != summary ids {summary_ids}")
+
+        # model info: the served configuration as one key=value line
+        send("model")
+        reply = recv()
+        if "backend=fallback" not in reply or "seq_len=32" not in reply:
+            fail(f"model reply: {reply!r}")
+
+        # stable errors: unknown verb, zero-budget gen
+        send("frobnicate 1 2")
+        if recv() != "error=unknown verb 'frobnicate'":
+            fail("unknown-verb reply drifted")
+        send("gen 0 1")
+        if recv() != "error=gen count must be positive":
+            fail("zero-count reply drifted")
+
+        sock.close()
+        print("serve-smoke: OK (classify, streamed gen, model, stable errors)")
+        return 0
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
