@@ -5,7 +5,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test check-docs doc-refs fmt-check clippy ci bench bench-engine bench-decode bench-model bench-serve bench-smoke serve-smoke serve-fallback artifacts all
+.PHONY: build test check-docs doc-refs fmt-check clippy ci bench bench-engine bench-decode bench-model bench-serve bench-pages bench-smoke serve-smoke serve-fallback artifacts all
 
 all: build
 
@@ -52,11 +52,12 @@ clippy:
 	fi
 
 ## Regenerate the perf numbers: the engine naive/fused/parallel table, the
-## decode tokens/sec table, the model depth-sweep table and the serve
-## offered-load sweep (request-batch vs continuous scheduler), plus
-## machine-readable medians in BENCH_engine.json, BENCH_decode.json,
-## BENCH_model.json and BENCH_serve.json at the repo root.
-bench: bench-engine bench-decode bench-model bench-serve
+## decode tokens/sec table, the model depth-sweep table, the serve
+## offered-load sweep (request-batch vs continuous scheduler) and the
+## paged-vs-monolithic residency/admission sweep, plus machine-readable
+## medians in BENCH_engine.json, BENCH_decode.json, BENCH_model.json,
+## BENCH_serve.json and BENCH_pages.json at the repo root.
+bench: bench-engine bench-decode bench-model bench-serve bench-pages
 
 bench-engine:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target engine
@@ -70,24 +71,30 @@ bench-model:
 bench-serve:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target serve
 
-## CI smoke benches: every runtime-free target (engine, decode, model and
-## serve at tiny shapes with one rep; memory is analytic and already
-## instant) — the correctness gates (engine vs naive oracle, decode vs
-## full-prefix oracle, stack vs per-layer oracle, scheduler vs
-## single-request generate) still run, but the real BENCH_*.json files
-## are left untouched.
+bench-pages:
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target pages
+
+## CI smoke benches: every runtime-free target (engine, decode, model,
+## serve and pages at tiny shapes with one rep; memory is analytic and
+## already instant) — the correctness gates (engine vs naive oracle,
+## decode vs full-prefix oracle, stack vs per-layer oracle, scheduler vs
+## single-request generate, paged cohorts vs monolithic generate) still
+## run, but the real BENCH_*.json files are left untouched.
 bench-smoke:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target engine --smoke
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target decode --smoke
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target model --smoke
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target serve --smoke
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target pages --smoke
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target memory --smoke
 
 ## End-to-end TCP smoke (wired into `make ci`): spawn the fallback server
 ## on an ephemeral port, run scripted classify + *streamed* gen + model +
-## stable-error traffic through the real socket path, assert every reply
-## (tools/serve_smoke.py). Loudly skipped without a Rust toolchain, like
-## fmt-check — the script runs the built `sinkhorn serve` binary.
+## stable-error traffic through the real socket path, then drive a
+## capacity-one server over admission (stable busy= line, successful
+## retry after retirement) and assert every reply (tools/serve_smoke.py).
+## Loudly skipped without a Rust toolchain, like fmt-check — the script
+## runs the built `sinkhorn serve` binary.
 serve-smoke:
 	@if command -v $(CARGO) >/dev/null 2>&1; then \
 		CARGO=$(CARGO) python3 tools/serve_smoke.py; \

@@ -993,6 +993,214 @@ fn write_serve_json(cells: &[ServeCell]) -> Result<std::path::PathBuf> {
     Ok(path)
 }
 
+/// One measured pages cell: one `(cohort, storage mode)` pair.
+struct PagesCell {
+    mode: &'static str,
+    sessions: usize,
+    overlap_pct: usize,
+    prompt_len: usize,
+    gen_len: usize,
+    resident_bytes: f64,
+    bytes_per_session: f64,
+    admitted: usize,
+}
+
+/// `bench pages` — decode-cache residency and admission under prefix
+/// overlap (DESIGN.md §Pages): cohorts of sessions whose prompts share a
+/// 0/50/90% common prefix run to completion on the paged KV-cache, and
+/// each cohort reports actual resident bytes (page-pool ledger + the
+/// fixed per-session R/descriptor footprint) against the monolithic
+/// worst-case allocation, plus how many cohort members a fixed
+/// 4-worst-case-session memory budget admits under per-session page
+/// reservations versus worst-case slot division.
+///
+/// Gates (the bench aborts rather than reporting a broken cache):
+/// every paged session must reproduce the monolithic single-request
+/// `generate` oracle bit for bit; overlapping cohorts must pin strictly
+/// fewer resident bytes than monolithic states; reservation admission
+/// must never admit fewer sessions than worst-case budgeting and must
+/// admit strictly more at the highest overlap. Full runs land in
+/// `BENCH_pages.json` at the repo root.
+pub fn pages_table(opts: &BenchOptions) -> Result<String> {
+    use crate::server::{FallbackConfig, FallbackModel, GenSession};
+    let (seq_len, d_model, nb, depth, heads, d_ff): (usize, usize, usize, usize, usize, usize) =
+        if opts.smoke { (32, 16, 4, 1, 1, 0) } else { (128, 32, 8, 2, 2, 64) };
+    let (n, plen, glen) = if opts.smoke { (8, 17, 2) } else { (16, 65, 8) };
+    let cfg = FallbackConfig {
+        seq_len,
+        d_model,
+        nb,
+        depth,
+        n_heads: heads,
+        d_ff,
+        vocab: 64,
+        ..Default::default()
+    };
+    let b = seq_len / nb;
+    let d_head = d_model / heads;
+    let bpp = cfg.blocks_per_page();
+    let mut t = Table::new(
+        &format!(
+            "pages — resident bytes and admission vs prefix overlap, depth={depth} \
+             heads={heads} d={d_model} seq_len={seq_len} ({n} sessions){}",
+            if opts.smoke { " [SMOKE]" } else { "" }
+        ),
+        &["mode", "sessions", "overlap%", "prompt", "gen", "resident KB", "KB/session", "admitted"],
+    );
+    let mut cells = Vec::new();
+    // fixed budget: exactly four worst-case monolithic sessions
+    let probe = FallbackModel::new(cfg.clone())?;
+    let mono_session = probe.session_state_bytes();
+    let budget = 4 * mono_session;
+    let mono_admitted = memory::admitted_sessions(budget, mono_session, n);
+    // non-page footprint a paged session keeps outside the pool (R,
+    // per-layer descriptors): the analytic resident model at length 0
+    let fixed = memory::stack_paged_resident_bytes(depth, heads, b, d_head, nb, None, bpp, 0);
+    let overlaps: &[usize] = &[0, 50, 90];
+    let mut admitted_by_overlap = Vec::new();
+    for &pct in overlaps {
+        let shared_toks = plen * pct / 100;
+        let prompts: Vec<Vec<i32>> = (0..n)
+            .map(|s| {
+                (0..plen)
+                    .map(|i| {
+                        let salt = if i < shared_toks { 0 } else { 17 * (s + 1) };
+                        ((i * 7 + 3 + salt) % 64) as i32
+                    })
+                    .collect()
+            })
+            .collect();
+        // fresh model per cohort: the prefix cache starts cold
+        let m = FallbackModel::new(cfg.clone())?;
+        let want: Vec<Vec<i32>> = prompts.iter().map(|p| m.generate(p, glen)).collect();
+        let mut sessions: Vec<GenSession> =
+            prompts.iter().map(|p| m.open_session(p, glen)).collect();
+        let mut scratch = m.new_batch_scratch();
+        loop {
+            let mut live: Vec<&mut GenSession> =
+                sessions.iter_mut().filter(|s| !s.done()).collect();
+            if live.is_empty() {
+                break;
+            }
+            m.step_sessions(&mut live, &mut scratch);
+        }
+        for (s, w) in sessions.iter().zip(&want) {
+            anyhow::ensure!(
+                s.generated() == &w[..],
+                "pages bench oracle gate: paged session diverged from \
+                 single-request generate (overlap {pct}%)"
+            );
+        }
+        // residency at completion, sessions still resident (pool ledger
+        // counts shared pages once; the prefix cache's snapshots ride on
+        // the same pages plus their pre-divergence sort caches)
+        let paged_resident = m.pool_stats().bytes_in_use() as f64 + (n * fixed) as f64;
+        let mono_resident = (n * mono_session) as f64;
+        anyhow::ensure!(
+            pct == 0 || paged_resident < mono_resident,
+            "pages bench gate: overlap {pct}% cohort must pin fewer resident bytes \
+             paged ({paged_resident}) than monolithic ({mono_resident})"
+        );
+        // admission replay on a cold model, exactly the scheduler's rule:
+        // charge each session's reservation in FIFO order, floor one
+        let gk = FallbackModel::new(cfg.clone())?;
+        let mut reserved = 0usize;
+        let mut admitted = 0usize;
+        let mut keep_alive = Vec::new();
+        for p in &prompts {
+            let need = gk.session_admission_bytes(p, glen);
+            if admitted > 0 && reserved + need > budget {
+                break;
+            }
+            keep_alive.push(gk.open_session(p, glen));
+            reserved += need;
+            admitted += 1;
+        }
+        anyhow::ensure!(
+            admitted >= mono_admitted,
+            "pages bench gate: reservation admission ({admitted}) fell below \
+             worst-case budgeting ({mono_admitted}) at overlap {pct}%"
+        );
+        admitted_by_overlap.push(admitted);
+        for (mode, resident, adm) in
+            [("paged", paged_resident, admitted), ("mono", mono_resident, mono_admitted)]
+        {
+            t.row(&[
+                mode.to_string(),
+                n.to_string(),
+                pct.to_string(),
+                plen.to_string(),
+                glen.to_string(),
+                format!("{:.1}", resident / 1024.0),
+                format!("{:.1}", resident / n as f64 / 1024.0),
+                adm.to_string(),
+            ]);
+            cells.push(PagesCell {
+                mode,
+                sessions: n,
+                overlap_pct: pct,
+                prompt_len: plen,
+                gen_len: glen,
+                resident_bytes: resident,
+                bytes_per_session: resident / n as f64,
+                admitted: adm,
+            });
+        }
+    }
+    anyhow::ensure!(
+        admitted_by_overlap.last().copied().unwrap_or(0) > mono_admitted,
+        "pages bench gate: the highest-overlap cohort must admit strictly more \
+         sessions than worst-case budgeting ({admitted_by_overlap:?} vs {mono_admitted})"
+    );
+    let mut s = t.render();
+    s.push_str(
+        "paged = shared PagePool arena (resident = pool ledger + per-session R/desc);\n\
+         mono = worst-case monolithic decode states (O(seq_len) per session up front).\n\
+         admitted = sessions a 4-worst-case-session budget takes: per-session page\n\
+         reservations net of cached prefix pages (paged) vs budget / worst-case (mono).\n\
+         Gate: paged sessions bit-equal to single-request generate; overlap cohorts\n\
+         strictly cheaper than mono; reservations never admit fewer, more at 90%.\n",
+    );
+    save_result(&opts.artifacts, "pages", &s)?;
+    if opts.smoke {
+        s.push_str("smoke run: BENCH_pages.json left untouched\n");
+    } else {
+        let json_path = write_pages_json(&cells)?;
+        s.push_str(&format!("machine-readable medians: {}\n", json_path.display()));
+    }
+    println!("{s}");
+    Ok(s)
+}
+
+/// Emit the pages bench machine-readably: one row per `(cohort, storage
+/// mode)` with resident bytes and admitted sessions, written to
+/// `BENCH_pages.json` at the repo root (the memory-side companion of
+/// `BENCH_serve.json`).
+fn write_pages_json(cells: &[PagesCell]) -> Result<std::path::PathBuf> {
+    use crate::util::json::Json;
+    let mut rows = Vec::new();
+    for c in cells {
+        rows.push(Json::Obj(vec![
+            ("mode".into(), Json::from(c.mode)),
+            ("sessions".into(), Json::from(c.sessions)),
+            ("overlap_pct".into(), Json::from(c.overlap_pct)),
+            ("prompt_len".into(), Json::from(c.prompt_len)),
+            ("gen_len".into(), Json::from(c.gen_len)),
+            ("resident_bytes".into(), Json::from(c.resident_bytes)),
+            ("bytes_per_session".into(), Json::from(c.bytes_per_session)),
+            ("admitted".into(), Json::from(c.admitted)),
+        ]));
+    }
+    let doc = Json::Obj(vec![
+        ("target".into(), Json::from("pages")),
+        ("unit".into(), Json::from("bytes")),
+        ("cells".into(), Json::Arr(rows)),
+    ]);
+    let path = repo_root().join("BENCH_pages.json");
+    std::fs::write(&path, doc.to_string_pretty() + "\n")?;
+    Ok(path)
+}
+
 /// Locate the repo root at runtime: the working directory when it (or an
 /// ancestor, for `cargo run` from `rust/`) contains `rust/Cargo.toml`.
 /// Falls back to the build-time manifest location only when the process
@@ -1088,7 +1296,7 @@ fn match_variant<'a>(
 /// and registry), or is it runtime-free (`engine`, `decode`, `model`,
 /// `serve`, `memory`)?
 pub fn target_needs_runtime(target: &str) -> bool {
-    !matches!(target, "engine" | "decode" | "model" | "serve" | "memory")
+    !matches!(target, "engine" | "decode" | "model" | "serve" | "pages" | "memory")
 }
 
 /// Optional runtime + registry bootstrap shared by the CLI and the bench
@@ -1131,6 +1339,7 @@ pub fn run_target(
             "decode" => decode_table(opts)?,
             "model" => model_table(opts)?,
             "serve" => serve_table(opts)?,
+            "pages" => pages_table(opts)?,
             "memory" => memory_table(opts)?,
             _ => unreachable!(),
         };
@@ -1174,5 +1383,5 @@ pub fn run_all(rt: Option<&Runtime>, reg: Option<&Registry>, opts: &BenchOptions
 
 pub const ALL_TARGETS: &[&str] = &[
     "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "fig3",
-    "fig4", "memory", "engine", "decode", "model", "serve",
+    "fig4", "memory", "engine", "decode", "model", "serve", "pages",
 ];

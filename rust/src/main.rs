@@ -60,20 +60,25 @@ USAGE: sinkhorn <subcommand> [flags]
   list                              experiments in the registry
   train  --exp NAME [--steps N] [--seed S] [--ckpt out.ckpt] [--verbose]
   eval   --exp NAME --ckpt F [--eval-batches N]
-  bench  --target table1..table8|fig3|fig4|memory|engine|decode|model|serve|all
+  bench  --target table1..table8|fig3|fig4|memory|engine|decode|model|serve|pages|all
          [--scale F] [--steps N] [--fast-decode] [--smoke] [--verbose]
-         (engine + decode + model + serve + memory run without
+         (engine + decode + model + serve + pages + memory run without
           artifacts/XLA; --smoke = tiny CI shapes, gates on,
           BENCH_*.json untouched)
   serve  --exp NAME | --fallback [--seq-len L] [--nb N] [--threads T]
          [--depth L] [--heads H] [--d-ff F]
          [--ckpt F] [--requests N] [--max-batch B] [--max-wait-ms T]
          [--max-sessions S] [--queue-depth Q] [--mem-budget-mb M]
+         [--page-bytes B] [--no-paged] [--no-prefix-share]
          [--request-batch] [--port P] [--wait]
          (--fallback serves the pure-Rust stack; no artifacts needed.
           The continuous-batching scheduler multiplexes generations
           token by token: --max-sessions caps concurrent decode slots,
-          --mem-budget-mb budgets them by real decode-state bytes,
+          --mem-budget-mb budgets them by real decode-state bytes —
+          per-session page reservations on the default paged KV-cache,
+          worst-case states with --no-paged —
+          --page-bytes sizes K/V pages (0 = one Sinkhorn block each),
+          --no-prefix-share disables copy-on-write prompt-prefix reuse,
           --queue-depth bounds the admission queue (overflow -> busy=),
           --request-batch falls back to the legacy wave executor.
           TCP verbs: '<ids...>' classifies, 'gen <n> <ids...>' streams
@@ -214,12 +219,16 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
             depth: args.usize("depth", 1)?,
             n_heads: args.usize("heads", 1)?,
             d_ff: args.usize("d-ff", 0)?,
+            paged: !args.bool("no-paged"),
+            page_bytes: args.usize("page-bytes", 0)?,
+            prefix_share: !args.bool("no-prefix-share"),
             seed,
             ..Default::default()
         };
         println!(
-            "serving pure-Rust fallback stack (seq_len {}, nb {}, depth {}, heads {}, d_ff {})",
-            cfg.seq_len, cfg.nb, cfg.depth, cfg.n_heads, cfg.d_ff
+            "serving pure-Rust fallback stack (seq_len {}, nb {}, depth {}, heads {}, d_ff {}, \
+             paged {}, prefix_share {})",
+            cfg.seq_len, cfg.nb, cfg.depth, cfg.n_heads, cfg.d_ff, cfg.paged, cfg.prefix_share
         );
         Server::start_fallback(cfg, policy)?
     } else {

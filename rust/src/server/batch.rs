@@ -49,9 +49,12 @@ pub struct BatchPolicy {
     /// arrivals beyond `slots + queue_depth` in flight get the stable
     /// busy reply instead of waiting unboundedly.
     pub queue_depth: usize,
-    /// Continuous scheduler: decode-state memory budget in bytes
-    /// (`memory::stack_decode_state_bytes` per session); `0` = no memory
-    /// clamp, slots are capped by `max_sessions` alone.
+    /// Continuous scheduler: decode-state memory budget in bytes. Paged
+    /// models reserve each session's actual resident peak at admission
+    /// (`memory::paged_session_peak_bytes`, net of shared prefix pages —
+    /// DESIGN.md §Pages); monolithic models divide the budget by the
+    /// worst-case `memory::stack_decode_state_bytes` up front. `0` = no
+    /// memory clamp, slots are capped by `max_sessions` alone.
     pub mem_budget: usize,
 }
 

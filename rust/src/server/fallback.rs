@@ -27,10 +27,13 @@
 //! (`super::tcp`, documented in `rust/README.md`), alongside the `model`
 //! info verb that reports this configuration.
 
+use std::sync::Mutex;
+
 use anyhow::Result;
 
 use crate::sinkhorn::model::{StackConfig, TransformerLayer};
-use crate::sinkhorn::{Mat, SinkhornEngine, SinkhornStack, WorkerPool};
+use crate::sinkhorn::pages::PoolStats;
+use crate::sinkhorn::{Mat, PagePool, SinkhornEngine, SinkhornStack, StackDecodeState, WorkerPool};
 use crate::util::rng::Rng;
 
 /// Configuration of the fallback model.
@@ -55,6 +58,15 @@ pub struct FallbackConfig {
     pub n_heads: usize,
     /// FFN hidden width; 0 = bare attention layers (the historical shape)
     pub d_ff: usize,
+    /// decode sessions use the paged KV-cache arena (DESIGN.md §Pages);
+    /// `false` falls back to monolithic worst-case decode states
+    pub paged: bool,
+    /// target bytes per K/V page; 0 = one Sinkhorn block per page (the
+    /// serve `--page-bytes` flag — rounded down to whole blocks, floor 1)
+    pub page_bytes: usize,
+    /// share page-resident decode state across sessions opened on a
+    /// common prompt prefix (`--no-prefix-share` disables)
+    pub prefix_share: bool,
 }
 
 impl Default for FallbackConfig {
@@ -75,6 +87,9 @@ impl Default for FallbackConfig {
             depth: 1,
             n_heads: 1,
             d_ff: 0,
+            paged: true,
+            page_bytes: 0,
+            prefix_share: true,
         }
     }
 }
@@ -104,6 +119,16 @@ impl FallbackConfig {
     /// pre-stack fallback.
     fn legacy_shape(&self) -> bool {
         self.depth == 1 && self.n_heads == 1 && self.d_ff == 0
+    }
+
+    /// Sinkhorn blocks per K/V page: `page_bytes` rounded down to whole
+    /// `(b, d_head)` blocks, floor one block (the engine is block-aligned,
+    /// so a page smaller than a block would split reads).
+    pub fn blocks_per_page(&self) -> usize {
+        let b = self.seq_len / self.nb.max(1);
+        let d_head = self.d_model / self.n_heads.max(1);
+        let block_bytes = (b * d_head * 4).max(1);
+        (self.page_bytes / block_bytes).max(1)
     }
 
     fn stack_config(&self) -> StackConfig {
@@ -137,7 +162,26 @@ pub struct FallbackModel {
     stack: SinkhornStack,
     /// (d, n_classes) classification head
     w_cls: Mat,
+    /// shared page arena every paged decode session allocates from
+    /// (DESIGN.md §Pages); unused when `cfg.paged` is false
+    pool: PagePool,
+    /// block-aligned prompt prefixes with their prefilled decode states:
+    /// opening a session whose prompt extends one of these forks the
+    /// cached state (refcount bumps, no float copies) instead of
+    /// re-decoding the prefix
+    prefix_cache: Mutex<Vec<PrefixEntry>>,
 }
+
+/// One cached prompt prefix: the tokens fed so far (always a multiple of
+/// the block size) and the paged decode state at exactly that length.
+struct PrefixEntry {
+    tokens: Vec<i32>,
+    st: StackDecodeState,
+}
+
+/// Cached prompt prefixes kept per model — bounds the pages the cache
+/// itself pins (oldest entries evict first).
+const PREFIX_CACHE_CAP: usize = 16;
 
 impl FallbackModel {
     pub fn new(cfg: FallbackConfig) -> Result<FallbackModel> {
@@ -201,6 +245,8 @@ impl FallbackModel {
             pos,
             stack,
             w_cls,
+            pool: PagePool::new(),
+            prefix_cache: Mutex::new(Vec::new()),
             cfg,
         })
     }
@@ -211,7 +257,8 @@ impl FallbackModel {
         let c = &self.cfg;
         format!(
             "backend=fallback depth={} heads={} d_model={} d_ff={} nb={} seq_len={} vocab={} \
-             classes={} sinkhorn_iters={} engine_threads={} batch_workers={} params={}",
+             classes={} sinkhorn_iters={} engine_threads={} batch_workers={} params={} \
+             paged={} page_blocks={} prefix_share={}",
             c.depth,
             c.n_heads,
             c.d_model,
@@ -224,6 +271,9 @@ impl FallbackModel {
             self.stack.engine().threads(),
             self.batch_pool.threads(),
             self.n_params(),
+            c.paged,
+            c.blocks_per_page(),
+            c.prefix_share,
         )
     }
 
@@ -413,27 +463,126 @@ impl FallbackModel {
     }
 
     /// Open a decode session for the continuous-batching scheduler
-    /// (DESIGN.md §Scheduler): allocate the per-sequence
+    /// (DESIGN.md §Scheduler, §Pages): allocate the per-sequence
     /// [`crate::sinkhorn::StackDecodeState`] and pin the capacity rule —
     /// the *same* clamping as [`Self::generate`] (prompt truncated to the
     /// first `seq_len - 1` tokens, budget clamped to the remaining
     /// positions, empty prompts decode from PAD) — so a session stepped to
     /// completion emits exactly `generate(prompt, max_new)`, bit for bit,
     /// regardless of what other sessions share its ticks.
+    ///
+    /// Paged models additionally detect shareable prompt prefixes: the
+    /// longest cached block-aligned prefix of the clamped prompt is
+    /// *forked* — page refcount bumps, no float copies — and only the
+    /// uncached remainder is prefilled, through the same `decode_step`
+    /// the scheduler's tick loop is bit-identical to, so the session's
+    /// stream is unchanged token for token. The prefix never extends past
+    /// `keep - 1` tokens: step `keep - 1` emits the first generated
+    /// token, so the session itself must still take it.
     pub fn open_session(&self, prompt: &[i32], max_new: usize) -> GenSession {
         let (ell_cap, d) = (self.cfg.seq_len, self.cfg.d_model);
         let seeded = [0i32]; // empty prompt: decode from PAD
         let prompt: &[i32] = if prompt.is_empty() { &seeded } else { prompt };
         let keep = prompt.len().min(ell_cap.saturating_sub(1).max(1));
         let budget = max_new.min(ell_cap - keep);
+        let (st, shared) = if budget == 0 {
+            // retires before its first tick: skip prefill and caching
+            (self.fresh_session_state(), 0)
+        } else {
+            self.session_state_for(&prompt[..keep])
+        };
         GenSession {
-            st: self.stack.decode_state(),
+            st,
             prompt: prompt[..keep].to_vec(),
             budget,
+            shared,
             gen: Vec::with_capacity(budget),
             x: vec![0.0; d],
             h: vec![0.0; d],
         }
+    }
+
+    /// Fresh empty decode state in the configured storage mode.
+    fn fresh_session_state(&self) -> StackDecodeState {
+        if self.cfg.paged {
+            self.stack.decode_state_paged(&self.pool, self.cfg.blocks_per_page())
+        } else {
+            self.stack.decode_state()
+        }
+    }
+
+    /// The block-aligned prefix length of a `keep`-token clamped prompt
+    /// that prefix sharing may reuse: one short of `keep`, rounded down
+    /// to whole blocks (the session itself must still take the step that
+    /// emits its first token).
+    fn shareable_len(&self, keep: usize) -> usize {
+        let b = self.cfg.seq_len / self.cfg.nb;
+        keep.saturating_sub(1) / b * b
+    }
+
+    /// Build the decode state for a clamped prompt: fork the longest
+    /// matching cached prefix, prefill the uncached remainder, and leave
+    /// the full shareable prefix in the cache for the next session.
+    /// Returns the state (always at `shareable_len` tokens) and how many
+    /// of those tokens were forked from the cache (page-shared).
+    fn session_state_for(&self, kept: &[i32]) -> (StackDecodeState, usize) {
+        if !self.cfg.paged || !self.cfg.prefix_share {
+            return (self.fresh_session_state(), 0);
+        }
+        let target = self.shareable_len(kept.len());
+        if target == 0 {
+            return (self.fresh_session_state(), 0);
+        }
+        // the lock covers match + prefill + insert so concurrent opens
+        // never race duplicate entries; opens are rare next to ticks
+        let mut cache = self.prefix_cache.lock().unwrap();
+        let (mut st, shared) = match cache
+            .iter()
+            .filter(|e| e.tokens.len() <= target && kept.starts_with(&e.tokens))
+            .max_by_key(|e| e.tokens.len())
+        {
+            Some(e) => (e.st.fork(), e.tokens.len()),
+            None => (self.fresh_session_state(), 0),
+        };
+        if shared < target {
+            let b = self.cfg.seq_len / self.cfg.nb.max(1);
+            let mut scratch = self.stack.new_decode_scratch();
+            let mut x = vec![0.0f32; self.cfg.d_model];
+            let mut h = vec![0.0f32; self.cfg.d_model];
+            for (t, &tok) in kept.iter().enumerate().take(target).skip(shared) {
+                self.embed_token_into(tok, t, &mut x);
+                self.stack.decode_step(&mut st, &x, &mut scratch, &mut h);
+                // snapshot every block boundary, not just `target`: a
+                // later prompt sharing any whole-block prefix then hits.
+                // Snapshots are forks — they ride the session's pages
+                if (t + 1) % b == 0 && !cache.iter().any(|e| e.tokens == kept[..t + 1]) {
+                    if cache.len() >= PREFIX_CACHE_CAP {
+                        cache.remove(0);
+                    }
+                    cache.push(PrefixEntry {
+                        tokens: kept[..t + 1].to_vec(),
+                        st: st.fork(),
+                    });
+                }
+            }
+        }
+        (st, shared)
+    }
+
+    /// Is this model serving paged decode sessions (DESIGN.md §Pages)?
+    pub fn paged(&self) -> bool {
+        self.cfg.paged
+    }
+
+    /// Ledger snapshot of the model's page arena: what decode sessions
+    /// (and the prefix cache) actually have resident right now.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    /// The page arena itself (tests and the pages bench inspect it).
+    pub fn page_pool(&self) -> &PagePool {
+        &self.pool
     }
 
     /// Scratch for [`Self::step_sessions`] (one per scheduler, reused
@@ -455,6 +604,65 @@ impl FallbackModel {
             c.d_head(),
             c.nb,
             c.n_cut,
+        )
+    }
+
+    /// Peak *new* bytes admitting `(prompt, max_new)` will pin — what the
+    /// scheduler's reservation-based admission charges against the memory
+    /// budget (DESIGN.md §Scheduler, §Pages). For paged models this is
+    /// the analytic resident model at the session's final length
+    /// ([`crate::sinkhorn::memory::paged_session_peak_bytes`]), discounted
+    /// by the full K/V pages a currently-cached prompt prefix would be
+    /// forked rather than allocated. Monolithic models fall back to the
+    /// worst-case [`Self::session_state_bytes`]. Applies the same
+    /// prompt/budget clamping as [`Self::open_session`], so the charge
+    /// matches the session actually opened.
+    pub fn session_admission_bytes(&self, prompt: &[i32], max_new: usize) -> usize {
+        if !self.cfg.paged {
+            return self.session_state_bytes();
+        }
+        let ell_cap = self.cfg.seq_len;
+        let seeded = [0i32];
+        let prompt: &[i32] = if prompt.is_empty() { &seeded } else { prompt };
+        let keep = prompt.len().min(ell_cap.saturating_sub(1).max(1));
+        let budget = max_new.min(ell_cap - keep);
+        if budget == 0 {
+            // retires at open: empty state, only the fixed R/desc footprint
+            return self.paged_peak_bytes(0, 0);
+        }
+        let target_len = keep + budget - 1;
+        let mut shared = 0usize;
+        if self.cfg.prefix_share {
+            let target = self.shareable_len(keep);
+            if target > 0 {
+                let cache = self.prefix_cache.lock().unwrap();
+                shared = cache
+                    .iter()
+                    .filter(|e| {
+                        e.tokens.len() <= target && prompt[..keep].starts_with(&e.tokens)
+                    })
+                    .map(|e| e.tokens.len())
+                    .max()
+                    .unwrap_or(0);
+            }
+        }
+        self.paged_peak_bytes(target_len, shared)
+    }
+
+    /// [`crate::sinkhorn::memory::paged_session_peak_bytes`] at this
+    /// stack's shape and the configured page size.
+    fn paged_peak_bytes(&self, target_len: usize, shared_len: usize) -> usize {
+        let c = &self.stack.cfg;
+        crate::sinkhorn::memory::paged_session_peak_bytes(
+            c.depth,
+            c.n_heads,
+            c.block_rows(),
+            c.d_head(),
+            c.nb,
+            c.n_cut,
+            self.cfg.blocks_per_page(),
+            target_len,
+            shared_len,
         )
     }
 
@@ -521,6 +729,7 @@ pub struct GenSession {
     st: crate::sinkhorn::StackDecodeState,
     prompt: Vec<i32>,
     budget: usize,
+    shared: usize,
     gen: Vec<i32>,
     x: Vec<f32>,
     h: Vec<f32>,
@@ -552,6 +761,12 @@ impl GenSession {
     /// Tokens fed through the stack so far (prompt + continuations).
     pub fn pos(&self) -> usize {
         self.st.len()
+    }
+
+    /// Prompt tokens whose pages were forked from the prefix cache at
+    /// open time (0 for monolithic sessions and cache misses).
+    pub fn shared_len(&self) -> usize {
+        self.shared
     }
 }
 
@@ -828,6 +1043,97 @@ mod tests {
             assert!(s.contains(want), "describe() missing {want}: {s}");
         }
         assert_eq!(s.lines().count(), 1, "describe() must stay one line");
+    }
+
+    /// Sessions opened with a common prompt prefix fork cached pages
+    /// instead of allocating: a same-prefix cohort pins strictly fewer
+    /// pool pages than a distinct-prompt cohort of the same shape, while
+    /// still reproducing the monolithic `generate` oracle token for token
+    /// (DESIGN.md §Pages).
+    #[test]
+    fn shared_prefix_cohort_pins_fewer_pages() {
+        let shared = deep_model();
+        let distinct = deep_model();
+        assert!(shared.paged() && shared.cfg.prefix_share);
+        let base: Vec<i32> = (0..17).map(|i| (i * 7 + 2) % 64).collect();
+        // same prompt 4x vs 4 prompts differing inside the first block
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for s in 0..4i32 {
+            let mut p = base.clone();
+            p[0] = (p[0] + s) % 64;
+            same.push(shared.open_session(&base, 3));
+            diff.push(distinct.open_session(&p, 3));
+        }
+        let (sp, dp) =
+            (shared.pool_stats().pages_in_use, distinct.pool_stats().pages_in_use);
+        assert!(sp > 0, "paged sessions must hold pages");
+        assert!(
+            sp < dp,
+            "shared-prefix cohort must pin strictly fewer pages ({sp} vs {dp})"
+        );
+        assert!(same.iter().skip(1).all(|s| s.shared_len() == 16), "cache hits fork 2 blocks");
+        assert_eq!(same[0].shared_len(), 0, "first open misses the cache");
+        // both cohorts still reproduce the monolithic single-request oracle
+        for (m, sessions) in [(&shared, &mut same), (&distinct, &mut diff)] {
+            let want: Vec<Vec<i32>> = sessions
+                .iter()
+                .map(|s| m.generate(&s.prompt, s.budget()))
+                .collect();
+            let mut scratch = m.new_batch_scratch();
+            loop {
+                let mut live: Vec<&mut GenSession> =
+                    sessions.iter_mut().filter(|s| !s.done()).collect();
+                if live.is_empty() {
+                    break;
+                }
+                m.step_sessions(&mut live, &mut scratch);
+            }
+            for (s, w) in sessions.iter().zip(&want) {
+                assert_eq!(s.generated(), &w[..], "paged session diverged from generate");
+            }
+        }
+        // retiring every session and dropping the prefix cache frees all pages
+        drop(same);
+        *shared.prefix_cache.lock().unwrap() = Vec::new();
+        assert_eq!(shared.pool_stats().pages_in_use, 0);
+        assert_eq!(shared.pool_stats().created, shared.pool_stats().freed);
+    }
+
+    /// Reservation-based admission charges the analytic paged peak, and
+    /// discounts prefixes that are actually cached right now — while the
+    /// monolithic configuration still charges the worst-case state bytes.
+    #[test]
+    fn session_admission_bytes_tracks_cache_and_mode() {
+        let m = deep_model();
+        let prompt: Vec<i32> = (0..17).map(|i| (i * 7 + 2) % 64).collect();
+        let cold = m.session_admission_bytes(&prompt, 3);
+        assert!(cold > 0 && cold < m.session_state_bytes(), "paged peak beats worst-case");
+        let _s = m.open_session(&prompt, 3); // fills the prefix cache
+        let warm = m.session_admission_bytes(&prompt, 3);
+        assert!(warm < cold, "cached prefix must discount admission ({warm} vs {cold})");
+        // an unrelated prompt gets no discount
+        let other: Vec<i32> = (0..17).map(|i| (i * 5 + 33) % 64).collect();
+        assert_eq!(m.session_admission_bytes(&other, 3), cold);
+        // zero-budget sessions charge only the fixed per-layer footprint
+        assert!(m.session_admission_bytes(&prompt, 0) < warm);
+        // monolithic mode falls back to the worst-case model
+        let mono = FallbackModel::new(FallbackConfig {
+            seq_len: 32,
+            d_model: 16,
+            nb: 4,
+            vocab: 64,
+            depth: 2,
+            n_heads: 2,
+            d_ff: 32,
+            paged: false,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(mono.session_admission_bytes(&prompt, 3), mono.session_state_bytes());
+        let sess = mono.open_session(&prompt, 3);
+        assert_eq!(sess.pos(), 0, "monolithic sessions never prefill at open");
+        assert_eq!(sess.shared_len(), 0);
     }
 
     #[test]

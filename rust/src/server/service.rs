@@ -317,6 +317,10 @@ struct ActiveSession {
     admitted: Instant,
     stream: Option<Sender<TokenEvent>>,
     resp: Sender<Result<Response>>,
+    /// bytes this session reserved against `mem_budget` at admission
+    /// (paged models only; 0 under worst-case slot budgeting) — returned
+    /// to the pool accounting when the session retires
+    reserved_bytes: usize,
 }
 
 /// One generation waiting in the bounded admission queue.
@@ -332,7 +336,7 @@ struct PendingGen {
 /// summary reply carrying the full generation. `tick_n` is how many
 /// sessions shared the retiring tick (reported as `batch_size`).
 fn finish_session(a: ActiveSession, tick_n: usize) {
-    let ActiveSession { sess, enqueued, admitted, stream, resp } = a;
+    let ActiveSession { sess, enqueued, admitted, stream, resp, reserved_bytes: _ } = a;
     drop(stream); // token channel closes before the summary reply
     let gen = sess.into_generated();
     let _ = resp.send(Ok(Response {
@@ -365,20 +369,32 @@ fn finish_session(a: ActiveSession, tick_n: usize) {
 ///    to stream subscribers; finished sessions retire and free their slot
 ///    immediately.
 ///
-/// Slots = `memory::admitted_sessions(policy.mem_budget,
-/// model.session_state_bytes(), policy.max_sessions)` — admission is in
-/// terms of the real decode-state bytes each session pins.
+/// Admission is in terms of the real decode-state bytes each session
+/// pins. Monolithic models budget worst-case: slots =
+/// `memory::admitted_sessions(policy.mem_budget,
+/// model.session_state_bytes(), policy.max_sessions)`, fixed up front.
+/// Paged models (DESIGN.md §Pages) instead *reserve* per session at
+/// admission time — [`FallbackModel::session_admission_bytes`], the
+/// analytic resident peak at the session's actual clamped length minus
+/// the pages a cached prompt prefix already holds — so short requests
+/// and shared-prefix cohorts admit where worst-case budgeting would
+/// refuse them. One session always admits into an idle table (the
+/// floor-1 progress guarantee), and retirements return their
+/// reservation mid-wave, draining the wait queue under page pressure.
 fn scheduler_loop(
     rx: &Receiver<Msg>,
     policy: &BatchPolicy,
     info: &str,
     model: &FallbackModel,
 ) -> Result<()> {
-    let slots = memory::admitted_sessions(
-        policy.mem_budget,
-        model.session_state_bytes(),
-        policy.max_sessions.max(1),
-    );
+    let slot_cap = policy.max_sessions.max(1);
+    let paged_budget = model.paged() && policy.mem_budget > 0;
+    let slots = if paged_budget {
+        slot_cap // bytes are reserved per admission below, not pre-divided
+    } else {
+        memory::admitted_sessions(policy.mem_budget, model.session_state_bytes(), slot_cap)
+    };
+    let mut reserved: usize = 0;
     let mut scratch = model.new_batch_scratch();
     let mut active: Vec<ActiveSession> = Vec::with_capacity(slots);
     let mut waiting: VecDeque<PendingGen> = VecDeque::new();
@@ -447,9 +463,22 @@ fn scheduler_loop(
                 Msg::Stop => stop = true,
             }
         }
-        // 2. admission: free slots pull from the bounded wait queue
+        // 2. admission: free slots pull from the bounded wait queue; a
+        // paged model charges each session's actual byte reservation
+        // against the budget (floor one session into an idle table so
+        // the server always makes progress) instead of pre-divided
+        // worst-case slots
         while active.len() < slots {
-            let Some(p) = waiting.pop_front() else { break };
+            let Some(p) = waiting.front() else { break };
+            let need = if paged_budget {
+                model.session_admission_bytes(&p.tokens, p.max_new)
+            } else {
+                0
+            };
+            if paged_budget && !active.is_empty() && reserved + need > policy.mem_budget {
+                break; // FIFO head waits for retirements to free pages
+            }
+            let p = waiting.pop_front().expect("front was Some");
             let sess = model.open_session(&p.tokens, p.max_new);
             let a = ActiveSession {
                 sess,
@@ -457,12 +486,14 @@ fn scheduler_loop(
                 admitted: Instant::now(),
                 stream: p.stream,
                 resp: p.resp,
+                reserved_bytes: need,
             };
             if a.sess.done() {
                 // budget clamped to zero by a capacity-filled model:
                 // nothing to tick, retire straight from admission
                 finish_session(a, 1);
             } else {
+                reserved += need;
                 active.push(a);
             }
         }
@@ -500,6 +531,7 @@ fn scheduler_loop(
             while i < active.len() {
                 if active[i].sess.done() {
                     let a = active.remove(i);
+                    reserved = reserved.saturating_sub(a.reserved_bytes);
                     finish_session(a, n);
                 } else {
                     i += 1;

@@ -9,7 +9,7 @@
 //! O(b·d):
 //!
 //! * **K/V cache** — the new token's projected key/value rows are appended
-//!   into preallocated block-aligned buffers; nothing earlier is touched.
+//!   into block-aligned storage; nothing earlier is touched.
 //! * **Cached causal Sinkhorn state** — the balanced sort matrix `R` is
 //!   recomputed (Causal Sinkhorn Balancing, [`causal_sinkhorn`] with
 //!   `strict = true`) only when a block boundary fills. This is sound
@@ -38,6 +38,22 @@
 //! complete, later boundaries skip rebalancing altogether (no balanced
 //! row would ever be read again).
 //!
+//! **Storage** (DESIGN.md §Pages): a state's caches live in one of two
+//! [`Store`]s. *Monolithic* ([`DecodeState::new`]) owns worst-case
+//! `Vec` buffers — simple, and the differential oracle. *Paged*
+//! ([`DecodeState::new_paged`]) holds [`PageTable`] views over a shared
+//! [`PagePool`] arena: K/V pages appear lazily as blocks are written
+//! (resident bytes follow the actual length, not the capacity) and
+//! [`DecodeState::fork`] shares every existing page by refcount, so
+//! sessions opened on a common prompt prefix share cached K/V and
+//! sorted-gather state until a write copy-on-writes them apart. Because
+//! the local window and the gather only ever touch whole blocks, and
+//! pages hold whole blocks, the paged step reads *exactly* the slices
+//! the monolithic step reads — the two paths are bit-identical per step
+//! (`tests/pages_props.rs`). A frozen SortCut cut cache is the fast
+//! path: once `cut_rows == c` no rebalance ever writes it again, so its
+//! pages stay shared forever with zero copies.
+//!
 //! **Contract** (`tests/decode_props.rs`): every step's output matches the
 //! naive full-prefix oracle [`causal_decode_attention`] within
 //! [`ENGINE_TOL`](super::engine::ENGINE_TOL) — including steps that cross
@@ -51,20 +67,56 @@
 //! [`causal_decode_attention`]: super::attention::causal_decode_attention
 //! [`SinkhornEngine::decode_step_into`]: super::engine::SinkhornEngine::decode_step_into
 //! [`memory::decode_state_bytes`]: super::memory::decode_state_bytes
+//! [`gather_block_into`]: super::engine::gather_block_into
 
 use super::balance::causal_sinkhorn;
-use super::engine::{gather_block_into, normalize_rows, BlockedView, StreamState};
+use super::engine::{
+    gather_block_into, gather_pages_into, normalize_rows, BlockedView, StreamState,
+};
 use super::matrix::{Mat, MatView, MatViewMut};
+use super::pages::{Page, PagePool, PageTable};
 
 /// Row-support threshold below which a balanced sort row is treated as
 /// empty and its sorted term masked — the same cutoff the batch paths use.
 const SUPPORT_EPS: f32 = 1e-6;
 
+/// Where a [`DecodeState`]'s caches live (DESIGN.md §Pages): owned
+/// worst-case buffers, or page-table views over a shared [`PagePool`].
+/// Every step reads/writes the same block-shaped slices either way — the
+/// variants are bit-identical per step.
+enum Store {
+    /// Worst-case preallocated buffers (`nb_cap * b * d` per K/V side,
+    /// `cache_blocks * b * d` per sorted side) — the original layout and
+    /// the differential oracle for the paged one.
+    Mono {
+        /// appended keys, block-aligned: token `t`'s row lives at `t * d`
+        k: Vec<f32>,
+        /// appended values, same layout
+        v: Vec<f32>,
+        /// gathered sorted keys the current tokens attend to: `(b, d)` in
+        /// full mode, up to `(n_cut * b, d)` in SortCut mode
+        sk: Vec<f32>,
+        /// gathered sorted values, same layout
+        sv: Vec<f32>,
+    },
+    /// Arena-backed views: K/V pages allocated lazily on append, the
+    /// sorted cache as one page per side allocated at the first
+    /// rebalance. [`DecodeState::fork`] bumps refcounts; writes
+    /// copy-on-write through [`Page::make_mut`].
+    Paged {
+        k: PageTable,
+        v: PageTable,
+        sk: Option<Page>,
+        sv: Option<Page>,
+        pool: PagePool,
+    },
+}
+
 /// Per-sequence incremental decode state (DESIGN.md §Decode): the
 /// block-aligned K/V cache, the cached strict-causal balanced sort matrix,
-/// and the gathered sorted K/V the current tokens attend to. Everything is
-/// preallocated at construction; a step allocates only when a block
-/// boundary rebalances the (tiny) sort matrix.
+/// and the gathered sorted K/V the current tokens attend to. Monolithic
+/// states preallocate everything at construction; paged states allocate
+/// pages as the sequence actually grows (DESIGN.md §Pages).
 pub struct DecodeState {
     /// rows per block
     b: usize,
@@ -77,10 +129,8 @@ pub struct DecodeState {
     /// `Some(c)`: SortCut decoding over the first `c` sorted blocks;
     /// `None`: full causal decoding over the token's own sorted row
     n_cut: Option<usize>,
-    /// appended keys, block-aligned: token `t`'s row lives at `t * d`
-    k: Vec<f32>,
-    /// appended values, same layout
-    v: Vec<f32>,
+    /// K/V + sorted-gather storage (monolithic or paged)
+    store: Store,
     /// tokens appended so far
     len: usize,
     /// cached balanced sort matrix: top-left `(balanced, balanced)` of this
@@ -89,25 +139,24 @@ pub struct DecodeState {
     r: Mat,
     /// blocks covered by the cached balance (0 before the first step)
     balanced: usize,
-    /// gathered sorted keys the current tokens attend to: `(b, d)` in full
-    /// mode, up to `(n_cut * b, d)` in SortCut mode
-    sk: Vec<f32>,
-    /// gathered sorted values, same layout
-    sv: Vec<f32>,
-    /// valid key rows in `sk`/`sv`
+    /// valid key rows in the sorted cache
     sorted_rows: usize,
     /// SortCut: balanced rows already consumed into the cut cache
     /// (append-only — prefix-consistency keeps earlier rows stable)
     cut_rows: usize,
 }
 
+fn check_shape(b: usize, d: usize, nb_cap: usize, n_cut: Option<usize>) {
+    assert!(b > 0 && d > 0 && nb_cap > 0, "b, d, nb_cap must be positive");
+    if let Some(c) = n_cut {
+        assert!((1..=nb_cap).contains(&c), "n_cut must be in 1..=nb_cap, got {c}");
+    }
+}
+
 impl DecodeState {
-    /// Fresh state for a sequence of up to `nb_cap * b` tokens.
+    /// Fresh monolithic state for a sequence of up to `nb_cap * b` tokens.
     pub fn new(b: usize, d: usize, nb_cap: usize, n_iters: usize, n_cut: Option<usize>) -> Self {
-        assert!(b > 0 && d > 0 && nb_cap > 0, "b, d, nb_cap must be positive");
-        if let Some(c) = n_cut {
-            assert!((1..=nb_cap).contains(&c), "n_cut must be in 1..=nb_cap, got {c}");
-        }
+        check_shape(b, d, nb_cap, n_cut);
         let cache_blocks = n_cut.unwrap_or(1);
         DecodeState {
             b,
@@ -115,15 +164,88 @@ impl DecodeState {
             nb_cap,
             n_iters,
             n_cut,
-            k: vec![0.0; nb_cap * b * d],
-            v: vec![0.0; nb_cap * b * d],
+            store: Store::Mono {
+                k: vec![0.0; nb_cap * b * d],
+                v: vec![0.0; nb_cap * b * d],
+                sk: vec![0.0; cache_blocks * b * d],
+                sv: vec![0.0; cache_blocks * b * d],
+            },
             len: 0,
             r: Mat::zeros(nb_cap, nb_cap),
             balanced: 0,
-            sk: vec![0.0; cache_blocks * b * d],
-            sv: vec![0.0; cache_blocks * b * d],
             sorted_rows: 0,
             cut_rows: 0,
+        }
+    }
+
+    /// Fresh paged state over `pool` (DESIGN.md §Pages): same capacity and
+    /// semantics as [`DecodeState::new`], but nothing is resident until
+    /// steps write it — a page holds `blocks_per_page` blocks of one
+    /// cached tensor.
+    pub fn new_paged(
+        b: usize,
+        d: usize,
+        nb_cap: usize,
+        n_iters: usize,
+        n_cut: Option<usize>,
+        pool: &PagePool,
+        blocks_per_page: usize,
+    ) -> Self {
+        check_shape(b, d, nb_cap, n_cut);
+        assert!(blocks_per_page > 0, "blocks_per_page must be positive");
+        DecodeState {
+            b,
+            d,
+            nb_cap,
+            n_iters,
+            n_cut,
+            store: Store::Paged {
+                k: PageTable::new(pool, b * d, blocks_per_page),
+                v: PageTable::new(pool, b * d, blocks_per_page),
+                sk: None,
+                sv: None,
+                pool: pool.clone(),
+            },
+            len: 0,
+            r: Mat::zeros(nb_cap, nb_cap),
+            balanced: 0,
+            sorted_rows: 0,
+            cut_rows: 0,
+        }
+    }
+
+    /// Share this state's caches with a new one (DESIGN.md §Pages). Paged
+    /// states fork by refcount — no float moves until one side writes and
+    /// copy-on-write splits the touched page. Monolithic states deep-copy
+    /// (they are the semantics oracle: fork-then-diverge must behave
+    /// exactly like two independent copies, `tests/pages_props.rs`).
+    pub fn fork(&self) -> Self {
+        DecodeState {
+            b: self.b,
+            d: self.d,
+            nb_cap: self.nb_cap,
+            n_iters: self.n_iters,
+            n_cut: self.n_cut,
+            store: match &self.store {
+                Store::Mono { k, v, sk, sv } => Store::Mono {
+                    k: k.clone(),
+                    v: v.clone(),
+                    sk: sk.clone(),
+                    sv: sv.clone(),
+                },
+                Store::Paged { k, v, sk, sv, pool } => Store::Paged {
+                    k: k.fork(),
+                    v: v.fork(),
+                    sk: sk.clone(),
+                    sv: sv.clone(),
+                    pool: pool.clone(),
+                },
+            },
+            len: self.len,
+            r: self.r.clone(),
+            balanced: self.balanced,
+            sorted_rows: self.sorted_rows,
+            cut_rows: self.cut_rows,
         }
     }
 
@@ -149,11 +271,55 @@ impl DecodeState {
         self.b
     }
 
-    /// f32 elements this state allocates — the measured side of
-    /// [`super::memory::decode_state_bytes`], asserted equal in
-    /// `tests/decode_props.rs`.
+    pub fn is_paged(&self) -> bool {
+        matches!(self.store, Store::Paged { .. })
+    }
+
+    /// Pages this state currently references (0 for monolithic states;
+    /// shared pages count once per state — the pool's `pages_in_use`
+    /// counts them once globally).
+    pub fn resident_pages(&self) -> usize {
+        match &self.store {
+            Store::Mono { .. } => 0,
+            Store::Paged { k, v, sk, sv, .. } => {
+                k.resident_pages()
+                    + v.resident_pages()
+                    + usize::from(sk.is_some())
+                    + usize::from(sv.is_some())
+            }
+        }
+    }
+
+    /// The live rows of the gathered sorted K/V cache — what the sorted
+    /// streaming segment reads this step. Exposed for the append-only and
+    /// differential tests.
+    pub fn sorted_cache(&self) -> (&[f32], &[f32]) {
+        let n = self.sorted_rows * self.d;
+        match &self.store {
+            Store::Mono { sk, sv, .. } => (&sk[..n], &sv[..n]),
+            Store::Paged { sk, sv, .. } => match (sk, sv) {
+                (Some(a), Some(b)) => (&a.as_slice()[..n], &b.as_slice()[..n]),
+                _ => (&[], &[]),
+            },
+        }
+    }
+
+    /// f32 elements this state holds — the measured side of
+    /// [`super::memory::decode_state_bytes`] (monolithic: worst-case
+    /// buffers) and of the paged resident model (pages actually
+    /// referenced), asserted in `tests/decode_props.rs` /
+    /// `tests/pages_props.rs`.
     pub fn f32_elems(&self) -> usize {
-        self.k.len() + self.v.len() + self.r.data.len() + self.sk.len() + self.sv.len()
+        let cached = match &self.store {
+            Store::Mono { k, v, sk, sv } => k.len() + v.len() + sk.len() + sv.len(),
+            Store::Paged { k, v, sk, sv, .. } => {
+                k.resident_elems()
+                    + v.resident_elems()
+                    + sk.as_ref().map_or(0, Page::elems)
+                    + sv.as_ref().map_or(0, Page::elems)
+            }
+        };
+        cached + self.r.data.len()
     }
 
     /// Append one token and compute its attention output. This is the
@@ -199,8 +365,20 @@ impl DecodeState {
         assert_eq!(out.len(), d, "out row must have d elements");
         let t = self.len;
         let i = t / b; // the token's block
-        self.k[t * d..(t + 1) * d].copy_from_slice(k_row);
-        self.v[t * d..(t + 1) * d].copy_from_slice(v_row);
+        match &mut self.store {
+            Store::Mono { k, v, .. } => {
+                k[t * d..(t + 1) * d].copy_from_slice(k_row);
+                v[t * d..(t + 1) * d].copy_from_slice(v_row);
+            }
+            Store::Paged { k, v, .. } => {
+                // first touch of a block allocates its page; a write into
+                // a page still shared with a forked sibling splits it
+                // (copy-on-write) — this is the one divergence point
+                let o = (t - i * b) * d;
+                k.block_mut(i)[o..o + d].copy_from_slice(k_row);
+                v.block_mut(i)[o..o + d].copy_from_slice(v_row);
+            }
+        }
         self.len += 1;
 
         // Rebalance-on-boundary rule: the first token of block i makes m =
@@ -210,7 +388,9 @@ impl DecodeState {
         // complete (cut_rows == c) no balanced row is ever read again —
         // prefix-stability froze them — so boundaries stop rebalancing
         // entirely and the per-step cost truly stops growing with the
-        // prefix.
+        // prefix. For paged states the frozen cut is also the zero-copy
+        // fast path: its pages are never written again, so forked sessions
+        // share them forever.
         let m = i + 1;
         let cache_live = match self.n_cut {
             None => true,
@@ -235,32 +415,73 @@ impl DecodeState {
             // strict rows never weight the in-progress block, so gathering
             // over the first m blocks only ever reads complete ones (the
             // tail of block i is still zero-initialized and unused)
-            let blocks = BlockedView::from_slice(&self.k[..m * b * d], m, b, d);
-            let vblocks = BlockedView::from_slice(&self.v[..m * b * d], m, b, d);
-            match self.n_cut {
-                None => {
-                    // full causal: cache block i's own sorted row
-                    let w = &self.r.row(i)[..m];
-                    if w.iter().sum::<f32>() > SUPPORT_EPS {
-                        gather_block_into(w, &blocks, &mut self.sk[..b * d]);
-                        gather_block_into(w, &vblocks, &mut self.sv[..b * d]);
-                        self.sorted_rows = b;
-                    } else {
-                        self.sorted_rows = 0; // block 0: no sorted term
+            let cut_elems = self.n_cut.unwrap_or(1) * b * d;
+            match &mut self.store {
+                Store::Mono { k, v, sk, sv } => {
+                    let blocks = BlockedView::from_slice(&k[..m * b * d], m, b, d);
+                    let vblocks = BlockedView::from_slice(&v[..m * b * d], m, b, d);
+                    match self.n_cut {
+                        None => {
+                            // full causal: cache block i's own sorted row
+                            let w = &self.r.row(i)[..m];
+                            if w.iter().sum::<f32>() > SUPPORT_EPS {
+                                gather_block_into(w, &blocks, &mut sk[..b * d]);
+                                gather_block_into(w, &vblocks, &mut sv[..b * d]);
+                                self.sorted_rows = b;
+                            } else {
+                                self.sorted_rows = 0; // block 0: no sorted term
+                            }
+                        }
+                        Some(c) => {
+                            // SortCut: append the newly live cut rows (rows
+                            // already cached are prefix-stable — module docs)
+                            for j in self.cut_rows..c.min(m) {
+                                let w = &self.r.row(j)[..m];
+                                if w.iter().sum::<f32>() > SUPPORT_EPS {
+                                    let o = self.sorted_rows * d;
+                                    gather_block_into(w, &blocks, &mut sk[o..o + b * d]);
+                                    gather_block_into(w, &vblocks, &mut sv[o..o + b * d]);
+                                    self.sorted_rows += b;
+                                }
+                                self.cut_rows = j + 1;
+                            }
+                        }
                     }
                 }
-                Some(c) => {
-                    // SortCut: append the newly live cut rows (rows already
-                    // cached are prefix-stable — module docs)
-                    for j in self.cut_rows..c.min(m) {
-                        let w = &self.r.row(j)[..m];
-                        if w.iter().sum::<f32>() > SUPPORT_EPS {
-                            let o = self.sorted_rows * d;
-                            gather_block_into(w, &blocks, &mut self.sk[o..o + b * d]);
-                            gather_block_into(w, &vblocks, &mut self.sv[o..o + b * d]);
-                            self.sorted_rows += b;
+                Store::Paged { k, v, sk, sv, pool } => {
+                    // the same gather over page-resident whole blocks
+                    // (gather_pages_into shares gather_block_into's fold,
+                    // so the bytes written are identical). The cut pages
+                    // are allocated at the first rebalance — not at first
+                    // support — so a session's resident page count is a
+                    // pure function of its length (memory.rs).
+                    let kb: Vec<&[f32]> = (0..m).map(|j| k.block(j)).collect();
+                    let vb: Vec<&[f32]> = (0..m).map(|j| v.block(j)).collect();
+                    let skp = sk.get_or_insert_with(|| pool.alloc(cut_elems));
+                    let svp = sv.get_or_insert_with(|| pool.alloc(cut_elems));
+                    match self.n_cut {
+                        None => {
+                            let w = &self.r.row(i)[..m];
+                            if w.iter().sum::<f32>() > SUPPORT_EPS {
+                                gather_pages_into(w, &kb, &mut skp.make_mut()[..b * d]);
+                                gather_pages_into(w, &vb, &mut svp.make_mut()[..b * d]);
+                                self.sorted_rows = b;
+                            } else {
+                                self.sorted_rows = 0; // block 0: no sorted term
+                            }
                         }
-                        self.cut_rows = j + 1;
+                        Some(c) => {
+                            for j in self.cut_rows..c.min(m) {
+                                let w = &self.r.row(j)[..m];
+                                if w.iter().sum::<f32>() > SUPPORT_EPS {
+                                    let o = self.sorted_rows * d;
+                                    gather_pages_into(w, &kb, &mut skp.make_mut()[o..o + b * d]);
+                                    gather_pages_into(w, &vb, &mut svp.make_mut()[o..o + b * d]);
+                                    self.sorted_rows += b;
+                                }
+                                self.cut_rows = j + 1;
+                            }
+                        }
                     }
                 }
             }
@@ -269,21 +490,35 @@ impl DecodeState {
         // Streamed joint softmax for the single-row query: sorted segment
         // (if any), then the local causal window — rows i*b..=t of the K/V
         // cache. The causal bound is the segment length itself, so no mask
-        // flag is needed.
+        // flag is needed. Both stores expose the same contiguous slices
+        // (pages hold whole blocks and the local window never crosses
+        // one), so the streamed op order is identical.
         let scale = 1.0 / (d as f32).sqrt();
         out.fill(0.0);
         stream.reset(1);
         let qv = MatView::contiguous(q_row, 1, d);
         let mut y = MatViewMut::contiguous(out, 1, d);
         if self.sorted_rows > 0 {
-            let ks = MatView::contiguous(&self.sk[..self.sorted_rows * d], self.sorted_rows, d);
-            let vs = MatView::contiguous(&self.sv[..self.sorted_rows * d], self.sorted_rows, d);
+            let n = self.sorted_rows * d;
+            let (sks, svs) = match &self.store {
+                Store::Mono { sk, sv, .. } => (&sk[..n], &sv[..n]),
+                Store::Paged { sk, sv, .. } => (
+                    &sk.as_ref().expect("sorted rows imply a cut page").as_slice()[..n],
+                    &sv.as_ref().expect("sorted rows imply a cut page").as_slice()[..n],
+                ),
+            };
+            let ks = MatView::contiguous(sks, self.sorted_rows, d);
+            let vs = MatView::contiguous(svs, self.sorted_rows, d);
             stream_segment_one(&qv, &ks, &vs, scale, stream, &mut y);
         }
         let lo = i * b;
         let nl = t - lo + 1;
-        let lk = MatView::contiguous(&self.k[lo * d..(t + 1) * d], nl, d);
-        let lv = MatView::contiguous(&self.v[lo * d..(t + 1) * d], nl, d);
+        let (lks, lvs) = match &self.store {
+            Store::Mono { k, v, .. } => (&k[lo * d..(t + 1) * d], &v[lo * d..(t + 1) * d]),
+            Store::Paged { k, v, .. } => (&k.block(i)[..nl * d], &v.block(i)[..nl * d]),
+        };
+        let lk = MatView::contiguous(lks, nl, d);
+        let lv = MatView::contiguous(lvs, nl, d);
         stream_segment_one(&qv, &lk, &lv, scale, stream, &mut y);
         normalize_rows(&mut y, &stream.l);
     }
@@ -320,8 +555,8 @@ pub struct LayerDecodeState {
 }
 
 impl LayerDecodeState {
-    /// Fresh per-layer state: `n_heads` head caches of block shape
-    /// `(b, d_head)` with `nb_cap` blocks of capacity each.
+    /// Fresh per-layer monolithic state: `n_heads` head caches of block
+    /// shape `(b, d_head)` with `nb_cap` blocks of capacity each.
     pub fn new(
         n_heads: usize,
         b: usize,
@@ -339,8 +574,43 @@ impl LayerDecodeState {
         }
     }
 
+    /// Fresh per-layer paged state over `pool` (DESIGN.md §Pages).
+    pub fn new_paged(
+        n_heads: usize,
+        b: usize,
+        d_head: usize,
+        nb_cap: usize,
+        n_iters: usize,
+        n_cut: Option<usize>,
+        pool: &PagePool,
+        blocks_per_page: usize,
+    ) -> Self {
+        assert!(n_heads > 0, "n_heads must be positive");
+        LayerDecodeState {
+            heads: (0..n_heads)
+                .map(|_| DecodeState::new_paged(b, d_head, nb_cap, n_iters, n_cut, pool, blocks_per_page))
+                .collect(),
+            sort_logits: Mat::zeros(nb_cap, nb_cap),
+        }
+    }
+
+    /// Share every head's caches with a new layer state (refcount bumps
+    /// for paged heads, deep copies for monolithic ones — see
+    /// [`DecodeState::fork`]).
+    pub fn fork(&self) -> Self {
+        LayerDecodeState {
+            heads: self.heads.iter().map(DecodeState::fork).collect(),
+            sort_logits: self.sort_logits.clone(),
+        }
+    }
+
     pub fn n_heads(&self) -> usize {
         self.heads.len()
+    }
+
+    /// Pages referenced across all heads (0 for monolithic layers).
+    pub fn resident_pages(&self) -> usize {
+        self.heads.iter().map(DecodeState::resident_pages).sum()
     }
 
     /// Split the layer state into its per-head decode states and the
@@ -365,7 +635,7 @@ impl LayerDecodeState {
         self.heads[0].capacity()
     }
 
-    /// f32 elements this layer state allocates — the measured side of
+    /// f32 elements this layer state holds — the measured side of
     /// [`super::memory::stack_decode_state_bytes`] (per layer), asserted
     /// in `tests/model_props.rs`.
     pub fn f32_elems(&self) -> usize {
@@ -421,8 +691,9 @@ impl Default for DecodeScratch {
 #[cfg(test)]
 mod tests {
     // The heavy property suites (incremental == oracle across shapes,
-    // boundaries and cuts; thread bit-invariance; memory accounting) live
-    // in tests/decode_props.rs — only edge cases are covered here.
+    // boundaries and cuts; thread bit-invariance; memory accounting; the
+    // paged differential battery) live in tests/decode_props.rs and
+    // tests/pages_props.rs — only edge cases are covered here.
     use super::*;
     use crate::sinkhorn::attention::causal_decode_attention;
     use crate::util::rng::Rng;
@@ -488,12 +759,76 @@ mod tests {
             st.step_into(q.row(t), k.row(t), v.row(t), &logits, &mut scratch, &mut out);
             if st.sorted_rows == 2 * b {
                 // the full cut is live: its contents must never change again
+                let sk = st.sorted_cache().0;
                 match &snapshot {
-                    None => snapshot = Some(st.sk[..2 * b * d].to_vec()),
-                    Some(s) => assert_eq!(&st.sk[..2 * b * d], &s[..], "cut cache moved at t={t}"),
+                    None => snapshot = Some(sk.to_vec()),
+                    Some(s) => assert_eq!(sk, &s[..], "cut cache moved at t={t}"),
                 }
             }
         }
         assert!(snapshot.is_some(), "cut never filled");
+    }
+
+    #[test]
+    fn paged_steps_match_mono_bitwise() {
+        // the full differential battery lives in tests/pages_props.rs;
+        // this is the smallest witness that both stores step identically
+        let (b, d, nb) = (2usize, 4usize, 3usize);
+        let mut rng = Rng::new(0xDEC2);
+        let ell = nb * b;
+        let q = rand_rows(&mut rng, ell, d);
+        let k = rand_rows(&mut rng, ell, d);
+        let v = rand_rows(&mut rng, ell, d);
+        let logits = rand_rows(&mut rng, nb, nb);
+        let pool = PagePool::new();
+        for cut in [None, Some(2)] {
+            let mut mono = DecodeState::new(b, d, nb, 4, cut);
+            let mut paged = DecodeState::new_paged(b, d, nb, 4, cut, &pool, 1);
+            let mut scratch = DecodeScratch::new();
+            let (mut om, mut op) = (vec![0.0f32; d], vec![0.0f32; d]);
+            for t in 0..ell {
+                mono.step_into(q.row(t), k.row(t), v.row(t), &logits, &mut scratch, &mut om);
+                paged.step_into(q.row(t), k.row(t), v.row(t), &logits, &mut scratch, &mut op);
+                assert_eq!(om, op, "cut={cut:?} t={t}");
+                assert_eq!(mono.sorted_cache(), paged.sorted_cache(), "cut={cut:?} t={t}");
+            }
+            // resident follows actual length: 2 tables * nb pages + 2 cut pages
+            assert_eq!(paged.resident_pages(), 2 * nb + 2);
+        }
+    }
+
+    #[test]
+    fn forked_paged_state_shares_then_diverges() {
+        let (b, d, nb) = (2usize, 3usize, 4usize);
+        let mut rng = Rng::new(0xDEC3);
+        let ell = nb * b;
+        let q = rand_rows(&mut rng, ell, d);
+        let k = rand_rows(&mut rng, ell, d);
+        let v = rand_rows(&mut rng, ell, d);
+        let logits = rand_rows(&mut rng, nb, nb);
+        let pool = PagePool::new();
+        let mut base = DecodeState::new_paged(b, d, nb, 4, None, &pool, 1);
+        let mut scratch = DecodeScratch::new();
+        let mut out = vec![0.0f32; d];
+        for t in 0..b {
+            base.step_into(q.row(t), k.row(t), v.row(t), &logits, &mut scratch, &mut out);
+        }
+        let before = pool.stats().pages_in_use;
+        let mut forked = base.fork();
+        assert_eq!(pool.stats().pages_in_use, before, "fork must not allocate");
+        // oracle: a deep-copied twin stepped identically
+        let mut twin = DecodeState::new(b, d, nb, 4, None);
+        for t in 0..b {
+            twin.step_into(q.row(t), k.row(t), v.row(t), &logits, &mut scratch, &mut out);
+        }
+        let (mut of, mut ot) = (vec![0.0f32; d], vec![0.0f32; d]);
+        for t in b..ell {
+            forked.step_into(q.row(t), k.row(t), v.row(t), &logits, &mut scratch, &mut of);
+            twin.step_into(q.row(t), k.row(t), v.row(t), &logits, &mut scratch, &mut ot);
+            assert_eq!(of, ot, "t={t}");
+        }
+        // base never stepped past the fork point: still at length b
+        assert_eq!(base.len(), b);
+        assert_eq!(forked.len(), ell);
     }
 }

@@ -106,6 +106,24 @@ impl<'a> BlockedView<'a> {
 pub fn gather_block_into(weights: &[f32], src: &BlockedView, out: &mut [f32]) {
     debug_assert_eq!(weights.len(), src.nb);
     debug_assert_eq!(out.len(), src.b * src.d);
+    gather_indexed(weights, |j| src.block_slice(j), out);
+}
+
+/// The same fused gather over page-resident blocks (`sinkhorn::pages`,
+/// DESIGN.md §Pages): `blocks[j]` is block `j`'s contiguous storage,
+/// wherever its page lives. Delegating to the one shared fold
+/// ([`gather_indexed`]) is what makes the paged decode path *bitwise*
+/// identical to the monolithic one — same skip rule, same pairing, same
+/// accumulation order (`tests/pages_props.rs`).
+pub fn gather_pages_into(weights: &[f32], blocks: &[&[f32]], out: &mut [f32]) {
+    debug_assert_eq!(weights.len(), blocks.len());
+    gather_indexed(weights, |j| blocks[j], out);
+}
+
+/// The one gather fold both entries share: zero weights are skipped and
+/// two source blocks are folded per pass over the output tile, with a
+/// trailing single-block pass when the live count is odd.
+fn gather_indexed<'a>(weights: &[f32], block: impl Fn(usize) -> &'a [f32], out: &mut [f32]) {
     out.fill(0.0);
     let mut pending: Option<usize> = None;
     for (j, &w) in weights.iter().enumerate() {
@@ -115,7 +133,7 @@ pub fn gather_block_into(weights: &[f32], src: &BlockedView, out: &mut [f32]) {
         match pending.take() {
             None => pending = Some(j),
             Some(p) => {
-                let (wp, xp, xj) = (weights[p], src.block_slice(p), src.block_slice(j));
+                let (wp, xp, xj) = (weights[p], block(p), block(j));
                 for ((o, a), b) in out.iter_mut().zip(xp).zip(xj) {
                     *o += wp * a + w * b;
                 }
@@ -124,7 +142,7 @@ pub fn gather_block_into(weights: &[f32], src: &BlockedView, out: &mut [f32]) {
     }
     if let Some(p) = pending {
         let wp = weights[p];
-        for (o, x) in out.iter_mut().zip(src.block_slice(p)) {
+        for (o, x) in out.iter_mut().zip(block(p)) {
             *o += wp * x;
         }
     }
@@ -669,6 +687,26 @@ mod tests {
 
     fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
         Mat::from_fn(rows, cols, |_, _| rng.normal() as f32 * 0.5)
+    }
+
+    #[test]
+    fn paged_gather_is_bitwise_equal_to_blocked_gather() {
+        // gather_pages_into is the paged decode path's view of the same
+        // fold — any drift here breaks the pages differential battery
+        let mut rng = Rng::new(0x6A7);
+        let (nb, b, d) = (5usize, 3usize, 4usize);
+        let data = rand_mat(&mut rng, nb * b, d);
+        let src = BlockedView::from_slice(&data.data, nb, b, d);
+        // weights with exact zeros so the skip rule is exercised
+        let mut w: Vec<f32> = (0..nb).map(|_| rng.normal() as f32).collect();
+        w[1] = 0.0;
+        w[3] = 0.0;
+        let mut a = vec![f32::NAN; b * d];
+        let mut p = vec![f32::NAN; b * d];
+        gather_block_into(&w, &src, &mut a);
+        let blocks: Vec<&[f32]> = (0..nb).map(|j| src.block_slice(j)).collect();
+        gather_pages_into(&w, &blocks, &mut p);
+        assert_eq!(a, p, "the two gather entries must agree bit for bit");
     }
 
     #[test]

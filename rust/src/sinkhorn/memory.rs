@@ -197,6 +197,104 @@ pub fn stack_decode_state_bytes(
             + n_heads * d_head * 4)
 }
 
+/// Bytes of one K/V page (DESIGN.md §Pages): `blocks_per_page` complete
+/// `(b, d_head)` blocks of one head's K or V.
+pub fn kv_page_bytes(b: usize, d_head: usize, blocks_per_page: usize) -> usize {
+    blocks_per_page * b * d_head * 4
+}
+
+/// Bytes of one sorted-gather cut page: the full gathered cache for one
+/// head's K or V side — one block in full-causal mode, `n_cut` blocks
+/// under SortCut (mirrors the monolithic cache shape exactly).
+pub fn cut_page_bytes(b: usize, d_head: usize, n_cut: Option<usize>) -> usize {
+    n_cut.unwrap_or(1) * b * d_head * 4
+}
+
+/// K/V pages resident per table at sequence length `len`: pages appear on
+/// the first write into a block, so this is `ceil(started_blocks /
+/// blocks_per_page)` — the O(len) half of the paged-vs-monolithic claim.
+pub fn kv_pages_at(len: usize, b: usize, blocks_per_page: usize) -> usize {
+    let started_blocks = len.div_ceil(b);
+    started_blocks.div_ceil(blocks_per_page)
+}
+
+/// Resident bytes of one *paged* `decode::DecodeState` at sequence length
+/// `len` (DESIGN.md §Pages): the always-owned `(nb_cap, nb_cap)` balance
+/// matrix plus the lazily-paged K/V tables and — from the first step's
+/// rebalance on — the two sorted-gather cut pages. The monolithic
+/// [`decode_state_bytes`] is the `len = capacity` ceiling of this model;
+/// the measured `DecodeState::f32_elems` of an unshared paged state is
+/// asserted equal in `tests/pages_props.rs`.
+pub fn decode_state_resident_bytes(
+    b: usize,
+    d: usize,
+    nb_cap: usize,
+    n_cut: Option<usize>,
+    blocks_per_page: usize,
+    len: usize,
+) -> usize {
+    nb_cap * nb_cap * 4
+        + 2 * kv_pages_at(len, b, blocks_per_page) * kv_page_bytes(b, d, blocks_per_page)
+        + if len > 0 { 2 * cut_page_bytes(b, d, n_cut) } else { 0 }
+}
+
+/// Resident bytes of a depth-L *paged* `model::StackDecodeState` at
+/// sequence length `len`: per layer, one paged decode state per head plus
+/// the owned sort-logit matrix and block descriptor (exactly the
+/// monolithic [`stack_decode_state_bytes`] layout with the per-head term
+/// swapped for [`decode_state_resident_bytes`]).
+pub fn stack_paged_resident_bytes(
+    depth: usize,
+    n_heads: usize,
+    b: usize,
+    d_head: usize,
+    nb_cap: usize,
+    n_cut: Option<usize>,
+    blocks_per_page: usize,
+    len: usize,
+) -> usize {
+    depth
+        * (n_heads * decode_state_resident_bytes(b, d_head, nb_cap, n_cut, blocks_per_page, len)
+            + nb_cap * nb_cap * 4
+            + n_heads * d_head * 4)
+}
+
+/// Peak *new* bytes a paged session will pin if it runs to `target_len`
+/// tokens, given that its first `shared_len` tokens fork an existing
+/// session's pages (DESIGN.md §Pages, §Scheduler). Only *full* shared K/V
+/// pages are discounted — they are append-complete, so no copy-on-write
+/// can ever split them; partially-filled pages and the sorted-gather cut
+/// pages may still diverge, so the estimate conservatively charges them
+/// to the new session. This is the scheduler's reservation unit: admit
+/// while `sum(reservations) + peak <= budget`.
+pub fn paged_session_peak_bytes(
+    depth: usize,
+    n_heads: usize,
+    b: usize,
+    d_head: usize,
+    nb_cap: usize,
+    n_cut: Option<usize>,
+    blocks_per_page: usize,
+    target_len: usize,
+    shared_len: usize,
+) -> usize {
+    let full = stack_paged_resident_bytes(
+        depth,
+        n_heads,
+        b,
+        d_head,
+        nb_cap,
+        n_cut,
+        blocks_per_page,
+        target_len,
+    );
+    let shared_blocks = shared_len.min(target_len) / b;
+    let shared_pages = shared_blocks / blocks_per_page;
+    let shared =
+        depth * n_heads * 2 * shared_pages * kv_page_bytes(b, d_head, blocks_per_page);
+    full.saturating_sub(shared)
+}
+
 /// Admission math of the continuous-batching decode scheduler (DESIGN.md
 /// §Scheduler): how many concurrent sessions a decode-state byte budget
 /// admits, given the per-session cost [`stack_decode_state_bytes`] and
@@ -204,7 +302,9 @@ pub fn stack_decode_state_bytes(
 /// (slots are bounded by `slot_cap` alone); the result is never zero — a
 /// server that can admit nothing serves nothing, so one slot is always
 /// granted and the operator's budget is treated as a floor of one
-/// session.
+/// session. The paged scheduler path supersedes this with per-session
+/// reservations ([`paged_session_peak_bytes`]); this worst-case clamp
+/// remains the monolithic fallback.
 pub fn admitted_sessions(budget_bytes: usize, session_bytes: usize, slot_cap: usize) -> usize {
     let by_mem = if budget_bytes == 0 {
         slot_cap
@@ -321,6 +421,50 @@ mod tests {
         assert_eq!(admitted_sessions(per - 1, per, 8), 1);
         // degenerate per-session cost cannot divide by zero
         assert_eq!(admitted_sessions(1024, 0, 8), 8);
+    }
+
+    #[test]
+    fn paged_resident_follows_length_not_capacity() {
+        let (b, d, nb) = (8usize, 16usize, 32usize);
+        // empty session: only the balance matrix is resident
+        assert_eq!(decode_state_resident_bytes(b, d, nb, None, 1, 0), nb * nb * 4);
+        // one token: one K + one V page + both cut pages
+        let one = decode_state_resident_bytes(b, d, nb, None, 1, 1);
+        assert_eq!(one, (nb * nb + 2 * b * d + 2 * b * d) * 4);
+        // a full session converges on the monolithic worst case
+        let full = decode_state_resident_bytes(b, d, nb, None, 1, nb * b);
+        assert_eq!(full, decode_state_bytes(b, d, nb, None));
+        // short sessions resident O(len): an 1/8-full session pins ~1/8
+        // the KV bytes of the monolithic allocation
+        let short = decode_state_resident_bytes(b, d, nb, None, 1, nb * b / 8);
+        assert!(short * 4 < full, "short={short} full={full}");
+        // page granularity rounds up, never down
+        for len in 1..=3 * b {
+            assert_eq!(kv_pages_at(len, b, 2), len.div_ceil(b).div_ceil(2));
+        }
+    }
+
+    #[test]
+    fn prefix_sharing_discounts_only_full_pages() {
+        let (depth, heads, b, dh, nb) = (2usize, 2usize, 8usize, 8usize, 16usize);
+        let target = nb * b;
+        let unshared = paged_session_peak_bytes(depth, heads, b, dh, nb, None, 1, target, 0);
+        assert_eq!(
+            unshared,
+            stack_paged_resident_bytes(depth, heads, b, dh, nb, None, 1, target)
+        );
+        // sharing 4 full blocks discounts 4 K + 4 V pages per head per layer
+        let shared = paged_session_peak_bytes(depth, heads, b, dh, nb, None, 1, target, 4 * b);
+        assert_eq!(unshared - shared, depth * heads * 2 * 4 * kv_page_bytes(b, dh, 1));
+        // a sub-block prefix shares no complete page: no discount
+        assert_eq!(
+            paged_session_peak_bytes(depth, heads, b, dh, nb, None, 1, target, b - 1),
+            unshared
+        );
+        // with 4 blocks per page, a 4-block prefix is one full page
+        let bpp = paged_session_peak_bytes(depth, heads, b, dh, nb, None, 4, target, 4 * b);
+        let bpp_unshared = paged_session_peak_bytes(depth, heads, b, dh, nb, None, 4, target, 0);
+        assert_eq!(bpp_unshared - bpp, depth * heads * 2 * kv_page_bytes(b, dh, 4));
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub mod engine;
 pub mod matrix;
 pub mod memory;
 pub mod model;
+pub mod pages;
 pub mod pool;
 
 pub use attention::{
@@ -34,4 +35,5 @@ pub use model::{
     SinkhornStack, StackBatchScratch, StackConfig, StackDecodeScratch, StackDecodeState,
     StackScratch, StackStepReq, TransformerLayer,
 };
+pub use pages::{Page, PagePool, PageTable, PoolStats};
 pub use pool::WorkerPool;

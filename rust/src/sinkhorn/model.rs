@@ -51,6 +51,7 @@ use super::matrix::{
     matmul_acc_ordered_into, row_times, row_times_acc_into, row_times_into, Mat, MatView,
     MatViewMut,
 };
+use super::pages::PagePool;
 use super::pool::WorkerPool;
 use crate::util::rng::Rng;
 
@@ -489,6 +490,33 @@ impl SinkhornStack {
         }
     }
 
+    /// Fresh *paged* per-sequence decode state (DESIGN.md §Pages): same
+    /// shape and step semantics as [`Self::decode_state`], but every
+    /// head's caches are lazily allocated views over `pool`, and
+    /// [`StackDecodeState::fork`] shares them by refcount — the substrate
+    /// for prompt-prefix sharing in `server::fallback::open_session`.
+    pub fn decode_state_paged(&self, pool: &PagePool, blocks_per_page: usize) -> StackDecodeState {
+        let cfg = &self.cfg;
+        StackDecodeState {
+            layers: (0..cfg.depth)
+                .map(|_| {
+                    LayerDecodeState::new_paged(
+                        cfg.n_heads,
+                        cfg.block_rows(),
+                        cfg.d_head(),
+                        cfg.nb,
+                        cfg.sinkhorn_iters,
+                        cfg.n_cut,
+                        pool,
+                        blocks_per_page,
+                    )
+                })
+                .collect(),
+            desc: (0..cfg.depth).map(|_| vec![0.0; cfg.d_model]).collect(),
+            len: 0,
+        }
+    }
+
     /// Per-step decode scratch (hold one per worker / sequence driver).
     pub fn new_decode_scratch(&self) -> StackDecodeScratch {
         StackDecodeScratch::new(&self.cfg)
@@ -786,6 +814,26 @@ impl StackDecodeState {
 
     pub fn depth(&self) -> usize {
         self.layers.len()
+    }
+
+    /// Share the whole stack's decode caches with a new state
+    /// (DESIGN.md §Pages): paged layers fork by page refcount — opening a
+    /// session on a cached prompt prefix costs no float copies — while
+    /// monolithic layers deep-copy (the sharing-semantics oracle). The
+    /// fork is an independent session from here on; continued decoding
+    /// diverges the two through copy-on-write.
+    pub fn fork(&self) -> Self {
+        StackDecodeState {
+            layers: self.layers.iter().map(LayerDecodeState::fork).collect(),
+            desc: self.desc.clone(),
+            len: self.len,
+        }
+    }
+
+    /// Pages referenced across all layers and heads (0 for monolithic
+    /// states; shared pages count once per state).
+    pub fn resident_pages(&self) -> usize {
+        self.layers.iter().map(LayerDecodeState::resident_pages).sum()
     }
 
     /// f32 elements across all layers — the measured side of

@@ -1,0 +1,391 @@
+//! Paged decode-cache arena with refcounted copy-on-write sharing
+//! (DESIGN.md §Pages).
+//!
+//! The monolithic decode path allocates every session's K/V and sorted
+//! caches at worst-case capacity (`nb_cap * b * d` per head per side), so
+//! serving memory scales with `sessions * max_len` even when most
+//! sequences are short. This module is the substrate that turns those
+//! owned buffers into *views over a shared arena*:
+//!
+//! * **[`PagePool`]** — a process-wide arena of fixed-size f32 pages. A
+//!   page is `blocks_per_page` Sinkhorn blocks of one head's K or V (the
+//!   engine is already block-aligned, so the page is the natural quantum:
+//!   the local causal window and the gather both stay inside whole
+//!   blocks). Freed pages return to a size-keyed free list and are
+//!   recycled, zeroed, on the next allocation.
+//! * **[`Page`]** — a refcounted handle (`Arc` under the hood). `Clone`
+//!   is the sharing primitive: forking a session's state bumps refcounts
+//!   instead of copying floats. [`Page::make_mut`] is the write
+//!   primitive: unique pages are written in place, shared pages are
+//!   copied first (copy-on-write) so a write can never mutate data
+//!   another session still reads — `tests/pages_props.rs` pins this.
+//! * **[`PageTable`]** — a session's ordered view of its blocks. Pages
+//!   are allocated lazily on first write, so a session at length ℓ
+//!   holds `ceil(ceil(ℓ/b) / blocks_per_page)` pages per cached tensor:
+//!   resident bytes follow the *actual* length, not the capacity.
+//! * **Accounting** — every allocation and free updates the pool's
+//!   counters under one mutex; [`PagePool::stats`] exposes
+//!   `pages_in_use`/bytes so `memory.rs` and the scheduler admit by what
+//!   is actually resident. Dropping the last handle to a page returns
+//!   its buffer to the free list exactly once (the `Drop` impl runs once
+//!   by `Arc` semantics; `tests/pages_props.rs` churns sessions to pin
+//!   the ledger).
+//!
+//! Sharing soundness leans on the decode path's append-only discipline
+//! (DESIGN.md §Decode): K/V blocks are written once, left-to-right, and
+//! the frozen SortCut cut cache never changes after it completes — so
+//! two sessions opened on a common prompt prefix can share every full
+//! page of that prefix and only ever diverge through `make_mut` copies
+//! of the pages they write next.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, Weak};
+
+/// Book-keeping behind the pool mutex: the size-keyed free list plus the
+/// in-use/free ledgers the stats report.
+#[derive(Default)]
+struct PoolInner {
+    /// recycled buffers keyed by element count — allocation only ever
+    /// reuses an exact-size buffer, so mixed page sizes (K/V pages vs
+    /// SortCut cut pages) never alias
+    free: BTreeMap<usize, Vec<Box<[f32]>>>,
+    pages_in_use: usize,
+    elems_in_use: usize,
+    elems_free: usize,
+    /// fresh buffers ever created (free-list reuse does not count)
+    created: usize,
+    /// buffers ever returned to the free list (each page exactly once)
+    freed: usize,
+}
+
+struct PoolShared {
+    inner: Mutex<PoolInner>,
+}
+
+/// Shared arena of fixed-size f32 pages. Cheap to clone (`Arc` handle);
+/// every [`DecodeState`](super::decode::DecodeState) of a paged model
+/// holds one so allocation, copy-on-write and free all settle against the
+/// same ledger.
+#[derive(Clone)]
+pub struct PagePool {
+    shared: Arc<PoolShared>,
+}
+
+/// Snapshot of the pool ledger — the measured side of the §4 paged memory
+/// model (`memory.rs` analytic counts are asserted equal in
+/// `tests/pages_props.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// pages currently referenced by at least one live handle
+    pub pages_in_use: usize,
+    /// f32 elements across the in-use pages
+    pub elems_in_use: usize,
+    /// recycled buffers waiting on the free list
+    pub free_pages: usize,
+    /// f32 elements across the free list
+    pub elems_free: usize,
+    /// fresh buffers ever created
+    pub created: usize,
+    /// buffers ever returned to the free list
+    pub freed: usize,
+}
+
+impl PoolStats {
+    /// Resident bytes actually pinned by live sessions (free-list buffers
+    /// are recyclable, not pinned).
+    pub fn bytes_in_use(&self) -> usize {
+        self.elems_in_use * std::mem::size_of::<f32>()
+    }
+}
+
+impl PagePool {
+    pub fn new() -> Self {
+        PagePool { shared: Arc::new(PoolShared { inner: Mutex::new(PoolInner::default()) }) }
+    }
+
+    /// Allocate one zeroed page of `elems` f32s, reusing an exact-size
+    /// free-list buffer when one exists.
+    pub fn alloc(&self, elems: usize) -> Page {
+        assert!(elems > 0, "page must hold at least one element");
+        let mut inner = self.shared.inner.lock().unwrap();
+        let data = match inner.free.get_mut(&elems).and_then(Vec::pop) {
+            Some(mut buf) => {
+                inner.elems_free -= elems;
+                buf.fill(0.0);
+                buf
+            }
+            None => {
+                inner.created += 1;
+                vec![0.0f32; elems].into_boxed_slice()
+            }
+        };
+        inner.pages_in_use += 1;
+        inner.elems_in_use += elems;
+        drop(inner);
+        Page { buf: Arc::new(PageBuf { data, pool: Arc::downgrade(&self.shared) }) }
+    }
+
+    /// Current ledger snapshot.
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.shared.inner.lock().unwrap();
+        PoolStats {
+            pages_in_use: inner.pages_in_use,
+            elems_in_use: inner.elems_in_use,
+            free_pages: inner.free.values().map(Vec::len).sum(),
+            elems_free: inner.elems_free,
+            created: inner.created,
+            freed: inner.freed,
+        }
+    }
+
+    /// Do two handles settle against the same ledger?
+    pub fn same_pool(&self, other: &PagePool) -> bool {
+        Arc::ptr_eq(&self.shared, &other.shared)
+    }
+}
+
+impl Default for PagePool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The refcounted page payload. `Drop` runs exactly once (when the last
+/// [`Page`] handle goes away) and returns the buffer to its pool's free
+/// list — unless the pool itself is already gone, in which case the
+/// buffer just deallocates.
+struct PageBuf {
+    data: Box<[f32]>,
+    pool: Weak<PoolShared>,
+}
+
+impl Drop for PageBuf {
+    fn drop(&mut self) {
+        if let Some(shared) = self.pool.upgrade() {
+            let data = std::mem::take(&mut self.data);
+            let elems = data.len();
+            let mut inner = shared.inner.lock().unwrap();
+            inner.pages_in_use -= 1;
+            inner.elems_in_use -= elems;
+            inner.elems_free += elems;
+            inner.freed += 1;
+            inner.free.entry(elems).or_default().push(data);
+        }
+    }
+}
+
+/// One refcounted page. `Clone` shares (refcount bump, no copy);
+/// [`Page::make_mut`] writes (in place when unique, copy-on-write when
+/// shared).
+#[derive(Clone)]
+pub struct Page {
+    buf: Arc<PageBuf>,
+}
+
+impl Page {
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf.data
+    }
+
+    pub fn elems(&self) -> usize {
+        self.buf.data.len()
+    }
+
+    /// Live handles to this page (1 = unshared).
+    pub fn ref_count(&self) -> usize {
+        Arc::strong_count(&self.buf)
+    }
+
+    /// Stable identity of the underlying buffer — lets tests assert that
+    /// a COW actually moved a handle to fresh storage (or that a
+    /// frozen-prefix page never moved).
+    pub fn buf_ptr(&self) -> *const f32 {
+        self.buf.data.as_ptr()
+    }
+
+    /// Mutable access with copy-on-write: if any other handle shares the
+    /// buffer, this handle is first repointed at a fresh pool page holding
+    /// a copy, so the shared original is never mutated.
+    pub fn make_mut(&mut self) -> &mut [f32] {
+        if Arc::get_mut(&mut self.buf).is_none() {
+            let pool = PagePool {
+                shared: self.buf.pool.upgrade().expect("page outlived its pool"),
+            };
+            let mut fresh = pool.alloc(self.buf.data.len());
+            Arc::get_mut(&mut fresh.buf)
+                .expect("freshly allocated page is unique")
+                .data
+                .copy_from_slice(&self.buf.data);
+            *self = fresh;
+        }
+        &mut Arc::get_mut(&mut self.buf).expect("page is unique after COW").data
+    }
+}
+
+/// A session's ordered view of its blocks for one cached tensor (one
+/// head's K or V): block `i` lives at offset `(i % blocks_per_page) *
+/// block_elems` of page `i / blocks_per_page`. Pages appear lazily as
+/// blocks are first written; [`PageTable::fork`] shares every existing
+/// page by refcount.
+pub struct PageTable {
+    pages: Vec<Page>,
+    block_elems: usize,
+    blocks_per_page: usize,
+    pool: PagePool,
+}
+
+impl PageTable {
+    pub fn new(pool: &PagePool, block_elems: usize, blocks_per_page: usize) -> Self {
+        assert!(block_elems > 0, "block_elems must be positive");
+        assert!(blocks_per_page > 0, "blocks_per_page must be positive");
+        PageTable {
+            pages: Vec::new(),
+            block_elems,
+            blocks_per_page,
+            pool: pool.clone(),
+        }
+    }
+
+    pub fn block_elems(&self) -> usize {
+        self.block_elems
+    }
+
+    pub fn blocks_per_page(&self) -> usize {
+        self.blocks_per_page
+    }
+
+    /// Elements per page.
+    pub fn page_elems(&self) -> usize {
+        self.block_elems * self.blocks_per_page
+    }
+
+    /// Read block `i` (its page must already exist — decode only ever
+    /// reads blocks at or before the block it last wrote).
+    pub fn block(&self, i: usize) -> &[f32] {
+        let page = &self.pages[i / self.blocks_per_page];
+        let off = (i % self.blocks_per_page) * self.block_elems;
+        &page.as_slice()[off..off + self.block_elems]
+    }
+
+    /// Write block `i`, allocating its page on first touch and
+    /// copy-on-writing it when shared with a forked session.
+    pub fn block_mut(&mut self, i: usize) -> &mut [f32] {
+        let p = i / self.blocks_per_page;
+        while self.pages.len() <= p {
+            self.pages.push(self.pool.alloc(self.page_elems()));
+        }
+        let off = (i % self.blocks_per_page) * self.block_elems;
+        &mut self.pages[p].make_mut()[off..off + self.block_elems]
+    }
+
+    /// Share every resident page with a new table (refcount bumps only —
+    /// no floats move until one side writes).
+    pub fn fork(&self) -> Self {
+        PageTable {
+            pages: self.pages.clone(),
+            block_elems: self.block_elems,
+            blocks_per_page: self.blocks_per_page,
+            pool: self.pool.clone(),
+        }
+    }
+
+    /// Pages this table currently references (shared pages count once per
+    /// table — the pool's `pages_in_use` counts them once globally).
+    pub fn resident_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// f32 elements reachable through this table.
+    pub fn resident_elems(&self) -> usize {
+        self.pages.len() * self.page_elems()
+    }
+
+    /// The page handles themselves — `tests/pages_props.rs` inspects
+    /// refcounts and buffer identities through this.
+    pub fn pages(&self) -> &[Page] {
+        &self.pages
+    }
+
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The randomized-churn property suites live in tests/pages_props.rs;
+    // these are the edge cases.
+    use super::*;
+
+    #[test]
+    fn alloc_free_recycles_exact_sizes() {
+        let pool = PagePool::new();
+        let a = pool.alloc(8);
+        let ptr = a.buf_ptr();
+        drop(a);
+        let s = pool.stats();
+        assert_eq!((s.pages_in_use, s.free_pages, s.created, s.freed), (0, 1, 1, 1));
+        // different size: must not reuse the freed 8-elem buffer
+        let b = pool.alloc(4);
+        assert_eq!(pool.stats().created, 2);
+        drop(b);
+        // same size: reused, zeroed
+        let c = pool.alloc(8);
+        assert_eq!(c.buf_ptr(), ptr, "exact-size free buffer must be recycled");
+        assert!(c.as_slice().iter().all(|&x| x == 0.0));
+        assert_eq!(pool.stats().created, 2, "recycling must not create");
+    }
+
+    #[test]
+    fn cow_never_mutates_a_shared_page() {
+        let pool = PagePool::new();
+        let mut a = pool.alloc(4);
+        a.make_mut().copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let b = a.clone();
+        assert_eq!(a.ref_count(), 2);
+        let shared_ptr = b.buf_ptr();
+        a.make_mut()[0] = 9.0;
+        assert_ne!(a.buf_ptr(), shared_ptr, "write to a shared page must COW");
+        assert_eq!(b.as_slice(), &[1.0, 2.0, 3.0, 4.0], "sharer must see the original");
+        assert_eq!(a.as_slice(), &[9.0, 2.0, 3.0, 4.0]);
+        assert_eq!(pool.stats().pages_in_use, 2);
+    }
+
+    #[test]
+    fn unique_pages_write_in_place() {
+        let pool = PagePool::new();
+        let mut a = pool.alloc(4);
+        let ptr = a.buf_ptr();
+        a.make_mut()[1] = 7.0;
+        assert_eq!(a.buf_ptr(), ptr, "unique page must not move on write");
+        assert_eq!(pool.stats().created, 1);
+    }
+
+    #[test]
+    fn table_allocates_lazily_and_forks_by_refcount() {
+        let pool = PagePool::new();
+        let mut t = PageTable::new(&pool, 6, 2); // 2 blocks per page
+        assert_eq!(t.resident_pages(), 0);
+        t.block_mut(0)[0] = 1.0;
+        assert_eq!(t.resident_pages(), 1, "block 0 and 1 share page 0");
+        t.block_mut(1)[0] = 2.0;
+        assert_eq!(t.resident_pages(), 1);
+        t.block_mut(2)[0] = 3.0;
+        assert_eq!(t.resident_pages(), 2);
+        assert_eq!(pool.stats().pages_in_use, 2);
+
+        let mut f = t.fork();
+        assert_eq!(pool.stats().pages_in_use, 2, "fork must not allocate");
+        assert_eq!(t.pages()[0].ref_count(), 2);
+        // write through the fork: COWs its copy, original unmoved
+        let orig = t.pages()[1].buf_ptr();
+        f.block_mut(2)[1] = 9.0;
+        assert_eq!(t.pages()[1].buf_ptr(), orig);
+        assert_eq!(t.block(2)[1], 0.0);
+        assert_eq!(f.block(2)[1], 9.0);
+        assert_eq!(pool.stats().pages_in_use, 3);
+        drop(f);
+        assert_eq!(pool.stats().pages_in_use, 2);
+        assert_eq!(pool.stats().free_pages, 1);
+    }
+}

@@ -416,6 +416,124 @@ fn scheduler_interleavings_match_single_request_generate() {
     }
 }
 
+/// Reservation-based admission (DESIGN.md §Pages): a byte budget that
+/// worst-case slot budgeting divides into ONE monolithic session admits
+/// a cohort of short paged sessions *concurrently* — observable as a
+/// retiring tick shared by more than one session — while the same budget
+/// on a monolithic model serializes them. Outputs stay bit-equal to
+/// single-request generate either way.
+#[test]
+fn paged_reservations_admit_where_worst_case_budgeting_serializes() {
+    use sinkhorn::server::{BatchPolicy, FallbackConfig, FallbackModel, Server};
+    let base = FallbackConfig { seq_len: 32, d_model: 16, nb: 4, vocab: 64, ..Default::default() };
+    let model = FallbackModel::new(base.clone()).unwrap();
+    // budget: > one short paged session x2, < two worst-case sessions
+    let budget = model.session_state_bytes() + model.session_state_bytes() / 3;
+    let policy = BatchPolicy {
+        mem_budget: budget,
+        // wide intake window: both requests land in one gather, so the
+        // concurrency observation below does not race the first tick
+        max_wait: std::time::Duration::from_millis(50),
+        ..Default::default()
+    };
+    let reqs: Vec<(Vec<i32>, usize)> = vec![(vec![3, 5], 12), (vec![7, 9], 12)];
+    let run = |cfg: FallbackConfig| -> Vec<(Vec<i32>, usize)> {
+        let server = Server::start_fallback(cfg, policy).unwrap();
+        let handles: Vec<_> = reqs
+            .iter()
+            .map(|(p, n)| server.handle.generate_streaming(p.clone(), *n).unwrap())
+            .collect();
+        let out = handles
+            .into_iter()
+            .map(|(_toks, resp)| {
+                let r = resp.recv().unwrap().unwrap();
+                (r.gen.unwrap(), r.batch_size)
+            })
+            .collect();
+        server.shutdown().unwrap();
+        out
+    };
+    let paged = run(base.clone());
+    let mono = run(FallbackConfig { paged: false, ..base.clone() });
+    for ((p, n), ((got_p, _), (got_m, _))) in reqs.iter().zip(paged.iter().zip(&mono)) {
+        let want = model.generate(p, *n);
+        assert_eq!(got_p, &want, "paged reservation path diverged from generate");
+        assert_eq!(got_m, &want, "monolithic path diverged from generate");
+    }
+    assert!(
+        paged.iter().any(|(_, bs)| *bs >= 2),
+        "paged reservations must run the cohort concurrently (batch sizes {:?})",
+        paged.iter().map(|(_, bs)| *bs).collect::<Vec<_>>()
+    );
+    assert!(
+        mono.iter().all(|(_, bs)| *bs == 1),
+        "worst-case budgeting should serialize this cohort (batch sizes {:?})",
+        mono.iter().map(|(_, bs)| *bs).collect::<Vec<_>>()
+    );
+}
+
+/// The floor-1 progress guarantee survives the paged admission path: a
+/// 1-byte budget (no session ever "fits") still serves a whole cohort,
+/// one session at a time, each bit-equal to single-request generate.
+#[test]
+fn paged_one_byte_budget_floor_still_serves_a_cohort() {
+    use sinkhorn::server::{BatchPolicy, FallbackConfig, FallbackModel, Server};
+    let cfg = FallbackConfig { seq_len: 32, d_model: 16, nb: 4, vocab: 64, ..Default::default() };
+    let model = FallbackModel::new(cfg.clone()).unwrap();
+    let policy = BatchPolicy {
+        mem_budget: 1,
+        max_wait: std::time::Duration::from_millis(1),
+        ..Default::default()
+    };
+    let server = Server::start_fallback(cfg, policy).unwrap();
+    let mut joins = Vec::new();
+    for t in 0..4i32 {
+        let h = server.handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let prompt: Vec<i32> = (0..(2 + t % 3)).map(|i| i * 5 + t).collect();
+            let max_new = 2 + (t as usize % 3);
+            (prompt.clone(), max_new, h.generate(prompt, max_new).unwrap().gen.unwrap())
+        }));
+    }
+    for j in joins {
+        let (prompt, max_new, got) = j.join().unwrap();
+        assert_eq!(got, model.generate(&prompt, max_new), "floor-1 session diverged");
+    }
+    server.shutdown().unwrap();
+}
+
+/// Page-pressure-aware retirement: a budget with room for ~2 reserved
+/// sessions takes a 6-deep wave; the wait queue must drain as retiring
+/// sessions hand their reservations back mid-wave — every request
+/// completes and matches single-request generate, none ever sees the
+/// busy error (the queue is deep enough to hold the overflow).
+#[test]
+fn wait_queue_drains_as_retiring_sessions_free_pages() {
+    use sinkhorn::server::{BatchPolicy, FallbackConfig, FallbackModel, Server};
+    let cfg = FallbackConfig { seq_len: 32, d_model: 16, nb: 4, vocab: 64, ..Default::default() };
+    let model = FallbackModel::new(cfg.clone()).unwrap();
+    // two short paged sessions fit; the other four must wait for pages
+    let budget = 2 * model.session_admission_bytes(&[1, 2, 3], 6);
+    let policy = BatchPolicy {
+        mem_budget: budget,
+        queue_depth: 16,
+        max_wait: std::time::Duration::from_millis(1),
+        ..Default::default()
+    };
+    let server = Server::start_fallback(cfg, policy).unwrap();
+    let reqs: Vec<(Vec<i32>, usize)> =
+        (0..6).map(|t| ((0..3).map(|i| i * 7 + t).collect(), 4 + (t as usize % 3))).collect();
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|(p, n)| server.handle.generate_streaming(p.clone(), *n).unwrap())
+        .collect();
+    for ((p, n), (_toks, resp)) in reqs.iter().zip(handles) {
+        let r = resp.recv().unwrap().expect("queued request must drain, not go busy");
+        assert_eq!(r.gen.unwrap(), model.generate(p, *n), "drained session diverged");
+    }
+    server.shutdown().unwrap();
+}
+
 #[test]
 fn decode_state_never_allocates_scores() {
     // the state is the KV cache + constant-size sorted cache: growing the

@@ -1,0 +1,351 @@
+//! Property and differential tests for the paged KV-cache (DESIGN.md
+//! §Pages) — run with no artifacts and no XLA, in every build. Two suites:
+//!
+//! **Pool invariants under randomized churn** — alloc/clone/drop/COW
+//! sequences over [`PagePool`], [`Page`] and [`PageTable`] must keep the
+//! pool's ledger exactly equal to an independently computed ground truth
+//! (unique live buffers counted once), never underflow a refcount, return
+//! every freed buffer to the free list exactly once
+//! (`pages_in_use + free_pages == created`, always), never mutate a
+//! buffer that another handle can still read, and keep an unshared paged
+//! [`DecodeState`]'s real allocation equal to the analytic
+//! `memory::decode_state_resident_bytes` at every length.
+//!
+//! **Differential battery** — a paged [`DecodeState`] stepped next to a
+//! monolithic twin on identical inputs must be *bitwise* identical per
+//! step: across block-boundary fills and mid-block tails, every SortCut
+//! width, engine thread counts {1, 3}, and — at the stack level —
+//! randomized shared-prefix session cohorts, where prefix-shared sessions
+//! must emit token-for-token what unshared sessions emit while pinning
+//! strictly fewer pool pages.
+
+use sinkhorn::server::{FallbackConfig, FallbackModel, GenSession};
+use sinkhorn::sinkhorn::memory::{decode_state_resident_bytes, kv_pages_at};
+use sinkhorn::sinkhorn::{DecodeReq, DecodeState, Mat, PagePool, PageTable, SinkhornEngine};
+use sinkhorn::util::rng::Rng;
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.normal() as f32 * 0.5)
+}
+
+/// Ground truth for the pool ledger: count each live buffer once, however
+/// many pages or tables share it.
+fn unique_live_elems(tables: &[PageTable]) -> (usize, usize) {
+    let mut seen: Vec<*const f32> = Vec::new();
+    let mut elems = 0usize;
+    for t in tables {
+        for p in t.pages() {
+            if !seen.contains(&p.buf_ptr()) {
+                seen.push(p.buf_ptr());
+                elems += p.elems();
+            }
+        }
+    }
+    (seen.len(), elems)
+}
+
+/// Randomized table churn: create, fill, fork, COW-write, and drop
+/// tables, checking the pool ledger against the deduplicated ground
+/// truth after every operation, and the conservation law
+/// `pages_in_use + free_pages == created` throughout.
+#[test]
+fn pool_ledger_survives_randomized_table_churn() {
+    let mut rng = Rng::new(0x9A6E5);
+    let pool = PagePool::new();
+    let block_elems = 12usize;
+    let mut tables: Vec<PageTable> = Vec::new();
+    for step in 0..400 {
+        match rng.next_u64() % 5 {
+            // new table, randomly paged
+            0 => tables.push(PageTable::new(&pool, block_elems, 1 + (rng.next_u64() % 3) as usize)),
+            // write the next block of a random table (lazy alloc)
+            1 if !tables.is_empty() => {
+                let i = (rng.next_u64() as usize) % tables.len();
+                let b = tables[i].resident_pages() * tables[i].page_elems() / block_elems;
+                let blk = tables[i].block_mut(b.min(30));
+                blk[0] = step as f32;
+            }
+            // fork a random table: refcounts bump, ledger unchanged
+            2 if !tables.is_empty() => {
+                let i = (rng.next_u64() as usize) % tables.len();
+                let before = pool.stats();
+                let f = tables[i].fork();
+                assert_eq!(pool.stats(), before, "fork must not touch the ledger");
+                tables.push(f);
+            }
+            // COW-write block 0 of a random table; any sibling sharing it
+            // must keep its bytes
+            3 if !tables.is_empty() => {
+                let i = (rng.next_u64() as usize) % tables.len();
+                if tables[i].resident_pages() > 0 {
+                    let witness: Vec<(usize, Vec<f32>)> = (0..tables.len())
+                        .filter(|&j| j != i)
+                        .filter(|&j| tables[j].resident_pages() > 0)
+                        .map(|j| (j, tables[j].block(0).to_vec()))
+                        .collect();
+                    tables[i].block_mut(0)[1] = -(step as f32);
+                    for (j, w) in witness {
+                        assert_eq!(
+                            tables[j].block(0),
+                            &w[..],
+                            "COW write through table {i} mutated table {j}"
+                        );
+                    }
+                }
+            }
+            // drop a random table: uniquely-held pages return to the free
+            // list; shared ones survive in their siblings
+            _ if !tables.is_empty() => {
+                let i = (rng.next_u64() as usize) % tables.len();
+                tables.swap_remove(i);
+            }
+            _ => {}
+        }
+        let (want_pages, want_elems) = unique_live_elems(&tables);
+        let s = pool.stats();
+        assert_eq!(s.pages_in_use, want_pages, "ledger drifted at step {step}");
+        assert_eq!(s.elems_in_use, want_elems, "byte ledger drifted at step {step}");
+        assert_eq!(
+            s.pages_in_use + s.free_pages,
+            s.created,
+            "a page leaked or double-freed at step {step}"
+        );
+        assert!(s.freed >= s.free_pages, "free list grew without Drop at step {step}");
+        for t in &tables {
+            for p in t.pages() {
+                assert!(p.ref_count() >= 1, "live page with underflowed refcount");
+            }
+        }
+    }
+    drop(tables);
+    let s = pool.stats();
+    assert_eq!(s.pages_in_use, 0, "all pages must return after the last drop");
+    assert_eq!(s.free_pages, s.created, "every created page ends on the free list once");
+}
+
+/// An unshared paged `DecodeState`'s real allocation equals the analytic
+/// resident model at every length — pages appear with `len`, not with
+/// capacity (the O(len) vs O(max_len) claim, per step).
+#[test]
+fn paged_state_allocation_tracks_length_not_capacity() {
+    let mut rng = Rng::new(0x9A6E6);
+    for (nb, b, d, cut, bpp) in
+        [(4usize, 6usize, 8usize, None, 1usize), (3, 4, 5, Some(2), 2), (5, 3, 7, Some(5), 3)]
+    {
+        let ell = nb * b;
+        let (q, k, v) = (rand_mat(&mut rng, ell, d), rand_mat(&mut rng, ell, d), rand_mat(&mut rng, ell, d));
+        let logits = rand_mat(&mut rng, nb, nb);
+        let pool = PagePool::new();
+        let mut st = DecodeState::new_paged(b, d, nb, 5, cut, &pool, bpp);
+        let eng = SinkhornEngine::serial();
+        assert_eq!(st.f32_elems() * 4, decode_state_resident_bytes(b, d, nb, cut, bpp, 0));
+        for t in 0..ell {
+            let mut row = vec![0.0f32; d];
+            eng.decode_step_into(vec![DecodeReq {
+                state: &mut st,
+                q: q.row(t),
+                k: k.row(t),
+                v: v.row(t),
+                sort_logits: &logits,
+                out: &mut row,
+            }]);
+            let len = t + 1;
+            assert_eq!(
+                st.f32_elems() * 4,
+                decode_state_resident_bytes(b, d, nb, cut, bpp, len),
+                "allocation drifted from the resident model at len {len} \
+                 (nb={nb} b={b} cut={cut:?} bpp={bpp})"
+            );
+            assert_eq!(st.resident_pages(), 2 * kv_pages_at(len, b, bpp) + 2);
+        }
+    }
+}
+
+/// The core differential: a paged state and a monolithic twin stepped on
+/// identical inputs are bitwise identical per step — outputs and sorted
+/// caches — across mid-block and block-aligned fills, every SortCut
+/// width, page sizes {1, 2} blocks, and engine thread counts {1, 3}.
+#[test]
+fn paged_decode_is_bitwise_identical_to_monolithic_per_step() {
+    let mut rng = Rng::new(0x9A6E7);
+    let (nb, b, d) = (4usize, 5usize, 6usize);
+    let ell = nb * b;
+    let (q, k, v) = (rand_mat(&mut rng, ell, d), rand_mat(&mut rng, ell, d), rand_mat(&mut rng, ell, d));
+    let logits = rand_mat(&mut rng, nb, nb);
+    let cuts: Vec<Option<usize>> =
+        std::iter::once(None).chain((1..=nb).map(Some)).collect();
+    for total in [ell, ell - b / 2, b + 1] {
+        for &cut in &cuts {
+            for bpp in [1usize, 2] {
+                let mut per_thread: Vec<Vec<Vec<f32>>> = Vec::new();
+                for threads in [1usize, 3] {
+                    let eng = SinkhornEngine::new(threads);
+                    let pool = PagePool::new();
+                    let mut mono = DecodeState::new(b, d, nb, 5, cut);
+                    let mut paged = DecodeState::new_paged(b, d, nb, 5, cut, &pool, bpp);
+                    let mut outs = Vec::new();
+                    for t in 0..total {
+                        let mut row_m = vec![f32::NAN; d];
+                        let mut row_p = vec![f32::NAN; d];
+                        // one batch, both storage modes, identical inputs
+                        let reqs = vec![
+                            DecodeReq {
+                                state: &mut mono,
+                                q: q.row(t),
+                                k: k.row(t),
+                                v: v.row(t),
+                                sort_logits: &logits,
+                                out: &mut row_m,
+                            },
+                            DecodeReq {
+                                state: &mut paged,
+                                q: q.row(t),
+                                k: k.row(t),
+                                v: v.row(t),
+                                sort_logits: &logits,
+                                out: &mut row_p,
+                            },
+                        ];
+                        eng.decode_step_into(reqs);
+                        assert_eq!(
+                            row_m, row_p,
+                            "paged output diverged at step {t} (total={total} cut={cut:?} \
+                             bpp={bpp} threads={threads})"
+                        );
+                        assert_eq!(
+                            mono.sorted_cache(),
+                            paged.sorted_cache(),
+                            "sorted-gather caches diverged at step {t} (cut={cut:?} bpp={bpp})"
+                        );
+                        outs.push(row_m);
+                    }
+                    per_thread.push(outs);
+                }
+                assert_eq!(
+                    per_thread[0], per_thread[1],
+                    "thread count changed the decode bytes (total={total} cut={cut:?} bpp={bpp})"
+                );
+            }
+        }
+    }
+}
+
+/// Forking after every block boundary keeps the fork bitwise equal to an
+/// independently stepped twin while sharing pages until writes diverge
+/// them — the COW contract at the decode-state level.
+#[test]
+fn forked_states_diverge_bitwise_cleanly_at_every_boundary() {
+    let mut rng = Rng::new(0x9A6E8);
+    let (nb, b, d) = (3usize, 4usize, 5usize);
+    let ell = nb * b;
+    let (q, k, v) = (rand_mat(&mut rng, ell, d), rand_mat(&mut rng, ell, d), rand_mat(&mut rng, ell, d));
+    let logits = rand_mat(&mut rng, nb, nb);
+    let eng = SinkhornEngine::serial();
+    let step = |st: &mut DecodeState, t: usize, out: &mut [f32]| {
+        eng.decode_step_into(vec![DecodeReq {
+            state: st,
+            q: q.row(t),
+            k: k.row(t),
+            v: v.row(t),
+            sort_logits: &logits,
+            out,
+        }]);
+    };
+    for fork_at in [b, 2 * b] {
+        let pool = PagePool::new();
+        let mut parent = DecodeState::new_paged(b, d, nb, 5, None, &pool, 1);
+        let mut fresh = DecodeState::new(b, d, nb, 5, None);
+        let mut row = vec![0.0f32; d];
+        let mut row_f = vec![0.0f32; d];
+        for t in 0..fork_at {
+            step(&mut parent, t, &mut row);
+            step(&mut fresh, t, &mut row_f);
+        }
+        let before = pool.stats().pages_in_use;
+        let mut child = parent.fork();
+        assert_eq!(pool.stats().pages_in_use, before, "fork must allocate nothing");
+        // parent and child continue on the same inputs: identical bytes,
+        // and both identical to the never-forked monolithic twin
+        for t in fork_at..ell {
+            let mut row_c = vec![0.0f32; d];
+            step(&mut parent, t, &mut row);
+            step(&mut child, t, &mut row_c);
+            step(&mut fresh, t, &mut row_f);
+            assert_eq!(row, row_c, "fork_at={fork_at} step {t}: child diverged from parent");
+            assert_eq!(row, row_f, "fork_at={fork_at} step {t}: paged diverged from mono");
+        }
+    }
+}
+
+fn cohort_cfg(prefix_share: bool, threads: usize) -> FallbackConfig {
+    FallbackConfig {
+        seq_len: 32,
+        d_model: 16,
+        nb: 4,
+        vocab: 64,
+        depth: 2,
+        n_heads: 2,
+        d_ff: 32,
+        threads,
+        prefix_share,
+        ..Default::default()
+    }
+}
+
+/// Step a cohort to completion; returns every session's generation and
+/// the pool pages pinned at completion (sessions still resident — the
+/// honest residency comparison point, since the no-share model defers
+/// all its allocation to the tick loop).
+fn run_cohort(m: &FallbackModel, reqs: &[(Vec<i32>, usize)]) -> (Vec<Vec<i32>>, usize) {
+    let mut sessions: Vec<GenSession> =
+        reqs.iter().map(|(p, n)| m.open_session(p, *n)).collect();
+    let mut scratch = m.new_batch_scratch();
+    loop {
+        let mut live: Vec<&mut GenSession> =
+            sessions.iter_mut().filter(|s| !s.done()).collect();
+        if live.is_empty() {
+            break;
+        }
+        m.step_sessions(&mut live, &mut scratch);
+    }
+    let pages = m.pool_stats().pages_in_use;
+    (sessions.into_iter().map(GenSession::into_generated).collect(), pages)
+}
+
+/// Randomized shared-prefix cohorts at the stack level: sessions opened
+/// on a common prompt must generate token-for-token what sessions opened
+/// without prefix sharing generate (both equal to single-request
+/// `generate`), while the sharing model pins strictly fewer pool pages —
+/// for engine thread counts {1, 3}.
+#[test]
+fn shared_prefix_cohorts_match_unshared_bitwise_with_fewer_pages() {
+    let mut rng = Rng::new(0x9A6E9);
+    for trial in 0..3 {
+        let plen = 10 + (rng.next_u64() % 10) as usize; // > one block of 8
+        let prompt: Vec<i32> = (0..plen).map(|_| (rng.next_u64() % 64) as i32).collect();
+        let reqs: Vec<(Vec<i32>, usize)> = (0..3 + (rng.next_u64() % 3) as usize)
+            .map(|_| (prompt.clone(), 2 + (rng.next_u64() % 4) as usize))
+            .collect();
+        for threads in [1usize, 3] {
+            let shared = FallbackModel::new(cohort_cfg(true, threads)).unwrap();
+            let unshared = FallbackModel::new(cohort_cfg(false, threads)).unwrap();
+            let want: Vec<Vec<i32>> =
+                reqs.iter().map(|(p, n)| shared.generate(p, *n)).collect();
+            let (got_shared, ps) = run_cohort(&shared, &reqs);
+            let (got_unshared, pu) = run_cohort(&unshared, &reqs);
+            assert_eq!(
+                got_shared, got_unshared,
+                "trial {trial} threads {threads}: prefix sharing changed a token"
+            );
+            assert_eq!(
+                got_shared, want,
+                "trial {trial} threads {threads}: cohort diverged from generate"
+            );
+            assert!(
+                ps < pu,
+                "trial {trial} threads {threads}: sharing cohort must pin strictly \
+                 fewer pages ({ps} vs {pu})"
+            );
+        }
+    }
+}

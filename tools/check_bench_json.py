@@ -75,6 +75,16 @@ CELL_SCHEMAS = {
         "p95_tok_ms": "num",
         "occupancy": "num",
     },
+    "pages": {
+        "mode": "str",
+        "sessions": "int",
+        "overlap_pct": "uint",
+        "prompt_len": "int",
+        "gen_len": "int",
+        "resident_bytes": "num",
+        "bytes_per_session": "num",
+        "admitted": "int",
+    },
 }
 
 

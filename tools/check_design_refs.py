@@ -36,6 +36,8 @@ REQUIRED_ANCHORS = {
     "Model",
     # scheduler PR: continuous-batching decode scheduler + admission
     "Scheduler",
+    # paged-KV PR: page-pool decode caches + COW prefix sharing
+    "Pages",
 }
 
 BENCH_JSON_RE = re.compile(r"BENCH_([A-Za-z0-9_]+)\.json")

@@ -8,6 +8,14 @@ assert every reply shape. This is the one gate that exercises the
 process boundary: CLI flag parsing, the TCP frontend, the continuous
 scheduler, and the streaming protocol together (DESIGN.md §Scheduler).
 
+A second phase re-spawns the server at capacity one (`--max-sessions 1
+--queue-depth 0`) and drives it *over* admission: while connection A
+streams a long generation, connection B's request must get the stable
+`busy=` line back on a connection that stays usable, and the same
+request retried after A retires must succeed — the admission overflow
+and slot-reuse paths of DESIGN.md §Scheduler observed from outside the
+process.
+
 Needs a Rust toolchain (it runs the built `sinkhorn serve` binary); the
 Makefile target skips loudly when `cargo` is absent, like fmt-check.
 
@@ -26,6 +34,7 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 CARGO = os.environ.get("CARGO", "cargo")
 ADDR_RE = re.compile(r"tcp frontend listening on 127\.0\.0\.1:(\d+)")
+BUSY_LINE = "busy=generation queue full"
 
 
 def fail(msg: str) -> None:
@@ -33,91 +42,164 @@ def fail(msg: str) -> None:
     sys.exit(1)
 
 
-def main() -> int:
+def spawn_server(extra_flags):
+    """Start `serve --fallback` on an ephemeral port; return (proc, port)."""
     cmd = [
         CARGO, "run", "--release", "--manifest-path", str(ROOT / "rust" / "Cargo.toml"),
         "--", "serve", "--fallback", "--port", "0", "--wait",
-        "--seq-len", "32", "--max-sessions", "4",
-    ]
+    ] + extra_flags
     print("+ " + " ".join(cmd))
     proc = subprocess.Popen(
         cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, cwd=ROOT
     )
-    port = None
     deadline = time.time() + 600  # first run may compile
+    while time.time() < deadline:
+        line = proc.stdout.readline()
+        if not line:
+            fail(f"server exited early (rc={proc.poll()})")
+        sys.stdout.write(f"[server] {line}")
+        m = ADDR_RE.search(line)
+        if m:
+            return proc, int(m.group(1))
+    fail("server never announced its TCP port")
+
+
+def stop_server(proc) -> None:
+    proc.terminate()
     try:
-        while time.time() < deadline:
-            line = proc.stdout.readline()
-            if not line:
-                fail(f"server exited early (rc={proc.poll()})")
-            sys.stdout.write(f"[server] {line}")
-            m = ADDR_RE.search(line)
-            if m:
-                port = int(m.group(1))
-                break
-        if port is None:
-            fail("server never announced its TCP port")
+        proc.wait(timeout=10)
+    except subprocess.TimeoutExpired:
+        proc.kill()
 
-        sock = socket.create_connection(("127.0.0.1", port), timeout=30)
-        f = sock.makefile("rw", encoding="utf-8", newline="\n")
 
-        def send(line: str) -> None:
-            f.write(line + "\n")
-            f.flush()
+class Conn:
+    """One line-protocol client connection with logged traffic."""
 
-        def recv() -> str:
-            reply = f.readline().rstrip("\n")
-            print(f"[client] {reply}")
-            return reply
+    def __init__(self, port: int, tag: str):
+        self.sock = socket.create_connection(("127.0.0.1", port), timeout=60)
+        self.f = self.sock.makefile("rw", encoding="utf-8", newline="\n")
+        self.tag = tag
+
+    def send(self, line: str) -> None:
+        self.f.write(line + "\n")
+        self.f.flush()
+
+    def recv(self) -> str:
+        reply = self.f.readline().rstrip("\n")
+        print(f"[{self.tag}] {reply}")
+        return reply
+
+    def drain_gen(self, seed=None):
+        """Read a streamed generation: `tok` lines then the summary line.
+        `seed` carries token ids already consumed off this stream (the
+        index check continues from them). Returns (ids, summary)."""
+        tok_ids = list(seed or [])
+        while True:
+            reply = self.recv()
+            if reply.startswith("tok "):
+                idx, tid = reply.split()[1:3]
+                if int(idx) != len(tok_ids):
+                    fail(f"{self.tag}: tok indices out of order: {reply!r}")
+                tok_ids.append(int(tid))
+            else:
+                return tok_ids, reply
+
+    def close(self) -> None:
+        self.sock.close()
+
+
+def check_gen_summary(tag: str, tok_ids, summary: str, want_n: int) -> None:
+    if not summary.startswith("tokens="):
+        fail(f"{tag}: gen summary reply: {summary!r}")
+    summary_ids = [int(t) for t in summary.split()[0][len("tokens="):].split(",") if t]
+    if len(tok_ids) != want_n or tok_ids != summary_ids:
+        fail(f"{tag}: streamed ids {tok_ids} != summary ids {summary_ids} (want {want_n})")
+
+
+def phase_protocol() -> None:
+    """Classify, streamed gen, model info, and the stable error replies."""
+    proc, port = spawn_server(["--seq-len", "32", "--max-sessions", "4"])
+    try:
+        c = Conn(port, "client")
 
         # classify: one stable label= line
-        send("4 8 15 16 23 42")
-        reply = recv()
+        c.send("4 8 15 16 23 42")
+        reply = c.recv()
         if not reply.startswith("label="):
             fail(f"classify reply: {reply!r}")
 
         # streamed generation: exactly 4 `tok <i> <id>` lines (indices in
         # order), then the `tokens=` summary whose ids match the stream
-        send("gen 4 1 2 3")
-        tok_ids = []
-        while True:
-            reply = recv()
-            if reply.startswith("tok "):
-                idx, tid = reply.split()[1:3]
-                if int(idx) != len(tok_ids):
-                    fail(f"tok indices out of order: {reply!r}")
-                tok_ids.append(int(tid))
-            else:
-                break
-        if not reply.startswith("tokens="):
-            fail(f"gen summary reply: {reply!r}")
-        summary_ids = [int(t) for t in reply.split()[0][len("tokens="):].split(",") if t]
-        if len(tok_ids) != 4 or tok_ids != summary_ids:
-            fail(f"streamed ids {tok_ids} != summary ids {summary_ids}")
+        c.send("gen 4 1 2 3")
+        tok_ids, reply = c.drain_gen()
+        check_gen_summary("client", tok_ids, reply, 4)
 
         # model info: the served configuration as one key=value line
-        send("model")
-        reply = recv()
+        c.send("model")
+        reply = c.recv()
         if "backend=fallback" not in reply or "seq_len=32" not in reply:
             fail(f"model reply: {reply!r}")
 
         # stable errors: unknown verb, zero-budget gen
-        send("frobnicate 1 2")
-        if recv() != "error=unknown verb 'frobnicate'":
+        c.send("frobnicate 1 2")
+        if c.recv() != "error=unknown verb 'frobnicate'":
             fail("unknown-verb reply drifted")
-        send("gen 0 1")
-        if recv() != "error=gen count must be positive":
+        c.send("gen 0 1")
+        if c.recv() != "error=gen count must be positive":
             fail("zero-count reply drifted")
 
-        sock.close()
-        print("serve-smoke: OK (classify, streamed gen, model, stable errors)")
-        return 0
+        c.close()
+        print("serve-smoke phase 1: OK (classify, streamed gen, model, stable errors)")
     finally:
-        proc.terminate()
-        try:
-            proc.wait(timeout=10)
-        except subprocess.TimeoutExpired:
-            proc.kill()
+        stop_server(proc)
+
+
+def phase_over_admission() -> None:
+    """Drive the server past its admission bound: a second generation
+    must get the stable busy= line while the single slot is held, and the
+    identical retry must succeed once the slot retires."""
+    # capacity one, no wait queue; the long seq_len gives conn A a
+    # generation that outlives the busy-probe round trip by a wide margin
+    proc, port = spawn_server(["--seq-len", "512", "--max-sessions", "1", "--queue-depth", "0"])
+    try:
+        a = Conn(port, "conn A")
+        b = Conn(port, "conn B")
+
+        # conn A takes the only slot; its first tok line proves it was
+        # admitted and is streaming
+        a.send("gen 400 1 2 3")
+        first = a.recv()
+        if not first.startswith("tok 0 "):
+            fail(f"over-admission: conn A first reply {first!r}, want 'tok 0 <id>'")
+
+        # conn B overflows `slots + queue_depth` and must get the stable
+        # busy line — and nothing else — without losing its connection
+        b.send("gen 4 9 8 7")
+        reply = b.recv()
+        if reply != BUSY_LINE:
+            fail(f"over-admission: want {BUSY_LINE!r}, got {reply!r}")
+
+        # drain A to its summary; retiring frees the slot
+        tok_ids, reply = a.drain_gen(seed=[int(first.split()[2])])
+        check_gen_summary("conn A", tok_ids, reply, 400)
+
+        # same request, same connection, after retirement: admitted
+        b.send("gen 4 9 8 7")
+        tok_ids, reply = b.drain_gen()
+        check_gen_summary("conn B", tok_ids, reply, 4)
+
+        a.close()
+        b.close()
+        print("serve-smoke phase 2: OK (busy= under over-admission, retry after retirement)")
+    finally:
+        stop_server(proc)
+
+
+def main() -> int:
+    phase_protocol()
+    phase_over_admission()
+    print("serve-smoke: OK")
+    return 0
 
 
 if __name__ == "__main__":
