@@ -5,16 +5,17 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test check-docs doc-refs fmt-check clippy ci bench bench-engine bench-decode bench-model bench-serve bench-pages bench-smoke serve-smoke serve-fallback artifacts all
+.PHONY: build test check-docs doc-refs fmt-check clippy ci bench bench-engine bench-decode bench-model bench-serve bench-pages bench-smoke serve-smoke chaos-smoke serve-fallback artifacts all
 
 all: build
 
 ## The full CI gate set (.github/workflows/ci.yml `rust` job): build,
 ## tests, format, lint, docs + reference checks, a smoke pass of the
 ## runtime-free bench targets (tiny shapes, correctness gates on, no
-## BENCH_*.json pollution), and the TCP serve smoke (scripted classify +
-## streamed gen against a live fallback server).
-ci: build test fmt-check clippy check-docs bench-smoke serve-smoke
+## BENCH_*.json pollution), the TCP serve smoke (scripted classify +
+## streamed gen against a live fallback server), and the chaos smoke
+## (mid-stream client kill + graceful drain, DESIGN.md §Faults).
+ci: build test fmt-check clippy check-docs bench-smoke serve-smoke chaos-smoke
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -100,6 +101,19 @@ serve-smoke:
 		CARGO=$(CARGO) python3 tools/serve_smoke.py; \
 	else \
 		echo "WARNING: serve-smoke SKIPPED — no '$(CARGO)' toolchain on PATH"; \
+	fi
+
+## Chaos smoke (wired into `make ci`): the fault-tolerance contract of
+## DESIGN.md §Faults driven from outside the process — a client killed
+## mid-stream must not disturb a concurrent session, the `shutdown` verb
+## must drain gracefully (ok=draining, stable refusal of new work, every
+## open stream resolved), and the --wait process must then exit 0 on its
+## own. Same toolchain guard as serve-smoke.
+chaos-smoke:
+	@if command -v $(CARGO) >/dev/null 2>&1; then \
+		CARGO=$(CARGO) python3 tools/serve_smoke.py --chaos; \
+	else \
+		echo "WARNING: chaos-smoke SKIPPED — no '$(CARGO)' toolchain on PATH"; \
 	fi
 
 ## Serve the pure-Rust fallback engine over TCP (no artifacts needed):

@@ -70,7 +70,8 @@ USAGE: sinkhorn <subcommand> [flags]
          [--ckpt F] [--requests N] [--max-batch B] [--max-wait-ms T]
          [--max-sessions S] [--queue-depth Q] [--mem-budget-mb M]
          [--page-bytes B] [--no-paged] [--no-prefix-share]
-         [--request-batch] [--port P] [--wait]
+         [--gen-deadline-ms D] [--stall-timeout-ms T] [--drain-ms T]
+         [--idle-timeout-ms T] [--request-batch] [--port P] [--wait]
          (--fallback serves the pure-Rust stack; no artifacts needed.
           The continuous-batching scheduler multiplexes generations
           token by token: --max-sessions caps concurrent decode slots,
@@ -81,9 +82,18 @@ USAGE: sinkhorn <subcommand> [flags]
           --no-prefix-share disables copy-on-write prompt-prefix reuse,
           --queue-depth bounds the admission queue (overflow -> busy=),
           --request-batch falls back to the legacy wave executor.
-          TCP verbs: '<ids...>' classifies, 'gen <n> <ids...>' streams
-          'tok <i> <id>' lines then the 'tokens=' summary, 'model'
-          describes — full line protocol in rust/README.md)
+          Failure policy (DESIGN.md §Faults): --gen-deadline-ms caps
+          each generation's wall clock (0 = none; per-request
+          'deadline=<ms>' overrides), --stall-timeout-ms retires
+          sessions whose client stopped reading, --drain-ms bounds
+          graceful shutdown, --idle-timeout-ms closes silent TCP
+          connections (0 = never).
+          TCP verbs: '<ids...>' classifies,
+          'gen <n> [deadline=<ms>] <ids...>' streams 'tok <i> <id>'
+          lines then the 'tokens=' summary, 'model' describes,
+          'shutdown' begins a graceful drain ('ok=draining'; with
+          --wait the process exits once drained) — full line protocol
+          in rust/README.md)
   inspect --exp NAME
 
   global: --artifacts DIR (default ./artifacts or $SINKHORN_ARTIFACTS)"
@@ -206,6 +216,13 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
         max_sessions: args.usize("max-sessions", 8)?,
         queue_depth: args.usize("queue-depth", 64)?,
         mem_budget: args.usize("mem-budget-mb", 0)?.saturating_mul(1 << 20),
+        // failure policy (DESIGN.md §Faults): 0 disables the deadline
+        gen_deadline: match args.u64("gen-deadline-ms", 0)? {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        },
+        stall_timeout: std::time::Duration::from_millis(args.u64("stall-timeout-ms", 30_000)?),
+        drain: std::time::Duration::from_millis(args.u64("drain-ms", 5_000)?),
     };
     let seed = args.u64("seed", 17)?;
     // --fallback forces the pure-Rust engine backend; otherwise Server
@@ -244,9 +261,17 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
     // optional TCP frontend (line protocol; see server::tcp)
     let tcp = match args.opt_str("port") {
         Some(p) => {
-            let fe = sinkhorn::server::TcpFrontend::start(
+            let tcp_cfg = sinkhorn::server::TcpConfig {
+                idle_timeout: match args.u64("idle-timeout-ms", 120_000)? {
+                    0 => None,
+                    ms => Some(std::time::Duration::from_millis(ms)),
+                },
+                ..Default::default()
+            };
+            let fe = sinkhorn::server::TcpFrontend::start_with(
                 &format!("127.0.0.1:{p}"),
                 server.handle.clone(),
+                tcp_cfg,
             )?;
             println!("tcp frontend listening on {}", fe.addr);
             Some(fe)
@@ -254,10 +279,14 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
         None => None,
     };
     if args.bool("wait") {
-        println!("serving until ctrl-c (no demo traffic)...");
-        loop {
-            std::thread::sleep(std::time::Duration::from_secs(3600));
+        // serve until the executor exits — a TCP `shutdown` verb begins
+        // the graceful drain that ends it (DESIGN.md §Faults)
+        println!("serving until shutdown...");
+        while !server.is_finished() {
+            std::thread::sleep(std::time::Duration::from_millis(100));
         }
+        drop(tcp);
+        return server.shutdown();
     }
     // demo traffic: the experiment's own dataset when artifacts exist,
     // seeded synthetic requests otherwise. Only the *artifact load* may

@@ -56,6 +56,21 @@ pub struct BatchPolicy {
     /// worst-case `memory::stack_decode_state_bytes` up front. `0` = no
     /// memory clamp, slots are capped by `max_sessions` alone.
     pub mem_budget: usize,
+    /// Continuous scheduler: default wall-clock deadline applied to every
+    /// generation from arrival (DESIGN.md §Faults). A request-level
+    /// `deadline=` option overrides it; overrunners retire with the
+    /// stable `deadline exceeded` error. `None` = no default deadline.
+    pub gen_deadline: Option<Duration>,
+    /// Continuous scheduler: how long a session's bounded outbox may stay
+    /// full (a client that stopped reading) before the session is retired
+    /// with the stable `slow client timeout` error. The tick loop never
+    /// blocks on a full outbox — the session just pauses (DESIGN.md
+    /// §Faults).
+    pub stall_timeout: Duration,
+    /// Graceful-drain window after shutdown begins: in-flight sessions
+    /// may finish for this long; survivors are then aborted with the
+    /// stable `server shutting down` error (DESIGN.md §Faults).
+    pub drain: Duration,
 }
 
 impl Default for BatchPolicy {
@@ -67,6 +82,9 @@ impl Default for BatchPolicy {
             max_sessions: 8,
             queue_depth: 64,
             mem_budget: 0,
+            gen_deadline: None,
+            stall_timeout: Duration::from_secs(30),
+            drain: Duration::from_secs(5),
         }
     }
 }

@@ -27,10 +27,11 @@
 //! (`super::tcp`, documented in `rust/README.md`), alongside the `model`
 //! info verb that reports this configuration.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::Result;
 
+use super::faults::{panic_msg, FaultPlan};
 use crate::sinkhorn::model::{StackConfig, TransformerLayer};
 use crate::sinkhorn::pages::PoolStats;
 use crate::sinkhorn::{Mat, PagePool, SinkhornEngine, SinkhornStack, StackDecodeState, WorkerPool};
@@ -170,6 +171,9 @@ pub struct FallbackModel {
     /// cached state (refcount bumps, no float copies) instead of
     /// re-decoding the prefix
     prefix_cache: Mutex<Vec<PrefixEntry>>,
+    /// deterministic fault schedule threaded through the pool and the
+    /// session step (DESIGN.md §Faults); the empty plan in production
+    faults: FaultPlan,
 }
 
 /// One cached prompt prefix: the tokens fed so far (always a multiple of
@@ -185,6 +189,15 @@ const PREFIX_CACHE_CAP: usize = 16;
 
 impl FallbackModel {
     pub fn new(cfg: FallbackConfig) -> Result<FallbackModel> {
+        Self::with_faults(cfg, FaultPlan::none())
+    }
+
+    /// Build the model with a fault-injection schedule (DESIGN.md
+    /// §Faults): the plan is wired into the page pool (allocation
+    /// failures) and consulted at every session step point. Production
+    /// callers use [`FallbackModel::new`] — the empty plan's injection
+    /// points are single relaxed atomic increments.
+    pub fn with_faults(cfg: FallbackConfig, faults: FaultPlan) -> Result<FallbackModel> {
         if cfg.seq_len % cfg.nb != 0 {
             anyhow::bail!("fallback: nb {} must divide seq_len {}", cfg.nb, cfg.seq_len);
         }
@@ -245,10 +258,20 @@ impl FallbackModel {
             pos,
             stack,
             w_cls,
-            pool: PagePool::new(),
+            pool: PagePool::with_faults(Arc::new(faults.clone())),
             prefix_cache: Mutex::new(Vec::new()),
+            faults,
             cfg,
         })
+    }
+
+    /// Lock the prefix cache, tolerating poison: the lock is held across
+    /// prefill steps that can panic under injected faults, but every
+    /// mutation under it is a push/remove of a *complete* entry — a
+    /// poisoned cache is still a valid cache, and abandoning it would
+    /// leak the pages its entries pin.
+    fn lock_prefix_cache(&self) -> MutexGuard<'_, Vec<PrefixEntry>> {
+        self.prefix_cache.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// One-line `key=value` description of the served model (the TCP
@@ -491,11 +514,13 @@ impl FallbackModel {
         } else {
             self.session_state_for(&prompt[..keep])
         };
+        let committed = st.len();
         GenSession {
             st,
             prompt: prompt[..keep].to_vec(),
             budget,
             shared,
+            committed,
             gen: Vec::with_capacity(budget),
             x: vec![0.0; d],
             h: vec![0.0; d],
@@ -535,7 +560,7 @@ impl FallbackModel {
         }
         // the lock covers match + prefill + insert so concurrent opens
         // never race duplicate entries; opens are rare next to ticks
-        let mut cache = self.prefix_cache.lock().unwrap();
+        let mut cache = self.lock_prefix_cache();
         let (mut st, shared) = match cache
             .iter()
             .filter(|e| e.tokens.len() <= target && kept.starts_with(&e.tokens))
@@ -583,6 +608,12 @@ impl FallbackModel {
     /// The page arena itself (tests and the pages bench inspect it).
     pub fn page_pool(&self) -> &PagePool {
         &self.pool
+    }
+
+    /// The model's fault-injection schedule (the empty plan in
+    /// production) — chaos tests inspect its event counters.
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
     }
 
     /// Scratch for [`Self::step_sessions`] (one per scheduler, reused
@@ -635,7 +666,7 @@ impl FallbackModel {
         if self.cfg.prefix_share {
             let target = self.shareable_len(keep);
             if target > 0 {
-                let cache = self.prefix_cache.lock().unwrap();
+                let cache = self.lock_prefix_cache();
                 shared = cache
                     .iter()
                     .filter(|e| {
@@ -703,20 +734,135 @@ impl FallbackModel {
             })
             .collect();
         self.stack.decode_step_batch(reqs, scratch);
-        sessions
-            .iter_mut()
-            .map(|s| {
-                let t = s.st.len() - 1; // the step just taken
-                if t + 1 >= s.prompt.len() {
-                    let id = self.lm_argmax(&s.h);
-                    s.gen.push(id);
-                    Some(id)
-                } else {
-                    None
-                }
+        sessions.iter_mut().map(|s| self.session_epilogue(s)).collect()
+    }
+
+    /// Commit a step the engine just took for `s` and sample the LM head
+    /// when the session is past its prompt — the shared tail of
+    /// [`Self::step_sessions`], [`Self::step_sessions_isolated`] and the
+    /// fault-recovery replay.
+    fn session_epilogue(&self, s: &mut GenSession) -> Option<i32> {
+        s.committed = s.st.len();
+        let t = s.st.len() - 1; // the step just taken
+        if t + 1 >= s.prompt.len() {
+            let id = self.lm_argmax(&s.h);
+            s.gen.push(id);
+            Some(id)
+        } else {
+            None
+        }
+    }
+
+    /// [`Self::step_sessions`] with panic containment (DESIGN.md §Faults):
+    /// the scheduler's tick when sessions must not take each other — or
+    /// the scheduler — down. Per session the emitted floats are identical
+    /// to the unisolated path; what changes is failure behavior:
+    ///
+    /// * **phase A** (fault point + embed) runs per session under
+    ///   `catch_unwind`. Nothing in it mutates decode state, so a panic
+    ///   fails that session alone and the rest of the tick proceeds.
+    /// * **phase B** (the fused [`SinkhornStack::decode_step_batch`]) runs
+    ///   once under `catch_unwind`. A panic mid-pass (an injected
+    ///   allocation failure, a worker panic resurfaced by the scoped
+    ///   pool) can leave any live session's paged K/V torn mid-write, so
+    ///   every live session is then recovered by [`Self::replay_and_step`]
+    ///   — deterministic replay from its last committed token. Transient
+    ///   faults (a single scheduled allocation ordinal, now consumed)
+    ///   recover **bitwise**; persistent ones fail that session with its
+    ///   stable message.
+    ///
+    /// Sessions that return [`StepOutcome::Failed`] are dead — the caller
+    /// must retire them (dropping the session frees its pages).
+    pub fn step_sessions_isolated(
+        &self,
+        sessions: &mut [&mut GenSession],
+        scratch: &mut crate::sinkhorn::StackBatchScratch,
+    ) -> Vec<StepOutcome> {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+
+        use crate::sinkhorn::StackStepReq;
+        if sessions.is_empty() {
+            return Vec::new();
+        }
+        let mut failed: Vec<Option<&'static str>> = Vec::with_capacity(sessions.len());
+        for s in sessions.iter_mut() {
+            assert!(!s.done(), "step_sessions_isolated called on a finished session");
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                self.faults.step_point();
+                let t = s.st.len();
+                let tok =
+                    if t < s.prompt.len() { s.prompt[t] } else { s.gen[t - s.prompt.len()] };
+                self.embed_token_into(tok, t, &mut s.x);
+            }));
+            failed.push(r.err().map(|p| panic_msg(&*p)));
+        }
+        if failed.iter().all(Option::is_some) {
+            return failed.into_iter().map(|e| StepOutcome::Failed(e.unwrap())).collect();
+        }
+        let batch = catch_unwind(AssertUnwindSafe(|| {
+            let reqs: Vec<StackStepReq> = sessions
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| failed[*i].is_none())
+                .map(|(_, s)| {
+                    let GenSession { st, x, h, .. } = &mut **s;
+                    StackStepReq { st, x: x.as_slice(), out: h.as_mut_slice() }
+                })
+                .collect();
+            self.stack.decode_step_batch(reqs, scratch);
+        }));
+        let batch_ok = batch.is_ok();
+        failed
+            .into_iter()
+            .zip(sessions.iter_mut())
+            .map(|(e, s)| match e {
+                Some(msg) => StepOutcome::Failed(msg),
+                None if batch_ok => StepOutcome::Token(self.session_epilogue(s)),
+                None => match catch_unwind(AssertUnwindSafe(|| self.replay_and_step(s))) {
+                    Ok(tok) => StepOutcome::Token(tok),
+                    Err(p) => StepOutcome::Failed(panic_msg(&*p)),
+                },
             })
             .collect()
     }
+
+    /// Fault recovery (DESIGN.md §Faults): rebuild `s`'s decode state
+    /// from scratch up to its last committed token, then take the step
+    /// the fused pass failed to land — serially, through the same
+    /// [`SinkhornStack::decode_step`] the batch path is bit-identical to,
+    /// so a recovered session's stream is indistinguishable from one that
+    /// never faulted. The torn state is dropped first (its pages return
+    /// to the pool before the rebuild allocates). Panics propagate — the
+    /// caller contains them; a replay that hits a still-scheduled
+    /// allocation fault fails for good. The injected *step* fault is not
+    /// re-consulted: its ordinal was consumed when it fired.
+    fn replay_and_step(&self, s: &mut GenSession) -> Option<i32> {
+        let (committed, keep) = (s.committed, s.prompt.len());
+        s.gen.truncate((committed + 1).saturating_sub(keep));
+        s.st = self.fresh_session_state();
+        s.shared = 0;
+        let mut scratch = self.stack.new_decode_scratch();
+        for t in 0..=committed {
+            let tok = if t < keep { s.prompt[t] } else { s.gen[t - keep] };
+            self.embed_token_into(tok, t, &mut s.x);
+            self.stack.decode_step(&mut s.st, &s.x, &mut scratch, &mut s.h);
+        }
+        self.session_epilogue(s)
+    }
+}
+
+/// What one session's tick produced under [`FallbackModel::
+/// step_sessions_isolated`]: a (possibly recovered) step, or a contained
+/// failure with its stable client-facing message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// The step landed; `Some(tok)` once the session is past its prompt
+    /// (same meaning as [`FallbackModel::step_sessions`]'s entries).
+    Token(Option<i32>),
+    /// The session is dead: a panic was contained and could not be
+    /// recovered. The message is one of the stable `error=` payloads
+    /// (rust/README.md failure modes).
+    Failed(&'static str),
 }
 
 /// One in-flight generation inside the continuous-batching scheduler
@@ -730,6 +876,11 @@ pub struct GenSession {
     prompt: Vec<i32>,
     budget: usize,
     shared: usize,
+    /// tokens known fully landed in `st` — the recovery point
+    /// [`FallbackModel::step_sessions_isolated`] replays from when a
+    /// fused tick panics mid-write (DESIGN.md §Faults). Equal to
+    /// `st.len()` except transiently inside a failed tick.
+    committed: usize,
     gen: Vec<i32>,
     x: Vec<f32>,
     h: Vec<f32>,
@@ -767,6 +918,12 @@ impl GenSession {
     /// open time (0 for monolithic sessions and cache misses).
     pub fn shared_len(&self) -> usize {
         self.shared
+    }
+
+    /// Tokens known fully landed in the decode state — the replay point
+    /// fault recovery rebuilds from (DESIGN.md §Faults).
+    pub fn committed(&self) -> usize {
+        self.committed
     }
 }
 
@@ -1134,6 +1291,125 @@ mod tests {
         let sess = mono.open_session(&prompt, 3);
         assert_eq!(sess.pos(), 0, "monolithic sessions never prefill at open");
         assert_eq!(sess.shared_len(), 0);
+    }
+
+    /// With the empty fault plan the isolated tick is the plain tick:
+    /// same cohort, same tokens, bit for bit.
+    #[test]
+    fn isolated_step_matches_plain_step_bitwise() {
+        let m = deep_model();
+        let prompts: Vec<Vec<i32>> = (0..3)
+            .map(|k| (0..(5 + k * 4)).map(|i| ((i * 7 + k) % 64) as i32).collect())
+            .collect();
+        let want: Vec<Vec<i32>> = prompts.iter().map(|p| m.generate(p, 6)).collect();
+        let mut sessions: Vec<GenSession> =
+            prompts.iter().map(|p| m.open_session(p, 6)).collect();
+        let mut scratch = m.new_batch_scratch();
+        loop {
+            let mut live: Vec<&mut GenSession> =
+                sessions.iter_mut().filter(|s| !s.done()).collect();
+            if live.is_empty() {
+                break;
+            }
+            for o in m.step_sessions_isolated(&mut live, &mut scratch) {
+                assert!(matches!(o, StepOutcome::Token(_)), "no faults, no failures: {o:?}");
+            }
+        }
+        for (s, w) in sessions.iter().zip(&want) {
+            assert_eq!(s.generated(), &w[..], "isolated tick diverged from generate");
+        }
+    }
+
+    /// An injected step panic kills exactly the session whose ordinal
+    /// fired; cohort-mates keep generating and stay bitwise identical to
+    /// the fault-free oracle.
+    #[test]
+    fn injected_step_panic_fails_one_session_survivors_bitwise() {
+        use crate::server::faults::{FaultPlan, FaultSpec, STEP_PANIC_MSG};
+        let cfg = FallbackConfig { seq_len: 32, d_model: 16, nb: 4, vocab: 64, ..Default::default() };
+        let oracle = FallbackModel::new(cfg.clone()).unwrap();
+        // 3 sessions: tick 0 consumes step ordinals 0..3, tick 1 consumes
+        // 3..6 — ordinal 4 is tick 1, session index 1
+        let m = FallbackModel::with_faults(
+            cfg,
+            FaultPlan::from_spec(&FaultSpec { step_panic: vec![4], ..Default::default() }),
+        )
+        .unwrap();
+        let prompts: Vec<Vec<i32>> =
+            (0..3).map(|k| (0..6).map(|i| ((i * 11 + k * 5) % 64) as i32).collect()).collect();
+        let want: Vec<Vec<i32>> = prompts.iter().map(|p| oracle.generate(p, 5)).collect();
+        let mut sessions: Vec<Option<GenSession>> =
+            prompts.iter().map(|p| Some(m.open_session(p, 5))).collect();
+        let mut failures = Vec::new();
+        let mut scratch = m.new_batch_scratch();
+        loop {
+            let mut idx: Vec<usize> = Vec::new();
+            let mut live: Vec<&mut GenSession> = Vec::new();
+            for (i, s) in sessions.iter_mut().enumerate() {
+                if let Some(s) = s.as_mut() {
+                    if !s.done() {
+                        idx.push(i);
+                        live.push(s);
+                    }
+                }
+            }
+            if live.is_empty() {
+                break;
+            }
+            let outs = m.step_sessions_isolated(&mut live, &mut scratch);
+            for (i, o) in idx.into_iter().zip(outs) {
+                if let StepOutcome::Failed(msg) = o {
+                    failures.push((i, msg));
+                    sessions[i] = None; // retire: dropping frees its pages
+                }
+            }
+        }
+        assert_eq!(failures, vec![(1, STEP_PANIC_MSG)]);
+        for (i, w) in want.iter().enumerate() {
+            if i != 1 {
+                let got = sessions[i].as_ref().unwrap().generated();
+                assert_eq!(got, &w[..], "survivor {i} diverged");
+            }
+        }
+        drop(sessions);
+        let s = m.pool_stats();
+        assert!(s.conserved(), "ledger must conserve after a contained panic: {s:?}");
+    }
+
+    /// A single scheduled allocation fault tears the fused tick mid-write;
+    /// replay-from-committed recovers the session **bitwise** (the fault
+    /// ordinal is consumed, so the rebuild sails through) and the pool
+    /// ledger balances to zero afterwards.
+    #[test]
+    fn transient_alloc_fault_recovers_bitwise() {
+        use crate::server::faults::{FaultPlan, FaultSpec};
+        let cfg = FallbackConfig { seq_len: 32, d_model: 16, nb: 4, vocab: 64, ..Default::default() };
+        let oracle = FallbackModel::new(cfg.clone()).unwrap();
+        let m = FallbackModel::with_faults(
+            cfg,
+            FaultPlan::from_spec(&FaultSpec { alloc_fail: vec![2], ..Default::default() }),
+        )
+        .unwrap();
+        // prompt shorter than one block: no prefill allocation at open, so
+        // every pool ordinal lands inside ticks
+        let prompt: Vec<i32> = (0..5).map(|i| (i * 13 + 1) % 64).collect();
+        let want = oracle.generate(&prompt, 8);
+        let mut sess = m.open_session(&prompt, 8);
+        let mut scratch = m.new_batch_scratch();
+        while !sess.done() {
+            let mut live = vec![&mut sess];
+            let outs = m.step_sessions_isolated(&mut live, &mut scratch);
+            assert!(
+                matches!(outs[0], StepOutcome::Token(_)),
+                "a transient alloc fault must recover, not fail: {outs:?}"
+            );
+        }
+        assert_eq!(sess.generated(), &want[..], "recovered stream must be bitwise identical");
+        assert!(m.faults().seen().0 > 2, "the scheduled alloc ordinal must have been reached");
+        drop(sess);
+        let s = m.pool_stats();
+        assert_eq!(s.pages_in_use, 0);
+        assert!(s.conserved(), "{s:?}");
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Deterministic fault injection for the serving stack (DESIGN.md
+//! §Faults).
+//!
+//! A [`FaultPlan`] is a replayable schedule of failures keyed by *event
+//! ordinal*, not wall clock: each injection class keeps its own atomic
+//! event counter, and an event fails iff its ordinal is in the plan's
+//! precomputed set. Two plans built from the same [`FaultSpec`] (or the
+//! same [`FaultPlan::seeded`] seed) therefore fire at exactly the same
+//! points of any deterministic execution — the property the chaos
+//! battery in `tests/faults_props.rs` leans on to compare a faulted run
+//! against its fault-free twin bitwise.
+//!
+//! Three seams consume a plan:
+//!
+//! * **page allocation** — the plan implements
+//!   [`AllocFault`](crate::sinkhorn::pages::AllocFault); a scheduled
+//!   ordinal makes [`PagePool::alloc`](crate::sinkhorn::pages::PagePool)
+//!   panic with the stable [`ALLOC_FAIL_MSG`] payload *before* touching
+//!   the ledger, modeling transient arena exhaustion;
+//! * **session step** — [`FaultPlan::step_point`] panics with
+//!   [`STEP_PANIC_MSG`] at scheduled ordinals (one event per session per
+//!   tick), modeling a poisoned session;
+//! * **socket writes** — [`FaultPlan::sock_point`] (one event per
+//!   streamed `tok` line) returns [`SockFault::Drop`] (hard-close the
+//!   connection mid-stream) or [`SockFault::Stall`] (a slow client that
+//!   stops reading for a while).
+//!
+//! Cloning a plan shares its counters (the clone is a *handle*): the
+//! model, pool and frontend all tick the same schedule. To replay a
+//! schedule, build a fresh plan from the same spec.
+
+use std::any::Any;
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::sinkhorn::pages::{AllocFault, ALLOC_FAIL_MSG};
+use crate::util::rng::Rng;
+
+/// Stable panic payload of an injected session-step fault — surfaces to
+/// clients as `error=injected step panic` (rust/README.md failure modes).
+pub const STEP_PANIC_MSG: &str = "injected step panic";
+
+/// Stable reply for a panic whose payload the containment layer does not
+/// recognize — a *genuine* bug caught by `catch_unwind`, converted to a
+/// per-session error instead of a dead scheduler (DESIGN.md §Faults).
+pub const SESSION_PANIC_MSG: &str = "session panicked";
+
+/// Map a caught panic payload to its stable client-facing message:
+/// injected faults keep their exact payload, anything else collapses to
+/// [`SESSION_PANIC_MSG`] so internal panic text never leaks to clients.
+pub fn panic_msg(payload: &(dyn Any + Send)) -> &'static str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        for known in [ALLOC_FAIL_MSG, STEP_PANIC_MSG] {
+            if *s == known {
+                return known;
+            }
+        }
+    }
+    SESSION_PANIC_MSG
+}
+
+/// What an injected socket fault does to the connection, consulted once
+/// per streamed `tok` line ([`FaultPlan::sock_point`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SockFault {
+    /// Hard-close the connection mid-stream (a vanished client).
+    Drop,
+    /// Sleep before the write (a client that stopped reading).
+    Stall(Duration),
+}
+
+/// One injection class: the scheduled ordinals and the live event
+/// counter. `fire` is lock-free — injection points sit on the decode
+/// hot path.
+struct FaultSet {
+    ordinals: BTreeSet<usize>,
+    ctr: AtomicUsize,
+}
+
+impl FaultSet {
+    fn new(ordinals: impl IntoIterator<Item = usize>) -> FaultSet {
+        FaultSet { ordinals: ordinals.into_iter().collect(), ctr: AtomicUsize::new(0) }
+    }
+
+    /// Count one event; true iff its ordinal is scheduled to fail.
+    fn fire(&self) -> bool {
+        let n = self.ctr.fetch_add(1, Ordering::Relaxed);
+        !self.ordinals.is_empty() && self.ordinals.contains(&n)
+    }
+
+    fn seen(&self) -> usize {
+        self.ctr.load(Ordering::Relaxed)
+    }
+}
+
+/// The declarative fault schedule a [`FaultPlan`] is built from. Each
+/// field lists the failing event ordinals of one injection class
+/// (0-based, counted independently per class).
+#[derive(Debug, Clone, Default)]
+pub struct FaultSpec {
+    /// page-pool allocations that fail ([`ALLOC_FAIL_MSG`] panic)
+    pub alloc_fail: Vec<usize>,
+    /// per-session step points that panic ([`STEP_PANIC_MSG`])
+    pub step_panic: Vec<usize>,
+    /// streamed `tok` writes that hard-close the connection
+    pub sock_drop: Vec<usize>,
+    /// streamed `tok` writes that stall for [`FaultSpec::stall_for`]
+    pub sock_stall: Vec<usize>,
+    /// how long a [`SockFault::Stall`] sleeps (default 50ms)
+    pub stall_for: Duration,
+}
+
+struct PlanInner {
+    alloc: FaultSet,
+    step: FaultSet,
+    sock_drop: FaultSet,
+    sock_stall: FaultSet,
+    stall_for: Duration,
+}
+
+/// A replayable, shareable fault schedule (module docs). `Clone` shares
+/// the event counters — every holder ticks the same schedule.
+#[derive(Clone)]
+pub struct FaultPlan {
+    inner: Arc<PlanInner>,
+}
+
+impl FaultPlan {
+    /// The empty plan: every injection point is a no-op (the production
+    /// default — one relaxed atomic increment per event).
+    pub fn none() -> FaultPlan {
+        FaultPlan::from_spec(&FaultSpec::default())
+    }
+
+    /// Build a plan firing exactly the ordinals `spec` lists.
+    pub fn from_spec(spec: &FaultSpec) -> FaultPlan {
+        let stall_for = if spec.stall_for.is_zero() {
+            Duration::from_millis(50)
+        } else {
+            spec.stall_for
+        };
+        FaultPlan {
+            inner: Arc::new(PlanInner {
+                alloc: FaultSet::new(spec.alloc_fail.iter().copied()),
+                step: FaultSet::new(spec.step_panic.iter().copied()),
+                sock_drop: FaultSet::new(spec.sock_drop.iter().copied()),
+                sock_stall: FaultSet::new(spec.sock_stall.iter().copied()),
+                stall_for,
+            }),
+        }
+    }
+
+    /// A randomized but fully reproducible schedule: `per_class` fault
+    /// ordinals per injection class, drawn uniformly from `[0, horizon)`
+    /// with the repo RNG. Same `(seed, per_class, horizon)` → the same
+    /// plan, so a chaos run can be replayed exactly.
+    pub fn seeded(seed: u64, per_class: usize, horizon: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA_017);
+        let mut draw = |salt: u64| -> Vec<usize> {
+            let mut r = rng.fork(salt);
+            (0..per_class).map(|_| r.range_i64(0, horizon.max(1) as i64) as usize).collect()
+        };
+        FaultPlan::from_spec(&FaultSpec {
+            alloc_fail: draw(1),
+            step_panic: draw(2),
+            sock_drop: draw(3),
+            sock_stall: draw(4),
+            stall_for: Duration::ZERO,
+        })
+    }
+
+    /// Session-step injection point: counts one event, panicking with
+    /// the stable [`STEP_PANIC_MSG`] payload at scheduled ordinals. The
+    /// scheduler's per-session `catch_unwind` converts it to a stable
+    /// `error=` retirement (DESIGN.md §Faults).
+    pub fn step_point(&self) {
+        if self.inner.step.fire() {
+            std::panic::panic_any(STEP_PANIC_MSG);
+        }
+    }
+
+    /// Socket-write injection point (one event per streamed `tok` line):
+    /// `None` = write normally. Both class counters observe every event
+    /// (so their ordinals stay aligned); drop wins over stall when both
+    /// fire on the same ordinal.
+    pub fn sock_point(&self) -> Option<SockFault> {
+        let drop_hit = self.inner.sock_drop.fire();
+        let stall_hit = self.inner.sock_stall.fire();
+        if drop_hit {
+            return Some(SockFault::Drop);
+        }
+        if stall_hit {
+            return Some(SockFault::Stall(self.inner.stall_for));
+        }
+        None
+    }
+
+    /// Events counted so far per class `(alloc, step, sock_drop,
+    /// sock_stall)` — lets tests assert a schedule actually exercised
+    /// its seams.
+    pub fn seen(&self) -> (usize, usize, usize, usize) {
+        let i = &self.inner;
+        (i.alloc.seen(), i.step.seen(), i.sock_drop.seen(), i.sock_stall.seen())
+    }
+}
+
+impl AllocFault for FaultPlan {
+    fn on_alloc(&self) -> bool {
+        self.inner.alloc.fire()
+    }
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let i = &self.inner;
+        f.debug_struct("FaultPlan")
+            .field("alloc_fail", &i.alloc.ordinals)
+            .field("step_panic", &i.step.ordinals)
+            .field("sock_drop", &i.sock_drop.ordinals)
+            .field("sock_stall", &i.sock_stall.ordinals)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_exactly_the_scheduled_ordinals() {
+        let plan = FaultPlan::from_spec(&FaultSpec {
+            step_panic: vec![1, 3],
+            ..Default::default()
+        });
+        let mut fired = Vec::new();
+        for i in 0..6 {
+            if std::panic::catch_unwind(|| plan.step_point()).is_err() {
+                fired.push(i);
+            }
+        }
+        assert_eq!(fired, vec![1, 3]);
+        assert_eq!(plan.seen().1, 6);
+    }
+
+    #[test]
+    fn clones_share_one_schedule() {
+        let a = FaultPlan::from_spec(&FaultSpec { alloc_fail: vec![1], ..Default::default() });
+        let b = a.clone();
+        assert!(!a.on_alloc(), "ordinal 0 passes");
+        assert!(b.on_alloc(), "the clone's event is ordinal 1 — counters are shared");
+        assert!(!a.on_alloc());
+    }
+
+    #[test]
+    fn seeded_plans_replay_identically() {
+        let a = format!("{:?}", FaultPlan::seeded(42, 5, 100));
+        let b = format!("{:?}", FaultPlan::seeded(42, 5, 100));
+        let c = format!("{:?}", FaultPlan::seeded(43, 5, 100));
+        assert_eq!(a, b, "same seed must rebuild the same schedule");
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn panic_payloads_map_to_stable_messages() {
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(ALLOC_FAIL_MSG)).unwrap_err();
+        assert_eq!(panic_msg(&*p), ALLOC_FAIL_MSG);
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(STEP_PANIC_MSG)).unwrap_err();
+        assert_eq!(panic_msg(&*p), STEP_PANIC_MSG);
+        // arbitrary payloads (including Strings from panic!("{..}"))
+        // collapse to the generic stable line — no internal text leaks
+        let p = std::panic::catch_unwind(|| panic!("index out of bounds: 7")).unwrap_err();
+        assert_eq!(panic_msg(&*p), SESSION_PANIC_MSG);
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(17u32)).unwrap_err();
+        assert_eq!(panic_msg(&*p), SESSION_PANIC_MSG);
+    }
+
+    #[test]
+    fn sock_faults_drop_beats_stall_and_stall_has_a_floor() {
+        let plan = FaultPlan::from_spec(&FaultSpec {
+            sock_drop: vec![0],
+            sock_stall: vec![1],
+            ..Default::default()
+        });
+        assert_eq!(plan.sock_point(), Some(SockFault::Drop));
+        // both class counters saw event 0, so the stall scheduled at
+        // ordinal 1 fires on the next event
+        match plan.sock_point() {
+            Some(SockFault::Stall(d)) => assert!(d > Duration::ZERO, "stall floor"),
+            other => panic!("want stall, got {other:?}"),
+        }
+        assert_eq!(plan.sock_point(), None);
+    }
+}

@@ -9,13 +9,24 @@
 //! PJRT runtime over compiled artifacts (classify only) and the
 //! [`batch::ExecMode::RequestBatch`] escape hatch run the legacy
 //! wave executor instead. TCP line protocol: `rust/README.md`.
+//!
+//! The stack is fault-tolerant by construction (DESIGN.md §Faults):
+//! generations carry deadlines and cancellation tokens, slow clients are
+//! isolated behind bounded outboxes, per-session work is panic-contained,
+//! shutdown drains gracefully, and the [`faults`] module injects
+//! deterministic failure schedules through all of it for the chaos tests.
 
 pub mod batch;
 pub mod fallback;
+pub mod faults;
 pub mod service;
 pub mod tcp;
 
 pub use batch::{gather, BatchPolicy, ExecMode};
-pub use fallback::{FallbackConfig, FallbackModel, GenSession};
-pub use service::{Response, Server, ServerHandle, TokenEvent, BUSY_MSG};
-pub use tcp::TcpFrontend;
+pub use fallback::{FallbackConfig, FallbackModel, GenSession, StepOutcome};
+pub use faults::{FaultPlan, FaultSpec, SockFault};
+pub use service::{
+    CancelToken, GenOptions, Response, Server, ServerHandle, StreamingGen, TokenEvent, BUSY_MSG,
+    CANCELLED_MSG, DEADLINE_MSG, SHUTDOWN_MSG, STALL_MSG,
+};
+pub use tcp::{TcpConfig, TcpFrontend, IDLE_MSG};

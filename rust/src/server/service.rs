@@ -29,10 +29,27 @@
 //!   only; generate requests get a stable per-request error) and
 //!   selectable for the fallback via [`ExecMode::RequestBatch`] (the
 //!   `bench --target serve` baseline).
+//!
+//! The scheduler is additionally the serving stack's *failure boundary*
+//! (DESIGN.md §Faults): generations carry cancellation tokens and
+//! wall-clock deadlines, token streams ride a bounded per-connection
+//! outbox the tick loop never blocks on (a slow reader pauses its own
+//! session, then times out), per-session work runs under `catch_unwind`
+//! so a poisoned session retires with a stable `error=` reply instead of
+//! killing the executor, and shutdown drains in-flight sessions up to
+//! the policy's drain window. Every retirement path — completion,
+//! cancellation, deadline, stall, panic, drain abort — releases the
+//! session's admission reservation and drops its decode state so the
+//! page ledger returns to zero.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
+};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -43,15 +60,85 @@ use crate::runtime::{Experiment, HostTensor, Runtime, TrainState};
 use crate::sinkhorn::memory;
 
 use super::batch::{gather, BatchPolicy, ExecMode};
-use super::fallback::{FallbackConfig, FallbackModel, GenSession};
+use super::fallback::{FallbackConfig, FallbackModel, GenSession, StepOutcome};
+use super::faults::panic_msg;
 
 /// The stable message a generation gets when both the session slots and
 /// the bounded wait queue are full — the TCP frontend renders it as the
 /// `busy=` line (admission control, DESIGN.md §Scheduler).
 pub const BUSY_MSG: &str = "generation queue full";
 
+/// Stable error for a generation retired past its wall-clock deadline
+/// (`--gen-deadline-ms` / the TCP `deadline=` option — DESIGN.md §Faults).
+pub const DEADLINE_MSG: &str = "deadline exceeded";
+
+/// Stable error for a generation cancelled by its client (disconnect
+/// detected, or [`CancelToken::cancel`] called).
+pub const CANCELLED_MSG: &str = "cancelled";
+
+/// Stable error for a session whose client stopped reading: its bounded
+/// outbox stayed full past the policy's stall timeout.
+pub const STALL_MSG: &str = "slow client timeout";
+
+/// Stable error for work refused or aborted by graceful drain shutdown.
+pub const SHUTDOWN_MSG: &str = "server shutting down";
+
 /// A streamed token event: `(index within the generation, token id)`.
 pub type TokenEvent = (usize, i32);
+
+/// Cooperative cancellation handle for one generation (DESIGN.md
+/// §Faults). Cloneable; the frontend cancels when the client's socket
+/// dies, the scheduler cancels when the token stream's receiver is
+/// dropped, and the sweep at the top of every tick retires cancelled
+/// sessions — releasing their reservation and freeing their pages.
+#[derive(Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-request options for [`ServerHandle::generate_streaming_with`].
+#[derive(Debug, Clone, Copy)]
+pub struct GenOptions {
+    /// Wall-clock budget from submit; overrides the policy's
+    /// `gen_deadline` default. Overrunners retire with [`DEADLINE_MSG`].
+    pub deadline: Option<Duration>,
+    /// Capacity of the bounded token outbox between the scheduler and
+    /// this stream's reader (min 1). When it is full the session pauses
+    /// — the tick loop never blocks — until the reader catches up or the
+    /// policy's stall timeout retires the session with [`STALL_MSG`].
+    pub outbox: usize,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        GenOptions { deadline: None, outbox: 64 }
+    }
+}
+
+/// A streaming generation in flight: the token events, the final reply,
+/// and the cancellation handle.
+pub struct StreamingGen {
+    /// `(index, id)` per generated token; closes before the reply lands.
+    pub tokens: Receiver<TokenEvent>,
+    /// The summary [`Response`] (or the stable error that retired the
+    /// session).
+    pub reply: Receiver<Result<Response>>,
+    /// Cancel mid-generation: the session retires with [`CANCELLED_MSG`],
+    /// its pages return to the pool, its reservation is released.
+    pub cancel: CancelToken,
+}
 
 /// What a request asks the executor to do.
 enum Work {
@@ -59,11 +146,18 @@ enum Work {
     Generate {
         tokens: Vec<i32>,
         max_new: usize,
-        /// `Some`: the scheduler sends each token as it is produced
-        /// (dropped at completion, before the summary reply). The
-        /// request-batch loops don't stream — the sender is dropped at
-        /// intake and all tokens arrive with the final [`Response`].
-        stream: Option<Sender<TokenEvent>>,
+        /// `Some`: the scheduler sends each token as it is produced into
+        /// this bounded outbox (dropped at completion, before the summary
+        /// reply). The request-batch loops don't stream — the sender is
+        /// dropped at intake and all tokens arrive with the final
+        /// [`Response`].
+        stream: Option<SyncSender<TokenEvent>>,
+        /// absolute wall-clock deadline (request `deadline=` option; the
+        /// policy's `gen_deadline` default is applied at intake when
+        /// `None`). The legacy request-batch loop ignores it.
+        deadline: Option<Instant>,
+        /// cooperative cancellation — swept at the top of every tick
+        cancel: CancelToken,
     },
     /// report the served model's configuration (one `key=value` line)
     Info,
@@ -122,7 +216,13 @@ impl ServerHandle {
     /// Blocking generate call: greedily decode up to `max_new` tokens
     /// after `tokens` (fallback backend only — see the module docs).
     pub fn generate(&self, tokens: Vec<i32>, max_new: usize) -> Result<Response> {
-        self.submit(Work::Generate { tokens, max_new, stream: None })
+        self.submit(Work::Generate {
+            tokens,
+            max_new,
+            stream: None,
+            deadline: None,
+            cancel: CancelToken::new(),
+        })
     }
 
     /// Streaming generate: returns immediately with the token-event
@@ -137,21 +237,51 @@ impl ServerHandle {
         tokens: Vec<i32>,
         max_new: usize,
     ) -> Result<(Receiver<TokenEvent>, Receiver<Result<Response>>)> {
-        let (ttx, trx) = channel();
+        let sg = self.generate_streaming_with(tokens, max_new, GenOptions::default())?;
+        Ok((sg.tokens, sg.reply))
+    }
+
+    /// [`Self::generate_streaming`] with per-request failure controls
+    /// (DESIGN.md §Faults): a wall-clock deadline, the bounded-outbox
+    /// capacity, and a [`CancelToken`] for mid-generation cancellation.
+    pub fn generate_streaming_with(
+        &self,
+        tokens: Vec<i32>,
+        max_new: usize,
+        opts: GenOptions,
+    ) -> Result<StreamingGen> {
+        let (ttx, trx) = sync_channel(opts.outbox.max(1));
         let (rtx, rrx) = channel();
+        let cancel = CancelToken::new();
+        let enqueued = Instant::now();
         let req = Request {
-            work: Work::Generate { tokens, max_new, stream: Some(ttx) },
-            enqueued: Instant::now(),
+            work: Work::Generate {
+                tokens,
+                max_new,
+                stream: Some(ttx),
+                deadline: opts.deadline.map(|d| enqueued + d),
+                cancel: cancel.clone(),
+            },
+            enqueued,
             resp: rtx,
         };
         self.tx.send(Msg::Req(req)).map_err(|_| anyhow!("server stopped"))?;
-        Ok((trx, rrx))
+        Ok(StreamingGen { tokens: trx, reply: rrx, cancel })
     }
 
     /// Blocking model-info call: the served model's configuration as one
     /// `key=value` line ([`Response::info`] — the TCP `model` verb).
     pub fn model_info(&self) -> Result<Response> {
         self.submit(Work::Info)
+    }
+
+    /// Begin graceful drain shutdown (DESIGN.md §Faults): the scheduler
+    /// stops intake (new work gets the stable [`SHUTDOWN_MSG`] error),
+    /// in-flight sessions may finish within the policy's drain window,
+    /// survivors are then aborted with the same stable error, and the
+    /// executor exits — observable via [`Server::is_finished`].
+    pub fn begin_shutdown(&self) -> Result<()> {
+        self.tx.send(Msg::Stop).map_err(|_| anyhow!("server stopped"))
     }
 
     fn submit(&self, work: Work) -> Result<Response> {
@@ -220,7 +350,7 @@ where
                         cls_rows.push(tokens);
                         cls_meta.push((r.enqueued, r.resp));
                     }
-                    Work::Generate { tokens, max_new, stream } => {
+                    Work::Generate { tokens, max_new, stream, .. } => {
                         drop(stream); // no token streaming on this loop
                         if max_new == 0 {
                             reply_empty_generate(r.enqueued, &r.resp);
@@ -315,28 +445,41 @@ struct ActiveSession {
     sess: GenSession,
     enqueued: Instant,
     admitted: Instant,
-    stream: Option<Sender<TokenEvent>>,
+    stream: Option<SyncSender<TokenEvent>>,
     resp: Sender<Result<Response>>,
     /// bytes this session reserved against `mem_budget` at admission
     /// (paged models only; 0 under worst-case slot budgeting) — returned
     /// to the pool accounting when the session retires
     reserved_bytes: usize,
+    /// absolute wall-clock deadline; overrunners retire with
+    /// [`DEADLINE_MSG`] at the next sweep
+    deadline: Option<Instant>,
+    /// cooperative cancellation (client disconnect, dropped receiver)
+    cancel: CancelToken,
+    /// a token the bounded outbox refused: the session is *paused* — it
+    /// skips decode ticks until the retry flush lands the token or the
+    /// stall timeout retires it. The tick loop itself never blocks.
+    pending: Option<TokenEvent>,
+    /// when the outbox first refused — the stall clock
+    stalled_since: Option<Instant>,
 }
 
 /// One generation waiting in the bounded admission queue.
 struct PendingGen {
     tokens: Vec<i32>,
     max_new: usize,
-    stream: Option<Sender<TokenEvent>>,
+    stream: Option<SyncSender<TokenEvent>>,
     enqueued: Instant,
     resp: Sender<Result<Response>>,
+    deadline: Option<Instant>,
+    cancel: CancelToken,
 }
 
 /// Retire a finished session: close its token stream, then send the
 /// summary reply carrying the full generation. `tick_n` is how many
 /// sessions shared the retiring tick (reported as `batch_size`).
 fn finish_session(a: ActiveSession, tick_n: usize) {
-    let ActiveSession { sess, enqueued, admitted, stream, resp, reserved_bytes: _ } = a;
+    let ActiveSession { sess, enqueued, admitted, stream, resp, .. } = a;
     drop(stream); // token channel closes before the summary reply
     let gen = sess.into_generated();
     let _ = resp.send(Ok(Response {
@@ -347,6 +490,22 @@ fn finish_session(a: ActiveSession, tick_n: usize) {
         total: enqueued.elapsed(),
         batch_size: tick_n,
     }));
+}
+
+/// Retire a session that will not complete (cancelled, past deadline,
+/// stalled, poisoned, or drain-aborted): close its token stream, drop
+/// its decode state — the pages return to the pool here — and send the
+/// stable error as the summary. The caller releases its reservation.
+fn fail_session(a: ActiveSession, msg: &'static str) {
+    let ActiveSession { sess, stream, resp, .. } = a;
+    drop(stream);
+    drop(sess);
+    let _ = resp.send(Err(anyhow!("{msg}")));
+}
+
+/// Refuse a queued generation with a stable error.
+fn fail_pending(p: &PendingGen, msg: &'static str) {
+    let _ = p.resp.send(Err(anyhow!("{msg}")));
 }
 
 /// The continuous-batching decode scheduler (DESIGN.md §Scheduler).
@@ -381,6 +540,25 @@ fn finish_session(a: ActiveSession, tick_n: usize) {
 /// refuse them. One session always admits into an idle table (the
 /// floor-1 progress guarantee), and retirements return their
 /// reservation mid-wave, draining the wait queue under page pressure.
+/// Reservations ride [`memory::Reservations`], so an unbalanced
+/// retirement path is a hard error, not a slow leak.
+///
+/// Failure handling (DESIGN.md §Faults) is woven into the tick:
+///
+/// * a **sweep** between intake and admission retires cancelled
+///   sessions, deadline overrunners, and outbox stalls — queued and
+///   active alike — each with its stable error;
+/// * token emission uses `try_send` into the bounded outbox: a refused
+///   token *pauses* that session (it holds its slot but skips ticks)
+///   until the retry flush lands it or the stall timeout fires;
+/// * `open_session`, `classify_batch` and the decode tick
+///   ([`FallbackModel::step_sessions_isolated`]) run under panic
+///   containment: a poisoned request gets a stable `error=` reply and a
+///   clean retirement, the loop keeps serving;
+/// * after `Stop` (or all handles dropping) the loop refuses new work
+///   with [`SHUTDOWN_MSG`], drains in-flight sessions up to
+///   `policy.drain`, aborts survivors with the same stable error, and
+///   exits with every reservation released.
 fn scheduler_loop(
     rx: &Receiver<Msg>,
     policy: &BatchPolicy,
@@ -394,80 +572,143 @@ fn scheduler_loop(
     } else {
         memory::admitted_sessions(policy.mem_budget, model.session_state_bytes(), slot_cap)
     };
-    let mut reserved: usize = 0;
+    let mut reservations =
+        memory::Reservations::new(if paged_budget { policy.mem_budget } else { 0 });
     let mut scratch = model.new_batch_scratch();
     let mut active: Vec<ActiveSession> = Vec::with_capacity(slots);
     let mut waiting: VecDeque<PendingGen> = VecDeque::new();
     let mut stop = false;
+    let mut drain_deadline: Option<Instant> = None;
     'serve: loop {
-        // 1. intake — block only while the session table is idle; once
-        // stop is seen, no further intake (pending work still drains)
+        // 1. intake — block only while the session table is idle and the
+        // server is live; otherwise drain without blocking (during drain
+        // the messages are still pulled so refusals reply immediately)
         let mut msgs: Vec<Msg> = Vec::new();
-        if !stop {
-            if active.is_empty() && waiting.is_empty() {
-                match gather(rx, policy) {
-                    Some(m) => msgs = m,
-                    None => break 'serve,
-                }
-            } else {
-                while msgs.len() < policy.max_batch {
-                    match rx.try_recv() {
-                        Ok(m) => msgs.push(m),
-                        Err(TryRecvError::Empty) => break,
-                        Err(TryRecvError::Disconnected) => {
-                            stop = true;
-                            break;
-                        }
+        if !stop && active.is_empty() && waiting.is_empty() {
+            match gather(rx, policy) {
+                Some(m) => msgs = m,
+                None => break 'serve,
+            }
+        } else {
+            while msgs.len() < policy.max_batch {
+                match rx.try_recv() {
+                    Ok(m) => msgs.push(m),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        stop = true;
+                        break;
                     }
                 }
             }
         }
         let tick_start = Instant::now();
+        let mut progressed = !msgs.is_empty();
         let mut cls_rows: Vec<Vec<i32>> = Vec::new();
         let mut cls_meta: Vec<(Instant, Sender<Result<Response>>)> = Vec::new();
         for m in msgs {
             match m {
-                Msg::Req(r) => match r.work {
-                    Work::Classify(tokens) => {
-                        cls_rows.push(tokens);
-                        cls_meta.push((r.enqueued, r.resp));
+                Msg::Req(r) => {
+                    if stop {
+                        // intake is closed: every verb gets the stable
+                        // drain refusal, in-flight work is unaffected
+                        let _ = r.resp.send(Err(anyhow!("{SHUTDOWN_MSG}")));
+                        continue;
                     }
-                    Work::Info => {
-                        let _ = r.resp.send(Ok(Response {
-                            label: 0,
-                            gen: None,
-                            info: Some(info.to_string()),
-                            queue: tick_start - r.enqueued,
-                            total: r.enqueued.elapsed(),
-                            batch_size: 1,
-                        }));
-                    }
-                    Work::Generate { tokens, max_new, stream } => {
-                        if max_new == 0 {
-                            drop(stream);
-                            reply_empty_generate(r.enqueued, &r.resp);
-                        } else if active.len() + waiting.len() >= slots + policy.queue_depth {
-                            drop(stream);
-                            let _ = r.resp.send(Err(anyhow!("{}", BUSY_MSG)));
-                        } else {
-                            waiting.push_back(PendingGen {
-                                tokens,
-                                max_new,
-                                stream,
-                                enqueued: r.enqueued,
-                                resp: r.resp,
-                            });
+                    match r.work {
+                        Work::Classify(tokens) => {
+                            cls_rows.push(tokens);
+                            cls_meta.push((r.enqueued, r.resp));
+                        }
+                        Work::Info => {
+                            let _ = r.resp.send(Ok(Response {
+                                label: 0,
+                                gen: None,
+                                info: Some(info.to_string()),
+                                queue: tick_start - r.enqueued,
+                                total: r.enqueued.elapsed(),
+                                batch_size: 1,
+                            }));
+                        }
+                        Work::Generate { tokens, max_new, stream, deadline, cancel } => {
+                            if max_new == 0 {
+                                drop(stream);
+                                reply_empty_generate(r.enqueued, &r.resp);
+                            } else if active.len() + waiting.len() >= slots + policy.queue_depth
+                            {
+                                drop(stream);
+                                let _ = r.resp.send(Err(anyhow!("{}", BUSY_MSG)));
+                            } else {
+                                waiting.push_back(PendingGen {
+                                    tokens,
+                                    max_new,
+                                    stream,
+                                    enqueued: r.enqueued,
+                                    resp: r.resp,
+                                    // the policy's default deadline applies
+                                    // from arrival, not admission
+                                    deadline: deadline
+                                        .or(policy.gen_deadline.map(|d| r.enqueued + d)),
+                                    cancel,
+                                });
+                            }
                         }
                     }
-                },
+                }
                 Msg::Stop => stop = true,
             }
         }
-        // 2. admission: free slots pull from the bounded wait queue; a
+        if stop {
+            drain_deadline.get_or_insert(tick_start + policy.drain);
+        }
+        // 2. sweep — cancellations, deadline expiries and outbox stalls
+        // retire before admission so expired queued work never opens a
+        // session and dead active sessions free their slot, reservation
+        // and pages right here
+        let now = Instant::now();
+        waiting.retain(|p| {
+            let msg = if p.cancel.is_cancelled() {
+                CANCELLED_MSG
+            } else if p.deadline.is_some_and(|d| now >= d) {
+                DEADLINE_MSG
+            } else {
+                return true;
+            };
+            fail_pending(p, msg);
+            false
+        });
+        let mut i = 0;
+        while i < active.len() {
+            let a = &active[i];
+            let msg = if a.cancel.is_cancelled() {
+                Some(CANCELLED_MSG)
+            } else if a.deadline.is_some_and(|d| now >= d) {
+                Some(DEADLINE_MSG)
+            } else if a
+                .stalled_since
+                .is_some_and(|t| now.duration_since(t) >= policy.stall_timeout)
+            {
+                Some(STALL_MSG)
+            } else {
+                None
+            };
+            match msg {
+                Some(msg) => {
+                    let a = active.remove(i);
+                    reservations.release(a.reserved_bytes);
+                    fail_session(a, msg);
+                    progressed = true;
+                }
+                None => i += 1,
+            }
+        }
+        // 3. admission: free slots pull from the bounded wait queue; a
         // paged model charges each session's actual byte reservation
         // against the budget (floor one session into an idle table so
         // the server always makes progress) instead of pre-divided
-        // worst-case slots
+        // worst-case slots. `open_session` is contained: a panic during
+        // prefill (e.g. an injected allocation failure) unwinds the
+        // half-built state — its pages return on drop — and fails that
+        // request alone.
         while active.len() < slots {
             let Some(p) = waiting.front() else { break };
             let need = if paged_budget {
@@ -475,11 +716,20 @@ fn scheduler_loop(
             } else {
                 0
             };
-            if paged_budget && !active.is_empty() && reserved + need > policy.mem_budget {
+            if paged_budget && !active.is_empty() && !reservations.fits(need) {
                 break; // FIFO head waits for retirements to free pages
             }
             let p = waiting.pop_front().expect("front was Some");
-            let sess = model.open_session(&p.tokens, p.max_new);
+            let sess =
+                match catch_unwind(AssertUnwindSafe(|| model.open_session(&p.tokens, p.max_new)))
+                {
+                    Ok(sess) => sess,
+                    Err(payload) => {
+                        fail_pending(&p, panic_msg(&*payload));
+                        progressed = true;
+                        continue;
+                    }
+                };
             let a = ActiveSession {
                 sess,
                 enqueued: p.enqueued,
@@ -487,61 +737,142 @@ fn scheduler_loop(
                 stream: p.stream,
                 resp: p.resp,
                 reserved_bytes: need,
+                deadline: p.deadline,
+                cancel: p.cancel,
+                pending: None,
+                stalled_since: None,
             };
             if a.sess.done() {
                 // budget clamped to zero by a capacity-filled model:
                 // nothing to tick, retire straight from admission
                 finish_session(a, 1);
             } else {
-                reserved += need;
+                reservations.reserve(need);
                 active.push(a);
             }
+            progressed = true;
         }
-        // 3. classify/info interleave between ticks
+        // 4. classify/info interleave between ticks, contained: a panic
+        // fails this batch's requests with a stable error, not the loop
         if !cls_rows.is_empty() {
-            let labels = model.classify_batch(&cls_rows);
             let n = cls_rows.len();
-            for (label, (enqueued, resp)) in labels.into_iter().zip(cls_meta) {
-                let _ = resp.send(Ok(Response {
-                    label,
-                    gen: None,
-                    info: None,
-                    queue: tick_start - enqueued,
-                    total: enqueued.elapsed(),
-                    batch_size: n,
-                }));
+            match catch_unwind(AssertUnwindSafe(|| model.classify_batch(&cls_rows))) {
+                Ok(labels) => {
+                    for (label, (enqueued, resp)) in labels.into_iter().zip(cls_meta) {
+                        let _ = resp.send(Ok(Response {
+                            label,
+                            gen: None,
+                            info: None,
+                            queue: tick_start - enqueued,
+                            total: enqueued.elapsed(),
+                            batch_size: n,
+                        }));
+                    }
+                }
+                Err(payload) => {
+                    let msg = panic_msg(&*payload);
+                    for (_, resp) in cls_meta {
+                        let _ = resp.send(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+            progressed = true;
+        }
+        // 5. retry flush: paused sessions try their refused token again
+        // before the tick so a recovered reader resumes immediately
+        for a in active.iter_mut() {
+            let Some(ev) = a.pending.take() else { continue };
+            let Some(tx) = a.stream.as_ref() else { continue };
+            match tx.try_send(ev) {
+                Ok(()) => {
+                    a.stalled_since = None;
+                    progressed = true;
+                }
+                Err(TrySendError::Full(ev)) => a.pending = Some(ev),
+                Err(TrySendError::Disconnected(_)) => a.cancel.cancel(),
             }
         }
-        // 4. one decode tick: every active session advances one token
-        if !active.is_empty() {
-            let n = active.len();
-            let emitted = {
-                let mut live: Vec<&mut GenSession> =
-                    active.iter_mut().map(|a| &mut a.sess).collect();
-                model.step_sessions(&mut live, &mut scratch)
-            };
-            for (a, e) in active.iter_mut().zip(emitted) {
-                if let (Some(id), Some(tx)) = (e, a.stream.as_ref()) {
-                    let _ = tx.send((a.sess.generated().len() - 1, id));
+        // 6. one decode tick: every unpaused active session advances one
+        // token through the isolated step path — a panic retires the
+        // poisoned session(s) with stable errors, survivors keep their
+        // bitwise streams (DESIGN.md §Faults)
+        let mut idx: Vec<usize> = Vec::new();
+        let outcomes = {
+            let mut live: Vec<&mut GenSession> = Vec::new();
+            for (i, a) in active.iter_mut().enumerate() {
+                if a.pending.is_none() && !a.sess.done() {
+                    idx.push(i);
+                    live.push(&mut a.sess);
                 }
             }
-            // retire finished sessions immediately — their slot frees for
-            // the next admission pass; survivors' states are untouched
-            let mut i = 0;
-            while i < active.len() {
-                if active[i].sess.done() {
-                    let a = active.remove(i);
-                    reserved = reserved.saturating_sub(a.reserved_bytes);
-                    finish_session(a, n);
-                } else {
-                    i += 1;
+            model.step_sessions_isolated(&mut live, &mut scratch)
+        };
+        let tick_n = idx.len();
+        let mut failed: Vec<(usize, &'static str)> = Vec::new();
+        for (&i, &o) in idx.iter().zip(&outcomes) {
+            progressed = true;
+            match o {
+                StepOutcome::Failed(msg) => failed.push((i, msg)),
+                StepOutcome::Token(None) => {}
+                StepOutcome::Token(Some(id)) => {
+                    let a = &mut active[i];
+                    let Some(tx) = a.stream.as_ref() else { continue };
+                    let ev = (a.sess.generated().len() - 1, id);
+                    match tx.try_send(ev) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(ev)) => {
+                            // outbox full: pause the session, start the
+                            // stall clock — never block the tick loop
+                            a.pending = Some(ev);
+                            a.stalled_since.get_or_insert(Instant::now());
+                        }
+                        Err(TrySendError::Disconnected(_)) => a.cancel.cancel(),
+                    }
                 }
+            }
+        }
+        // poisoned sessions retire with their stable error (descending
+        // index keeps the remaining indices valid)
+        for (i, msg) in failed.into_iter().rev() {
+            let a = active.remove(i);
+            reservations.release(a.reserved_bytes);
+            fail_session(a, msg);
+        }
+        // 7. retire finished sessions immediately — their slot frees for
+        // the next admission pass; a done session still holding a refused
+        // token stays until its flush lands (or its stall timeout fires)
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].sess.done() && active[i].pending.is_none() {
+                let a = active.remove(i);
+                reservations.release(a.reserved_bytes);
+                finish_session(a, tick_n.max(1));
+                progressed = true;
+            } else {
+                i += 1;
+            }
+        }
+        // 8. drain: past the deadline, survivors abort with the stable
+        // shutdown error — reservations released, pages freed
+        if drain_deadline.is_some_and(|d| Instant::now() >= d) {
+            for p in waiting.drain(..) {
+                fail_pending(&p, SHUTDOWN_MSG);
+            }
+            for a in active.drain(..) {
+                reservations.release(a.reserved_bytes);
+                fail_session(a, SHUTDOWN_MSG);
             }
         }
         if stop && active.is_empty() && waiting.is_empty() {
             break 'serve;
         }
+        if !progressed {
+            // every session paused (or only future deadlines pending):
+            // don't spin the intake drain hot
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
+    debug_assert!(reservations.is_empty(), "scheduler exited with unreleased reservations");
     Ok(())
 }
 
@@ -695,7 +1026,15 @@ impl Server {
     /// executor (module docs).
     pub fn start_fallback(cfg: FallbackConfig, policy: BatchPolicy) -> Result<Server> {
         // build the model synchronously so config errors surface here
-        let model = FallbackModel::new(cfg)?;
+        Server::start_fallback_model(FallbackModel::new(cfg)?, policy)
+    }
+
+    /// Like [`Server::start_fallback`], but takes a pre-built model —
+    /// callers (fault-injection tests, chiefly) can wire a
+    /// [`super::faults::FaultPlan`] via [`FallbackModel::with_faults`]
+    /// and clone the page-pool handle before the model moves into the
+    /// executor thread.
+    pub fn start_fallback_model(model: FallbackModel, policy: BatchPolicy) -> Result<Server> {
         let seq_len = model.cfg.seq_len;
         let (tx, rx) = channel::<Msg>();
         let join = std::thread::spawn(move || -> Result<()> {
@@ -712,6 +1051,13 @@ impl Server {
             }
         });
         Ok(Server { handle: ServerHandle { tx, seq_len }, join: Some(join) })
+    }
+
+    /// True once the executor thread has exited — after a drain
+    /// completes, every in-flight session has been retired and the
+    /// server is safe to drop without losing replies.
+    pub fn is_finished(&self) -> bool {
+        self.join.as_ref().is_none_or(|j| j.is_finished())
     }
 
     /// Close the intake channel and wait for the executor to drain.

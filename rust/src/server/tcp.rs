@@ -5,13 +5,15 @@
 //! `rust/README.md`. Summary:
 //!
 //!   classify:  `<id> <id> <id> ...`            (bare space-separated ids)
-//!   generate:  `gen <max_new> <id> <id> ...`   (prompt ids may be empty)
+//!   generate:  `gen <max_new> [deadline=<ms>] <id> <id> ...`
 //!   info:      `model`                          (served model description)
+//!   drain:     `shutdown`                       (begin graceful shutdown)
 //!
 //!   replies:   `label=<k> batch=<n> queue_us=<q> total_us=<t>`
 //!              `tok <i> <id>` (zero or more, streamed per generated token)
 //!              `tokens=<id>,<id>,... batch=<n> queue_us=<q> total_us=<t>`
 //!              `backend=<fallback|artifact> <key>=<value> ...`
+//!              `ok=draining`
 //!              `busy=generation queue full`
 //!              `error=<one stable line>`
 //!
@@ -30,25 +32,68 @@
 //!
 //! Each accepted connection gets its own thread that forwards requests to
 //! the shared [`ServerHandle`] (the dynamic batcher merges concurrent
-//! streams into executor batches, classify and generate alike).
+//! streams into executor batches, classify and generate alike). The
+//! frontend is the serving stack's client-failure boundary (DESIGN.md
+//! §Faults): accepted sockets carry read/write timeouts
+//! ([`TcpConfig`]) — an idle connection gets the stable
+//! `error=idle timeout` line and closes; a write failure mid-stream
+//! (client gone, or a write timeout on a sink that stopped draining)
+//! cancels the in-flight generation so the scheduler retires it and its
+//! pages return. A seeded [`FaultPlan`] injects mid-stream disconnects
+//! and stalls at the same seam for the chaos tests.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::service::{ServerHandle, BUSY_MSG};
+use super::faults::{FaultPlan, SockFault};
+use super::service::{GenOptions, ServerHandle, BUSY_MSG};
 
-/// A listening TCP frontend. The acceptor runs as a detached daemon
-/// thread for the lifetime of the process: `TcpListener::incoming` has no
-/// portable cancellation, so `drop` does NOT join it (joining would
-/// deadlock — the loop blocks in accept). Connection handlers exit when
-/// clients disconnect; requests after the backing [`ServerHandle`]'s
-/// server shuts down get `error=` replies.
+/// Stable error for a connection that sent nothing for the configured
+/// idle window: one `error=idle timeout` line, then close.
+pub const IDLE_MSG: &str = "idle timeout";
+
+/// Per-connection socket policy (DESIGN.md §Faults).
+#[derive(Clone)]
+pub struct TcpConfig {
+    /// How long a connection may sit between requests before it is closed
+    /// with the stable [`IDLE_MSG`] line. `None` = never.
+    pub idle_timeout: Option<Duration>,
+    /// OS-level write timeout on reply/token writes; a timed-out write is
+    /// treated like a dead client (the generation is cancelled). `None` =
+    /// block forever.
+    pub write_timeout: Option<Duration>,
+    /// Fault-injection schedule consulted once per `tok` line write
+    /// ([`FaultPlan::sock_point`]); [`FaultPlan::none`] in production.
+    pub faults: FaultPlan,
+}
+
+impl Default for TcpConfig {
+    fn default() -> Self {
+        TcpConfig {
+            idle_timeout: Some(Duration::from_secs(120)),
+            write_timeout: Some(Duration::from_secs(30)),
+            faults: FaultPlan::none(),
+        }
+    }
+}
+
+/// A listening TCP frontend. `TcpListener::incoming` has no portable
+/// cancellation, so shutdown works by *poke*: `drop` raises the stop
+/// flag, makes one throwaway connection to its own listener to unblock
+/// `accept`, and joins the acceptor — the thread no longer outlives the
+/// frontend. Connection handlers exit when clients disconnect or idle
+/// out; requests after the backing [`ServerHandle`]'s server shuts down
+/// get `error=` replies.
 pub struct TcpFrontend {
     pub addr: std::net::SocketAddr,
-    _accept_join: JoinHandle<()>,
+    stop: Arc<AtomicBool>,
+    accept_join: Option<JoinHandle<()>>,
 }
 
 /// A parsed protocol line.
@@ -56,10 +101,14 @@ pub struct TcpFrontend {
 pub enum ParsedRequest {
     /// The original bare-ids form: classify the sequence.
     Classify(Vec<i32>),
-    /// `gen <max_new> <ids...>`: greedily decode up to `max_new` tokens.
-    Generate { max_new: usize, tokens: Vec<i32> },
+    /// `gen <max_new> [deadline=<ms>] <ids...>`: greedily decode up to
+    /// `max_new` tokens, optionally under a per-request wall-clock
+    /// deadline (DESIGN.md §Faults).
+    Generate { max_new: usize, tokens: Vec<i32>, deadline_ms: Option<u64> },
     /// `model`: describe the served model (backend, depth, heads, config).
     ModelInfo,
+    /// `shutdown`: begin graceful drain shutdown; replies `ok=draining`.
+    Shutdown,
 }
 
 /// Longest slice of client input echoed back inside an error message.
@@ -84,9 +133,10 @@ fn parse_id(t: &str) -> Result<i32> {
 /// Parse one request line. Rejections are stable one-line messages:
 /// `empty request`, `bad token '...'` (non-numeric or overflowing ids),
 /// `unknown verb '...'`, `gen needs a token count`, `bad count '...'`,
-/// `model takes no arguments`.
+/// `bad deadline '...'`, `model takes no arguments`, `shutdown takes no
+/// arguments`.
 pub fn parse_request(line: &str) -> Result<ParsedRequest> {
-    let mut toks = line.split_whitespace();
+    let mut toks = line.split_whitespace().peekable();
     let Some(first) = toks.next() else {
         bail!("empty request");
     };
@@ -96,14 +146,26 @@ pub fn parse_request(line: &str) -> Result<ParsedRequest> {
         }
         return Ok(ParsedRequest::ModelInfo);
     }
+    if first == "shutdown" {
+        if toks.next().is_some() {
+            bail!("shutdown takes no arguments");
+        }
+        return Ok(ParsedRequest::Shutdown);
+    }
     if first == "gen" {
         let n = toks.next().context("gen needs a token count")?;
         let max_new: usize = n.parse().map_err(|_| anyhow!("bad count '{}'", clip(n)))?;
         if max_new == 0 {
             bail!("gen count must be positive");
         }
+        let mut deadline_ms = None;
+        if let Some(opt) = toks.peek().and_then(|t| t.strip_prefix("deadline=")) {
+            deadline_ms =
+                Some(opt.parse::<u64>().map_err(|_| anyhow!("bad deadline '{}'", clip(opt)))?);
+            toks.next();
+        }
         let tokens = toks.map(parse_id).collect::<Result<Vec<i32>>>()?;
-        return Ok(ParsedRequest::Generate { max_new, tokens });
+        return Ok(ParsedRequest::Generate { max_new, tokens, deadline_ms });
     }
     // bare ids = classify. A leading token that does not even look like a
     // number is a verb we don't know, not a bad id.
@@ -168,31 +230,80 @@ pub fn format_tok_line(index: usize, id: i32) -> String {
 }
 
 impl TcpFrontend {
-    /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and serve.
+    /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and serve
+    /// under the default [`TcpConfig`].
     pub fn start(addr: &str, handle: ServerHandle) -> Result<TcpFrontend> {
+        TcpFrontend::start_with(addr, handle, TcpConfig::default())
+    }
+
+    /// [`Self::start`] with explicit socket policy (timeouts, faults).
+    pub fn start_with(
+        addr: &str,
+        handle: ServerHandle,
+        cfg: TcpConfig,
+    ) -> Result<TcpFrontend> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_accept = stop.clone();
         let accept_join = std::thread::spawn(move || {
             for conn in listener.incoming() {
+                // the shutdown poke connects and is dropped unserved
+                if stop_accept.load(Ordering::Relaxed) {
+                    break;
+                }
                 let Ok(stream) = conn else { break };
                 let h = handle.clone();
+                let c = cfg.clone();
                 std::thread::spawn(move || {
-                    let _ = serve_conn(stream, h);
+                    let _ = serve_conn(stream, h, &c);
                 });
             }
         });
-        Ok(TcpFrontend { addr: local, _accept_join: accept_join })
+        Ok(TcpFrontend { addr: local, stop, accept_join: Some(accept_join) })
     }
 }
 
-fn serve_conn(stream: TcpStream, handle: ServerHandle) -> Result<()> {
+impl Drop for TcpFrontend {
+    /// Stop accepting and join the acceptor: raise the stop flag, then
+    /// poke our own listener with a throwaway connection so the blocking
+    /// `accept` wakes up and observes the flag. In-flight connection
+    /// handlers are unaffected — they finish their clients on their own
+    /// threads.
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// True for the error kinds an expired `SO_RCVTIMEO`/`SO_SNDTIMEO`
+/// surfaces as (platform-dependent: `WouldBlock` on Unix, `TimedOut`
+/// elsewhere).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+fn serve_conn(stream: TcpStream, handle: ServerHandle, cfg: &TcpConfig) -> Result<()> {
+    stream.set_read_timeout(cfg.idle_timeout)?;
+    stream.set_write_timeout(cfg.write_timeout)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e) if is_timeout(&e) => {
+                // idle cap: tell the client why before closing (best
+                // effort — it may be gone entirely)
+                let _ = writer.write_all(error_line(&anyhow!("{IDLE_MSG}")).as_bytes());
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
         }
         let reply = match parse_request(&line) {
             Err(e) => error_line(&e),
@@ -205,20 +316,42 @@ fn serve_conn(stream: TcpStream, handle: ServerHandle) -> Result<()> {
                 ),
                 Err(e) => error_line(&e),
             },
-            Ok(ParsedRequest::Generate { max_new, tokens }) => {
+            Ok(ParsedRequest::Generate { max_new, tokens, deadline_ms }) => {
                 // the streamed reply: one `tok <i> <id>` line per produced
                 // token (flushed immediately — the continuous scheduler
                 // emits them as its ticks complete), then the historical
                 // `tokens=` summary line for compatibility
-                match handle.generate_streaming(tokens, max_new) {
+                let opts = GenOptions {
+                    deadline: deadline_ms.map(Duration::from_millis),
+                    ..GenOptions::default()
+                };
+                match handle.generate_streaming_with(tokens, max_new, opts) {
                     Err(e) => gen_error_line(&e),
-                    Ok((toks, resp)) => {
-                        for (i, id) in toks.iter() {
-                            writer.write_all(format_tok_line(i, id).as_bytes())?;
-                            writer.flush()?;
+                    Ok(sg) => {
+                        for (i, id) in sg.tokens.iter() {
+                            // the injection seam the chaos tests drive:
+                            // drop = this client vanishes mid-stream,
+                            // stall = it stops draining for a while
+                            match cfg.faults.sock_point() {
+                                Some(SockFault::Drop) => {
+                                    sg.cancel.cancel();
+                                    return Ok(());
+                                }
+                                Some(SockFault::Stall(d)) => std::thread::sleep(d),
+                                None => {}
+                            }
+                            let w = writer
+                                .write_all(format_tok_line(i, id).as_bytes())
+                                .and_then(|()| writer.flush());
+                            if let Err(e) = w {
+                                // dead or hopelessly slow client: retire
+                                // the generation, free its pages
+                                sg.cancel.cancel();
+                                return Err(e.into());
+                            }
                         }
                         // the token channel closed: the summary reply is due
-                        match resp.recv() {
+                        match sg.reply.recv() {
                             Ok(Ok(r)) => format_gen_response(
                                 r.gen.as_deref().unwrap_or(&[]),
                                 r.batch_size,
@@ -236,9 +369,14 @@ fn serve_conn(stream: TcpStream, handle: ServerHandle) -> Result<()> {
                 Ok(r) => format!("{}\n", r.info.as_deref().unwrap_or("backend=unknown")),
                 Err(e) => error_line(&e),
             },
+            Ok(ParsedRequest::Shutdown) => match handle.begin_shutdown() {
+                Ok(()) => "ok=draining\n".to_string(),
+                Err(e) => error_line(&e),
+            },
         };
-        writer.write_all(reply.as_bytes())?;
-        writer.flush()?;
+        if let Err(e) = writer.write_all(reply.as_bytes()).and_then(|()| writer.flush()) {
+            return Err(e.into());
+        }
     }
 }
 
@@ -260,13 +398,40 @@ mod tests {
     fn parse_gen_valid() {
         assert_eq!(
             parse_request("gen 5 1 2 3\n").unwrap(),
-            ParsedRequest::Generate { max_new: 5, tokens: vec![1, 2, 3] }
+            ParsedRequest::Generate { max_new: 5, tokens: vec![1, 2, 3], deadline_ms: None }
         );
         // empty prompt is allowed: the model decodes from PAD
         assert_eq!(
             parse_request("gen 2\n").unwrap(),
-            ParsedRequest::Generate { max_new: 2, tokens: vec![] }
+            ParsedRequest::Generate { max_new: 2, tokens: vec![], deadline_ms: None }
         );
+    }
+
+    #[test]
+    fn parse_gen_deadline_option() {
+        assert_eq!(
+            parse_request("gen 5 deadline=250 1 2\n").unwrap(),
+            ParsedRequest::Generate { max_new: 5, tokens: vec![1, 2], deadline_ms: Some(250) }
+        );
+        // deadline with an empty prompt
+        assert_eq!(
+            parse_request("gen 3 deadline=0\n").unwrap(),
+            ParsedRequest::Generate { max_new: 3, tokens: vec![], deadline_ms: Some(0) }
+        );
+        let e = parse_request("gen 5 deadline=soon 1\n").unwrap_err();
+        assert_eq!(e.to_string(), "bad deadline 'soon'");
+        // the option is only recognized right after the count — anywhere
+        // else it is a (bad) token like any other garbage
+        let e = parse_request("gen 5 1 deadline=9\n").unwrap_err();
+        assert_eq!(e.to_string(), "bad token 'deadline=9'");
+    }
+
+    #[test]
+    fn parse_shutdown_valid_and_strict() {
+        assert_eq!(parse_request("shutdown\n").unwrap(), ParsedRequest::Shutdown);
+        assert_eq!(parse_request("  shutdown  \n").unwrap(), ParsedRequest::Shutdown);
+        let e = parse_request("shutdown now\n").unwrap_err();
+        assert_eq!(e.to_string(), "shutdown takes no arguments");
     }
 
     #[test]
@@ -397,6 +562,83 @@ mod tests {
         reader.read_line(&mut l).unwrap();
         assert!(l.starts_with("label="), "got: {l}");
         drop(conn);
+        drop(fe);
+        server.shutdown().unwrap();
+    }
+
+    /// Dropping the frontend joins its acceptor (the shutdown poke): the
+    /// listener is actually closed, so the port refuses new connections.
+    #[test]
+    fn dropping_the_frontend_stops_accepting() {
+        use crate::server::{BatchPolicy, FallbackConfig, Server};
+        let cfg = FallbackConfig { seq_len: 32, d_model: 16, nb: 4, ..Default::default() };
+        let server = Server::start_fallback(cfg, BatchPolicy::default()).unwrap();
+        let fe = TcpFrontend::start("127.0.0.1:0", server.handle.clone()).unwrap();
+        let addr = fe.addr;
+        drop(fe); // blocks until the acceptor thread has exited
+        // the listener is gone: connect now fails (or is reset on first
+        // use when the OS raced us an accept into the dead backlog)
+        let refused = match std::net::TcpStream::connect(addr) {
+            Err(_) => true,
+            Ok(mut s) => {
+                let _ = s.write_all(b"model\n");
+                let mut buf = String::new();
+                BufReader::new(&mut s).read_line(&mut buf).map(|n| n == 0).unwrap_or(true)
+            }
+        };
+        assert!(refused, "acceptor survived the frontend drop");
+        server.shutdown().unwrap();
+    }
+
+    /// An idle connection is closed with the stable one-line reason.
+    #[test]
+    fn idle_connection_gets_the_stable_timeout_line() {
+        use crate::server::{BatchPolicy, FallbackConfig, Server};
+        let cfg = FallbackConfig { seq_len: 32, d_model: 16, nb: 4, ..Default::default() };
+        let server = Server::start_fallback(cfg, BatchPolicy::default()).unwrap();
+        let tcfg = TcpConfig { idle_timeout: Some(Duration::from_millis(50)), ..Default::default() };
+        let fe = TcpFrontend::start_with("127.0.0.1:0", server.handle.clone(), tcfg).unwrap();
+        let conn = std::net::TcpStream::connect(fe.addr).unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut l = String::new();
+        reader.read_line(&mut l).unwrap(); // blocks until the server times us out
+        assert_eq!(l, format!("error={IDLE_MSG}\n"));
+        // then the connection closes for good
+        l.clear();
+        assert_eq!(reader.read_line(&mut l).unwrap(), 0);
+        drop(fe);
+        server.shutdown().unwrap();
+    }
+
+    /// The shutdown verb begins a drain: the reply is `ok=draining` and
+    /// the executor exits on its own (no `Server::shutdown` call needed
+    /// to unblock it).
+    #[test]
+    fn shutdown_verb_drains_the_server() {
+        use crate::server::{BatchPolicy, FallbackConfig, Server};
+        let cfg = FallbackConfig { seq_len: 32, d_model: 16, nb: 4, ..Default::default() };
+        let server = Server::start_fallback(cfg, BatchPolicy::default()).unwrap();
+        let fe = TcpFrontend::start("127.0.0.1:0", server.handle.clone()).unwrap();
+        let mut conn = std::net::TcpStream::connect(fe.addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        conn.write_all(b"shutdown\n").unwrap();
+        let mut l = String::new();
+        reader.read_line(&mut l).unwrap();
+        assert_eq!(l, "ok=draining\n");
+        // the drained executor refuses further work with the stable error
+        conn.write_all(b"gen 3 1 2\n").unwrap();
+        l.clear();
+        reader.read_line(&mut l).unwrap();
+        assert!(
+            l == format!("error={}\n", crate::server::service::SHUTDOWN_MSG)
+                || l.starts_with("error=server "),
+            "got: {l}"
+        );
+        let t0 = std::time::Instant::now();
+        while !server.is_finished() {
+            assert!(t0.elapsed() < Duration::from_secs(10), "drain never finished");
+            std::thread::sleep(Duration::from_millis(5));
+        }
         drop(fe);
         server.shutdown().unwrap();
     }

@@ -348,6 +348,14 @@ impl DecodeState {
     /// `sort_logits` is the caller-maintained raw sort-logit matrix; only
     /// its top-left `(m, m)` corner is read, where `m` is the number of
     /// blocks started — rows for unstarted blocks may hold anything.
+    ///
+    /// Unwind safety (DESIGN.md §Faults): the paged writes below allocate
+    /// on first touch of a block, and the pool's injected allocation
+    /// failure panics *before* any ledger mutation. A state unwound
+    /// mid-step is torn (K/V written, `len` not yet bumped) and must be
+    /// discarded, never stepped again — dropping it returns every page it
+    /// still holds, which is exactly what the serving layer's panic
+    /// containment does.
     pub(crate) fn step_with(
         &mut self,
         q_row: &[f32],

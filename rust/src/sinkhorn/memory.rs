@@ -314,6 +314,63 @@ pub fn admitted_sessions(budget_bytes: usize, session_bytes: usize, slot_cap: us
     by_mem.max(1)
 }
 
+/// The scheduler's paged-admission ledger (DESIGN.md §Scheduler,
+/// §Faults): bytes reserved against the operator's budget by sessions
+/// currently admitted. Faults made the ad-hoc counter version dangerous —
+/// every retirement path (completion, deadline, cancellation, panic
+/// containment, drain abort) must release exactly what admission
+/// reserved, so the pairing is centralized here and underflow (a
+/// double-release or a release never reserved) is a hard assertion
+/// instead of a silent `saturating_sub` that would mask a leak.
+#[derive(Debug, Clone, Copy)]
+pub struct Reservations {
+    budget: usize,
+    reserved: usize,
+}
+
+impl Reservations {
+    /// `budget == 0` means unmetered (every `fits` succeeds).
+    pub fn new(budget: usize) -> Reservations {
+        Reservations { budget, reserved: 0 }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn reserved(&self) -> usize {
+        self.reserved
+    }
+
+    /// Would `need` more bytes stay within budget?
+    pub fn fits(&self, need: usize) -> bool {
+        self.budget == 0 || self.reserved + need <= self.budget
+    }
+
+    /// Charge an admitted session. The scheduler may deliberately reserve
+    /// past budget for its floor-of-one session, so this does not check
+    /// `fits` — the caller decides policy, the ledger just counts.
+    pub fn reserve(&mut self, bytes: usize) {
+        self.reserved += bytes;
+    }
+
+    /// Release a retired session's charge.
+    pub fn release(&mut self, bytes: usize) {
+        assert!(
+            bytes <= self.reserved,
+            "reservation underflow: releasing {bytes} of {} reserved",
+            self.reserved
+        );
+        self.reserved -= bytes;
+    }
+
+    /// True iff every reservation has been released — the chaos battery
+    /// asserts this after each fault schedule drains.
+    pub fn is_empty(&self) -> bool {
+        self.reserved == 0
+    }
+}
+
 /// MXU utilization proxy: fraction of the kernel's MACs that land in
 /// >=8x8x8-shaped matmuls (all of them, for b,d >= 8 — the point is the
 /// tiles are MXU-shaped by construction).
@@ -329,6 +386,29 @@ pub fn mxu_mac_fraction(b: usize, d: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn reservations_pair_reserve_with_release() {
+        let mut r = Reservations::new(100);
+        assert!(r.fits(100));
+        r.reserve(60);
+        assert!(r.fits(40) && !r.fits(41));
+        r.reserve(60); // floor-of-one may exceed budget deliberately
+        assert_eq!(r.reserved(), 120);
+        r.release(60);
+        r.release(60);
+        assert!(r.is_empty());
+        // budget 0 = unmetered
+        assert!(Reservations::new(0).fits(usize::MAX));
+    }
+
+    #[test]
+    #[should_panic(expected = "reservation underflow")]
+    fn reservation_underflow_is_a_hard_error() {
+        let mut r = Reservations::new(0);
+        r.reserve(10);
+        r.release(11);
+    }
 
     #[test]
     fn paper_saving_factor_illustration() {

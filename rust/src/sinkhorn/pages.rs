@@ -39,7 +39,31 @@
 //! of the pages they write next.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::{Arc, Mutex, MutexGuard, Weak};
+
+/// Stable panic payload of an injected allocation failure — surfaces to
+/// clients as `error=page allocation failed` (DESIGN.md §Faults).
+pub const ALLOC_FAIL_MSG: &str = "page allocation failed";
+
+/// Injection seam for allocation faults (DESIGN.md §Faults). A pool built
+/// with [`PagePool::with_faults`] consults this once per [`PagePool::alloc`]
+/// call; `on_alloc() == true` makes that allocation panic with
+/// [`ALLOC_FAIL_MSG`] *before* the ledger is touched, so a caught fault
+/// leaves the pool's accounting exactly as it was. The serving stack's
+/// `FaultPlan` implements this with a deterministic ordinal schedule.
+pub trait AllocFault: Send + Sync {
+    /// Count one allocation event; true iff it should fail.
+    fn on_alloc(&self) -> bool;
+}
+
+/// Lock the pool ledger, tolerating poison: a panic caught by the serving
+/// layer's containment must not make every later alloc/free/stats call
+/// panic in turn. The ledger is updated in straight-line code with no
+/// unwind points between field writes (the fault seam fires before the
+/// lock), so a poisoned guard's data is still consistent.
+fn lock_inner(m: &Mutex<PoolInner>) -> MutexGuard<'_, PoolInner> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Book-keeping behind the pool mutex: the size-keyed free list plus the
 /// in-use/free ledgers the stats report.
@@ -60,6 +84,8 @@ struct PoolInner {
 
 struct PoolShared {
     inner: Mutex<PoolInner>,
+    /// optional allocation-fault seam; `None` in production pools
+    faults: Option<Arc<dyn AllocFault>>,
 }
 
 /// Shared arena of fixed-size f32 pages. Cheap to clone (`Arc` handle);
@@ -96,18 +122,50 @@ impl PoolStats {
     pub fn bytes_in_use(&self) -> usize {
         self.elems_in_use * std::mem::size_of::<f32>()
     }
+
+    /// Ledger conservation: every buffer ever created is either in use or
+    /// on the free list (buffers are never destroyed while the pool
+    /// lives). The chaos battery asserts this after every injected fault
+    /// schedule — a caught panic must not lose or double-count a page.
+    pub fn conserved(&self) -> bool {
+        self.pages_in_use + self.free_pages == self.created
+    }
 }
 
 impl PagePool {
     pub fn new() -> Self {
-        PagePool { shared: Arc::new(PoolShared { inner: Mutex::new(PoolInner::default()) }) }
+        PagePool {
+            shared: Arc::new(PoolShared { inner: Mutex::new(PoolInner::default()), faults: None }),
+        }
+    }
+
+    /// A pool whose every allocation consults `faults` first (DESIGN.md
+    /// §Faults). Production pools use [`PagePool::new`] and skip the seam
+    /// entirely.
+    pub fn with_faults(faults: Arc<dyn AllocFault>) -> Self {
+        PagePool {
+            shared: Arc::new(PoolShared {
+                inner: Mutex::new(PoolInner::default()),
+                faults: Some(faults),
+            }),
+        }
     }
 
     /// Allocate one zeroed page of `elems` f32s, reusing an exact-size
     /// free-list buffer when one exists.
+    ///
+    /// # Panics
+    /// With [`ALLOC_FAIL_MSG`] when an injected fault fires — before the
+    /// ledger lock is taken, so the accounting is untouched and the
+    /// caller's `catch_unwind` sees a conserved pool.
     pub fn alloc(&self, elems: usize) -> Page {
         assert!(elems > 0, "page must hold at least one element");
-        let mut inner = self.shared.inner.lock().unwrap();
+        if let Some(f) = &self.shared.faults {
+            if f.on_alloc() {
+                std::panic::panic_any(ALLOC_FAIL_MSG);
+            }
+        }
+        let mut inner = lock_inner(&self.shared.inner);
         let data = match inner.free.get_mut(&elems).and_then(Vec::pop) {
             Some(mut buf) => {
                 inner.elems_free -= elems;
@@ -127,7 +185,7 @@ impl PagePool {
 
     /// Current ledger snapshot.
     pub fn stats(&self) -> PoolStats {
-        let inner = self.shared.inner.lock().unwrap();
+        let inner = lock_inner(&self.shared.inner);
         PoolStats {
             pages_in_use: inner.pages_in_use,
             elems_in_use: inner.elems_in_use,
@@ -164,7 +222,7 @@ impl Drop for PageBuf {
         if let Some(shared) = self.pool.upgrade() {
             let data = std::mem::take(&mut self.data);
             let elems = data.len();
-            let mut inner = shared.inner.lock().unwrap();
+            let mut inner = lock_inner(&shared.inner);
             inner.pages_in_use -= 1;
             inner.elems_in_use -= elems;
             inner.elems_free += elems;
@@ -334,6 +392,30 @@ mod tests {
         assert_eq!(c.buf_ptr(), ptr, "exact-size free buffer must be recycled");
         assert!(c.as_slice().iter().all(|&x| x == 0.0));
         assert_eq!(pool.stats().created, 2, "recycling must not create");
+    }
+
+    #[test]
+    fn injected_alloc_fault_panics_with_a_conserved_ledger() {
+        struct FailSecond(std::sync::atomic::AtomicUsize);
+        impl AllocFault for FailSecond {
+            fn on_alloc(&self) -> bool {
+                self.0.fetch_add(1, std::sync::atomic::Ordering::Relaxed) == 1
+            }
+        }
+        let pool = PagePool::with_faults(Arc::new(FailSecond(Default::default())));
+        let a = pool.alloc(8); // ordinal 0: fine
+        let err = std::panic::catch_unwind(|| pool.alloc(8)).unwrap_err();
+        assert_eq!(*err.downcast_ref::<&'static str>().unwrap(), ALLOC_FAIL_MSG);
+        // the fault fired before the ledger lock: accounting untouched,
+        // and the pool is still fully usable afterwards
+        let s = pool.stats();
+        assert_eq!((s.pages_in_use, s.created), (1, 1));
+        assert!(s.conserved());
+        let b = pool.alloc(8); // ordinal 2: fine again
+        drop((a, b));
+        let s = pool.stats();
+        assert_eq!(s.pages_in_use, 0);
+        assert!(s.conserved());
     }
 
     #[test]

@@ -38,6 +38,9 @@ REQUIRED_ANCHORS = {
     "Scheduler",
     # paged-KV PR: page-pool decode caches + COW prefix sharing
     "Pages",
+    # fault-tolerance PR: deadlines/cancellation, panic isolation, drain
+    # shutdown, deterministic fault injection
+    "Faults",
 }
 
 BENCH_JSON_RE = re.compile(r"BENCH_([A-Za-z0-9_]+)\.json")

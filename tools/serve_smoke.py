@@ -16,10 +16,19 @@ request retried after A retires must succeed — the admission overflow
 and slot-reuse paths of DESIGN.md §Scheduler observed from outside the
 process.
 
+A third phase (`--chaos`, wired as `make chaos-smoke`) exercises the
+fault-tolerance paths of DESIGN.md §Faults from outside the process: a
+client killed mid-stream must not disturb a concurrent session, the
+`shutdown` verb must reply `ok=draining`, refuse follow-up work with a
+stable error, resolve the still-streaming connection (summary or
+`error=server shutting down`), and the `--wait` process must then exit
+0 on its own — the graceful-drain contract observed end to end.
+
 Needs a Rust toolchain (it runs the built `sinkhorn serve` binary); the
 Makefile target skips loudly when `cargo` is absent, like fmt-check.
 
-Usage: python3 tools/serve_smoke.py
+Usage: python3 tools/serve_smoke.py [--chaos]
+  (no flag: phases 1+2; --chaos: the chaos phase only)
 Env: CARGO (default "cargo").
 Exit code 0 on success, 1 on any failed assertion.
 """
@@ -195,9 +204,84 @@ def phase_over_admission() -> None:
         stop_server(proc)
 
 
+def phase_chaos() -> None:
+    """Kill a client mid-stream, then drive a graceful drain shutdown —
+    the fault-tolerance contract (DESIGN.md §Faults) from outside the
+    process: survivors keep serving, every connection resolves with a
+    stable line, and the drained `--wait` process exits 0 by itself."""
+    # the long seq_len keeps chaos-victim generations in flight while we
+    # act; a small drain window keeps the final wait fast either way
+    proc, port = spawn_server(
+        ["--seq-len", "512", "--max-sessions", "4", "--drain-ms", "500"]
+    )
+    try:
+        # conn A: stream a long generation, read a few tokens, vanish.
+        # The server's next write fails, the session is cancelled, and —
+        # the actual assertion — nobody else notices.
+        a = Conn(port, "conn A")
+        a.send("gen 400 1 2 3")
+        for _ in range(3):
+            reply = a.recv()
+            if not reply.startswith("tok "):
+                fail(f"chaos: conn A expected tok lines, got {reply!r}")
+        a.close()
+        print("[chaos] conn A killed mid-stream")
+
+        # conn B: a full request right through the wreckage
+        b = Conn(port, "conn B")
+        b.send("gen 4 9 8 7")
+        tok_ids, reply = b.drain_gen()
+        check_gen_summary("conn B", tok_ids, reply, 4)
+        b.close()
+
+        # conn C: still streaming when the drain begins
+        c = Conn(port, "conn C")
+        c.send("gen 400 5 5 5")
+        first = c.recv()
+        if not first.startswith("tok 0 "):
+            fail(f"chaos: conn C first reply {first!r}, want 'tok 0 <id>'")
+
+        # conn D: begin the graceful drain, then probe the intake refusal
+        d = Conn(port, "conn D")
+        d.send("shutdown")
+        reply = d.recv()
+        if reply != "ok=draining":
+            fail(f"chaos: shutdown reply {reply!r}, want 'ok=draining'")
+        d.send("gen 4 1 2 3")
+        reply = d.recv()
+        if not (reply == "error=server shutting down" or reply.startswith("error=server ")):
+            fail(f"chaos: post-drain request got {reply!r}, want a stable error")
+        d.close()
+
+        # conn C resolves either way: finished inside the drain window
+        # (tokens= summary) or aborted with the stable shutdown error
+        tok_ids, reply = c.drain_gen(seed=[int(first.split()[2])])
+        if reply.startswith("tokens="):
+            check_gen_summary("conn C", tok_ids, reply, 400)
+        elif reply != "error=server shutting down":
+            fail(f"chaos: conn C resolution {reply!r}")
+        c.close()
+
+        # the drained --wait process exits cleanly on its own
+        try:
+            rc = proc.wait(timeout=60)
+        except subprocess.TimeoutExpired:
+            fail("chaos: drained server never exited")
+        for line in proc.stdout:
+            sys.stdout.write(f"[server] {line}")
+        if rc != 0:
+            fail(f"chaos: drained server exited rc={rc}")
+        print("serve-smoke phase 3: OK (mid-stream kill isolated, drain shutdown clean)")
+    finally:
+        stop_server(proc)
+
+
 def main() -> int:
-    phase_protocol()
-    phase_over_admission()
+    if "--chaos" in sys.argv[1:]:
+        phase_chaos()
+    else:
+        phase_protocol()
+        phase_over_admission()
     print("serve-smoke: OK")
     return 0
 
