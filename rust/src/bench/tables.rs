@@ -765,8 +765,13 @@ fn write_model_json(
     Ok(path)
 }
 
-/// One measured serve cell: one `(offered load, executor mode)` pair.
+/// One measured serve cell: one `(transport, offered load, executor
+/// mode)` triple. `transport` is how the clients reached the scheduler:
+/// `channel` = in-process `ServerHandle` (the executor-only number),
+/// `tcp` = the line protocol over a real socket, `http` = the JSON/SSE
+/// gateway over a real socket (DESIGN.md §Gateway).
 struct ServeCell {
+    transport: &'static str,
     mode: &'static str,
     sessions: usize,
     prompt_len: usize,
@@ -776,6 +781,195 @@ struct ServeCell {
     p50_tok_ms: f64,
     p95_tok_ms: f64,
     occupancy: f64,
+}
+
+/// Parse the TCP `tokens=... batch=... queue_us=... total_us=...`
+/// summary line into (ids, queue_us, total_us).
+fn parse_tcp_summary(line: &str) -> Result<(Vec<i32>, u64, u64)> {
+    let (mut toks, mut queue_us, mut total_us) = (Vec::new(), 0u64, 0u64);
+    anyhow::ensure!(line.starts_with("tokens="), "serve bench tcp client got {line:?}");
+    for part in line.split_whitespace() {
+        if let Some(v) = part.strip_prefix("tokens=") {
+            toks = v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse::<i32>())
+                .collect::<std::result::Result<_, _>>()?;
+        } else if let Some(v) = part.strip_prefix("queue_us=") {
+            queue_us = v.parse()?;
+        } else if let Some(v) = part.strip_prefix("total_us=") {
+            total_us = v.parse()?;
+        }
+    }
+    Ok((toks, queue_us, total_us))
+}
+
+/// Split one SSE payload (`event: <name>\ndata: <json>\n\n`) into the
+/// event name and its data line.
+fn parse_sse_event(text: &str) -> Result<(&str, &str)> {
+    let mut event = None;
+    let mut data = None;
+    for line in text.lines() {
+        if let Some(v) = line.strip_prefix("event: ") {
+            event = Some(v);
+        } else if let Some(v) = line.strip_prefix("data: ") {
+            data = Some(v);
+        }
+    }
+    match (event, data) {
+        (Some(e), Some(d)) => Ok((e, d)),
+        _ => anyhow::bail!("malformed SSE event: {text:?}"),
+    }
+}
+
+/// One bench client over the TCP line protocol: fire `plan` requests
+/// back to back on one connection, gate every reply against the oracle,
+/// and return `(n_tokens, per-token latencies ms, service seconds)` —
+/// the same triple the in-process clients report.
+fn drive_serve_tcp(
+    addr: std::net::SocketAddr,
+    plan: &[(Vec<i32>, usize, Vec<i32>)],
+) -> Result<(usize, Vec<f64>, f64)> {
+    use std::io::{BufRead, BufReader, Write};
+    use std::time::Instant;
+    let mut conn = std::net::TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(conn.try_clone()?);
+    let (mut lat_ms, mut n_tokens, mut service_s) = (Vec::new(), 0usize, 0.0f64);
+    for (p, want_n, want) in plan {
+        let ids = p.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ");
+        conn.write_all(format!("gen {want_n} {ids}\n").as_bytes())?;
+        conn.flush()?;
+        let submit = Instant::now();
+        let mut prev = submit;
+        let mut streamed: Vec<i32> = Vec::new();
+        loop {
+            let mut l = String::new();
+            anyhow::ensure!(reader.read_line(&mut l)? > 0, "tcp stream closed mid-reply");
+            if let Some(rest) = l.strip_prefix("tok ") {
+                let now = Instant::now();
+                lat_ms.push((now - prev).as_secs_f64() * 1e3);
+                prev = now;
+                let id = rest
+                    .split_whitespace()
+                    .nth(1)
+                    .ok_or_else(|| anyhow::anyhow!("bad tok line {l:?}"))?;
+                streamed.push(id.parse()?);
+            } else {
+                let (full, queue_us, total_us) = parse_tcp_summary(l.trim_end())?;
+                anyhow::ensure!(
+                    &full == want,
+                    "serve bench oracle gate: tcp transport diverged from single-request generate"
+                );
+                anyhow::ensure!(streamed == full, "streamed ids must match the summary");
+                n_tokens += full.len();
+                service_s += total_us.saturating_sub(queue_us) as f64 / 1e6;
+                break;
+            }
+        }
+    }
+    Ok((n_tokens, lat_ms, service_s))
+}
+
+/// One bench client over the HTTP/SSE gateway: POST `/v1/generate` per
+/// request on one keep-alive connection, stream the `tok` events, gate
+/// the `done` summary against the oracle; same return triple as
+/// [`drive_serve_tcp`].
+fn drive_serve_http(
+    addr: std::net::SocketAddr,
+    plan: &[(Vec<i32>, usize, Vec<i32>)],
+) -> Result<(usize, Vec<f64>, f64)> {
+    use crate::server::json::{FromJson, GenerateRequest, GenerateSummary, ToJson, TokEvent};
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::time::Instant;
+    let mut conn = std::net::TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(conn.try_clone()?);
+    let (mut lat_ms, mut n_tokens, mut service_s) = (Vec::new(), 0usize, 0.0f64);
+    for (p, want_n, want) in plan {
+        let body = GenerateRequest { max_new: *want_n, tokens: p.clone(), deadline_ms: None }
+            .to_json();
+        conn.write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nContent-Type: application/json\r\n\
+                 Content-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )?;
+        conn.flush()?;
+        let submit = Instant::now();
+        let mut status = String::new();
+        reader.read_line(&mut status)?;
+        anyhow::ensure!(
+            status.starts_with("HTTP/1.1 200"),
+            "serve bench http client got {status:?}"
+        );
+        let (mut chunked, mut content_length) = (false, 0usize);
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            let line = h.trim_end().to_ascii_lowercase();
+            if line.is_empty() {
+                break;
+            }
+            if line.starts_with("transfer-encoding:") && line.contains("chunked") {
+                chunked = true;
+            } else if let Some(v) = line.strip_prefix("content-length:") {
+                content_length = v.trim().parse()?;
+            }
+        }
+        let mut prev = submit;
+        let mut streamed: Vec<i32> = Vec::new();
+        let summary: GenerateSummary = if chunked {
+            let done = loop {
+                let mut sz = String::new();
+                reader.read_line(&mut sz)?;
+                let n = usize::from_str_radix(sz.trim(), 16)?;
+                anyhow::ensure!(n > 0, "sse stream ended without a done event");
+                let mut payload = vec![0u8; n];
+                reader.read_exact(&mut payload)?;
+                let mut crlf = [0u8; 2];
+                reader.read_exact(&mut crlf)?;
+                let text = String::from_utf8(payload)?;
+                let (event, data) = parse_sse_event(&text)?;
+                match event {
+                    "tok" => {
+                        let now = Instant::now();
+                        lat_ms.push((now - prev).as_secs_f64() * 1e3);
+                        prev = now;
+                        streamed.push(TokEvent::from_json(data)?.id);
+                    }
+                    "done" => break GenerateSummary::from_json(data)?,
+                    other => anyhow::bail!("unexpected SSE event '{other}'"),
+                }
+            };
+            // the terminal 0-chunk and its trailing blank line
+            let mut z = String::new();
+            reader.read_line(&mut z)?;
+            anyhow::ensure!(z.trim() == "0", "bad SSE terminator {z:?}");
+            let mut blank = String::new();
+            reader.read_line(&mut blank)?;
+            done
+        } else {
+            // token-free reply (request-batch executors stream nothing):
+            // plain JSON summary, tokens accounted at total/n each
+            let mut body = vec![0u8; content_length];
+            reader.read_exact(&mut body)?;
+            GenerateSummary::from_json(std::str::from_utf8(&body)?)?
+        };
+        anyhow::ensure!(
+            &summary.tokens == want,
+            "serve bench oracle gate: http transport diverged from single-request generate"
+        );
+        if streamed.is_empty() {
+            let per = summary.total_us as f64 / 1e3 / summary.tokens.len().max(1) as f64;
+            lat_ms.extend(std::iter::repeat(per).take(summary.tokens.len()));
+        } else {
+            anyhow::ensure!(streamed == summary.tokens, "streamed ids must match the summary");
+        }
+        n_tokens += summary.tokens.len();
+        service_s += summary.total_us.saturating_sub(summary.queue_us) as f64 / 1e6;
+    }
+    Ok((n_tokens, lat_ms, service_s))
 }
 
 /// `bench serve` — the serving executor under offered load (DESIGN.md
@@ -824,7 +1018,17 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
              seq_len={seq_len} ({slots} slots){}",
             if opts.smoke { " [SMOKE]" } else { "" }
         ),
-        &["mode", "sessions", "prompt", "gen", "tok/s", "p50 tok ms", "p95 tok ms", "occupancy"],
+        &[
+            "transport",
+            "mode",
+            "sessions",
+            "prompt",
+            "gen",
+            "tok/s",
+            "p50 tok ms",
+            "p95 tok ms",
+            "occupancy",
+        ],
     );
     let mut cells = Vec::new();
     for &(n_clients, plen, glen) in loads {
@@ -838,6 +1042,7 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
                 max_sessions: slots,
                 queue_depth: 4096,
                 mem_budget: 0,
+                ..Default::default()
             };
             let server = Server::start_fallback(cfg.clone(), policy)?;
             // precompute every client's prompts, budgets and the oracle
@@ -921,6 +1126,7 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
             let p95 = percentile(&mut lat, 95.0).max(1e-6);
             let occupancy = (service_total / (wall * slots as f64)).max(1e-6);
             t.row(&[
+                "channel".to_string(),
                 mode_name.to_string(),
                 n_clients.to_string(),
                 plen.to_string(),
@@ -931,7 +1137,102 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
                 format!("{occupancy:.3}"),
             ]);
             cells.push(ServeCell {
+                transport: "channel",
                 mode: mode_name,
+                sessions: n_clients,
+                prompt_len: plen,
+                gen_len: glen,
+                slots,
+                toks_per_sec,
+                p50_tok_ms: p50,
+                p95_tok_ms: p95,
+                occupancy,
+            });
+        }
+    }
+    // socket-transport sweep: the same loads pushed through the real
+    // frontends under the continuous scheduler, so the bench captures
+    // gateway overhead (framing, JSON/SSE codec, outbox relay) rather
+    // than executor throughput alone (DESIGN.md §Gateway). Same oracle
+    // gate: every streamed reply must be bit-equal to single-request
+    // generate regardless of which wire carried it.
+    for transport in ["tcp", "http"] {
+        for &(n_clients, plen, glen) in loads {
+            let policy = BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(1),
+                mode: ExecMode::Continuous,
+                max_sessions: slots,
+                queue_depth: 4096,
+                mem_budget: 0,
+                ..Default::default()
+            };
+            let server = Server::start_fallback(cfg.clone(), policy)?;
+            let (addr, _tcp_fe, _http_fe) = if transport == "tcp" {
+                let fe = crate::server::TcpFrontend::start("127.0.0.1:0", server.handle.clone())?;
+                (fe.addr, Some(fe), None)
+            } else {
+                let fe = crate::server::HttpFrontend::start("127.0.0.1:0", server.handle.clone())?;
+                (fe.addr, None, Some(fe))
+            };
+            let expected: Vec<Vec<(Vec<i32>, usize, Vec<i32>)>> = (0..n_clients)
+                .map(|c| {
+                    (0..reqs_per_client)
+                        .map(|r| {
+                            let p: Vec<i32> = (0..plen + (c % 3))
+                                .map(|i| ((i * 7 + c + r) % 64) as i32)
+                                .collect();
+                            let want_n = match (c + r) % 3 {
+                                0 => (glen / 2).max(1),
+                                1 => glen,
+                                _ => glen * 2,
+                            };
+                            let want = oracle.generate(&p, want_n);
+                            (p, want_n, want)
+                        })
+                        .collect()
+                })
+                .collect();
+            let t0 = Instant::now();
+            let results: Vec<(usize, Vec<f64>, f64)> = std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for plan in expected.iter() {
+                    handles.push(scope.spawn(move || {
+                        if transport == "tcp" {
+                            drive_serve_tcp(addr, plan).unwrap()
+                        } else {
+                            drive_serve_http(addr, plan).unwrap()
+                        }
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            drop(_tcp_fe);
+            drop(_http_fe);
+            server.shutdown()?;
+            let total_tokens: usize = results.iter().map(|r| r.0).sum();
+            let mut lat: Vec<f64> = results.iter().flat_map(|r| r.1.iter().copied()).collect();
+            let service_total: f64 = results.iter().map(|r| r.2).sum();
+            anyhow::ensure!(total_tokens > 0, "serve bench produced no tokens ({transport})");
+            let toks_per_sec = total_tokens as f64 / wall;
+            let p50 = percentile(&mut lat, 50.0).max(1e-6);
+            let p95 = percentile(&mut lat, 95.0).max(1e-6);
+            let occupancy = (service_total / (wall * slots as f64)).max(1e-6);
+            t.row(&[
+                transport.to_string(),
+                "continuous".to_string(),
+                n_clients.to_string(),
+                plen.to_string(),
+                glen.to_string(),
+                format!("{toks_per_sec:.0}"),
+                format!("{p50:.3}"),
+                format!("{p95:.3}"),
+                format!("{occupancy:.3}"),
+            ]);
+            cells.push(ServeCell {
+                transport,
+                mode: "continuous",
                 sessions: n_clients,
                 prompt_len: plen,
                 gen_len: glen,
@@ -950,6 +1251,9 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
          continuous = token-level scheduler (session table, one fused (session, layer,\n\
          head) engine pass per tick, admission between ticks, slots freed immediately).\n\
          gen column = base budget; each client mixes 0.5x/1x/2x of it per request.\n\
+         transport: channel = in-process ServerHandle (executor-only); tcp / http =\n\
+         the same continuous loads over real sockets through the line protocol and\n\
+         the JSON/SSE gateway respectively, so the delta vs channel is frontend cost.\n\
          Gate: every reply bit-equal to single-request generate (the scheduler oracle).\n",
     );
     save_result(&opts.artifacts, "serve", &s)?;
@@ -963,7 +1267,8 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
     Ok(s)
 }
 
-/// Emit the serve bench machine-readably: one row per `(load, mode)` with
+/// Emit the serve bench machine-readably: one row per `(transport, load,
+/// mode)` with
 /// throughput, per-token latency percentiles and occupancy, written to
 /// `BENCH_serve.json` at the repo root (the serving-side companion of the
 /// engine/decode/model trajectories).
@@ -972,6 +1277,7 @@ fn write_serve_json(cells: &[ServeCell]) -> Result<std::path::PathBuf> {
     let mut rows = Vec::new();
     for c in cells {
         rows.push(Json::Obj(vec![
+            ("transport".into(), Json::from(c.transport)),
             ("mode".into(), Json::from(c.mode)),
             ("sessions".into(), Json::from(c.sessions)),
             ("prompt_len".into(), Json::from(c.prompt_len)),

@@ -71,7 +71,8 @@ USAGE: sinkhorn <subcommand> [flags]
          [--max-sessions S] [--queue-depth Q] [--mem-budget-mb M]
          [--page-bytes B] [--no-paged] [--no-prefix-share]
          [--gen-deadline-ms D] [--stall-timeout-ms T] [--drain-ms T]
-         [--idle-timeout-ms T] [--request-batch] [--port P] [--wait]
+         [--idle-timeout-ms T] [--request-batch] [--port P]
+         [--http-port P] [--wait]
          (--fallback serves the pure-Rust stack; no artifacts needed.
           The continuous-batching scheduler multiplexes generations
           token by token: --max-sessions caps concurrent decode slots,
@@ -93,7 +94,13 @@ USAGE: sinkhorn <subcommand> [flags]
           lines then the 'tokens=' summary, 'model' describes,
           'shutdown' begins a graceful drain ('ok=draining'; with
           --wait the process exits once drained) — full line protocol
-          in rust/README.md)
+          in rust/README.md.
+          --http-port serves the HTTP/JSON gateway on its own port
+          (POST /v1/classify, POST /v1/generate as SSE 'tok' events +
+          'done' summary, GET /v1/model, GET /v1/schema,
+          POST /v1/shutdown — routes and the status<->error mapping in
+          rust/README.md, DESIGN.md §Gateway); both frontends share one
+          scheduler, so TCP and HTTP traffic batch together)
   inspect --exp NAME
 
   global: --artifacts DIR (default ./artifacts or $SINKHORN_ARTIFACTS)"
@@ -258,6 +265,27 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
             seed as i32,
         )?
     };
+    // optional HTTP/JSON gateway (typed routes + SSE streaming; see
+    // server::http, DESIGN.md §Gateway)
+    let http = match args.opt_str("http-port") {
+        Some(p) => {
+            let http_cfg = sinkhorn::server::HttpConfig {
+                idle_timeout: match args.u64("idle-timeout-ms", 120_000)? {
+                    0 => None,
+                    ms => Some(std::time::Duration::from_millis(ms)),
+                },
+                ..Default::default()
+            };
+            let fe = sinkhorn::server::HttpFrontend::start_with(
+                &format!("127.0.0.1:{p}"),
+                server.handle.clone(),
+                http_cfg,
+            )?;
+            println!("http frontend listening on {}", fe.addr);
+            Some(fe)
+        }
+        None => None,
+    };
     // optional TCP frontend (line protocol; see server::tcp)
     let tcp = match args.opt_str("port") {
         Some(p) => {
@@ -285,6 +313,7 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
         while !server.is_finished() {
             std::thread::sleep(std::time::Duration::from_millis(100));
         }
+        drop(http);
         drop(tcp);
         return server.shutdown();
     }
@@ -319,6 +348,7 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
         let resp = server.handle.classify(toks)?;
         latencies.push(resp.total.as_secs_f64() * 1e3);
     }
+    drop(http);
     drop(tcp);
     let total = t0.elapsed().as_secs_f64();
     if latencies.is_empty() {

@@ -1,0 +1,999 @@
+//! HTTP/1.1 gateway frontend (DESIGN.md §Gateway).
+//!
+//! The standard-tooling front door over the same [`ServerHandle`] the
+//! TCP line protocol serves: typed JSON requests in (`server::json`),
+//! typed JSON responses out, generations streamed as Server-Sent
+//! Events over chunked transfer encoding. The route table:
+//!
+//!   `POST /v1/classify`  {"tokens": [...]}            -> ClassifyResponse
+//!   `POST /v1/generate`  {"max_new", "tokens",
+//!                         "deadline_ms"?}             -> SSE `tok` events,
+//!                                                        then `done` summary
+//!   `GET  /v1/model`                                  -> ModelResponse
+//!   `GET  /v1/schema`                                 -> machine-readable
+//!                                                        route/field listing
+//!   `POST /v1/shutdown`                               -> {"ok":"draining"}
+//!
+//! The table is declared once through the [`routes!`] macro and drives
+//! both dispatch and the `/v1/schema` reply, so the schema can never
+//! drift from what the dispatcher actually serves.
+//!
+//! **Failure plane.** Every stable `error=` message of the fault plane
+//! (DESIGN.md §Faults) maps to a stable HTTP status and a
+//! `{"error": "<same line>"}` JSON body ([`status_for_error`]); the
+//! body text is the *same* stable string the TCP frontend emits, so a
+//! client can match on either transport. Parser rejections are equally
+//! boring: one 4xx with a one-line JSON body, clipped like
+//! [`super::tcp::error_line`], never an echo of hostile bytes. Size
+//! caps bound every dimension of a request *before* buffering it
+//! ([`MAX_REQUEST_LINE`], [`MAX_HEADER_BYTES`], [`HttpConfig::max_body`])
+//! — an oversized claim is refused without allocating the claim.
+//!
+//! **Streaming.** A generate response rides the existing bounded-outbox
+//! stream subscriber (DESIGN.md §Faults): the handler blocks on the
+//! first token, so admission-time failures (busy, immediate deadline)
+//! still get their proper status line; once a token exists the reply
+//! commits to `200` + `text/event-stream` and later failures arrive as
+//! a terminal SSE `error` event carrying the same stable body. Each
+//! event is one chunk, flushed as the scheduler emits it. A client that
+//! vanishes mid-stream fails the next chunk write, which cancels the
+//! generation — the session retires, its pages return, its admission
+//! slot frees (the PR 7 cancel path). The [`FaultPlan::sock_point`]
+//! seam is consulted once per event, exactly like the TCP frontend, so
+//! the chaos battery drives injected disconnects and stalls through
+//! both transports with one schedule.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::faults::{FaultPlan, SockFault, SESSION_PANIC_MSG, STEP_PANIC_MSG};
+use super::json::{
+    ClassifyRequest, ClassifyResponse, ErrorBody, FieldSchema, FromJson, GenerateRequest,
+    GenerateSummary, ModelResponse, RouteSchema, SchemaResponse, ShutdownResponse, ToJson,
+    TokEvent,
+};
+use super::service::{
+    GenOptions, ServerHandle, BUSY_MSG, CANCELLED_MSG, DEADLINE_MSG, SHUTDOWN_MSG, STALL_MSG,
+};
+use super::tcp::IDLE_MSG;
+use crate::sinkhorn::pages::ALLOC_FAIL_MSG;
+
+/// Cap on the request line (`METHOD SP PATH SP VERSION`); longer gets
+/// the stable 431.
+pub const MAX_REQUEST_LINE: usize = 4096;
+/// Cap on one header line and on the total header block.
+pub const MAX_HEADER_LINE: usize = 4096;
+pub const MAX_HEADER_BYTES: usize = 16384;
+/// Cap on the header count; more is a 431.
+pub const MAX_HEADERS: usize = 64;
+
+/// Per-connection policy (the HTTP twin of [`super::tcp::TcpConfig`]).
+#[derive(Clone)]
+pub struct HttpConfig {
+    /// Read silence between requests longer than this closes the
+    /// connection with a 408 `{"error":"idle timeout"}`. `None` = never.
+    pub idle_timeout: Option<Duration>,
+    /// OS-level write timeout; a timed-out write mid-stream is treated
+    /// as a dead client (the generation is cancelled). `None` = block.
+    pub write_timeout: Option<Duration>,
+    /// Request-body cap (`Content-Length` claim or chunked total);
+    /// above it the request is refused with 413 *without reading* the
+    /// body.
+    pub max_body: usize,
+    /// Fault schedule consulted once per SSE event write
+    /// ([`FaultPlan::sock_point`]); [`FaultPlan::none`] in production.
+    pub faults: FaultPlan,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            idle_timeout: Some(Duration::from_secs(120)),
+            write_timeout: Some(Duration::from_secs(30)),
+            max_body: 1 << 20,
+            faults: FaultPlan::none(),
+        }
+    }
+}
+
+/// One parsed request, body fully read (and capped) off the wire.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub keep_alive: bool,
+    pub body: Vec<u8>,
+}
+
+/// A request-level failure: the status to send and the stable one-line
+/// message for the JSON body.
+#[derive(Debug)]
+pub struct HttpError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl HttpError {
+    fn new(status: u16, msg: impl Into<String>) -> HttpError {
+        HttpError { status, msg: msg.into() }
+    }
+}
+
+/// Reason phrases for every status the gateway emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Content Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        499 => "Client Closed Request",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Map a stable scheduler/fault-plane message (DESIGN.md §Faults) to
+/// its HTTP status. Every `error=` line the TCP frontend can emit has a
+/// row here; anything unrecognized is an internal 500 (the same
+/// "never leak internals" posture as [`super::faults::panic_msg`]).
+pub fn status_for_error(msg: &str) -> u16 {
+    match msg {
+        m if m == BUSY_MSG => 429,
+        m if m == DEADLINE_MSG => 504,
+        m if m == CANCELLED_MSG => 499,
+        m if m == STALL_MSG => 408,
+        m if m == IDLE_MSG => 408,
+        m if m == SHUTDOWN_MSG => 503,
+        m if m == STEP_PANIC_MSG || m == SESSION_PANIC_MSG || m == ALLOC_FAIL_MSG => 500,
+        _ => 500,
+    }
+}
+
+/// One stable line for a handler error: outermost message only, capped
+/// at 120 chars — the JSON twin of [`super::tcp::error_line`].
+fn clip_error(e: &anyhow::Error) -> String {
+    let msg = e.to_string();
+    let first = msg.lines().next().unwrap_or("internal error");
+    first.chars().take(120).collect()
+}
+
+/// Render `{"error": ...}` for a handler failure at its mapped status.
+pub fn error_response(e: &anyhow::Error) -> (u16, String) {
+    let msg = clip_error(e);
+    let status = status_for_error(&msg);
+    (status, ErrorBody { error: msg }.to_json())
+}
+
+// ---------------------------------------------------------------------
+// route table
+// ---------------------------------------------------------------------
+
+/// Field descriptor for the `/v1/schema` listing.
+pub struct Field {
+    pub name: &'static str,
+    pub kind: &'static str,
+    pub required: bool,
+}
+
+/// Which handler a route dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Handler {
+    Classify,
+    Generate,
+    Model,
+    Schema,
+    Shutdown,
+}
+
+/// One row of the dispatch table.
+pub struct Route {
+    pub method: &'static str,
+    pub path: &'static str,
+    pub handler: Handler,
+    /// Whether a 200 reply may stream as `text/event-stream`.
+    pub stream: bool,
+    pub request_fields: &'static [Field],
+    pub response_fields: &'static [Field],
+}
+
+/// Declare the dispatch table once: method, path, handler, stream flag
+/// and the request/response field schemas. The same rows drive
+/// [`dispatch`] and the `GET /v1/schema` reply, so the published schema
+/// is the dispatcher, not documentation about it.
+macro_rules! routes {
+    ($($method:literal $path:literal => $handler:ident, stream: $stream:literal,
+        req: [$(($rn:literal, $rk:literal, $rr:literal)),* $(,)?],
+        resp: [$(($pn:literal, $pk:literal)),* $(,)?];)*) => {
+        /// The gateway's route table (see [`routes!`]).
+        pub const ROUTES: &[Route] = &[
+            $(Route {
+                method: $method,
+                path: $path,
+                handler: Handler::$handler,
+                stream: $stream,
+                request_fields: &[$(Field { name: $rn, kind: $rk, required: $rr }),*],
+                response_fields: &[$(Field { name: $pn, kind: $pk, required: true }),*],
+            }),*
+        ];
+    };
+}
+
+routes! {
+    "POST" "/v1/classify" => Classify, stream: false,
+        req: [("tokens", "[i32]", true)],
+        resp: [("label", "i32"), ("batch", "u64"), ("queue_us", "u64"), ("total_us", "u64")];
+    "POST" "/v1/generate" => Generate, stream: true,
+        req: [("max_new", "u64", true), ("tokens", "[i32]", true), ("deadline_ms", "u64", false)],
+        resp: [("tokens", "[i32]"), ("batch", "u64"), ("queue_us", "u64"), ("total_us", "u64")];
+    "GET" "/v1/model" => Model, stream: false,
+        req: [],
+        resp: [("info", "str")];
+    "GET" "/v1/schema" => Schema, stream: false,
+        req: [],
+        resp: [("routes", "[route]")];
+    "POST" "/v1/shutdown" => Shutdown, stream: false,
+        req: [],
+        resp: [("ok", "str")];
+}
+
+/// Build the `/v1/schema` body from the route table.
+pub fn schema_response() -> SchemaResponse {
+    fn fields(fs: &[Field]) -> Vec<FieldSchema> {
+        fs.iter()
+            .map(|f| FieldSchema {
+                name: f.name.into(),
+                kind: f.kind.into(),
+                required: f.required,
+            })
+            .collect()
+    }
+    SchemaResponse {
+        routes: ROUTES
+            .iter()
+            .map(|r| RouteSchema {
+                method: r.method.into(),
+                path: r.path.into(),
+                stream: r.stream,
+                request: fields(r.request_fields),
+                response: fields(r.response_fields),
+            })
+            .collect(),
+    }
+}
+
+/// Resolve `(method, path)` against the table: the route, 405 when the
+/// path exists under another method, 404 otherwise.
+pub fn dispatch(method: &str, path: &str) -> Result<&'static Route, HttpError> {
+    // the path (minus any query string) is matched exactly
+    let path = path.split('?').next().unwrap_or(path);
+    let mut path_seen = false;
+    for r in ROUTES {
+        if r.path == path {
+            if r.method == method {
+                return Ok(r);
+            }
+            path_seen = true;
+        }
+    }
+    if path_seen {
+        Err(HttpError::new(405, format!("method not allowed on {path}")))
+    } else {
+        Err(HttpError::new(404, "no such route"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// wire reading
+// ---------------------------------------------------------------------
+
+/// True for the error kinds an expired read/write timeout surfaces as.
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Read one CRLF- (or LF-) terminated line of at most `cap` bytes.
+/// `Ok(None)` is clean EOF before any byte.
+fn read_line_capped(
+    r: &mut impl BufRead,
+    cap: usize,
+    over_status: u16,
+    over_msg: &str,
+) -> Result<Option<String>, HttpError> {
+    let mut buf = Vec::new();
+    let mut one = [0u8; 1];
+    loop {
+        match r.read(&mut one) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(HttpError::new(400, "truncated request"));
+            }
+            Ok(_) => {
+                if one[0] == b'\n' {
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                    let s = String::from_utf8(buf)
+                        .map_err(|_| HttpError::new(400, "request is not valid UTF-8"))?;
+                    return Ok(Some(s));
+                }
+                buf.push(one[0]);
+                if buf.len() > cap {
+                    return Err(HttpError::new(over_status, over_msg.to_string()));
+                }
+            }
+            Err(e) if is_timeout(&e) => {
+                return Err(HttpError::new(408, IDLE_MSG));
+            }
+            Err(_) => return Err(HttpError::new(400, "truncated request")),
+        }
+    }
+}
+
+/// Read the body declared by `Content-Length` (already validated
+/// against the cap).
+fn read_exact_body(r: &mut impl BufRead, n: usize) -> Result<Vec<u8>, HttpError> {
+    let mut body = vec![0u8; n];
+    r.read_exact(&mut body).map_err(|e| {
+        if is_timeout(&e) {
+            HttpError::new(408, IDLE_MSG)
+        } else {
+            HttpError::new(400, "truncated body")
+        }
+    })?;
+    Ok(body)
+}
+
+/// Read a `Transfer-Encoding: chunked` body: hex-size line, that many
+/// bytes, CRLF, repeated until the 0 chunk (then trailers until a blank
+/// line). Total capped at `max_body`; truncation anywhere is the stable
+/// 400.
+fn read_chunked_body(r: &mut impl BufRead, max_body: usize) -> Result<Vec<u8>, HttpError> {
+    let mut body = Vec::new();
+    loop {
+        let line = read_line_capped(r, MAX_HEADER_LINE, 400, "bad chunk size")?
+            .ok_or_else(|| HttpError::new(400, "truncated chunked body"))?;
+        // chunk extensions (";...") are tolerated and ignored
+        let size_part = line.split(';').next().unwrap_or("").trim();
+        let size = usize::from_str_radix(size_part, 16)
+            .map_err(|_| HttpError::new(400, "bad chunk size"))?;
+        if size == 0 {
+            // trailers: lines until the blank terminator
+            loop {
+                match read_line_capped(r, MAX_HEADER_LINE, 431, "trailer too large")? {
+                    None => return Err(HttpError::new(400, "truncated chunked body")),
+                    Some(l) if l.is_empty() => return Ok(body),
+                    Some(_) => {}
+                }
+            }
+        }
+        if body.len().saturating_add(size) > max_body {
+            return Err(HttpError::new(413, "body too large"));
+        }
+        let start = body.len();
+        body.resize(start + size, 0);
+        r.read_exact(&mut body[start..])
+            .map_err(|_| HttpError::new(400, "truncated chunked body"))?;
+        // the CRLF after the chunk data
+        let mut crlf = [0u8; 2];
+        match r.read_exact(&mut crlf) {
+            Ok(()) if &crlf == b"\r\n" => {}
+            Ok(()) if crlf[0] == b'\n' => {
+                // bare-LF framing: we consumed one byte of the next
+                // size line — reject rather than guess
+                return Err(HttpError::new(400, "bad chunk framing"));
+            }
+            _ => return Err(HttpError::new(400, "truncated chunked body")),
+        }
+    }
+}
+
+/// Read one full request off the connection. `Ok(None)` = the client
+/// closed cleanly between requests. `writer` is only used for the
+/// `Expect: 100-continue` interim reply.
+pub fn read_request(
+    r: &mut impl BufRead,
+    writer: &mut impl Write,
+    cfg: &HttpConfig,
+) -> Result<Option<HttpRequest>, HttpError> {
+    // tolerate blank line(s) before the request line (RFC 9112 §2.2)
+    let line = loop {
+        match read_line_capped(r, MAX_REQUEST_LINE, 431, "request line too long")? {
+            None => return Ok(None),
+            Some(l) if l.is_empty() => continue,
+            Some(l) => break l,
+        }
+    };
+    let mut parts = line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) if !m.is_empty() && !p.is_empty() => {
+            (m.to_string(), p.to_string(), v)
+        }
+        _ => return Err(HttpError::new(400, "malformed request line")),
+    };
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(HttpError::new(400, "malformed request line"));
+    }
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(HttpError::new(505, "unsupported protocol version")),
+    };
+
+    // headers
+    let mut content_length: Option<usize> = None;
+    let mut chunked = false;
+    let mut keep_alive = http11; // 1.1 defaults on, 1.0 defaults off
+    let mut expect_continue = false;
+    let (mut n_headers, mut header_bytes) = (0usize, 0usize);
+    loop {
+        let Some(h) = read_line_capped(r, MAX_HEADER_LINE, 431, "header too large")? else {
+            return Err(HttpError::new(400, "truncated request"));
+        };
+        if h.is_empty() {
+            break;
+        }
+        n_headers += 1;
+        header_bytes += h.len();
+        if n_headers > MAX_HEADERS || header_bytes > MAX_HEADER_BYTES {
+            return Err(HttpError::new(431, "too many headers"));
+        }
+        let Some((name, value)) = h.split_once(':') else {
+            return Err(HttpError::new(400, "malformed header"));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => {
+                let n: u64 = value
+                    .parse()
+                    .map_err(|_| HttpError::new(400, "bad content-length"))?;
+                if n > cfg.max_body as u64 {
+                    // refuse the claim before buffering any of it
+                    return Err(HttpError::new(413, "body too large"));
+                }
+                content_length = Some(n as usize);
+            }
+            "transfer-encoding" => {
+                if value.eq_ignore_ascii_case("chunked") {
+                    chunked = true;
+                } else {
+                    return Err(HttpError::new(400, "unsupported transfer-encoding"));
+                }
+            }
+            "connection" => {
+                if value.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if value.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "expect" => {
+                if value.eq_ignore_ascii_case("100-continue") {
+                    expect_continue = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    if chunked && content_length.is_some() {
+        return Err(HttpError::new(400, "both content-length and chunked"));
+    }
+    if expect_continue && (chunked || content_length.unwrap_or(0) > 0) {
+        let _ = writer.write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
+        let _ = writer.flush();
+    }
+    let body = if chunked {
+        read_chunked_body(r, cfg.max_body)?
+    } else {
+        match content_length {
+            Some(n) => read_exact_body(r, n)?,
+            None => Vec::new(),
+        }
+    };
+    Ok(Some(HttpRequest { method, path, keep_alive, body }))
+}
+
+// ---------------------------------------------------------------------
+// wire writing
+// ---------------------------------------------------------------------
+
+/// Write one complete non-streaming response.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        status_reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+/// Write the SSE stream header: 200, `text/event-stream`, chunked.
+fn write_sse_header(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nTransfer-Encoding: chunked\r\nConnection: keep-alive\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// Write one SSE event (`event: <name>` + `data: <json>`) as a single
+/// chunk, flushed.
+fn write_sse_event(w: &mut impl Write, event: &str, data: &str) -> std::io::Result<()> {
+    let payload = format!("event: {event}\ndata: {data}\n\n");
+    let chunk = format!("{:x}\r\n{payload}\r\n", payload.len());
+    w.write_all(chunk.as_bytes())?;
+    w.flush()
+}
+
+/// Terminate the chunked SSE stream.
+fn write_sse_end(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------
+// frontend
+// ---------------------------------------------------------------------
+
+/// A listening HTTP frontend, lifecycle identical to
+/// [`super::tcp::TcpFrontend`]: `drop` raises the stop flag, pokes its
+/// own listener to unblock `accept`, and joins the acceptor thread.
+pub struct HttpFrontend {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_join: Option<JoinHandle<()>>,
+}
+
+impl HttpFrontend {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve under the default
+    /// [`HttpConfig`].
+    pub fn start(addr: &str, handle: ServerHandle) -> Result<HttpFrontend> {
+        HttpFrontend::start_with(addr, handle, HttpConfig::default())
+    }
+
+    /// [`Self::start`] with explicit policy (timeouts, body cap, faults).
+    pub fn start_with(
+        addr: &str,
+        handle: ServerHandle,
+        cfg: HttpConfig,
+    ) -> Result<HttpFrontend> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("binding {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_accept = stop.clone();
+        let accept_join = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop_accept.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = conn else { break };
+                let h = handle.clone();
+                let c = cfg.clone();
+                std::thread::spawn(move || {
+                    let _ = serve_conn(stream, h, &c);
+                });
+            }
+        });
+        Ok(HttpFrontend { addr: local, stop, accept_join: Some(accept_join) })
+    }
+}
+
+impl Drop for HttpFrontend {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Decode a request body as UTF-8 then as `T`; failures are stable
+/// 400s (the JSON decoder's message is already one clipped line).
+fn body_as<T: FromJson>(body: &[u8]) -> Result<T, HttpError> {
+    let s = std::str::from_utf8(body)
+        .map_err(|_| HttpError::new(400, "body is not valid UTF-8"))?;
+    T::from_json(s).map_err(|e| HttpError::new(400, clip_error(&e)))
+}
+
+fn serve_conn(stream: TcpStream, handle: ServerHandle, cfg: &HttpConfig) -> Result<()> {
+    stream.set_read_timeout(cfg.idle_timeout)?;
+    stream.set_write_timeout(cfg.write_timeout)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    loop {
+        let req = match read_request(&mut reader, &mut writer, cfg) {
+            Ok(None) => return Ok(()), // clean EOF between requests
+            Ok(Some(req)) => req,
+            Err(he) => {
+                // one stable JSON error, then close — a connection that
+                // failed mid-parse has no trustworthy framing left
+                let body = ErrorBody { error: he.msg }.to_json();
+                let _ = write_response(&mut writer, he.status, &body, false);
+                return Ok(());
+            }
+        };
+        let keep = req.keep_alive;
+        match dispatch(&req.method, &req.path) {
+            Err(he) => {
+                let body = ErrorBody { error: he.msg }.to_json();
+                write_response(&mut writer, he.status, &body, keep)?;
+            }
+            Ok(route) => match route.handler {
+                Handler::Classify => match body_as::<ClassifyRequest>(&req.body) {
+                    Err(he) => {
+                        let body = ErrorBody { error: he.msg }.to_json();
+                        write_response(&mut writer, he.status, &body, keep)?;
+                    }
+                    Ok(creq) => match handle.classify(creq.tokens) {
+                        Ok(r) => {
+                            let body = ClassifyResponse {
+                                label: r.label,
+                                batch: r.batch_size,
+                                queue_us: r.queue.as_micros() as u64,
+                                total_us: r.total.as_micros() as u64,
+                            }
+                            .to_json();
+                            write_response(&mut writer, 200, &body, keep)?;
+                        }
+                        Err(e) => {
+                            let (status, body) = error_response(&e);
+                            write_response(&mut writer, status, &body, keep)?;
+                        }
+                    },
+                },
+                Handler::Generate => match body_as::<GenerateRequest>(&req.body) {
+                    Err(he) => {
+                        let body = ErrorBody { error: he.msg }.to_json();
+                        write_response(&mut writer, he.status, &body, keep)?;
+                    }
+                    Ok(greq) => {
+                        if greq.max_new == 0 {
+                            let body =
+                                ErrorBody { error: "gen count must be positive".into() }.to_json();
+                            write_response(&mut writer, 400, &body, keep)?;
+                        } else {
+                            serve_generate(&mut writer, &handle, cfg, greq, keep)?;
+                        }
+                    }
+                },
+                Handler::Model => match handle.model_info() {
+                    Ok(r) => {
+                        let body = ModelResponse {
+                            info: r.info.unwrap_or_else(|| "backend=unknown".into()),
+                        }
+                        .to_json();
+                        write_response(&mut writer, 200, &body, keep)?;
+                    }
+                    Err(e) => {
+                        let (status, body) = error_response(&e);
+                        write_response(&mut writer, status, &body, keep)?;
+                    }
+                },
+                Handler::Schema => {
+                    write_response(&mut writer, 200, &schema_response().to_json(), keep)?;
+                }
+                Handler::Shutdown => match handle.begin_shutdown() {
+                    Ok(()) => {
+                        let body = ShutdownResponse { ok: "draining".into() }.to_json();
+                        write_response(&mut writer, 200, &body, keep)?;
+                    }
+                    Err(e) => {
+                        let (status, body) = error_response(&e);
+                        write_response(&mut writer, status, &body, keep)?;
+                    }
+                },
+            },
+        }
+        if !keep {
+            return Ok(());
+        }
+    }
+}
+
+/// The generate handler: admission failures and token-free terminal
+/// results reply plain JSON at their mapped status; once the first
+/// token arrives the reply commits to SSE (`tok` events, then `done` or
+/// `error`). See the module docs for the streaming failure contract.
+fn serve_generate(
+    writer: &mut TcpStream,
+    handle: &ServerHandle,
+    cfg: &HttpConfig,
+    greq: GenerateRequest,
+    keep: bool,
+) -> Result<()> {
+    let opts = GenOptions {
+        deadline: greq.deadline_ms.map(Duration::from_millis),
+        ..GenOptions::default()
+    };
+    let sg = match handle.generate_streaming_with(greq.tokens, greq.max_new, opts) {
+        Err(e) => {
+            let (status, body) = error_response(&e);
+            write_response(writer, status, &body, keep)?;
+            return Ok(());
+        }
+        Ok(sg) => sg,
+    };
+    // block for the first token: a generation that dies before emitting
+    // anything (immediate deadline, early fault) still gets its proper
+    // status line instead of a 200 stream that only carries an error
+    let first = sg.tokens.recv();
+    match first {
+        Err(_) => {
+            // no tokens ever — the terminal result is the whole reply
+            // (e.g. the request-batch executor, which streams nothing)
+            match sg.reply.recv() {
+                Ok(Ok(r)) => {
+                    let body = summary_json(&r);
+                    write_response(writer, 200, &body, keep)?;
+                }
+                Ok(Err(e)) => {
+                    let (status, body) = error_response(&e);
+                    write_response(writer, status, &body, keep)?;
+                }
+                Err(_) => {
+                    let (status, body) = error_response(&anyhow!("server dropped request"));
+                    write_response(writer, status, &body, keep)?;
+                }
+            }
+            return Ok(());
+        }
+        Ok((i0, id0)) => {
+            write_sse_header(writer)?;
+            let mut pending = Some((i0, id0));
+            loop {
+                let Some((i, id)) = pending.take() else { break };
+                // the same injection seam as the TCP frontend: drop =
+                // this client vanishes mid-stream, stall = it stops
+                // draining for a while (DESIGN.md §Faults)
+                match cfg.faults.sock_point() {
+                    Some(SockFault::Drop) => {
+                        // the simulated client vanished: cancel and tear
+                        // down the connection, exactly like a failed write
+                        sg.cancel.cancel();
+                        return Err(anyhow!("injected socket drop"));
+                    }
+                    Some(SockFault::Stall(d)) => std::thread::sleep(d),
+                    None => {}
+                }
+                let data = TokEvent { index: i, id }.to_json();
+                if let Err(e) = write_sse_event(writer, "tok", &data) {
+                    // dead or hopelessly slow client: cancel so the
+                    // scheduler retires the session and frees its pages
+                    sg.cancel.cancel();
+                    return Err(e.into());
+                }
+                pending = sg.tokens.iter().next();
+            }
+            // token channel closed: the terminal event is due
+            let (event, data) = match sg.reply.recv() {
+                Ok(Ok(r)) => ("done", summary_json(&r)),
+                Ok(Err(e)) => ("error", ErrorBody { error: clip_error(&e) }.to_json()),
+                Err(_) => ("error", ErrorBody { error: "server dropped request".into() }.to_json()),
+            };
+            if let Err(e) = write_sse_event(writer, event, &data) {
+                sg.cancel.cancel();
+                return Err(e.into());
+            }
+            write_sse_end(writer)?;
+        }
+    }
+    Ok(())
+}
+
+fn summary_json(r: &super::service::Response) -> String {
+    GenerateSummary {
+        tokens: r.gen.clone().unwrap_or_default(),
+        batch: r.batch_size,
+        queue_us: r.queue.as_micros() as u64,
+        total_us: r.total.as_micros() as u64,
+    }
+    .to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_stable_error_has_a_status_row() {
+        // the full fault-plane vocabulary (DESIGN.md §Faults) maps, and
+        // no stable message falls through to the 500 catch-all
+        for (msg, want) in [
+            (BUSY_MSG, 429),
+            (DEADLINE_MSG, 504),
+            (CANCELLED_MSG, 499),
+            (STALL_MSG, 408),
+            (IDLE_MSG, 408),
+            (SHUTDOWN_MSG, 503),
+            (STEP_PANIC_MSG, 500),
+            (SESSION_PANIC_MSG, 500),
+            (ALLOC_FAIL_MSG, 500),
+        ] {
+            assert_eq!(status_for_error(msg), want, "{msg}");
+            assert_ne!(status_reason(want), "Unknown", "status {want} needs a reason phrase");
+        }
+        assert_eq!(status_for_error("anything else"), 500);
+    }
+
+    #[test]
+    fn error_response_clips_and_maps() {
+        let (status, body) = error_response(&anyhow!("{}", BUSY_MSG));
+        assert_eq!(status, 429);
+        assert_eq!(body, format!("{{\"error\":\"{BUSY_MSG}\"}}"));
+        // context chains never leak: outermost frame only, capped
+        let chained = anyhow::Error::msg("root /internal/path").context("request failed");
+        let (status, body) = error_response(&chained);
+        assert_eq!((status, body.as_str()), (500, "{\"error\":\"request failed\"}"));
+        let long = anyhow!("{}", "x".repeat(500));
+        let (_, body) = error_response(&long);
+        assert!(body.len() < 140, "echoed too much: {body}");
+    }
+
+    #[test]
+    fn dispatch_routes_405_and_404() {
+        assert_eq!(dispatch("POST", "/v1/classify").unwrap().handler, Handler::Classify);
+        assert_eq!(dispatch("GET", "/v1/model").unwrap().handler, Handler::Model);
+        // query strings are ignored for matching
+        assert_eq!(dispatch("GET", "/v1/schema?pretty=1").unwrap().handler, Handler::Schema);
+        let e = dispatch("GET", "/v1/classify").unwrap_err();
+        assert_eq!(e.status, 405);
+        let e = dispatch("POST", "/v1/frobnicate").unwrap_err();
+        assert_eq!((e.status, e.msg.as_str()), (404, "no such route"));
+    }
+
+    #[test]
+    fn schema_lists_every_route() {
+        let s = schema_response();
+        assert_eq!(s.routes.len(), ROUTES.len());
+        let gen = s.routes.iter().find(|r| r.path == "/v1/generate").unwrap();
+        assert!(gen.stream);
+        assert_eq!(gen.method, "POST");
+        let names: Vec<&str> = gen.request.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["max_new", "tokens", "deadline_ms"]);
+        assert!(!gen.request[2].required, "deadline_ms is optional");
+        // and it round-trips through the typed codec the clients use
+        let enc = s.to_json();
+        let back = SchemaResponse::from_json(&enc).unwrap();
+        assert_eq!(back, s);
+    }
+
+    fn parse_ok(raw: &str) -> HttpRequest {
+        let mut r = std::io::BufReader::new(raw.as_bytes());
+        let mut sink = Vec::new();
+        read_request(&mut r, &mut sink, &HttpConfig::default()).unwrap().unwrap()
+    }
+
+    fn parse_err(raw: &[u8]) -> HttpError {
+        let mut r = std::io::BufReader::new(raw);
+        let mut sink = Vec::new();
+        read_request(&mut r, &mut sink, &HttpConfig::default()).unwrap_err()
+    }
+
+    #[test]
+    fn parses_content_length_and_chunked_bodies() {
+        let req = parse_ok(
+            "POST /v1/classify HTTP/1.1\r\nContent-Length: 14\r\n\r\n{\"tokens\":[1]}",
+        );
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/classify");
+        assert!(req.keep_alive);
+        assert_eq!(req.body, b"{\"tokens\":[1]}");
+
+        let req = parse_ok(
+            "POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n7\r\n{\"token\r\n7\r\ns\":[1]}\r\n0\r\n\r\n",
+        );
+        assert_eq!(req.body, b"{\"tokens\":[1]}");
+
+        // HTTP/1.0 defaults to close; Connection: close overrides 1.1
+        let req = parse_ok("GET /v1/model HTTP/1.0\r\n\r\n");
+        assert!(!req.keep_alive);
+        let req = parse_ok("GET /v1/model HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(!req.keep_alive);
+    }
+
+    #[test]
+    fn malformed_inputs_get_stable_statuses() {
+        assert_eq!(parse_err(b"GARBAGE\r\n\r\n").status, 400);
+        assert_eq!(parse_err(b"GET /too many spaces HTTP/1.1\r\n\r\n").status, 400);
+        assert_eq!(parse_err(b"get /v1/model HTTP/1.1\r\n\r\n").status, 400);
+        assert_eq!(parse_err(b"GET /v1/model SPDY/3\r\n\r\n").status, 505);
+        assert_eq!(parse_err(b"GET /v1/model HTTP/1.1\r\nno colon here\r\n\r\n").status, 400);
+        assert_eq!(
+            parse_err(b"POST /x HTTP/1.1\r\nContent-Length: ten\r\n\r\n").status,
+            400
+        );
+        // truncated: headers never terminated, body shorter than claimed
+        assert_eq!(parse_err(b"GET /v1/model HTTP/1.1\r\nAccept: x\r\n").status, 400);
+        assert_eq!(
+            parse_err(b"POST /x HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort").status,
+            400
+        );
+        // truncated chunked frames
+        assert_eq!(
+            parse_err(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nff\r\nnope").status,
+            400
+        );
+        assert_eq!(
+            parse_err(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nzz\r\n").status,
+            400
+        );
+        // both framings at once
+        assert_eq!(
+            parse_err(
+                b"POST /x HTTP/1.1\r\nContent-Length: 3\r\nTransfer-Encoding: chunked\r\n\r\nabc"
+            )
+            .status,
+            400
+        );
+    }
+
+    #[test]
+    fn size_caps_refuse_before_buffering() {
+        // a 100MB Content-Length claim is refused at the header, 413
+        let e = parse_err(b"POST /x HTTP/1.1\r\nContent-Length: 104857600\r\n\r\n");
+        assert_eq!((e.status, e.msg.as_str()), (413, "body too large"));
+        // an over-long request line is a 431
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_REQUEST_LINE + 10));
+        assert_eq!(parse_err(long.as_bytes()).status, 431);
+        // an oversized header line is a 431
+        let fat = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "b".repeat(MAX_HEADER_LINE + 10));
+        assert_eq!(parse_err(fat.as_bytes()).status, 431);
+        // too many headers is a 431
+        let many = format!(
+            "GET / HTTP/1.1\r\n{}\r\n",
+            (0..MAX_HEADERS + 1).map(|i| format!("X-{i}: v\r\n")).collect::<String>()
+        );
+        assert_eq!(parse_err(many.as_bytes()).status, 431);
+        // an oversized chunked total is a 413 at the cap, not after
+        let chunky = format!(
+            "POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n{:x}\r\n",
+            (1usize << 20) + 1
+        );
+        assert_eq!(parse_err(chunky.as_bytes()).status, 413);
+    }
+
+    #[test]
+    fn clean_eof_is_none_not_an_error() {
+        let mut r = std::io::BufReader::new(&b""[..]);
+        let mut sink = Vec::new();
+        assert!(read_request(&mut r, &mut sink, &HttpConfig::default()).unwrap().is_none());
+        // blank lines before EOF are tolerated (RFC 9112 §2.2)
+        let mut r = std::io::BufReader::new(&b"\r\n\r\n"[..]);
+        assert!(read_request(&mut r, &mut sink, &HttpConfig::default()).unwrap().is_none());
+    }
+
+    #[test]
+    fn expect_continue_gets_the_interim_reply() {
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 2\r\nExpect: 100-continue\r\n\r\nhi";
+        let mut r = std::io::BufReader::new(&raw[..]);
+        let mut sink = Vec::new();
+        let req = read_request(&mut r, &mut sink, &HttpConfig::default()).unwrap().unwrap();
+        assert_eq!(req.body, b"hi");
+        assert_eq!(&sink[..], b"HTTP/1.1 100 Continue\r\n\r\n");
+    }
+}

@@ -1,0 +1,1048 @@
+//! Derive-free typed JSON for the HTTP gateway (DESIGN.md §Gateway).
+//!
+//! The gateway's wire format is hand-rolled in the nanoserde/miniserde
+//! style: every request and response is a *typed struct* with explicit
+//! [`ToJson`]/[`FromJson`] impls — no reflection, no `Value` tree on the
+//! hot path, no derive macros (the offline container carries no extra
+//! crates). This module is distinct from `util::json`, the dynamic
+//! `Json` value enum the bench tables use for file output: the gateway
+//! parses *untrusted network bytes*, so its decoder is strict by
+//! construction:
+//!
+//! * a hard input-size cap ([`MAX_INPUT`]) and nesting-depth cap
+//!   ([`MAX_DEPTH`]) — a hostile body cannot recurse the stack away;
+//! * strict number grammar (no `NaN`/`Infinity` literals, no leading
+//!   zeros or `+`, integer fields reject fractions and exponents,
+//!   floats reject values that overflow to infinity);
+//! * full string escapes (`\uXXXX` with surrogate-pair combining; lone
+//!   surrogates decode to U+FFFD) and rejection of raw control bytes;
+//! * trailing garbage after the document is an error;
+//! * every failure is an `Err` with a stable one-line message — the
+//!   decoder never panics, which the hostile-corpus unit tests pin
+//!   under `catch_unwind` (the same isolation invariant as the
+//!   scheduler's fault plane, DESIGN.md §Faults).
+//!
+//! Unknown object keys are *skipped* (their values are still fully
+//! validated), so clients may send supersets; missing required fields
+//! are stable errors naming the field.
+
+use anyhow::{bail, Result};
+
+/// Hard cap on a JSON document fed to [`FromJson::from_json`]; the HTTP
+/// body caps (`server::http`) are tighter, this is the decoder's own
+/// backstop.
+pub const MAX_INPUT: usize = 1 << 20;
+
+/// Maximum container nesting depth; deeper input is an error, not a
+/// stack overflow.
+pub const MAX_DEPTH: usize = 64;
+
+// ---------------------------------------------------------------------
+// encoder
+// ---------------------------------------------------------------------
+
+/// Append `s` as a JSON string literal (quotes and escapes included).
+pub fn push_json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Append a float. JSON has no non-finite literals, so NaN/±Inf encode
+/// as `null` (the miniserde convention); finite values use Rust's
+/// shortest round-trip formatting.
+pub fn push_json_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        out.push_str(&format!("{v}"));
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// Serialize to a JSON fragment. `to_json` is the whole-document
+/// convenience; `write_json` appends in place (what struct impls call
+/// for their fields).
+pub trait ToJson {
+    fn write_json(&self, out: &mut String);
+
+    fn to_json(&self) -> String {
+        let mut s = String::new();
+        self.write_json(&mut s);
+        s
+    }
+}
+
+impl ToJson for bool {
+    fn write_json(&self, out: &mut String) {
+        out.push_str(if *self { "true" } else { "false" });
+    }
+}
+
+macro_rules! int_to_json {
+    ($($t:ty),*) => {$(
+        impl ToJson for $t {
+            fn write_json(&self, out: &mut String) {
+                out.push_str(&self.to_string());
+            }
+        }
+    )*};
+}
+int_to_json!(i32, i64, u32, u64, usize);
+
+impl ToJson for f64 {
+    fn write_json(&self, out: &mut String) {
+        push_json_f64(out, *self);
+    }
+}
+
+impl ToJson for f32 {
+    fn write_json(&self, out: &mut String) {
+        // f32 -> f64 is exact, so the shortest f64 repr round-trips the
+        // f32 bit pattern through decode + cast
+        push_json_f64(out, f64::from(*self));
+    }
+}
+
+impl ToJson for String {
+    fn write_json(&self, out: &mut String) {
+        push_json_str(out, self);
+    }
+}
+
+impl ToJson for &str {
+    fn write_json(&self, out: &mut String) {
+        push_json_str(out, self);
+    }
+}
+
+impl<T: ToJson> ToJson for Option<T> {
+    fn write_json(&self, out: &mut String) {
+        match self {
+            Some(v) => v.write_json(out),
+            None => out.push_str("null"),
+        }
+    }
+}
+
+impl<T: ToJson> ToJson for Vec<T> {
+    fn write_json(&self, out: &mut String) {
+        out.push('[');
+        for (i, v) in self.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            v.write_json(out);
+        }
+        out.push(']');
+    }
+}
+
+// ---------------------------------------------------------------------
+// decoder
+// ---------------------------------------------------------------------
+
+/// Byte-cursor pull parser over one JSON document. Struct impls consume
+/// exactly one value; [`FromJson::from_json`] wraps a full parse and
+/// rejects trailing bytes.
+pub struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    depth: usize,
+}
+
+impl<'a> Parser<'a> {
+    pub fn new(input: &'a str) -> Result<Parser<'a>> {
+        if input.len() > MAX_INPUT {
+            bail!("json document too large ({} bytes)", input.len());
+        }
+        Ok(Parser { bytes: input.as_bytes(), pos: 0, depth: 0 })
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, want: u8) -> Result<()> {
+        match self.peek() {
+            Some(b) if b == want => {
+                self.pos += 1;
+                Ok(())
+            }
+            Some(b) => bail!("expected '{}' at byte {}, found '{}'", want as char, self.pos, b as char),
+            None => bail!("expected '{}' at byte {}, found end of input", want as char, self.pos),
+        }
+    }
+
+    /// Consume `word` if it is next (after whitespace); `true` on match.
+    fn eat_word(&mut self, word: &str) -> bool {
+        self.skip_ws();
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// After the whole document: only trailing whitespace may remain.
+    pub fn end(&mut self) -> Result<()> {
+        self.skip_ws();
+        if self.pos != self.bytes.len() {
+            bail!("trailing garbage at byte {}", self.pos);
+        }
+        Ok(())
+    }
+
+    pub fn parse_bool(&mut self) -> Result<bool> {
+        if self.eat_word("true") {
+            Ok(true)
+        } else if self.eat_word("false") {
+            Ok(false)
+        } else {
+            bail!("expected boolean at byte {}", self.pos)
+        }
+    }
+
+    /// `true` if the next value is `null` (consumed) — how `Option`
+    /// fields decode.
+    pub fn eat_null(&mut self) -> bool {
+        self.eat_word("null")
+    }
+
+    /// The raw text of one number token, strict JSON grammar:
+    /// `-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?[0-9]+)?`. `NaN`,
+    /// `Infinity`, leading `+`, leading zeros and bare `.5`/`1.` all
+    /// fail here.
+    fn number_token(&mut self) -> Result<&'a str> {
+        self.skip_ws();
+        let start = self.pos;
+        let b = self.bytes;
+        let mut i = self.pos;
+        if b.get(i) == Some(&b'-') {
+            i += 1;
+        }
+        match b.get(i) {
+            Some(b'0') => i += 1,
+            Some(c) if c.is_ascii_digit() => {
+                while b.get(i).is_some_and(|c| c.is_ascii_digit()) {
+                    i += 1;
+                }
+            }
+            _ => bail!("expected number at byte {start}"),
+        }
+        if b.get(i) == Some(&b'.') {
+            i += 1;
+            if !b.get(i).is_some_and(|c| c.is_ascii_digit()) {
+                bail!("bad number at byte {start}: digit must follow '.'");
+            }
+            while b.get(i).is_some_and(|c| c.is_ascii_digit()) {
+                i += 1;
+            }
+        }
+        if matches!(b.get(i), Some(b'e') | Some(b'E')) {
+            i += 1;
+            if matches!(b.get(i), Some(b'+') | Some(b'-')) {
+                i += 1;
+            }
+            if !b.get(i).is_some_and(|c| c.is_ascii_digit()) {
+                bail!("bad number at byte {start}: digit must follow exponent");
+            }
+            while b.get(i).is_some_and(|c| c.is_ascii_digit()) {
+                i += 1;
+            }
+        }
+        self.pos = i;
+        // the token is ASCII by construction, so the slice is valid UTF-8
+        Ok(std::str::from_utf8(&b[start..i]).expect("ascii number token"))
+    }
+
+    pub fn parse_f64(&mut self) -> Result<f64> {
+        let at = self.pos;
+        let tok = self.number_token()?;
+        let v: f64 = tok.parse().map_err(|_| anyhow::anyhow!("bad number at byte {at}"))?;
+        if !v.is_finite() {
+            bail!("number out of range at byte {at}");
+        }
+        Ok(v)
+    }
+
+    pub fn parse_i64(&mut self) -> Result<i64> {
+        let at = self.pos;
+        let tok = self.number_token()?;
+        if tok.bytes().any(|b| matches!(b, b'.' | b'e' | b'E')) {
+            bail!("expected integer at byte {at}");
+        }
+        tok.parse().map_err(|_| anyhow::anyhow!("integer out of range at byte {at}"))
+    }
+
+    pub fn parse_u64(&mut self) -> Result<u64> {
+        let at = self.pos;
+        let v = self.parse_i64()?;
+        u64::try_from(v).map_err(|_| anyhow::anyhow!("expected non-negative integer at byte {at}"))
+    }
+
+    pub fn parse_usize(&mut self) -> Result<usize> {
+        let at = self.pos;
+        let v = self.parse_u64()?;
+        usize::try_from(v).map_err(|_| anyhow::anyhow!("integer out of range at byte {at}"))
+    }
+
+    pub fn parse_i32(&mut self) -> Result<i32> {
+        let at = self.pos;
+        let v = self.parse_i64()?;
+        i32::try_from(v).map_err(|_| anyhow::anyhow!("integer out of range at byte {at}"))
+    }
+
+    /// One string literal, escapes decoded. Surrogate pairs combine;
+    /// a lone surrogate decodes to U+FFFD (never an invalid `char`).
+    pub fn parse_string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(&b) = self.bytes.get(self.pos) else {
+                bail!("unterminated string at byte {}", self.pos);
+            };
+            match b {
+                b'"' => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    let Some(&e) = self.bytes.get(self.pos) else {
+                        bail!("unterminated escape at byte {}", self.pos);
+                    };
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let c = if (0xD800..0xDC00).contains(&hi) {
+                                // high surrogate: combine with a
+                                // following \uDC00..DFFF, else U+FFFD
+                                if self.bytes[self.pos..].starts_with(b"\\u") {
+                                    let save = self.pos;
+                                    self.pos += 2;
+                                    let lo = self.hex4()?;
+                                    if (0xDC00..0xE000).contains(&lo) {
+                                        let cp = 0x10000
+                                            + ((hi - 0xD800) << 10)
+                                            + (lo - 0xDC00);
+                                        char::from_u32(cp).unwrap_or('\u{FFFD}')
+                                    } else {
+                                        self.pos = save;
+                                        '\u{FFFD}'
+                                    }
+                                } else {
+                                    '\u{FFFD}'
+                                }
+                            } else {
+                                char::from_u32(hi).unwrap_or('\u{FFFD}')
+                            };
+                            out.push(c);
+                        }
+                        _ => bail!("bad escape '\\{}' at byte {}", e as char, self.pos - 1),
+                    }
+                }
+                b if b < 0x20 => {
+                    bail!("raw control byte in string at byte {}", self.pos);
+                }
+                _ => {
+                    // copy one UTF-8 scalar (input is a &str, so the
+                    // boundaries are valid by construction)
+                    let len = utf8_len(b);
+                    let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + len])
+                        .expect("parser input is valid UTF-8");
+                    out.push_str(s);
+                    self.pos += len;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let at = self.pos;
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let Some(&b) = self.bytes.get(self.pos) else {
+                bail!("truncated \\u escape at byte {at}");
+            };
+            let d = (b as char).to_digit(16).ok_or_else(|| {
+                anyhow::anyhow!("bad \\u escape at byte {at}")
+            })?;
+            v = v * 16 + d;
+            self.pos += 1;
+        }
+        Ok(v)
+    }
+
+    fn descend(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH}");
+        }
+        Ok(())
+    }
+
+    /// Parse `{...}`, calling `field(self, key)` once per key; the
+    /// callback must consume exactly the key's value. Unknown keys are
+    /// the *callback's* concern — struct impls call [`Self::skip_value`].
+    pub fn parse_object(
+        &mut self,
+        mut field: impl FnMut(&mut Parser<'a>, &str) -> Result<()>,
+    ) -> Result<()> {
+        self.descend()?;
+        self.expect(b'{')?;
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            self.depth -= 1;
+            return Ok(());
+        }
+        loop {
+            let key = self.parse_string()?;
+            self.expect(b':')?;
+            field(self, &key)?;
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    self.depth -= 1;
+                    return Ok(());
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", self.pos),
+            }
+        }
+    }
+
+    /// Parse `[...]`, calling `elem` once per element.
+    pub fn parse_array(&mut self, mut elem: impl FnMut(&mut Parser<'a>) -> Result<()>) -> Result<()> {
+        self.descend()?;
+        self.expect(b'[')?;
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            self.depth -= 1;
+            return Ok(());
+        }
+        loop {
+            elem(self)?;
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    self.depth -= 1;
+                    return Ok(());
+                }
+                _ => bail!("expected ',' or ']' at byte {}", self.pos),
+            }
+        }
+    }
+
+    /// Consume one value of any shape (how unknown fields are skipped)
+    /// — still depth-capped and fully validated.
+    pub fn skip_value(&mut self) -> Result<()> {
+        match self.peek() {
+            Some(b'{') => self.parse_object(|p, _| p.skip_value()),
+            Some(b'[') => self.parse_array(|p| p.skip_value()),
+            Some(b'"') => self.parse_string().map(|_| ()),
+            Some(b't') | Some(b'f') => self.parse_bool().map(|_| ()),
+            Some(b'n') => {
+                if self.eat_null() {
+                    Ok(())
+                } else {
+                    bail!("bad literal at byte {}", self.pos)
+                }
+            }
+            Some(_) => self.parse_f64().map(|_| ()),
+            None => bail!("expected value at byte {}, found end of input", self.pos),
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        b if b < 0x80 => 1,
+        b if b < 0xE0 => 2,
+        b if b < 0xF0 => 3,
+        _ => 4,
+    }
+}
+
+/// Deserialize from a JSON document. `parse_json` consumes one value
+/// mid-stream; `from_json` parses a whole document (rejecting trailing
+/// garbage) and is what the gateway calls on request bodies.
+pub trait FromJson: Sized {
+    fn parse_json(p: &mut Parser) -> Result<Self>;
+
+    fn from_json(input: &str) -> Result<Self> {
+        let mut p = Parser::new(input)?;
+        let v = Self::parse_json(&mut p)?;
+        p.end()?;
+        Ok(v)
+    }
+}
+
+impl FromJson for bool {
+    fn parse_json(p: &mut Parser) -> Result<Self> {
+        p.parse_bool()
+    }
+}
+
+impl FromJson for i32 {
+    fn parse_json(p: &mut Parser) -> Result<Self> {
+        p.parse_i32()
+    }
+}
+
+impl FromJson for i64 {
+    fn parse_json(p: &mut Parser) -> Result<Self> {
+        p.parse_i64()
+    }
+}
+
+impl FromJson for u64 {
+    fn parse_json(p: &mut Parser) -> Result<Self> {
+        p.parse_u64()
+    }
+}
+
+impl FromJson for usize {
+    fn parse_json(p: &mut Parser) -> Result<Self> {
+        p.parse_usize()
+    }
+}
+
+impl FromJson for f64 {
+    fn parse_json(p: &mut Parser) -> Result<Self> {
+        p.parse_f64()
+    }
+}
+
+impl FromJson for f32 {
+    fn parse_json(p: &mut Parser) -> Result<Self> {
+        Ok(p.parse_f64()? as f32)
+    }
+}
+
+impl FromJson for String {
+    fn parse_json(p: &mut Parser) -> Result<Self> {
+        p.parse_string()
+    }
+}
+
+impl<T: FromJson> FromJson for Option<T> {
+    fn parse_json(p: &mut Parser) -> Result<Self> {
+        if p.eat_null() {
+            Ok(None)
+        } else {
+            Ok(Some(T::parse_json(p)?))
+        }
+    }
+}
+
+impl<T: FromJson> FromJson for Vec<T> {
+    fn parse_json(p: &mut Parser) -> Result<Self> {
+        let mut out = Vec::new();
+        p.parse_array(|p| {
+            out.push(T::parse_json(p)?);
+            Ok(())
+        })?;
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// gateway message types
+// ---------------------------------------------------------------------
+
+/// `POST /v1/classify` body: `{"tokens": [1, 2, 3]}`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ClassifyRequest {
+    pub tokens: Vec<i32>,
+}
+
+/// `POST /v1/classify` 200 body.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ClassifyResponse {
+    pub label: i32,
+    pub batch: usize,
+    pub queue_us: u64,
+    pub total_us: u64,
+}
+
+/// `POST /v1/generate` body: `{"max_new": 8, "tokens": [...],
+/// "deadline_ms": 250}` (`deadline_ms` optional, like the TCP
+/// `deadline=<ms>` option — DESIGN.md §Faults).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct GenerateRequest {
+    pub max_new: usize,
+    pub tokens: Vec<i32>,
+    pub deadline_ms: Option<u64>,
+}
+
+/// One streamed token, the `data:` payload of an SSE `tok` event — the
+/// JSON twin of the TCP `tok <i> <id>` line.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TokEvent {
+    pub index: usize,
+    pub id: i32,
+}
+
+/// The generation summary: the `data:` payload of the final SSE `done`
+/// event (or the whole 200 body when the executor streamed nothing —
+/// the request-batch mode).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct GenerateSummary {
+    pub tokens: Vec<i32>,
+    pub batch: usize,
+    pub queue_us: u64,
+    pub total_us: u64,
+}
+
+/// `GET /v1/model` 200 body: the served configuration as the same
+/// `key=value ...` line the TCP `model` verb returns.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ModelResponse {
+    pub info: String,
+}
+
+/// `POST /v1/shutdown` 200 body (`{"ok": "draining"}`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ShutdownResponse {
+    pub ok: String,
+}
+
+/// Every non-200 body: `{"error": "<one stable line>"}` — the JSON twin
+/// of the TCP `error=` line, same clipping policy.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ErrorBody {
+    pub error: String,
+}
+
+/// One field of a route's request or response schema (`GET /v1/schema`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FieldSchema {
+    pub name: String,
+    pub kind: String,
+    pub required: bool,
+}
+
+/// One route of the gateway (`GET /v1/schema`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RouteSchema {
+    pub method: String,
+    pub path: String,
+    pub stream: bool,
+    pub request: Vec<FieldSchema>,
+    pub response: Vec<FieldSchema>,
+}
+
+/// `GET /v1/schema` 200 body: the machine-readable route listing that
+/// load-gen harnesses (wrk/k6/oha) and the conformance tests consume.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SchemaResponse {
+    pub routes: Vec<RouteSchema>,
+}
+
+/// Write one `"key":value` pair, with the leading comma when needed.
+fn field(out: &mut String, first: &mut bool, key: &str, v: &impl ToJson) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    push_json_str(out, key);
+    out.push(':');
+    v.write_json(out);
+}
+
+/// `ToJson` for a field struct: required fields always emitted,
+/// optional (`Option`) fields omitted entirely when `None` — absent and
+/// `null` decode the same.
+macro_rules! to_json_struct {
+    ($name:ident, req: [$($rf:ident),* $(,)?], opt: [$($of:ident),* $(,)?]) => {
+        impl ToJson for $name {
+            fn write_json(&self, out: &mut String) {
+                out.push('{');
+                let mut first = true;
+                $(field(out, &mut first, stringify!($rf), &self.$rf);)*
+                $(if self.$of.is_some() {
+                    field(out, &mut first, stringify!($of), &self.$of);
+                })*
+                let _ = first;
+                out.push('}');
+            }
+        }
+    };
+}
+
+to_json_struct!(ClassifyRequest, req: [tokens], opt: []);
+to_json_struct!(ClassifyResponse, req: [label, batch, queue_us, total_us], opt: []);
+to_json_struct!(GenerateRequest, req: [max_new, tokens], opt: [deadline_ms]);
+to_json_struct!(TokEvent, req: [index, id], opt: []);
+to_json_struct!(GenerateSummary, req: [tokens, batch, queue_us, total_us], opt: []);
+to_json_struct!(ModelResponse, req: [info], opt: []);
+to_json_struct!(ShutdownResponse, req: [ok], opt: []);
+to_json_struct!(ErrorBody, req: [error], opt: []);
+to_json_struct!(FieldSchema, req: [name, kind, required], opt: []);
+to_json_struct!(RouteSchema, req: [method, path, stream, request, response], opt: []);
+to_json_struct!(SchemaResponse, req: [routes], opt: []);
+
+/// `FromJson` for a field struct: required fields must appear, optional
+/// ones default, unknown keys are skipped (values still validated).
+macro_rules! from_json_struct {
+    ($name:ident, req: [$($rf:ident),* $(,)?], opt: [$($of:ident),* $(,)?]) => {
+        impl FromJson for $name {
+            fn parse_json(p: &mut Parser) -> Result<Self> {
+                let mut v = $name::default();
+                #[allow(unused_mut)]
+                let mut missing: Vec<&'static str> = vec![$(stringify!($rf)),*];
+                p.parse_object(|p, key| match key {
+                    $(stringify!($rf) => {
+                        missing.retain(|f| *f != stringify!($rf));
+                        v.$rf = FromJson::parse_json(p)?;
+                        Ok(())
+                    })*
+                    $(stringify!($of) => {
+                        v.$of = FromJson::parse_json(p)?;
+                        Ok(())
+                    })*
+                    _ => p.skip_value(),
+                })?;
+                if let Some(f) = missing.first() {
+                    bail!("{}: missing field '{}'", stringify!($name), f);
+                }
+                Ok(v)
+            }
+        }
+    };
+}
+
+from_json_struct!(ClassifyRequest, req: [tokens], opt: []);
+from_json_struct!(ClassifyResponse, req: [label, batch, queue_us, total_us], opt: []);
+from_json_struct!(GenerateRequest, req: [max_new, tokens], opt: [deadline_ms]);
+from_json_struct!(TokEvent, req: [index, id], opt: []);
+from_json_struct!(GenerateSummary, req: [tokens, batch, queue_us, total_us], opt: []);
+from_json_struct!(ModelResponse, req: [info], opt: []);
+from_json_struct!(ShutdownResponse, req: [ok], opt: []);
+from_json_struct!(ErrorBody, req: [error], opt: []);
+from_json_struct!(FieldSchema, req: [name, kind, required], opt: []);
+from_json_struct!(RouteSchema, req: [method, path, stream, request, response], opt: []);
+from_json_struct!(SchemaResponse, req: [routes], opt: []);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn typed_structs_encode_stably() {
+        assert_eq!(
+            ClassifyRequest { tokens: vec![1, -2, 3] }.to_json(),
+            r#"{"tokens":[1,-2,3]}"#
+        );
+        assert_eq!(
+            GenerateRequest { max_new: 4, tokens: vec![7], deadline_ms: None }.to_json(),
+            r#"{"max_new":4,"tokens":[7]}"#
+        );
+        assert_eq!(
+            GenerateRequest { max_new: 4, tokens: vec![], deadline_ms: Some(250) }.to_json(),
+            r#"{"max_new":4,"tokens":[],"deadline_ms":250}"#
+        );
+        assert_eq!(TokEvent { index: 0, id: -9 }.to_json(), r#"{"index":0,"id":-9}"#);
+        assert_eq!(
+            ErrorBody { error: "deadline exceeded".into() }.to_json(),
+            r#"{"error":"deadline exceeded"}"#
+        );
+    }
+
+    #[test]
+    fn decode_skips_unknown_fields_and_accepts_any_order() {
+        let r = GenerateRequest::from_json(
+            r#"{"tokens":[1,2],"future_knob":{"a":[1,2,{"b":null}]},"max_new":3}"#,
+        )
+        .unwrap();
+        assert_eq!(r, GenerateRequest { max_new: 3, tokens: vec![1, 2], deadline_ms: None });
+        // null and absent decode identically for optional fields
+        let a = GenerateRequest::from_json(r#"{"max_new":1,"tokens":[],"deadline_ms":null}"#);
+        let b = GenerateRequest::from_json(r#"{"max_new":1,"tokens":[]}"#);
+        assert_eq!(a.unwrap(), b.unwrap());
+    }
+
+    #[test]
+    fn decode_rejects_missing_required_fields_by_name() {
+        let e = ClassifyRequest::from_json(r#"{}"#).unwrap_err();
+        assert_eq!(e.to_string(), "ClassifyRequest: missing field 'tokens'");
+        let e = GenerateRequest::from_json(r#"{"tokens":[1]}"#).unwrap_err();
+        assert_eq!(e.to_string(), "GenerateRequest: missing field 'max_new'");
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        for s in [
+            "",
+            "plain",
+            "with \"quotes\" and \\backslash\\",
+            "newline\n tab\t return\r",
+            "control \u{0001}\u{001f} bytes",
+            "unicode: ドキュメント 🚀 ñ",
+            "solidus / stays",
+        ] {
+            let enc = String::from(s).to_json();
+            assert_eq!(String::from_json(&enc).unwrap(), s, "via {enc}");
+        }
+        // escaped-form inputs decode too
+        assert_eq!(String::from_json(r#""\u0041\u00e9\n""#).unwrap(), "Aé\n");
+        // surrogate pair combines; lone surrogate becomes U+FFFD
+        assert_eq!(String::from_json(r#""\ud83d\ude80""#).unwrap(), "🚀");
+        assert_eq!(String::from_json(r#""\ud83d x""#).unwrap(), "\u{FFFD} x");
+        assert_eq!(String::from_json(r#""\udc00""#).unwrap(), "\u{FFFD}");
+    }
+
+    #[test]
+    fn integer_edges_round_trip_and_overflow_rejects() {
+        for v in [i64::MIN, -1, 0, 1, i64::MAX] {
+            assert_eq!(i64::from_json(&v.to_json()).unwrap(), v);
+        }
+        for v in [i32::MIN, i32::MAX] {
+            assert_eq!(i32::from_json(&v.to_json()).unwrap(), v);
+        }
+        assert!(i64::from_json("99999999999999999999").is_err());
+        assert!(i32::from_json("2147483648").is_err());
+        assert!(u64::from_json("-1").is_err());
+        assert!(i64::from_json("1.5").is_err());
+        assert!(i64::from_json("1e3").is_err());
+    }
+
+    #[test]
+    fn float_edges_round_trip_and_nonfinite_encode_null() {
+        for v in [0.0f32, -0.0, 1.5, f32::MIN, f32::MAX, f32::MIN_POSITIVE, 1e-40] {
+            let enc = v.to_json();
+            let back = f32::from_json(&enc).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} via {enc}");
+        }
+        assert_eq!(f32::NAN.to_json(), "null");
+        assert_eq!(f64::INFINITY.to_json(), "null");
+    }
+
+    /// Satellite: encode→decode round-trip identity over randomized
+    /// typed structs — escapes, unicode, integer/f32 edge values and
+    /// nesting, driven by the repo's property harness.
+    #[test]
+    fn fuzz_typed_struct_round_trip() {
+        fn gen_string(g: &mut Gen) -> String {
+            let n = g.usize(0, 12);
+            (0..n)
+                .map(|_| {
+                    match g.usize(0, 6) {
+                        0 => '"',
+                        1 => '\\',
+                        2 => char::from_u32(g.usize(0, 0x20) as u32).unwrap(),
+                        3 => '🚀',
+                        4 => 'é',
+                        _ => char::from_u32(g.usize(0x20, 0x7f) as u32).unwrap(),
+                    }
+                })
+                .collect()
+        }
+        forall(
+            200,
+            0x15_08,
+            |g| {
+                let edge = [i32::MIN, i32::MAX, 0, -1, 7];
+                let toks: Vec<i32> = (0..g.usize(0, 9))
+                    .map(|_| edge[g.usize(0, edge.len())])
+                    .collect();
+                let req = GenerateRequest {
+                    max_new: g.usize(0, 1 << 20),
+                    tokens: toks.clone(),
+                    deadline_ms: if g.usize(0, 2) == 0 {
+                        None
+                    } else {
+                        Some(g.rng.next_u64() >> g.usize(0, 64))
+                    },
+                };
+                let schema = RouteSchema {
+                    method: gen_string(g),
+                    path: gen_string(g),
+                    stream: g.usize(0, 2) == 0,
+                    request: (0..g.usize(0, 4))
+                        .map(|_| FieldSchema {
+                            name: gen_string(g),
+                            kind: gen_string(g),
+                            required: g.usize(0, 2) == 0,
+                        })
+                        .collect(),
+                    response: vec![],
+                };
+                let err = ErrorBody { error: gen_string(g) };
+                (req, schema, err)
+            },
+            |(req, schema, err)| {
+                let back = GenerateRequest::from_json(&req.to_json())
+                    .map_err(|e| format!("req decode: {e}"))?;
+                if back != *req {
+                    return Err(format!("req round-trip: {back:?} != {req:?}"));
+                }
+                let back = RouteSchema::from_json(&schema.to_json())
+                    .map_err(|e| format!("schema decode: {e}"))?;
+                if back != *schema {
+                    return Err(format!("schema round-trip: {back:?} != {schema:?}"));
+                }
+                let back = ErrorBody::from_json(&err.to_json())
+                    .map_err(|e| format!("err decode: {e}"))?;
+                if back != *err {
+                    return Err(format!("err round-trip: {back:?} != {err:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Satellite: the hostile corpus — every malformed input returns
+    /// `Err` (and never panics, pinned under `catch_unwind`, the same
+    /// isolation invariant as the scheduler's fault plane).
+    #[test]
+    fn hostile_corpus_errors_without_panicking() {
+        let deep_arrays = "[".repeat(10_000);
+        let deep_objects = r#"{"a":"#.repeat(10_000);
+        let huge_claim = format!(r#"{{"tokens":[{}"#, "1,".repeat(100));
+        let corpus: Vec<String> = vec![
+            String::new(),
+            "   ".into(),
+            "nul".into(),
+            "NaN".into(),
+            "Infinity".into(),
+            "-Infinity".into(),
+            "nan".into(),
+            "+1".into(),
+            "01".into(),
+            ".5".into(),
+            "1.".into(),
+            "1e".into(),
+            "1e+".into(),
+            "0x10".into(),
+            "1e999".into(),          // overflows f64 to infinity
+            "--1".into(),
+            "tru".into(),
+            "truex".into(),
+            "\"unterminated".into(),
+            "\"bad \\q escape\"".into(),
+            "\"trunc \\u12".into(),
+            "\"raw \u{0}control\"".into(), // raw NUL inside a string
+            "[1,2".into(),
+            "[1,,2]".into(),
+            "[1 2]".into(),
+            "{\"a\" 1}".into(),
+            "{\"a\":1,}".into(),
+            "{\"a\":}".into(),
+            "{1:2}".into(),
+            "{\"tokens\":[]}x".into(), // trailing garbage
+            "[] []".into(),
+            "{} null".into(),
+            deep_arrays,
+            deep_objects,
+            huge_claim,                       // truncated mid-array
+            "\u{1}".into(),
+            "[\"\\ud800\"".into(),
+        ];
+        for input in &corpus {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                (
+                    ClassifyRequest::from_json(input).err().map(|e| e.to_string()),
+                    GenerateRequest::from_json(input).err().map(|e| e.to_string()),
+                    SchemaResponse::from_json(input).err().map(|e| e.to_string()),
+                )
+            }));
+            let head: String = input.chars().take(40).collect();
+            match r {
+                Err(_) => panic!("decoder panicked on {head:?}"),
+                Ok((a, b, c)) => {
+                    assert!(a.is_some(), "ClassifyRequest accepted {head:?}");
+                    assert!(b.is_some(), "GenerateRequest accepted {head:?}");
+                    assert!(c.is_some(), "SchemaResponse accepted {head:?}");
+                }
+            }
+        }
+    }
+
+    /// A 100MB-claimed document is refused by the input cap before any
+    /// allocation proportional to the claim.
+    #[test]
+    fn oversized_document_is_rejected_cheaply() {
+        let body = format!(r#"{{"tokens":[{}]}}"#, "7,".repeat(MAX_INPUT / 2).trim_end_matches(','));
+        assert!(body.len() > MAX_INPUT);
+        let e = ClassifyRequest::from_json(&body).unwrap_err();
+        assert!(e.to_string().starts_with("json document too large"), "{e}");
+    }
+
+    /// Randomized hostile bytes: whatever the input, the decoder
+    /// returns (never panics) — the fuzz twin of the curated corpus.
+    #[test]
+    fn fuzz_random_bytes_never_panic() {
+        forall(
+            300,
+            0xF0_0D,
+            |g| {
+                let n = g.usize(0, 64);
+                // bias toward structural bytes so inputs get past byte 0
+                let alphabet: &[u8] = b"{}[]\",:0123456789.eE+-\\untrfals \n\u{1}";
+                (0..n)
+                    .map(|_| alphabet[g.usize(0, alphabet.len())])
+                    .collect::<Vec<u8>>()
+            },
+            |bytes| {
+                let Ok(s) = std::str::from_utf8(bytes) else {
+                    return Ok(());
+                };
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    let _ = GenerateRequest::from_json(s);
+                    let _ = TokEvent::from_json(s);
+                    let _ = GenerateSummary::from_json(s);
+                }));
+                r.map_err(|_| format!("panicked on {s:?}"))
+            },
+        );
+    }
+
+    #[test]
+    fn depth_cap_is_exact() {
+        // MAX_DEPTH nested arrays parse; one more is an error
+        let ok = format!("{}0{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        let mut p = Parser::new(&ok).unwrap();
+        assert!(p.skip_value().is_ok() && p.end().is_ok());
+        let too_deep = format!("{}0{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let mut p = Parser::new(&too_deep).unwrap();
+        let e = p.skip_value().unwrap_err();
+        assert!(e.to_string().contains("nesting deeper"), "{e}");
+    }
+}

@@ -8,7 +8,9 @@
 //! with memory-budgeted admission control (DESIGN.md §Scheduler). The
 //! PJRT runtime over compiled artifacts (classify only) and the
 //! [`batch::ExecMode::RequestBatch`] escape hatch run the legacy
-//! wave executor instead. TCP line protocol: `rust/README.md`.
+//! wave executor instead. Two frontends serve the same handle: the TCP
+//! line protocol ([`tcp`], `rust/README.md`) and the HTTP/JSON gateway
+//! with SSE token streaming ([`http`] + [`json`], DESIGN.md §Gateway).
 //!
 //! The stack is fault-tolerant by construction (DESIGN.md §Faults):
 //! generations carry deadlines and cancellation tokens, slow clients are
@@ -19,12 +21,15 @@
 pub mod batch;
 pub mod fallback;
 pub mod faults;
+pub mod http;
+pub mod json;
 pub mod service;
 pub mod tcp;
 
 pub use batch::{gather, BatchPolicy, ExecMode};
 pub use fallback::{FallbackConfig, FallbackModel, GenSession, StepOutcome};
 pub use faults::{FaultPlan, FaultSpec, SockFault};
+pub use http::{HttpConfig, HttpFrontend};
 pub use service::{
     CancelToken, GenOptions, Response, Server, ServerHandle, StreamingGen, TokenEvent, BUSY_MSG,
     CANCELLED_MSG, DEADLINE_MSG, SHUTDOWN_MSG, STALL_MSG,

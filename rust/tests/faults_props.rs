@@ -429,6 +429,90 @@ fn tcp_client_disconnect_mid_stream_frees_the_session() {
     server.shutdown().unwrap();
 }
 
+/// Property 4 over the HTTP gateway: an SSE subscriber that vanishes
+/// mid-stream (hard close after the first `tok` event) fails the next
+/// chunk write, which cancels the generation — the session retires, its
+/// paged-cache reservation returns to the pool, its admission slot
+/// frees, and a concurrent HTTP connection is untouched. The outbox
+/// wrapper adds nothing the ledger can leak through.
+#[test]
+fn http_sse_client_disconnect_mid_stream_frees_the_session() {
+    use std::io::{BufRead, BufReader, Read, Write};
+    let model = FallbackModel::new(tiny_cfg()).unwrap();
+    let pool = model.page_pool().clone();
+    // one slot: the vanished client must *release* it or the follow-up
+    // request can never admit — slot release is asserted, not assumed
+    let policy = BatchPolicy {
+        max_sessions: 1,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let server = Server::start_fallback_model(model, policy).unwrap();
+    let fe = sinkhorn::server::HttpFrontend::start("127.0.0.1:0", server.handle.clone()).unwrap();
+
+    let body = r#"{"max_new":25,"tokens":[1,2,3]}"#;
+    let mut dead = std::net::TcpStream::connect(fe.addr).unwrap();
+    dead.write_all(
+        format!(
+            "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let mut reader = BufReader::new(dead.try_clone().unwrap());
+    let mut status = String::new();
+    reader.read_line(&mut status).unwrap();
+    assert!(status.starts_with("HTTP/1.1 200"), "stream must have started: {status:?}");
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        if h.trim_end().is_empty() {
+            break;
+        }
+    }
+    // one full chunk (= one SSE event) proves tokens are flowing
+    let mut sz = String::new();
+    reader.read_line(&mut sz).unwrap();
+    let n = usize::from_str_radix(sz.trim(), 16).unwrap();
+    assert!(n > 0, "first chunk is a tok event");
+    let mut payload = vec![0u8; n];
+    reader.read_exact(&mut payload).unwrap();
+    drop(reader);
+    drop(dead); // hard-close mid-SSE-flush
+
+    // the admission slot frees: a fresh HTTP generate on the only slot
+    // admits and streams to its done event
+    let live_body = r#"{"max_new":3,"tokens":[5,5]}"#;
+    let mut live = std::net::TcpStream::connect(fe.addr).unwrap();
+    live.write_all(
+        format!(
+            "POST /v1/generate HTTP/1.1\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{live_body}",
+            live_body.len()
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let mut raw = Vec::new();
+    BufReader::new(live).read_to_end(&mut raw).unwrap();
+    let text = String::from_utf8_lossy(&raw);
+    assert!(text.starts_with("HTTP/1.1 200"), "survivor got: {text:?}");
+    assert!(text.contains("event: done"), "survivor never finished: {text:?}");
+
+    // and the pages come home: poll the ledger back to zero
+    let t0 = Instant::now();
+    loop {
+        let s = pool.stats();
+        if s.pages_in_use == 0 && s.conserved() {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "session leaked: {s:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    drop(fe);
+    server.shutdown().unwrap();
+}
+
 /// Property 4, injected: a scheduled mid-stream disconnect closes the
 /// connection deterministically at ordinal N; a scheduled stall only
 /// delays. Replayable chaos without killing real sockets.

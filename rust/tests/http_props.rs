@@ -1,0 +1,447 @@
+//! Protocol-conformance battery for the HTTP/JSON gateway (DESIGN.md
+//! §Gateway) — runs with no artifacts and no XLA, in every build. The
+//! contract under test:
+//!
+//! 1. **transport equivalence**: randomized valid requests produce
+//!    bitwise-identical session results whether they ride the TCP line
+//!    protocol or the HTTP gateway — same token ids streamed, same
+//!    summary ids, same classify label — because both frontends are thin
+//!    shells over one `ServerHandle`;
+//! 2. **hostile inputs are boring**: malformed request lines, oversized
+//!    headers and body claims, truncated chunked frames, bad JSON and
+//!    mid-body disconnects each produce exactly one stable 4xx/5xx with
+//!    a one-line `{"error": ...}` JSON body — and the acceptor keeps
+//!    serving afterwards, every time;
+//! 3. **the fault seam is shared**: the same `FaultSpec` sock schedule
+//!    that drives the TCP chaos tests drives SSE streaming — a scheduled
+//!    drop ends the stream at its exact event ordinal, a scheduled stall
+//!    only delays it, and the spent schedule leaves the frontend serving.
+//!
+//! The ledger-conservation twin of this battery (a vanished SSE client
+//! must free pages and admission slot) lives in `faults_props.rs`
+//! alongside the other §Faults properties.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use sinkhorn::server::json::{
+    ClassifyRequest, ClassifyResponse, ErrorBody, FromJson, GenerateRequest, GenerateSummary,
+    SchemaResponse, ToJson, TokEvent,
+};
+use sinkhorn::server::{
+    BatchPolicy, FallbackConfig, FaultPlan, FaultSpec, HttpConfig, HttpFrontend, Server,
+    TcpFrontend, DEADLINE_MSG,
+};
+use sinkhorn::util::prop::{forall, Gen};
+
+/// Tiny deterministic shapes (the same fixture as `faults_props.rs`).
+fn tiny_cfg() -> FallbackConfig {
+    FallbackConfig { seq_len: 32, d_model: 16, nb: 4, prefix_share: false, ..Default::default() }
+}
+
+fn start_server() -> Server {
+    let policy = BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() };
+    Server::start_fallback(tiny_cfg(), policy).unwrap()
+}
+
+/// One parsed HTTP response: status, headers (lowercased names), body
+/// (chunked transfer decoded when present).
+#[derive(Debug)]
+struct RawResponse {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl RawResponse {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    fn error_body(&self) -> ErrorBody {
+        ErrorBody::from_json(std::str::from_utf8(&self.body).unwrap()).unwrap()
+    }
+}
+
+/// Read one full response off `reader` (headers + content-length or
+/// chunked body).
+fn read_response(reader: &mut impl BufRead) -> RawResponse {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    assert!(status_line.starts_with("HTTP/1.1 "), "bad status line: {status_line:?}");
+    let status: u16 = status_line[9..12].parse().unwrap();
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (name, value) = h.split_once(':').unwrap();
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let mut resp = RawResponse { status, headers, body: Vec::new() };
+    if resp.header("transfer-encoding").map(|v| v.contains("chunked")).unwrap_or(false) {
+        loop {
+            let mut sz = String::new();
+            reader.read_line(&mut sz).unwrap();
+            let n = usize::from_str_radix(sz.trim(), 16).unwrap();
+            if n == 0 {
+                let mut blank = String::new();
+                reader.read_line(&mut blank).unwrap();
+                break;
+            }
+            let start = resp.body.len();
+            resp.body.resize(start + n, 0);
+            reader.read_exact(&mut resp.body[start..]).unwrap();
+            let mut crlf = [0u8; 2];
+            reader.read_exact(&mut crlf).unwrap();
+        }
+    } else if let Some(n) = resp.header("content-length") {
+        let n: usize = n.parse().unwrap();
+        resp.body.resize(n, 0);
+        reader.read_exact(&mut resp.body).unwrap();
+    }
+    resp
+}
+
+/// Fire one request on a fresh connection and read the full response.
+fn roundtrip(addr: std::net::SocketAddr, raw: &[u8]) -> RawResponse {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(raw).unwrap();
+    let mut reader = BufReader::new(conn);
+    read_response(&mut reader)
+}
+
+fn post(path: &str, body: &str) -> Vec<u8> {
+    format!(
+        "POST {path} HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Split the chunk-decoded SSE body into (event, data) pairs.
+fn sse_events(body: &[u8]) -> Vec<(String, String)> {
+    let text = std::str::from_utf8(body).unwrap();
+    text.split("\n\n")
+        .filter(|b| !b.is_empty())
+        .map(|block| {
+            let mut event = String::new();
+            let mut data = String::new();
+            for line in block.lines() {
+                if let Some(v) = line.strip_prefix("event: ") {
+                    event = v.to_string();
+                } else if let Some(v) = line.strip_prefix("data: ") {
+                    data = v.to_string();
+                }
+            }
+            (event, data)
+        })
+        .collect()
+}
+
+#[derive(Debug)]
+struct ReqCase {
+    prompt: Vec<i32>,
+    max_new: usize,
+}
+
+fn gen_req(g: &mut Gen) -> ReqCase {
+    let plen = g.usize(1, 7);
+    ReqCase {
+        prompt: (0..plen).map(|_| g.usize(0, 64) as i32).collect(),
+        max_new: g.usize(2, 9),
+    }
+}
+
+/// Property 1: randomized valid requests round-trip bitwise over both
+/// transports — streamed ids, summary ids, and the classify label all
+/// agree, because there is exactly one scheduler behind both wires.
+#[test]
+fn randomized_requests_round_trip_bitwise_vs_tcp() {
+    let server = start_server();
+    let tcp = TcpFrontend::start("127.0.0.1:0", server.handle.clone()).unwrap();
+    let http = HttpFrontend::start("127.0.0.1:0", server.handle.clone()).unwrap();
+    forall(12, 0x177_8, gen_req, |c| {
+        let ids = c.prompt.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ");
+
+        // --- generate over TCP ---
+        let mut conn = TcpStream::connect(tcp.addr).unwrap();
+        conn.write_all(format!("gen {} {ids}\n", c.max_new).as_bytes()).unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut tcp_streamed: Vec<i32> = Vec::new();
+        let tcp_summary: Vec<i32> = loop {
+            let mut l = String::new();
+            reader.read_line(&mut l).unwrap();
+            if let Some(rest) = l.strip_prefix("tok ") {
+                tcp_streamed.push(rest.split_whitespace().nth(1).unwrap().parse().unwrap());
+            } else {
+                let toks = l
+                    .split_whitespace()
+                    .find_map(|p| p.strip_prefix("tokens="))
+                    .ok_or_else(|| format!("tcp summary missing tokens=: {l:?}"))?;
+                break toks.split(',').map(|s| s.parse().unwrap()).collect();
+            }
+        };
+
+        // --- generate over HTTP/SSE ---
+        let body =
+            GenerateRequest { max_new: c.max_new, tokens: c.prompt.clone(), deadline_ms: None }
+                .to_json();
+        let resp = roundtrip(http.addr, &post("/v1/generate", &body));
+        if resp.status != 200 {
+            return Err(format!("http generate got {}: {:?}", resp.status, resp.error_body()));
+        }
+        let events = sse_events(&resp.body);
+        let (last_event, last_data) = events.last().ok_or("empty SSE stream")?;
+        if last_event != "done" {
+            return Err(format!("stream ended with {last_event:?}: {last_data}"));
+        }
+        let http_summary = GenerateSummary::from_json(last_data).map_err(|e| e.to_string())?;
+        let http_streamed: Vec<i32> = events[..events.len() - 1]
+            .iter()
+            .map(|(e, d)| {
+                assert_eq!(e, "tok", "unexpected event in stream");
+                TokEvent::from_json(d).unwrap().id
+            })
+            .collect();
+
+        // bitwise equivalence, across and within transports
+        if tcp_streamed != tcp_summary || http_streamed != http_summary.tokens {
+            return Err("streamed ids diverged from that transport's own summary".into());
+        }
+        if tcp_summary != http_summary.tokens {
+            return Err(format!(
+                "transports diverged: tcp {tcp_summary:?} vs http {:?}",
+                http_summary.tokens
+            ));
+        }
+
+        // --- classify over both ---
+        let mut conn = TcpStream::connect(tcp.addr).unwrap();
+        let full: Vec<i32> = (0..32).map(|i| (i + c.prompt[0]) % 64).collect();
+        let line = full.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ");
+        conn.write_all(format!("{line}\n").as_bytes()).unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut l = String::new();
+        reader.read_line(&mut l).unwrap();
+        let tcp_label: i32 = l
+            .split_whitespace()
+            .find_map(|p| p.strip_prefix("label="))
+            .ok_or_else(|| format!("tcp classify got {l:?}"))?
+            .parse()
+            .unwrap();
+        let creq = ClassifyRequest { tokens: full }.to_json();
+        let resp = roundtrip(http.addr, &post("/v1/classify", &creq));
+        if resp.status != 200 {
+            return Err(format!("http classify got {}", resp.status));
+        }
+        let cresp =
+            ClassifyResponse::from_json(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        if cresp.label != tcp_label {
+            return Err(format!("labels diverged: tcp {tcp_label} vs http {}", cresp.label));
+        }
+        Ok(())
+    });
+    drop(http);
+    drop(tcp);
+    server.shutdown().unwrap();
+}
+
+/// Property 2: every hostile input maps to one stable 4xx/5xx with a
+/// parseable one-line JSON error body — and after the whole corpus the
+/// acceptor still serves a clean request. No wedging, no echoes.
+#[test]
+fn hostile_inputs_yield_stable_errors_and_never_wedge_the_acceptor() {
+    let server = start_server();
+    let http = HttpFrontend::start("127.0.0.1:0", server.handle.clone()).unwrap();
+    let corpus: Vec<(Vec<u8>, u16)> = vec![
+        // malformed request lines
+        (b"GARBAGE\r\n\r\n".to_vec(), 400),
+        (b"GET /too many spaces HTTP/1.1\r\n\r\n".to_vec(), 400),
+        (b"get /v1/model HTTP/1.1\r\n\r\n".to_vec(), 400),
+        (b"GET /v1/model SPDY/3\r\n\r\n".to_vec(), 505),
+        // routing misses
+        (b"GET /v1/frobnicate HTTP/1.1\r\n\r\n".to_vec(), 404),
+        (b"GET /v1/classify HTTP/1.1\r\n\r\n".to_vec(), 405),
+        // oversized dimensions, refused before buffering
+        (
+            format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(8192)).into_bytes(),
+            431,
+        ),
+        (
+            format!("GET /v1/model HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "b".repeat(8192)).into_bytes(),
+            431,
+        ),
+        (b"POST /v1/classify HTTP/1.1\r\nContent-Length: 104857600\r\n\r\n".to_vec(), 413),
+        (
+            b"POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nfffffff\r\n".to_vec(),
+            413,
+        ),
+        // truncated chunked frame (size line, then silence + close)
+        (
+            b"POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nff\r\nshort".to_vec(),
+            400,
+        ),
+        // bad JSON bodies on a well-formed request
+        (post("/v1/classify", "{\"tokens\": [1, 2"), 400),
+        (post("/v1/classify", "not json at all"), 400),
+        (post("/v1/classify", "{}"), 400),
+        (post("/v1/classify", "{\"tokens\":[1]} trailing"), 400),
+        (post("/v1/generate", "{\"max_new\": 0, \"tokens\": [1]}"), 400),
+        // non-UTF-8 body
+        (
+            [&b"POST /v1/classify HTTP/1.1\r\nContent-Length: 4\r\n\r\n"[..], &[0xff, 0xfe, 1, 2]]
+                .concat(),
+            400,
+        ),
+    ];
+    for (raw, want_status) in &corpus {
+        let resp = roundtrip(http.addr, raw);
+        assert_eq!(
+            resp.status,
+            *want_status,
+            "corpus entry {:?}...",
+            String::from_utf8_lossy(&raw[..raw.len().min(40)])
+        );
+        let eb = resp.error_body(); // must parse as the typed error shape
+        assert!(!eb.error.is_empty() && eb.error.len() <= 120, "bad error line: {:?}", eb.error);
+        assert!(!eb.error.contains('\n'), "multi-line error leaked: {:?}", eb.error);
+    }
+
+    // mid-body disconnect: claim bytes, send half, vanish
+    let mut conn = TcpStream::connect(http.addr).unwrap();
+    conn.write_all(b"POST /v1/classify HTTP/1.1\r\nContent-Length: 100\r\n\r\nhalf").unwrap();
+    drop(conn);
+    // mid-headers disconnect
+    let mut conn = TcpStream::connect(http.addr).unwrap();
+    conn.write_all(b"POST /v1/classify HTTP/1.1\r\nContent-").unwrap();
+    drop(conn);
+
+    // the acceptor is untouched: a clean request round-trips
+    let creq = ClassifyRequest { tokens: (0..32).collect() }.to_json();
+    let resp = roundtrip(http.addr, &post("/v1/classify", &creq));
+    assert_eq!(resp.status, 200, "acceptor wedged after hostile corpus");
+    ClassifyResponse::from_json(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    drop(http);
+    server.shutdown().unwrap();
+}
+
+/// Keep-alive conformance: multiple requests ride one connection; a
+/// parse failure mid-connection closes it (no trustworthy framing left)
+/// after exactly one stable error.
+#[test]
+fn keep_alive_serves_sequential_requests_and_closes_on_parse_failure() {
+    let server = start_server();
+    let http = HttpFrontend::start("127.0.0.1:0", server.handle.clone()).unwrap();
+    let mut conn = TcpStream::connect(http.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    // three requests, one connection
+    conn.write_all(b"GET /v1/model HTTP/1.1\r\n\r\n").unwrap();
+    let r1 = read_response(&mut reader);
+    assert_eq!((r1.status, r1.header("connection")), (200, Some("keep-alive")));
+    conn.write_all(b"GET /v1/schema HTTP/1.1\r\n\r\n").unwrap();
+    let r2 = read_response(&mut reader);
+    assert_eq!(r2.status, 200);
+    let schema = SchemaResponse::from_json(std::str::from_utf8(&r2.body).unwrap()).unwrap();
+    assert_eq!(schema.routes.len(), 5, "schema must list every route");
+    let creq = ClassifyRequest { tokens: (0..32).collect() }.to_json();
+    conn.write_all(&post("/v1/classify", &creq)).unwrap();
+    assert_eq!(read_response(&mut reader).status, 200);
+    // then garbage: one stable error with Connection: close, then EOF
+    conn.write_all(b"GARBAGE\r\n\r\n").unwrap();
+    let r4 = read_response(&mut reader);
+    assert_eq!((r4.status, r4.header("connection")), (400, Some("close")));
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "bytes after the terminal error: {rest:?}");
+    drop(http);
+    server.shutdown().unwrap();
+}
+
+/// `deadline_ms` is honored end to end: an already-expired deadline
+/// resolves as the stable 504 with the same `error=` line the TCP
+/// frontend would print — no 200, no SSE header, no stream.
+#[test]
+fn expired_deadline_maps_to_504_before_any_stream_commits() {
+    let server = start_server();
+    let http = HttpFrontend::start("127.0.0.1:0", server.handle.clone()).unwrap();
+    let body = GenerateRequest { max_new: 8, tokens: vec![1, 2, 3], deadline_ms: Some(0) }
+        .to_json();
+    let resp = roundtrip(http.addr, &post("/v1/generate", &body));
+    assert_eq!(resp.status, 504);
+    assert_eq!(resp.header("content-type"), Some("application/json"));
+    assert_eq!(resp.error_body().error, DEADLINE_MSG);
+    // the frontend is still serving
+    let creq = ClassifyRequest { tokens: (0..32).collect() }.to_json();
+    assert_eq!(roundtrip(http.addr, &post("/v1/classify", &creq)).status, 200);
+    drop(http);
+    server.shutdown().unwrap();
+}
+
+/// Property 3: the shared `sock_point` seam, through SSE. A schedule of
+/// `stall@0, drop@2` delays the first event and ends the stream at
+/// exactly the third — the client sees two `tok` events and EOF, never a
+/// `done` event or a chunked terminator. The spent schedule leaves the
+/// next request streaming to completion.
+#[test]
+fn http_injected_sock_faults_close_or_delay_sse_deterministically() {
+    let server = start_server();
+    let spec = FaultSpec {
+        sock_drop: vec![2],
+        sock_stall: vec![0],
+        stall_for: Duration::from_millis(30),
+        ..Default::default()
+    };
+    let cfg = HttpConfig { faults: FaultPlan::from_spec(&spec), ..Default::default() };
+    let http = HttpFrontend::start_with("127.0.0.1:0", server.handle.clone(), cfg).unwrap();
+
+    let body =
+        GenerateRequest { max_new: 10, tokens: vec![1, 2, 3], deadline_ms: None }.to_json();
+    let mut conn = TcpStream::connect(http.addr).unwrap();
+    conn.write_all(&post("/v1/generate", &body)).unwrap();
+    let mut reader = BufReader::new(conn);
+    // status + headers arrive (the stream committed on the first token)
+    let mut status = String::new();
+    reader.read_line(&mut status).unwrap();
+    assert!(status.starts_with("HTTP/1.1 200"), "got {status:?}");
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        if h.trim_end().is_empty() {
+            break;
+        }
+    }
+    // then raw chunks until the injected drop severs the connection
+    let mut raw = Vec::new();
+    reader.read_to_end(&mut raw).unwrap();
+    let mut events = Vec::new();
+    let mut rest = &raw[..];
+    while let Some(nl) = rest.iter().position(|&b| b == b'\n') {
+        let size_line = std::str::from_utf8(&rest[..nl]).unwrap().trim();
+        let Ok(n) = usize::from_str_radix(size_line, 16) else { break };
+        assert_ne!(n, 0, "terminator must not arrive after a drop");
+        if rest.len() < nl + 1 + n + 2 {
+            break; // chunk truncated by the drop — acceptable tail
+        }
+        events.push(String::from_utf8_lossy(&rest[nl + 1..nl + 1 + n]).to_string());
+        rest = &rest[nl + 1 + n + 2..];
+    }
+    assert_eq!(events.len(), 2, "drop at ordinal 2 ends the stream: {events:?}");
+    assert!(
+        events.iter().all(|e| e.starts_with("event: tok\n")),
+        "only tok events before the drop: {events:?}"
+    );
+
+    // the schedule is spent: a fresh request streams to its done event
+    let body = GenerateRequest { max_new: 4, tokens: vec![1, 2, 3], deadline_ms: None }.to_json();
+    let resp = roundtrip(http.addr, &post("/v1/generate", &body));
+    assert_eq!(resp.status, 200);
+    let events = sse_events(&resp.body);
+    assert_eq!(events.last().unwrap().0, "done", "events: {events:?}");
+    drop(http);
+    server.shutdown().unwrap();
+}

@@ -65,6 +65,7 @@ CELL_SCHEMAS = {
         "ns_per_iter": "num",
     },
     "serve": {
+        "transport": "str",
         "mode": "str",
         "sessions": "int",
         "prompt_len": "int",

@@ -41,6 +41,9 @@ REQUIRED_ANCHORS = {
     # fault-tolerance PR: deadlines/cancellation, panic isolation, drain
     # shutdown, deterministic fault injection
     "Faults",
+    # HTTP gateway PR: typed JSON routes + SSE streaming over the
+    # scheduler, status mapping for every stable error
+    "Gateway",
 }
 
 BENCH_JSON_RE = re.compile(r"BENCH_([A-Za-z0-9_]+)\.json")

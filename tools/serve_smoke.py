@@ -16,6 +16,14 @@ request retried after A retires must succeed — the admission overflow
 and slot-reuse paths of DESIGN.md §Scheduler observed from outside the
 process.
 
+A fourth phase drives the HTTP/JSON gateway (DESIGN.md §Gateway) over a
+raw socket on a capacity-one server: a typed classify POST, the
+`/v1/schema` route listing, stable JSON error bodies for a bad route and
+a zero-budget generate, an SSE generate abandoned after its first `tok`
+event (the client vanishes; the server must cancel the generation and
+free the only slot — proven by the identical retry succeeding), and the
+`/v1/shutdown` route, after which the `--wait` process must exit 0.
+
 A third phase (`--chaos`, wired as `make chaos-smoke`) exercises the
 fault-tolerance paths of DESIGN.md §Faults from outside the process: a
 client killed mid-stream must not disturb a concurrent session, the
@@ -28,10 +36,11 @@ Needs a Rust toolchain (it runs the built `sinkhorn serve` binary); the
 Makefile target skips loudly when `cargo` is absent, like fmt-check.
 
 Usage: python3 tools/serve_smoke.py [--chaos]
-  (no flag: phases 1+2; --chaos: the chaos phase only)
+  (no flag: phases 1+2+4; --chaos: the chaos phase only)
 Env: CARGO (default "cargo").
 Exit code 0 on success, 1 on any failed assertion.
 """
+import json
 import os
 import re
 import socket
@@ -43,6 +52,7 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 CARGO = os.environ.get("CARGO", "cargo")
 ADDR_RE = re.compile(r"tcp frontend listening on 127\.0\.0\.1:(\d+)")
+HTTP_ADDR_RE = re.compile(r"http frontend listening on 127\.0\.0\.1:(\d+)")
 BUSY_LINE = "busy=generation queue full"
 
 
@@ -51,8 +61,10 @@ def fail(msg: str) -> None:
     sys.exit(1)
 
 
-def spawn_server(extra_flags):
-    """Start `serve --fallback` on an ephemeral port; return (proc, port)."""
+def spawn_server(extra_flags, want_http=False):
+    """Start `serve --fallback` on an ephemeral port; return
+    (proc, tcp_port, http_port). `http_port` is None unless `want_http`
+    (pass `--http-port 0` in `extra_flags` to get one)."""
     cmd = [
         CARGO, "run", "--release", "--manifest-path", str(ROOT / "rust" / "Cargo.toml"),
         "--", "serve", "--fallback", "--port", "0", "--wait",
@@ -62,6 +74,7 @@ def spawn_server(extra_flags):
         cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, cwd=ROOT
     )
     deadline = time.time() + 600  # first run may compile
+    ports = {}
     while time.time() < deadline:
         line = proc.stdout.readline()
         if not line:
@@ -69,8 +82,13 @@ def spawn_server(extra_flags):
         sys.stdout.write(f"[server] {line}")
         m = ADDR_RE.search(line)
         if m:
-            return proc, int(m.group(1))
-    fail("server never announced its TCP port")
+            ports["tcp"] = int(m.group(1))
+        m = HTTP_ADDR_RE.search(line)
+        if m:
+            ports["http"] = int(m.group(1))
+        if "tcp" in ports and ("http" in ports or not want_http):
+            return proc, ports["tcp"], ports.get("http")
+    fail("server never announced its listening port(s)")
 
 
 def stop_server(proc) -> None:
@@ -127,7 +145,7 @@ def check_gen_summary(tag: str, tok_ids, summary: str, want_n: int) -> None:
 
 def phase_protocol() -> None:
     """Classify, streamed gen, model info, and the stable error replies."""
-    proc, port = spawn_server(["--seq-len", "32", "--max-sessions", "4"])
+    proc, port, _ = spawn_server(["--seq-len", "32", "--max-sessions", "4"])
     try:
         c = Conn(port, "client")
 
@@ -169,7 +187,9 @@ def phase_over_admission() -> None:
     identical retry must succeed once the slot retires."""
     # capacity one, no wait queue; the long seq_len gives conn A a
     # generation that outlives the busy-probe round trip by a wide margin
-    proc, port = spawn_server(["--seq-len", "512", "--max-sessions", "1", "--queue-depth", "0"])
+    proc, port, _ = spawn_server(
+        ["--seq-len", "512", "--max-sessions", "1", "--queue-depth", "0"]
+    )
     try:
         a = Conn(port, "conn A")
         b = Conn(port, "conn B")
@@ -211,7 +231,7 @@ def phase_chaos() -> None:
     stable line, and the drained `--wait` process exits 0 by itself."""
     # the long seq_len keeps chaos-victim generations in flight while we
     # act; a small drain window keeps the final wait fast either way
-    proc, port = spawn_server(
+    proc, port, _ = spawn_server(
         ["--seq-len", "512", "--max-sessions", "4", "--drain-ms", "500"]
     )
     try:
@@ -276,12 +296,154 @@ def phase_chaos() -> None:
         stop_server(proc)
 
 
+def http_roundtrip(port: int, method: str, path: str, body=None, timeout=120):
+    """One raw-socket HTTP exchange with `Connection: close`; returns
+    (status, headers, body bytes) with any chunked framing decoded."""
+    s = socket.create_connection(("127.0.0.1", port), timeout=timeout)
+    payload = (body or "").encode()
+    req = f"{method} {path} HTTP/1.1\r\nConnection: close\r\n"
+    if body is not None:
+        req += f"Content-Type: application/json\r\nContent-Length: {len(payload)}\r\n"
+    req += "\r\n"
+    s.sendall(req.encode() + payload)
+    raw = b""
+    while True:
+        chunk = s.recv(65536)
+        if not chunk:
+            break
+        raw += chunk
+    s.close()
+    head, _, rest = raw.partition(b"\r\n\r\n")
+    lines = head.decode().split("\r\n")
+    status = int(lines[0].split()[1])
+    headers = {}
+    for h in lines[1:]:
+        name, _, value = h.partition(":")
+        headers[name.strip().lower()] = value.strip()
+    if headers.get("transfer-encoding") == "chunked":
+        decoded = b""
+        while rest:
+            szline, _, rest = rest.partition(b"\r\n")
+            n = int(szline.split(b";")[0], 16)
+            if n == 0:
+                break
+            decoded += rest[:n]
+            rest = rest[n + 2:]
+        return status, headers, decoded
+    return status, headers, rest
+
+
+def sse_events(body: bytes):
+    """Split a chunk-decoded SSE body into (event, parsed-json) pairs."""
+    out = []
+    for block in body.decode().split("\n\n"):
+        if not block:
+            continue
+        event, data = "", ""
+        for line in block.splitlines():
+            if line.startswith("event: "):
+                event = line[len("event: "):]
+            elif line.startswith("data: "):
+                data = line[len("data: "):]
+        out.append((event, json.loads(data)))
+    return out
+
+
+def phase_http() -> None:
+    """Drive the HTTP/JSON gateway over a raw socket: typed routes,
+    stable JSON errors, an abandoned SSE stream that must free the only
+    admission slot (the PR cancel path), and route-driven shutdown."""
+    proc, _tcp, port = spawn_server(
+        ["--seq-len", "512", "--max-sessions", "1", "--drain-ms", "500", "--http-port", "0"],
+        want_http=True,
+    )
+    try:
+        # classify: typed request in, typed response out
+        status, _, body = http_roundtrip(
+            port, "POST", "/v1/classify", json.dumps({"tokens": [4, 8, 15, 16, 23, 42]})
+        )
+        if status != 200 or "label" not in json.loads(body):
+            fail(f"http classify: status {status}, body {body!r}")
+        print("[http] classify OK")
+
+        # schema: the published table matches the routes this phase uses
+        status, _, body = http_roundtrip(port, "GET", "/v1/schema")
+        routes = {(r["method"], r["path"]) for r in json.loads(body)["routes"]}
+        need = {("POST", "/v1/classify"), ("POST", "/v1/generate"), ("GET", "/v1/model"),
+                ("GET", "/v1/schema"), ("POST", "/v1/shutdown")}
+        if status != 200 or not need <= routes:
+            fail(f"http schema: status {status}, routes {routes}")
+        print("[http] schema OK")
+
+        # stable JSON error bodies: bad route, zero-budget generate
+        status, _, body = http_roundtrip(port, "GET", "/v1/frobnicate")
+        if status != 404 or json.loads(body)["error"] != "no such route":
+            fail(f"http 404: status {status}, body {body!r}")
+        status, _, body = http_roundtrip(
+            port, "POST", "/v1/generate", json.dumps({"max_new": 0, "tokens": [1]})
+        )
+        if status != 400 or json.loads(body)["error"] != "gen count must be positive":
+            fail(f"http zero-budget: status {status}, body {body!r}")
+        print("[http] stable error bodies OK")
+
+        # SSE generate, abandoned: read the first tok event, vanish. The
+        # server's next chunk write fails, the generation is cancelled,
+        # and — the assertion — the *only* slot frees for the retry.
+        s = socket.create_connection(("127.0.0.1", port), timeout=120)
+        greq = json.dumps({"max_new": 400, "tokens": [1, 2, 3]})
+        s.sendall(
+            (
+                f"POST /v1/generate HTTP/1.1\r\nContent-Type: application/json\r\n"
+                f"Content-Length: {len(greq)}\r\n\r\n{greq}"
+            ).encode()
+        )
+        seen = b""
+        while b"event: tok" not in seen:
+            chunk = s.recv(4096)
+            if not chunk:
+                fail("http sse: stream closed before the first tok event")
+            seen += chunk
+        if not seen.startswith(b"HTTP/1.1 200"):
+            fail(f"http sse: {seen[:60]!r}")
+        s.close()
+        print("[http] sse stream abandoned mid-flight")
+
+        # identical retry on the capacity-one server: only passes if the
+        # abandoned session released its slot and reservation
+        status, _, body = http_roundtrip(
+            port, "POST", "/v1/generate", json.dumps({"max_new": 4, "tokens": [1, 2, 3]})
+        )
+        events = sse_events(body)
+        toks = [e[1]["id"] for e in events if e[0] == "tok"]
+        done = [e[1] for e in events if e[0] == "done"]
+        if status != 200 or not done or toks != done[0]["tokens"] or len(toks) != 4:
+            fail(f"http retry after abandon: status {status}, events {events}")
+        print("[http] retry after abandon OK (slot freed)")
+
+        # shutdown via the route; the --wait process drains and exits 0
+        status, _, body = http_roundtrip(port, "POST", "/v1/shutdown")
+        if status != 200 or json.loads(body).get("ok") != "draining":
+            fail(f"http shutdown: status {status}, body {body!r}")
+        try:
+            rc = proc.wait(timeout=60)
+        except subprocess.TimeoutExpired:
+            fail("http: drained server never exited")
+        for line in proc.stdout:
+            sys.stdout.write(f"[server] {line}")
+        if rc != 0:
+            fail(f"http: drained server exited rc={rc}")
+        print("serve-smoke phase 4: OK (http routes, sse cancel path, shutdown)")
+    finally:
+        stop_server(proc)
+
+
 def main() -> int:
     if "--chaos" in sys.argv[1:]:
         phase_chaos()
     else:
         phase_protocol()
         phase_over_admission()
+        phase_http()
     print("serve-smoke: OK")
     return 0
 
