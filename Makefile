@@ -5,7 +5,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test check-docs doc-refs fmt-check clippy ci bench bench-engine bench-decode bench-model bench-serve bench-pages bench-smoke serve-smoke chaos-smoke serve-fallback artifacts all
+.PHONY: build test check-docs doc-refs fmt-check clippy ci bench bench-engine bench-decode bench-model bench-serve bench-pages bench-backends bench-smoke serve-smoke chaos-smoke serve-fallback artifacts all
 
 all: build
 
@@ -54,11 +54,13 @@ clippy:
 
 ## Regenerate the perf numbers: the engine naive/fused/parallel table, the
 ## decode tokens/sec table, the model depth-sweep table, the serve
-## offered-load sweep (request-batch vs continuous scheduler) and the
-## paged-vs-monolithic residency/admission sweep, plus machine-readable
-## medians in BENCH_engine.json, BENCH_decode.json, BENCH_model.json,
-## BENCH_serve.json and BENCH_pages.json at the repo root.
-bench: bench-engine bench-decode bench-model bench-serve bench-pages
+## offered-load sweep (request-batch vs continuous scheduler), the
+## paged-vs-monolithic residency/admission sweep and the sort-backend
+## head-to-head (DESIGN.md §Backends), plus machine-readable medians in
+## BENCH_engine.json, BENCH_decode.json, BENCH_model.json,
+## BENCH_serve.json, BENCH_pages.json and BENCH_backends.json at the
+## repo root.
+bench: bench-engine bench-decode bench-model bench-serve bench-pages bench-backends
 
 bench-engine:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target engine
@@ -75,18 +77,23 @@ bench-serve:
 bench-pages:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target pages
 
+bench-backends:
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target backends
+
 ## CI smoke benches: every runtime-free target (engine, decode, model,
-## serve and pages at tiny shapes with one rep; memory is analytic and
-## already instant) — the correctness gates (engine vs naive oracle,
-## decode vs full-prefix oracle, stack vs per-layer oracle, scheduler vs
-## single-request generate, paged cohorts vs monolithic generate) still
-## run, but the real BENCH_*.json files are left untouched.
+## serve, pages and backends at tiny shapes with one rep; memory is
+## analytic and already instant) — the correctness gates (engine vs naive
+## oracle, decode vs full-prefix oracle, stack vs per-layer oracle,
+## scheduler vs single-request generate, paged cohorts vs monolithic
+## generate, every sort backend vs its naive reference) still run, but
+## the real BENCH_*.json files are left untouched.
 bench-smoke:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target engine --smoke
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target decode --smoke
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target model --smoke
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target serve --smoke
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target pages --smoke
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target backends --smoke
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench --target memory --smoke
 
 ## End-to-end TCP smoke (wired into `make ci`): spawn the fallback server

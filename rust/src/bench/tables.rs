@@ -1,14 +1,17 @@
 //! Per-table bench targets: each regenerates one table/figure of the paper
 //! with paper-vs-measured columns and records it under artifacts/results/.
 //!
-//! Five targets are *runtime-free* — `engine` (pure-Rust blocked engine:
+//! Seven targets are *runtime-free* — `engine` (pure-Rust blocked engine:
 //! naive vs fused vs parallel), `decode` (incremental autoregressive
 //! decoding: full-recompute vs cached vs SortCut, DESIGN.md §Decode),
 //! `model` (the depth-L stack forward, DESIGN.md §Model), `serve` (the
 //! serving executor under offered load: request-batch waves vs the
-//! continuous-batching scheduler, DESIGN.md §Scheduler) and `memory` (the
-//! §4 analytic model) — and run on any machine; the rest train AOT
-//! artifacts and need a PJRT runtime plus `make artifacts` (DESIGN.md §2).
+//! continuous-batching scheduler, DESIGN.md §Scheduler), `pages`
+//! (decode-cache residency and admission under prefix overlap, DESIGN.md
+//! §Pages), `backends` (the sort backends head-to-head: sinkhorn vs
+//! routing vs local, DESIGN.md §Backends) and `memory` (the §4 analytic
+//! model) — and run on any machine; the rest train AOT artifacts and need
+//! a PJRT runtime plus `make artifacts` (DESIGN.md §2).
 
 use std::collections::HashMap;
 
@@ -1507,6 +1510,156 @@ fn write_pages_json(cells: &[PagesCell]) -> Result<std::path::PathBuf> {
     Ok(path)
 }
 
+/// One measured backends cell: one `(backend, shape)` pair (median ms for
+/// mix + attention, plus the quality proxy vs dense attention).
+struct BackendCell {
+    backend: &'static str,
+    ell: usize,
+    nb: usize,
+    ms: f64,
+    dense_max_abs: f64,
+}
+
+/// `bench backends` — the sort backends head-to-head behind the
+/// `SortStrategy` trait (DESIGN.md §Backends): `sinkhorn` (the paper's
+/// balanced SortNet mixing), `routing` (online k-means block clustering,
+/// per Routing Transformers) and `local` (the window-only baseline, an
+/// all-zero mixing matrix). Every backend is oracle-gated before timing:
+/// the engine output must sit within [`ENGINE_TOL`] of the naive
+/// per-backend reference in `attention.rs` (the backend's own mixing
+/// matrix fed to the seed `sinkhorn_attention`), the routing strategy's
+/// mixing matrix must equal the from-scratch `routing_mixing` oracle bit
+/// for bit, and the parallel engine must equal the serial engine bit for
+/// bit — so the head-to-head can't quietly compare different
+/// computations. The quality-proxy column is the max-abs gap to *dense*
+/// softmax attention over the same inputs (the paper's Table 1 framing:
+/// what each sparse variant gives up vs full attention); the wall-clock
+/// column times mix + attention together — the full per-layer cost a
+/// backend controls. Medians land in `BENCH_backends.json` at the repo
+/// root next to the other machine-readable bench files.
+pub fn backends_table(opts: &BenchOptions) -> Result<String> {
+    use crate::sinkhorn::{dense_attention, routing_mixing, RoutingSort, SortStrategy, ALL_BACKENDS};
+    let d = 64;
+    let n_iters = 8;
+    let par = SinkhornEngine::auto();
+    let fused = SinkhornEngine::serial();
+    // smoke mode (CI): one tiny shape, one rep — the correctness gates
+    // still run, the timing columns are non-representative by design
+    let shapes: &[(usize, usize)] = if opts.smoke { &[(128, 4)] } else { &[(512, 8), (1024, 16)] };
+    let mut t = Table::new(
+        &format!(
+            "backends — sort backends head-to-head, d={d} (parallel: {} threads){}",
+            par.threads(),
+            if opts.smoke { " [SMOKE]" } else { "" }
+        ),
+        &["backend", "ell", "nb", "mix+attn ms", "vs dense max-abs"],
+    );
+    let mut cells = Vec::new();
+    for &(ell, nb) in shapes {
+        let mut rng = Rng::new(0xBAC ^ (ell * 31 + nb) as u64);
+        let mk = |rng: &mut Rng| Mat::from_fn(ell, d, |_, _| rng.normal() as f32 * 0.5);
+        let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let feats = Mat::from_fn(nb, nb, |_, _| rng.normal() as f32);
+        let dense = dense_attention(&q, &k, &v, false);
+        for backend in ALL_BACKENDS {
+            let strat = backend.strategy(nb);
+            let r = strat.mix(&feats, n_iters, false);
+
+            // correctness gates: one run of each path before timing
+            if backend == crate::sinkhorn::Backend::Routing {
+                let k_clusters = RoutingSort::for_blocks(nb).k;
+                anyhow::ensure!(
+                    r == routing_mixing(&feats, nb, k_clusters, false),
+                    "routing strategy must equal the routing_mixing oracle bit for bit at nb={nb}"
+                );
+            }
+            let want = sinkhorn_attention(&q, &k, &v, &r, nb, false);
+            let got = par.attention(&q, &k, &v, &r, nb, false);
+            let diff = want.max_abs_diff(&got);
+            anyhow::ensure!(
+                diff <= ENGINE_TOL,
+                "{} backend diverged from its naive reference at ell={ell} nb={nb}: max-abs {diff}",
+                backend.name()
+            );
+            anyhow::ensure!(
+                fused.attention(&q, &k, &v, &r, nb, false) == got,
+                "parallel engine must equal the serial engine bit for bit for backend {} at \
+                 ell={ell} nb={nb}",
+                backend.name()
+            );
+            let dense_max_abs = got.max_abs_diff(&dense) as f64;
+
+            let iters = if opts.smoke { 1 } else { 5 };
+            let mut out = Mat::zeros(ell, d);
+            let mut t_mix = time_iters(1, iters, || {
+                let r = strat.mix(&feats, n_iters, false);
+                par.attention_into(&q, &k, &v, &r, nb, false, &mut out);
+            });
+            let ms = percentile(&mut t_mix, 50.0) * 1e3;
+            t.row(&[
+                backend.name().to_string(),
+                ell.to_string(),
+                nb.to_string(),
+                format!("{ms:.2}"),
+                format!("{dense_max_abs:.4}"),
+            ]);
+            cells.push(BackendCell { backend: backend.name(), ell, nb, ms, dense_max_abs });
+        }
+    }
+    let mut s = t.render();
+    s.push_str(
+        "sinkhorn = balanced SortNet mixing (the paper); routing = online k-means over\n\
+         block descriptors (Routing Transformers); local = window-only baseline (zero\n\
+         mixing matrix -> sorted term masked, block-diagonal attention).\n\
+         vs dense max-abs = quality proxy: max-abs gap to full softmax attention over\n\
+         the same inputs (paper Table 1 framing). Gates: each backend within 1e-5\n\
+         max-abs of its naive attention.rs reference; routing mixing bit-equal to the\n\
+         routing_mixing oracle; parallel == serial engine bit for bit.\n",
+    );
+    save_result(&opts.artifacts, "backends", &s)?;
+    if opts.smoke {
+        s.push_str("smoke run: BENCH_backends.json left untouched\n");
+    } else {
+        let json_path = write_backends_json(d, par.threads(), &cells)?;
+        s.push_str(&format!("machine-readable medians: {}\n", json_path.display()));
+    }
+    println!("{s}");
+    Ok(s)
+}
+
+/// Emit the backends bench machine-readably: one row per `(backend,
+/// shape)` with the median ns/iter for mix + attention and the quality
+/// proxy vs dense attention, written to `BENCH_backends.json` at the repo
+/// root — the comparative-serving-lab record (DESIGN.md §Backends).
+fn write_backends_json(
+    d: usize,
+    threads: usize,
+    cells: &[BackendCell],
+) -> Result<std::path::PathBuf> {
+    use crate::util::json::Json;
+    let mut rows = Vec::new();
+    for c in cells {
+        rows.push(Json::Obj(vec![
+            ("backend".into(), Json::from(c.backend)),
+            ("ell".into(), Json::from(c.ell)),
+            ("nb".into(), Json::from(c.nb)),
+            ("b".into(), Json::from(c.ell / c.nb)),
+            ("d".into(), Json::from(d)),
+            ("threads".into(), Json::from(threads)),
+            ("ns_per_iter".into(), Json::from((c.ms * 1e6).round())),
+            ("dense_max_abs".into(), Json::from(c.dense_max_abs)),
+        ]));
+    }
+    let doc = Json::Obj(vec![
+        ("target".into(), Json::from("backends")),
+        ("unit".into(), Json::from("ns_per_iter_p50")),
+        ("cells".into(), Json::Arr(rows)),
+    ]);
+    let path = repo_root().join("BENCH_backends.json");
+    std::fs::write(&path, doc.to_string_pretty() + "\n")?;
+    Ok(path)
+}
+
 /// Locate the repo root at runtime: the working directory when it (or an
 /// ancestor, for `cargo run` from `rust/`) contains `rust/Cargo.toml`.
 /// Falls back to the build-time manifest location only when the process
@@ -1600,9 +1753,12 @@ fn match_variant<'a>(
 
 /// Does a target train AOT artifacts (and therefore need a PJRT runtime
 /// and registry), or is it runtime-free (`engine`, `decode`, `model`,
-/// `serve`, `memory`)?
+/// `serve`, `pages`, `backends`, `memory`)?
 pub fn target_needs_runtime(target: &str) -> bool {
-    !matches!(target, "engine" | "decode" | "model" | "serve" | "pages" | "memory")
+    !matches!(
+        target,
+        "engine" | "decode" | "model" | "serve" | "pages" | "backends" | "memory"
+    )
 }
 
 /// Optional runtime + registry bootstrap shared by the CLI and the bench
@@ -1646,6 +1802,7 @@ pub fn run_target(
             "model" => model_table(opts)?,
             "serve" => serve_table(opts)?,
             "pages" => pages_table(opts)?,
+            "backends" => backends_table(opts)?,
             "memory" => memory_table(opts)?,
             _ => unreachable!(),
         };
@@ -1689,5 +1846,5 @@ pub fn run_all(rt: Option<&Runtime>, reg: Option<&Registry>, opts: &BenchOptions
 
 pub const ALL_TARGETS: &[&str] = &[
     "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "fig3",
-    "fig4", "memory", "engine", "decode", "model", "serve", "pages",
+    "fig4", "memory", "engine", "decode", "model", "serve", "pages", "backends",
 ];

@@ -4,7 +4,7 @@
 //!   list                         show registered experiments
 //!   train  --exp NAME            train one experiment (AOT graphs, no python)
 //!   eval   --exp NAME --ckpt F   evaluate a checkpoint
-//!   bench  --target tableN|figN|memory|engine|decode|model|serve|all   regenerate paper tables
+//!   bench  --target tableN|figN|memory|engine|decode|model|serve|backends|all   regenerate paper tables
 //!   serve  --exp NAME            run the batched inference demo
 //!   serve  --fallback            serve the pure-Rust engine (no artifacts;
 //!                                classify + gen verbs over TCP — see rust/README.md)
@@ -60,13 +60,14 @@ USAGE: sinkhorn <subcommand> [flags]
   list                              experiments in the registry
   train  --exp NAME [--steps N] [--seed S] [--ckpt out.ckpt] [--verbose]
   eval   --exp NAME --ckpt F [--eval-batches N]
-  bench  --target table1..table8|fig3|fig4|memory|engine|decode|model|serve|pages|all
+  bench  --target table1..table8|fig3|fig4|memory|engine|decode|model|serve|pages|backends|all
          [--scale F] [--steps N] [--fast-decode] [--smoke] [--verbose]
-         (engine + decode + model + serve + pages + memory run without
-          artifacts/XLA; --smoke = tiny CI shapes, gates on,
+         (engine + decode + model + serve + pages + backends + memory run
+          without artifacts/XLA; --smoke = tiny CI shapes, gates on,
           BENCH_*.json untouched)
   serve  --exp NAME | --fallback [--seq-len L] [--nb N] [--threads T]
          [--depth L] [--heads H] [--d-ff F]
+         [--backend sinkhorn|routing|local]
          [--ckpt F] [--requests N] [--max-batch B] [--max-wait-ms T]
          [--max-sessions S] [--queue-depth Q] [--mem-budget-mb M]
          [--page-bytes B] [--no-paged] [--no-prefix-share]
@@ -74,6 +75,12 @@ USAGE: sinkhorn <subcommand> [flags]
          [--idle-timeout-ms T] [--request-batch] [--port P]
          [--http-port P] [--wait]
          (--fallback serves the pure-Rust stack; no artifacts needed.
+          --backend picks the sort backend for every layer (DESIGN.md
+          §Backends): sinkhorn = the paper's balanced SortNet (default),
+          routing = online k-means block clustering, local = the
+          window-only baseline. The 'model' verb reports it as
+          sort_backend=<name>; an unknown name fails fast with one
+          stable 'error=' line.
           The continuous-batching scheduler multiplexes generations
           token by token: --max-sessions caps concurrent decode slots,
           --mem-budget-mb budgets them by real decode-state bytes —
@@ -236,6 +243,16 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
     // falls back by itself when the experiment's artifacts are unusable
     let server = if args.bool("fallback") {
         let seq_len = args.usize("seq-len", 128)?;
+        // an unknown backend fails fast with the stable one-line error=
+        // payload (strategy.rs pins its exact shape), so scripts driving
+        // the CLI can match on it like the TCP error paths
+        let backend = match sinkhorn::sinkhorn::Backend::parse(&args.str("backend", "sinkhorn")) {
+            Ok(b) => b,
+            Err(line) => {
+                eprintln!("{line}");
+                std::process::exit(2);
+            }
+        };
         let cfg = sinkhorn::server::FallbackConfig {
             seq_len,
             nb: args.usize("nb", sinkhorn::server::FallbackConfig::blocks_for(seq_len))?,
@@ -247,12 +264,20 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
             page_bytes: args.usize("page-bytes", 0)?,
             prefix_share: !args.bool("no-prefix-share"),
             seed,
+            backend,
             ..Default::default()
         };
         println!(
-            "serving pure-Rust fallback stack (seq_len {}, nb {}, depth {}, heads {}, d_ff {}, \
-             paged {}, prefix_share {})",
-            cfg.seq_len, cfg.nb, cfg.depth, cfg.n_heads, cfg.d_ff, cfg.paged, cfg.prefix_share
+            "serving pure-Rust fallback stack (backend {}, seq_len {}, nb {}, depth {}, \
+             heads {}, d_ff {}, paged {}, prefix_share {})",
+            cfg.backend.name(),
+            cfg.seq_len,
+            cfg.nb,
+            cfg.depth,
+            cfg.n_heads,
+            cfg.d_ff,
+            cfg.paged,
+            cfg.prefix_share
         );
         Server::start_fallback(cfg, policy)?
     } else {

@@ -34,7 +34,9 @@ use anyhow::Result;
 use super::faults::{panic_msg, FaultPlan};
 use crate::sinkhorn::model::{StackConfig, TransformerLayer};
 use crate::sinkhorn::pages::PoolStats;
-use crate::sinkhorn::{Mat, PagePool, SinkhornEngine, SinkhornStack, StackDecodeState, WorkerPool};
+use crate::sinkhorn::{
+    Backend, Mat, PagePool, SinkhornEngine, SinkhornStack, StackDecodeState, WorkerPool,
+};
 use crate::util::rng::Rng;
 
 /// Configuration of the fallback model.
@@ -68,6 +70,10 @@ pub struct FallbackConfig {
     /// share page-resident decode state across sessions opened on a
     /// common prompt prefix (`--no-prefix-share` disables)
     pub prefix_share: bool,
+    /// sort backend for every layer of the stack (the serve `--backend`
+    /// flag — DESIGN.md §Backends). [`Backend::Sinkhorn`] is the paper's
+    /// path and the bitwise-pinned default
+    pub backend: Backend,
 }
 
 impl Default for FallbackConfig {
@@ -91,6 +97,7 @@ impl Default for FallbackConfig {
             paged: true,
             page_bytes: 0,
             prefix_share: true,
+            backend: Backend::Sinkhorn,
         }
     }
 }
@@ -251,7 +258,13 @@ impl FallbackModel {
                 .collect()
         };
         let w_cls = init(d, cfg.n_classes, wscale);
-        let stack = SinkhornStack::new(scfg, layers, engine)?;
+        let mut stack = SinkhornStack::new(scfg, layers, engine)?;
+        // the stack defaults to SinkhornSort; only a non-default backend
+        // swaps strategies, keeping the default path untouched (and the
+        // legacy shape bitwise)
+        if cfg.backend != Backend::Sinkhorn {
+            stack.set_strategy(cfg.backend.strategy(cfg.nb));
+        }
         Ok(FallbackModel {
             batch_pool: WorkerPool::new(cfg.threads),
             embed,
@@ -279,9 +292,10 @@ impl FallbackModel {
     pub fn describe(&self) -> String {
         let c = &self.cfg;
         format!(
-            "backend=fallback depth={} heads={} d_model={} d_ff={} nb={} seq_len={} vocab={} \
-             classes={} sinkhorn_iters={} engine_threads={} batch_workers={} params={} \
-             paged={} page_blocks={} prefix_share={}",
+            "backend=fallback sort_backend={} depth={} heads={} d_model={} d_ff={} nb={} \
+             seq_len={} vocab={} classes={} sinkhorn_iters={} engine_threads={} \
+             batch_workers={} params={} paged={} page_blocks={} prefix_share={}",
+            c.backend.name(),
             c.depth,
             c.n_heads,
             c.d_model,
@@ -1196,10 +1210,52 @@ mod tests {
     fn describe_reports_the_stack_shape() {
         let m = deep_model();
         let s = m.describe();
-        for want in ["backend=fallback", "depth=2", "heads=2", "d_ff=32", "seq_len=32"] {
+        for want in
+            ["backend=fallback", "sort_backend=sinkhorn", "depth=2", "heads=2", "d_ff=32",
+             "seq_len=32"]
+        {
             assert!(s.contains(want), "describe() missing {want}: {s}");
         }
         assert_eq!(s.lines().count(), 1, "describe() must stay one line");
+    }
+
+    /// `--backend` threads through to the stack's strategies, the `model`
+    /// info verb reports it as a stable key, and the non-default backends
+    /// serve both verbs deterministically (DESIGN.md §Backends).
+    #[test]
+    fn non_default_backends_serve_and_describe() {
+        for backend in [Backend::Routing, Backend::Local] {
+            let mk = || {
+                FallbackModel::new(FallbackConfig {
+                    seq_len: 32,
+                    d_model: 16,
+                    nb: 4,
+                    vocab: 64,
+                    backend,
+                    ..Default::default()
+                })
+                .unwrap()
+            };
+            let m = mk();
+            assert_eq!(m.stack.uniform_backend(), Some(backend));
+            let key = format!("sort_backend={}", backend.name());
+            assert!(m.describe().contains(&key), "missing {key}: {}", m.describe());
+            let toks: Vec<i32> = (0..32).map(|i| (i * 7 + 1) % 64).collect();
+            assert_eq!(m.class_logits(&toks), mk().class_logits(&toks), "{backend:?}");
+            let prompt: Vec<i32> = (0..9).map(|i| (i * 5) % 64).collect();
+            let gen = m.generate(&prompt, 6);
+            assert_eq!(gen.len(), 6, "{backend:?}");
+            assert_eq!(gen, mk().generate(&prompt, 6), "{backend:?}");
+            // scheduler cohorts must keep matching serial generate under
+            // every backend, not just the default
+            let mut sess = m.open_session(&prompt, 6);
+            let mut scratch = m.new_batch_scratch();
+            while !sess.done() {
+                let mut live = vec![&mut sess];
+                m.step_sessions(&mut live, &mut scratch);
+            }
+            assert_eq!(sess.into_generated(), gen, "{backend:?} cohort diverged");
+        }
     }
 
     /// Sessions opened with a common prompt prefix fork cached pages

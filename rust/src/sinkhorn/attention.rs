@@ -1,14 +1,28 @@
 //! Pure-Rust single-head Sparse Sinkhorn Attention — mirrors
-//! `kernels/ref.py` and backs the coordinator property tests (causality by
-//! perturbation, local-attention equivalence, permutation invariances).
+//! `python/compile/kernels/ref.py` and holds every naive oracle the
+//! production paths are verified against:
+//!
+//! * [`sinkhorn_attention`] / [`local_attention`] / [`dense_attention`] /
+//!   [`sortcut_attention`] — the batch attention semantics
+//!   (`tests/engine_props.rs`); `sinkhorn_attention` takes *any* mixing
+//!   matrix, so it doubles as the per-backend forward reference for the
+//!   [`SortStrategy`](super::strategy::SortStrategy) backends
+//!   (`tests/backends_props.rs`, `bench --target backends`);
+//! * [`routing_mixing`] — an independent naive rewrite of the `routing`
+//!   backend's online k-means mixing rule;
+//! * [`causal_decode_attention`] / [`decode_attention_with`] — the
+//!   full-prefix incremental-decode oracle, Sinkhorn-balanced or
+//!   closure-parameterized per backend (`tests/decode_props.rs`);
+//! * [`reference_stack_forward`] / [`reference_stack_decode`] and their
+//!   `_with` strategy-parameterized forms — the depth-L stack oracles
+//!   (`tests/model_props.rs`).
 //!
 //! This is the *naive reference path*: one materialized `Mat` per
 //! intermediate, single-threaded, written for obviousness. The production
 //! path is [`super::engine::SinkhornEngine`], which streams the joint
 //! softmax over zero-copy views with a worker pool; its tiled kernels
 //! reorder float summation, so the engine is verified to within 1e-5
-//! max-abs of this module — which remains the oracle the engine's
-//! property tests (`tests/engine_props.rs`) compare against.
+//! max-abs of this module.
 
 use super::balance::NEG_INF;
 use super::matrix::{gelu, Mat, LN_EPS};
@@ -139,6 +153,74 @@ pub fn local_attention(q: &Mat, k: &Mat, v: &Mat, nb: usize, causal: bool) -> Ma
     sinkhorn_attention(q, k, v, &zero, nb, causal)
 }
 
+/// Naive reference for the `routing` backend's mixing rule
+/// (`super::strategy::RoutingSort`): a from-scratch rewrite of the
+/// deterministic online k-means over the first `m` descriptor rows of
+/// `feats` — blocks `i < k` seed centroid `i`, later blocks join the
+/// nearest centroid (squared euclidean over the full row, ties to the
+/// lowest index) and pull it by the running mean `c += (x - c) / n` —
+/// followed by uniform `1 / |cluster|` row weights (strictly earlier
+/// members only when `causal`; the whole cluster, block `i` included,
+/// otherwise). Written with its own loops so
+/// `tests/backends_props.rs` can pin `RoutingSort` against an
+/// independent derivation; both follow the same accumulation order, so
+/// agreement is bitwise.
+pub fn routing_mixing(feats: &Mat, m: usize, k: usize, causal: bool) -> Mat {
+    assert!(m <= feats.rows, "routing_mixing needs the first m rows");
+    let k = k.max(1);
+    let d = feats.cols;
+    let mut centroids: Vec<Vec<f32>> = Vec::new();
+    let mut counts: Vec<usize> = Vec::new();
+    let mut assign = vec![0usize; m];
+    for i in 0..m {
+        if centroids.len() < k {
+            centroids.push((0..d).map(|e| feats[(i, e)]).collect());
+            counts.push(1);
+            assign[i] = centroids.len() - 1;
+            continue;
+        }
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..centroids.len() {
+            let mut dist = 0.0f32;
+            for e in 0..d {
+                let diff = feats[(i, e)] - centroids[c][e];
+                dist += diff * diff;
+            }
+            if dist < best_d {
+                best_d = dist;
+                best = c;
+            }
+        }
+        counts[best] += 1;
+        let n = counts[best] as f32;
+        for e in 0..d {
+            centroids[best][e] += (feats[(i, e)] - centroids[best][e]) / n;
+        }
+        assign[i] = best;
+    }
+    let mut r = Mat::zeros(m, m);
+    for i in 0..m {
+        let lim = if causal { i } else { m };
+        let mut count = 0usize;
+        for j in 0..lim {
+            if assign[j] == assign[i] {
+                count += 1;
+            }
+        }
+        if count == 0 {
+            continue;
+        }
+        let w = 1.0 / count as f32;
+        for j in 0..lim {
+            if assign[j] == assign[i] {
+                r[(i, j)] = w;
+            }
+        }
+    }
+    r
+}
+
 /// Dense O(ell^2) attention baseline.
 pub fn dense_attention(q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat {
     let scale = 1.0 / (q.cols as f32).sqrt();
@@ -186,6 +268,31 @@ pub fn causal_decode_attention(
     n_iters: usize,
     n_cut: Option<usize>,
 ) -> Mat {
+    // the historical Sinkhorn-balanced specialization, op-for-op: copy the
+    // (m, m) logit corner, strict-causal balance it
+    decode_attention_with(q, k, v, sort_logits, b, n_cut, |sl, m| {
+        let sub = Mat::from_fn(m, m, |a, c| sl[(a, c)]);
+        super::balance::causal_sinkhorn(&sub, n_iters, true)
+    })
+}
+
+/// [`causal_decode_attention`] with the per-prefix mixing rule factored
+/// out: `mix_prefix(sort_logits, m)` must return the strict `(m, m)`
+/// mixing matrix over the first `m` started blocks — the naive
+/// counterpart of `SortStrategy::mix_prefix`
+/// (`super::strategy::SortStrategy`), which is what lets
+/// `tests/backends_props.rs` replay the incremental decoder's semantics
+/// under any backend. Everything else (row-support skip, naive gather,
+/// one joint softmax over `[sorted | local]`) is shared.
+pub fn decode_attention_with(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    sort_logits: &Mat,
+    b: usize,
+    n_cut: Option<usize>,
+    mix_prefix: impl Fn(&Mat, usize) -> Mat,
+) -> Mat {
     assert!(b > 0, "b must be positive");
     assert_eq!(q.rows, k.rows, "q/k rows");
     assert_eq!(q.rows, v.rows, "q/v rows");
@@ -205,8 +312,8 @@ pub fn causal_decode_attention(
     for t in 0..ell {
         let i = t / b;
         let m = i + 1;
-        let sub = Mat::from_fn(m, m, |a, c| sort_logits[(a, c)]);
-        let r = super::balance::causal_sinkhorn(&sub, n_iters, true);
+        let r = mix_prefix(sort_logits, m);
+        assert_eq!((r.rows, r.cols), (m, m), "mix_prefix must return an (m, m) matrix");
         // gather the sorted segment's keys/values (naive ascending-j order)
         let rows: Vec<usize> = match n_cut {
             None => vec![i],
@@ -408,15 +515,32 @@ fn reference_sort_logits(h: &Mat, sortnet: &Mat, nb: usize) -> Mat {
 /// and single-accumulator LayerNorm. The engine stack must match this
 /// within `ENGINE_TOL` (`tests/model_props.rs`).
 pub fn reference_stack_forward(x: &Mat, cfg: &StackConfig, layers: &[TransformerLayer]) -> Mat {
+    reference_stack_forward_with(x, cfg, layers, |_, logits| {
+        if cfg.causal {
+            super::balance::causal_sinkhorn(logits, cfg.sinkhorn_iters, true)
+        } else {
+            super::balance::sinkhorn(logits, cfg.sinkhorn_iters)
+        }
+    })
+}
+
+/// [`reference_stack_forward`] with the block-mixing rule factored out:
+/// `mix(layer_index, logits)` maps a layer's raw SortNet logits to its
+/// `(nb, nb)` mixing matrix (strict when `cfg.causal`) — the naive
+/// counterpart of `SortStrategy::mix`
+/// (`super::strategy::SortStrategy`), so `tests/backends_props.rs` can
+/// oracle the engine stack under any backend, per layer.
+pub fn reference_stack_forward_with(
+    x: &Mat,
+    cfg: &StackConfig,
+    layers: &[TransformerLayer],
+    mix: impl Fn(usize, &Mat) -> Mat,
+) -> Mat {
     let mut y = x.clone();
-    for layer in layers {
+    for (li, layer) in layers.iter().enumerate() {
         y = reference_layer(&y, layer, |h, qh, kh, vh| {
             let logits = reference_sort_logits(h, &layer.sortnet, cfg.nb);
-            let r = if cfg.causal {
-                super::balance::causal_sinkhorn(&logits, cfg.sinkhorn_iters, true)
-            } else {
-                super::balance::sinkhorn(&logits, cfg.sinkhorn_iters)
-            };
+            let r = mix(li, &logits);
             match cfg.n_cut {
                 Some(c) => sortcut_attention(qh, kh, vh, &r, cfg.nb, c),
                 None => sinkhorn_attention(qh, kh, vh, &r, cfg.nb, cfg.causal),
@@ -439,10 +563,29 @@ pub fn reference_stack_forward(x: &Mat, cfg: &StackConfig, layers: &[Transformer
 /// exactly what the incremental path saw (module docs of
 /// `super::decode`).
 pub fn reference_stack_decode(x: &Mat, cfg: &StackConfig, layers: &[TransformerLayer]) -> Mat {
+    reference_stack_decode_with(x, cfg, layers, |_, sl, m| {
+        let sub = Mat::from_fn(m, m, |a, c| sl[(a, c)]);
+        super::balance::causal_sinkhorn(&sub, cfg.sinkhorn_iters, true)
+    })
+}
+
+/// [`reference_stack_decode`] with the per-prefix mixing rule factored
+/// out: `mix_prefix(layer_index, sort_logits, m)` must return the strict
+/// `(m, m)` mixing matrix over the first `m` started blocks — the naive
+/// counterpart of `SortStrategy::mix_prefix`
+/// (`super::strategy::SortStrategy`). The decode-time SortNet replay and
+/// the per-head full-prefix attention ([`decode_attention_with`]) are
+/// shared; only the balance rule varies per backend.
+pub fn reference_stack_decode_with(
+    x: &Mat,
+    cfg: &StackConfig,
+    layers: &[TransformerLayer],
+    mix_prefix: impl Fn(usize, &Mat, usize) -> Mat,
+) -> Mat {
     let b = cfg.block_rows();
     let nb = cfg.nb;
     let mut y = x.clone();
-    for layer in layers {
+    for (li, layer) in layers.iter().enumerate() {
         // replay the decode-time SortNet rule over the whole prefix
         let h = match &layer.ln1 {
             Some(ln) => naive_layernorm(&y, &ln.gamma, &ln.beta),
@@ -472,7 +615,9 @@ pub fn reference_stack_decode(x: &Mat, cfg: &StackConfig, layers: &[TransformerL
             }
         }
         y = reference_layer(&y, layer, |_, qh, kh, vh| {
-            causal_decode_attention(qh, kh, vh, &sort_logits, b, cfg.sinkhorn_iters, cfg.n_cut)
+            decode_attention_with(qh, kh, vh, &sort_logits, b, cfg.n_cut, |sl, m| {
+                mix_prefix(li, sl, m)
+            })
         });
     }
     y

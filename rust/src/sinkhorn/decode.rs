@@ -10,14 +10,21 @@
 //!
 //! * **K/V cache** — the new token's projected key/value rows are appended
 //!   into block-aligned storage; nothing earlier is touched.
-//! * **Cached causal Sinkhorn state** — the balanced sort matrix `R` is
-//!   recomputed (Causal Sinkhorn Balancing, [`causal_sinkhorn`] with
-//!   `strict = true`) only when a block boundary fills. This is sound
-//!   because strict-causal balancing is *prefix-consistent*: `R[i, j]`
-//!   depends only on logits rows `<= i`, so the `(m, m)` balance of the
-//!   first `m` blocks agrees with the top-left of any larger balance
-//!   (pinned by `balance.rs::causal_prefix_consistent` and the float32
-//!   simulation in EXPERIMENTS.md). Between boundaries the cached rows are
+//! * **Cached sort state, owned by the strategy** — the block-mixing
+//!   matrix `R` is recomputed through the state's [`SortStrategy`]
+//!   ([`SortStrategy::mix_prefix`], DESIGN.md §Backends) only when a
+//!   block boundary fills. For the default [`SinkhornSort`] that is
+//!   Causal Sinkhorn Balancing ([`causal_sinkhorn`] with `strict =
+//!   true`), and the caching rule is sound because strict-causal
+//!   balancing is *prefix-consistent*: `R[i, j]` depends only on logits
+//!   rows `<= i`, so the `(m, m)` balance of the first `m` blocks agrees
+//!   with the top-left of any larger balance (pinned by
+//!   `balance.rs::causal_prefix_consistent` and the float32 simulation
+//!   in EXPERIMENTS.md). Every other backend must state the same
+//!   property through [`SortStrategy::prefix_stable`] — `routing` holds
+//!   it by construction (online assignments never revisit), `local`
+//!   trivially (zero matrix) — and a cut-configured state refuses a
+//!   strategy that doesn't. Between boundaries the cached rows are
 //!   reused as-is.
 //! * **Cached sorted K/V** — the gathered sorted blocks the current token
 //!   attends to are materialized once per boundary ([`gather_block_into`]
@@ -69,12 +76,14 @@
 //! [`memory::decode_state_bytes`]: super::memory::decode_state_bytes
 //! [`gather_block_into`]: super::engine::gather_block_into
 
-use super::balance::causal_sinkhorn;
+use std::sync::Arc;
+
 use super::engine::{
     gather_block_into, gather_pages_into, normalize_rows, BlockedView, StreamState,
 };
 use super::matrix::{Mat, MatView, MatViewMut};
 use super::pages::{Page, PagePool, PageTable};
+use super::strategy::{SinkhornSort, SortStrategy};
 
 /// Row-support threshold below which a balanced sort row is treated as
 /// empty and its sorted term masked — the same cutoff the batch paths use.
@@ -124,11 +133,16 @@ pub struct DecodeState {
     d: usize,
     /// capacity in blocks (sequence capacity = `nb_cap * b` tokens)
     nb_cap: usize,
-    /// Sinkhorn balance iterations per rebalance
+    /// balance iterations per rebalance (forwarded to the strategy;
+    /// ignored by backends that don't iterate)
     n_iters: usize,
     /// `Some(c)`: SortCut decoding over the first `c` sorted blocks;
     /// `None`: full causal decoding over the token's own sorted row
     n_cut: Option<usize>,
+    /// the sort backend that owns the cached-mixing recompute rule
+    /// (DESIGN.md §Backends); [`SinkhornSort`] by default, which keeps
+    /// this path bitwise identical to the pre-trait decoder
+    strategy: Arc<dyn SortStrategy>,
     /// K/V + sorted-gather storage (monolithic or paged)
     store: Store,
     /// tokens appended so far
@@ -164,6 +178,7 @@ impl DecodeState {
             nb_cap,
             n_iters,
             n_cut,
+            strategy: Arc::new(SinkhornSort),
             store: Store::Mono {
                 k: vec![0.0; nb_cap * b * d],
                 v: vec![0.0; nb_cap * b * d],
@@ -199,6 +214,7 @@ impl DecodeState {
             nb_cap,
             n_iters,
             n_cut,
+            strategy: Arc::new(SinkhornSort),
             store: Store::Paged {
                 k: PageTable::new(pool, b * d, blocks_per_page),
                 v: PageTable::new(pool, b * d, blocks_per_page),
@@ -226,6 +242,7 @@ impl DecodeState {
             nb_cap: self.nb_cap,
             n_iters: self.n_iters,
             n_cut: self.n_cut,
+            strategy: self.strategy.clone(),
             store: match &self.store {
                 Store::Mono { k, v, sk, sv } => Store::Mono {
                     k: k.clone(),
@@ -247,6 +264,30 @@ impl DecodeState {
             sorted_rows: self.sorted_rows,
             cut_rows: self.cut_rows,
         }
+    }
+
+    /// Rebuild this (fresh) state around a different sort backend
+    /// (DESIGN.md §Backends). Must be called before the first step — the
+    /// cached mixing rows belong to the strategy that computed them — and
+    /// a SortCut state refuses a strategy whose prefix mixing is not
+    /// prefix-stable, because the frozen append-only cut cache is unsound
+    /// without it (module docs).
+    pub fn with_strategy(mut self, strategy: Arc<dyn SortStrategy>) -> Self {
+        assert_eq!(self.len, 0, "strategy must be set before the first decode step");
+        if self.n_cut.is_some() {
+            assert!(
+                strategy.prefix_stable(),
+                "SortCut decoding requires a prefix-stable strategy (backend {})",
+                strategy.backend().name()
+            );
+        }
+        self.strategy = strategy;
+        self
+    }
+
+    /// The sort backend this state recomputes its cached mixing with.
+    pub fn strategy(&self) -> &Arc<dyn SortStrategy> {
+        &self.strategy
     }
 
     /// Tokens decoded so far.
@@ -390,8 +431,9 @@ impl DecodeState {
         self.len += 1;
 
         // Rebalance-on-boundary rule: the first token of block i makes m =
-        // i + 1 blocks live; re-run Causal Sinkhorn Balancing over their
-        // logits and refresh the gathered sorted cache. Every other step
+        // i + 1 blocks live; re-run the strategy's strict prefix mixing
+        // over their logits and refresh the gathered sorted cache (for
+        // SinkhornSort: Causal Sinkhorn Balancing). Every other step
         // reuses the caches untouched. Under SortCut, once the cut cache is
         // complete (cut_rows == c) no balanced row is ever read again —
         // prefix-stability froze them — so boundaries stop rebalancing
@@ -414,8 +456,12 @@ impl DecodeState {
                 sort_logits.rows,
                 sort_logits.cols
             );
-            let sub = Mat::from_fn(m, m, |a, c| sort_logits[(a, c)]);
-            let rm = causal_sinkhorn(&sub, self.n_iters, true);
+            // the strategy owns the boundary recompute (DESIGN.md
+            // §Backends): SinkhornSort replays the historical (m, m)
+            // strict-causal balance bit for bit; other backends return
+            // their own strict prefix mixing
+            let rm = self.strategy.mix_prefix(sort_logits, m, self.n_iters);
+            assert_eq!((rm.rows, rm.cols), (m, m), "mix_prefix must return an (m, m) matrix");
             for row in 0..m {
                 self.r.row_mut(row)[..m].copy_from_slice(rm.row(row));
             }
@@ -602,6 +648,15 @@ impl LayerDecodeState {
         }
     }
 
+    /// Rebuild every (fresh) head state around a different sort backend —
+    /// see [`DecodeState::with_strategy`] for the preconditions. All heads
+    /// of a layer share one strategy, exactly as they share one SortNet.
+    pub fn with_strategy(mut self, strategy: Arc<dyn SortStrategy>) -> Self {
+        self.heads =
+            self.heads.into_iter().map(|h| h.with_strategy(strategy.clone())).collect();
+        self
+    }
+
     /// Share every head's caches with a new layer state (refcount bumps
     /// for paged heads, deep copies for monolithic ones — see
     /// [`DecodeState::fork`]).
@@ -748,6 +803,39 @@ mod tests {
     #[should_panic(expected = "n_cut must be in 1..=nb_cap")]
     fn rejects_oversized_cut() {
         DecodeState::new(2, 3, 2, 2, Some(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "SortCut decoding requires a prefix-stable strategy")]
+    fn cut_state_rejects_non_prefix_stable_strategy() {
+        use crate::sinkhorn::strategy::Backend;
+        struct Unstable;
+        impl SortStrategy for Unstable {
+            fn backend(&self) -> Backend {
+                Backend::Routing
+            }
+            fn mix(&self, feats: &Mat, _iters: usize, _causal: bool) -> Mat {
+                Mat::zeros(feats.rows, feats.rows)
+            }
+            fn mix_prefix(&self, _feats: &Mat, m: usize, _iters: usize) -> Mat {
+                Mat::zeros(m, m)
+            }
+            fn prefix_stable(&self) -> bool {
+                false
+            }
+        }
+        let _ = DecodeState::new(2, 3, 4, 2, Some(2)).with_strategy(Arc::new(Unstable));
+    }
+
+    #[test]
+    #[should_panic(expected = "strategy must be set before the first decode step")]
+    fn strategy_swap_after_steps_panics() {
+        let mut st = DecodeState::new(2, 3, 2, 2, None);
+        let mut scratch = DecodeScratch::new();
+        let (row, logits) = (vec![0.0f32; 3], Mat::zeros(2, 2));
+        let mut out = vec![0.0f32; 3];
+        st.step_into(&row, &row, &row, &logits, &mut scratch, &mut out);
+        let _ = st.with_strategy(Arc::new(SinkhornSort));
     }
 
     #[test]

@@ -22,6 +22,12 @@
 //!   (`memory::engine_workspace_bytes`).
 //! * **SortCut** (paper §3.3) — gathers only the first `n_cut` sorted
 //!   blocks and streams every query block over them through the same loop.
+//! * **Backend-agnostic layout** (DESIGN.md §Backends) — the engine never
+//!   computes a mixing matrix; it executes whatever [`SortLayout`] a
+//!   [`SortStrategy`](super::strategy::SortStrategy) produced
+//!   ([`SinkhornEngine::layout_attention_into`]), Sinkhorn-balanced or
+//!   not. Zero-support rows mask their sorted term, which is how the
+//!   `local` backend rides the same task list for free.
 //! * **Incremental decode** (DESIGN.md §Decode) —
 //!   [`SinkhornEngine::decode_step_into`] steps a batch of
 //!   [`super::decode::DecodeState`]s one token each: cached causal sort
@@ -331,6 +337,26 @@ impl EngineWorkspaces {
     }
 }
 
+/// The gather/window layout one layer's attention executes, as produced
+/// by a sort backend (DESIGN.md §Backends): the block-mixing matrix, the
+/// block count, and the window shape (full `[sorted | local]` vs a
+/// SortCut over the first `n_cut` sorted blocks, causal or not). The
+/// engine consumes this with no knowledge of which
+/// [`SortStrategy`](super::strategy::SortStrategy) built `r` — an
+/// all-zero row simply masks that block's sorted term (the row-support
+/// skip in the per-block task).
+#[derive(Debug, Clone, Copy)]
+pub struct SortLayout<'a> {
+    /// `(nb, nb)` block-mixing matrix (near-permutation for Sinkhorn,
+    /// cluster-uniform for routing, all-zero for local)
+    pub r: &'a Mat,
+    pub nb: usize,
+    /// `Some(c)`: SortCut window over the first `c` sorted blocks
+    pub n_cut: Option<usize>,
+    /// strict-causal local window + strict mixing rows
+    pub causal: bool,
+}
+
 /// One attention instance inside a batched engine call — a
 /// `(request, head)` pair in serving terms. Multi-head callers flatten
 /// heads into one `AttentionReq` each; the engine flattens further into
@@ -477,6 +503,61 @@ impl SinkhornEngine {
             let scale = 1.0 / (qb.d as f32).sqrt();
             block_attention(w, bi, chunk, &qb, &kb, &vb, rq.r, rq.causal, scale);
         });
+    }
+
+    /// Multi-head attention over a backend-agnostic [`SortLayout`]
+    /// (DESIGN.md §Backends): one call per layer, all heads sharing the
+    /// layout's mixing matrix, dispatched to the full `[sorted | local]`
+    /// task list or the SortCut loop by the layout's window shape. This is
+    /// the seam between [`SortStrategy`](super::strategy::SortStrategy)
+    /// and the engine — task-list construction here never knows *which*
+    /// backend produced the mixing matrix, only what gather/window shape
+    /// to execute. Bit-identical to calling
+    /// [`Self::attention_chunks_into`] / [`Self::sortcut_attention_into`]
+    /// directly (it is exactly that dispatch).
+    pub fn layout_attention_into(
+        &self,
+        layout: &SortLayout,
+        qh: &[Mat],
+        kh: &[Mat],
+        vh: &[Mat],
+        outs: &mut [Mat],
+        ws: &mut EngineWorkspaces,
+    ) {
+        let heads = qh.len();
+        assert_eq!(kh.len(), heads, "one k buffer per head");
+        assert_eq!(vh.len(), heads, "one v buffer per head");
+        assert_eq!(outs.len(), heads, "one output per head");
+        match layout.n_cut {
+            None => {
+                let reqs: Vec<AttentionReq> = (0..heads)
+                    .map(|h| AttentionReq {
+                        q: &qh[h],
+                        k: &kh[h],
+                        v: &vh[h],
+                        r: layout.r,
+                        nb: layout.nb,
+                        causal: layout.causal,
+                    })
+                    .collect();
+                let chunks: Vec<&mut [f32]> =
+                    outs.iter_mut().map(|m| m.data.as_mut_slice()).collect();
+                self.attention_chunks_into(&reqs, chunks, ws);
+            }
+            Some(c) => {
+                for h in 0..heads {
+                    self.sortcut_attention_into(
+                        &qh[h],
+                        &kh[h],
+                        &vh[h],
+                        layout.r,
+                        layout.nb,
+                        c,
+                        &mut outs[h],
+                    );
+                }
+            }
+        }
     }
 
     /// SortCut truncated attention (paper §3.3): every query attends to

@@ -11,7 +11,11 @@
 //! generation through the incremental [`decode`] path (DESIGN.md §Decode),
 //! and (6) the full multi-layer, multi-head Sinkhorn Transformer stack
 //! ([`model`], DESIGN.md §Model) that composes all of the above into the
-//! depth-L architecture the paper's results come from.
+//! depth-L architecture the paper's results come from. Since PR 9 the
+//! block-mixing decision itself is pluggable ([`strategy`], DESIGN.md
+//! §Backends): Sinkhorn balancing is the reference [`SortStrategy`], with
+//! `routing` (online k-means, per Routing Transformers) and `local`
+//! (the paper's local-window baseline) selectable per stack.
 
 pub mod attention;
 pub mod balance;
@@ -22,14 +26,18 @@ pub mod memory;
 pub mod model;
 pub mod pages;
 pub mod pool;
+pub mod strategy;
 
 pub use attention::{
-    causal_decode_attention, dense_attention, local_attention, reference_stack_decode,
-    reference_stack_forward, sinkhorn_attention, sortcut_attention,
+    causal_decode_attention, decode_attention_with, dense_attention, local_attention,
+    reference_stack_decode, reference_stack_decode_with, reference_stack_forward,
+    reference_stack_forward_with, routing_mixing, sinkhorn_attention, sortcut_attention,
 };
 pub use balance::{causal_sinkhorn, ds_residual, sinkhorn};
 pub use decode::{DecodeScratch, DecodeState, LayerDecodeState};
-pub use engine::{AttentionReq, BlockedView, DecodeReq, EngineWorkspaces, SinkhornEngine};
+pub use engine::{
+    AttentionReq, BlockedView, DecodeReq, EngineWorkspaces, SinkhornEngine, SortLayout,
+};
 pub use matrix::{Mat, MatView, MatViewMut};
 pub use model::{
     SinkhornStack, StackBatchScratch, StackConfig, StackDecodeScratch, StackDecodeState,
@@ -37,3 +45,7 @@ pub use model::{
 };
 pub use pages::{Page, PagePool, PageTable, PoolStats};
 pub use pool::WorkerPool;
+pub use strategy::{
+    routing_assignments, Backend, LocalSort, RoutingSort, SinkhornSort, SortStrategy,
+    ALL_BACKENDS,
+};

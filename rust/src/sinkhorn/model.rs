@@ -6,12 +6,16 @@
 //! to a head. [`SinkhornStack`] is the real depth-L model:
 //!
 //! * **[`TransformerLayer`]** — pre-LayerNorm → per-layer SortNet →
-//!   multi-head blocked Sinkhorn attention (every head streams through
-//!   [`SinkhornEngine`]'s sorted+local path, sharing the layer's balanced
-//!   sort matrix) → per-head output projection summed into the residual →
+//!   multi-head blocked sparse attention (every head streams through
+//!   [`SinkhornEngine`]'s sorted+local path, sharing the layer's block
+//!   mixing matrix) → per-head output projection summed into the residual →
 //!   pre-LayerNorm GELU FFN. Layers can also be *bare* (no LayerNorm, no
 //!   FFN, one head): a depth-1 bare stack reproduces the historical
 //!   single-layer fallback **bitwise**, which `server::fallback` relies on.
+//!   How SortNet logits become the mixing matrix is per-layer pluggable
+//!   ([`SortStrategy`], DESIGN.md §Backends): [`SinkhornSort`] (the paper,
+//!   the default, and the bitwise reference), `routing` (online k-means)
+//!   or `local` (no sorted term) — see [`SinkhornStack::set_strategy`].
 //! * **[`SinkhornStack`]** — owns the per-layer weights plus one pooled
 //!   set of per-worker engine workspaces ([`EngineWorkspaces`]) and
 //!   activation buffers ([`StackScratch`]) sized once for the deepest
@@ -41,11 +45,12 @@
 //! [`reference_stack_forward`]: super::attention::reference_stack_forward
 //! [`reference_stack_decode`]: super::attention::reference_stack_decode
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
-use super::balance::{causal_sinkhorn, sinkhorn};
 use super::decode::{DecodeScratch, LayerDecodeState};
-use super::engine::{AttentionReq, DecodeReq, EngineWorkspaces, SinkhornEngine};
+use super::engine::{DecodeReq, EngineWorkspaces, SinkhornEngine, SortLayout};
 use super::matrix::{
     bias_rows_into, gelu, gelu_into, layernorm_into, layernorm_row_into, matmul_acc_into,
     matmul_acc_ordered_into, row_times, row_times_acc_into, row_times_into, Mat, MatView,
@@ -53,6 +58,7 @@ use super::matrix::{
 };
 use super::pages::PagePool;
 use super::pool::WorkerPool;
+use super::strategy::{Backend, SinkhornSort, SortStrategy};
 use crate::util::rng::Rng;
 
 /// Shape of a [`SinkhornStack`].
@@ -363,6 +369,10 @@ impl StackScratch {
 pub struct SinkhornStack {
     pub cfg: StackConfig,
     pub layers: Vec<TransformerLayer>,
+    /// per-layer sort backend (DESIGN.md §Backends); every constructor
+    /// defaults to [`SinkhornSort`], which keeps the stack bitwise
+    /// identical to the pre-trait code
+    strategies: Vec<Arc<dyn SortStrategy>>,
     engine: SinkhornEngine,
     scratch: StackScratch,
 }
@@ -382,7 +392,9 @@ impl SinkhornStack {
             layer.check_shapes(&cfg)?;
         }
         let scratch = StackScratch::new(&cfg, engine.threads());
-        Ok(SinkhornStack { cfg, layers, engine, scratch })
+        let reference: Arc<dyn SortStrategy> = Arc::new(SinkhornSort);
+        let strategies = (0..cfg.depth).map(|_| reference.clone()).collect();
+        Ok(SinkhornStack { cfg, layers, strategies, engine, scratch })
     }
 
     /// A deterministically seeded stack (the bench + test constructor).
@@ -402,6 +414,34 @@ impl SinkhornStack {
         &self.engine
     }
 
+    /// Install one sort backend on every layer (DESIGN.md §Backends).
+    /// Existing decode states keep the strategy they were built with;
+    /// states created by [`Self::decode_state`] afterwards pick up the
+    /// new one — swap before opening sessions, not mid-sequence.
+    pub fn set_strategy(&mut self, strategy: Arc<dyn SortStrategy>) {
+        for s in self.strategies.iter_mut() {
+            *s = strategy.clone();
+        }
+    }
+
+    /// Install a sort backend on one layer (hybrid stacks — e.g. routing
+    /// on the long-range middle layers, Sinkhorn elsewhere).
+    pub fn set_layer_strategy(&mut self, layer: usize, strategy: Arc<dyn SortStrategy>) {
+        self.strategies[layer] = strategy;
+    }
+
+    /// The per-layer sort strategies, in layer order.
+    pub fn strategies(&self) -> &[Arc<dyn SortStrategy>] {
+        &self.strategies
+    }
+
+    /// The backend of every layer when they agree, else `None` (mixed
+    /// stacks have no single stable `sort_backend=` value to report).
+    pub fn uniform_backend(&self) -> Option<Backend> {
+        let first = self.strategies.first()?.backend();
+        self.strategies.iter().all(|s| s.backend() == first).then_some(first)
+    }
+
     /// Total stack parameters (layers only — embeddings and task heads
     /// belong to the caller).
     pub fn n_params(&self) -> usize {
@@ -417,10 +457,10 @@ impl SinkhornStack {
     /// Forward pass in place over `x` (`(seq_len, d_model)` hidden states
     /// in, final hidden states out), using the stack's own scratch.
     pub fn forward(&mut self, x: &mut Mat) {
-        let SinkhornStack { cfg, layers, engine, scratch } = self;
+        let SinkhornStack { cfg, layers, strategies, engine, scratch } = self;
         check_input(cfg, x);
-        for layer in layers.iter() {
-            layer_forward(cfg, layer, x, engine, scratch);
+        for (layer, strat) in layers.iter().zip(strategies.iter()) {
+            layer_forward(cfg, layer, strat.as_ref(), x, engine, scratch);
         }
     }
 
@@ -430,8 +470,8 @@ impl SinkhornStack {
     /// Bit-identical to `forward` for any engine thread count.
     pub fn forward_with(&self, x: &mut Mat, engine: &SinkhornEngine, scratch: &mut StackScratch) {
         check_input(&self.cfg, x);
-        for layer in &self.layers {
-            layer_forward(&self.cfg, layer, x, engine, scratch);
+        for (layer, strat) in self.layers.iter().zip(self.strategies.iter()) {
+            layer_forward(&self.cfg, layer, strat.as_ref(), x, engine, scratch);
         }
     }
 
@@ -474,7 +514,7 @@ impl SinkhornStack {
         let cfg = &self.cfg;
         StackDecodeState {
             layers: (0..cfg.depth)
-                .map(|_| {
+                .map(|l| {
                     LayerDecodeState::new(
                         cfg.n_heads,
                         cfg.block_rows(),
@@ -483,6 +523,7 @@ impl SinkhornStack {
                         cfg.sinkhorn_iters,
                         cfg.n_cut,
                     )
+                    .with_strategy(self.strategies[l].clone())
                 })
                 .collect(),
             desc: (0..cfg.depth).map(|_| vec![0.0; cfg.d_model]).collect(),
@@ -499,7 +540,7 @@ impl SinkhornStack {
         let cfg = &self.cfg;
         StackDecodeState {
             layers: (0..cfg.depth)
-                .map(|_| {
+                .map(|l| {
                     LayerDecodeState::new_paged(
                         cfg.n_heads,
                         cfg.block_rows(),
@@ -510,6 +551,7 @@ impl SinkhornStack {
                         pool,
                         blocks_per_page,
                     )
+                    .with_strategy(self.strategies[l].clone())
                 })
                 .collect(),
             desc: (0..cfg.depth).map(|_| vec![0.0; cfg.d_model]).collect(),
@@ -892,11 +934,12 @@ fn check_input(cfg: &StackConfig, x: &Mat) {
 fn layer_forward(
     cfg: &StackConfig,
     layer: &TransformerLayer,
+    strategy: &dyn SortStrategy,
     x: &mut Mat,
     engine: &SinkhornEngine,
     scratch: &mut StackScratch,
 ) {
-    let (d, nb, heads) = (cfg.d_model, cfg.nb, cfg.n_heads);
+    let (nb, heads) = (cfg.nb, cfg.n_heads);
     let b = cfg.block_rows();
     // 1. pre-norm + SortNet + per-head projections, all read-only over the
     // residual stream (or its LayerNorm image)
@@ -908,8 +951,10 @@ fn layer_forward(
             }
             None => &*x,
         };
-        // SortNet: mean-pooled block descriptors → (nb, nb) logits →
-        // balance (the legacy fallback loop, kept bit-for-bit)
+        // SortNet: mean-pooled block descriptors → (nb, nb) logits (the
+        // legacy fallback loop, kept bit-for-bit) → the layer's sort
+        // backend turns them into the block-mixing matrix (DESIGN.md
+        // §Backends; SinkhornSort is the historical balance, bitwise)
         scratch.blk.data.fill(0.0);
         for i in 0..nb {
             for t in 0..b {
@@ -921,11 +966,7 @@ fn layer_forward(
         }
         scratch.blk.scale(1.0 / b as f32);
         let logits = scratch.blk.matmul(&layer.sortnet);
-        let r = if cfg.causal {
-            causal_sinkhorn(&logits, cfg.sinkhorn_iters, true)
-        } else {
-            sinkhorn(&logits, cfg.sinkhorn_iters)
-        };
+        let r = strategy.mix(&logits, cfg.sinkhorn_iters, cfg.causal);
         // per-head projections in the naive oracle's accumulation order
         // (bit-compatible with the legacy `Mat::matmul` path)
         let srcv = src.view();
@@ -939,38 +980,19 @@ fn layer_forward(
         }
         r
     };
-    // 2. multi-head attention: all heads through one engine call (the
-    // reusable per-layer entry — pooled workspaces, no per-layer allocs)
-    match cfg.n_cut {
-        None => {
-            let reqs: Vec<AttentionReq> = (0..heads)
-                .map(|h| AttentionReq {
-                    q: &scratch.qh[h],
-                    k: &scratch.kh[h],
-                    v: &scratch.vh[h],
-                    r: &r,
-                    nb,
-                    causal: cfg.causal,
-                })
-                .collect();
-            let outs: Vec<&mut [f32]> =
-                scratch.ctx.iter_mut().map(|m| m.data.as_mut_slice()).collect();
-            engine.attention_chunks_into(&reqs, outs, &mut scratch.ws);
-        }
-        Some(c) => {
-            for h in 0..heads {
-                engine.sortcut_attention_into(
-                    &scratch.qh[h],
-                    &scratch.kh[h],
-                    &scratch.vh[h],
-                    &r,
-                    nb,
-                    c,
-                    &mut scratch.ctx[h],
-                );
-            }
-        }
-    }
+    // 2. multi-head attention: the engine consumes the strategy's gather
+    // layout (mixing matrix + window/cut shape) with no knowledge of
+    // which backend produced it (DESIGN.md §Backends) — all heads
+    // through one pooled entry, no per-layer allocs
+    let layout = SortLayout { r: &r, nb, n_cut: cfg.n_cut, causal: cfg.causal };
+    engine.layout_attention_into(
+        &layout,
+        &scratch.qh,
+        &scratch.kh,
+        &scratch.vh,
+        &mut scratch.ctx,
+        &mut scratch.ws,
+    );
     // 3. per-head output projection summed into the residual stream
     scratch.proj.data.fill(0.0);
     for h in 0..heads {

@@ -1,0 +1,435 @@
+//! Pluggable sparse-attention sort backends (DESIGN.md §Backends).
+//!
+//! The blocked streaming engine ([`super::engine`]) never cared *how* the
+//! `(nb, nb)` block-mixing matrix it gathers with was produced — it only
+//! consumes the gather layout. This module factors that decision behind
+//! [`SortStrategy`]: a backend maps the per-layer block descriptor
+//! features (the SortNet-projected logits every layer already computes)
+//! to the mixing matrix the engine's `[sorted | local]` task lists
+//! execute. Three backends ship:
+//!
+//! * **[`SinkhornSort`]** — the paper's path and the reference
+//!   implementation: differentiable Sinkhorn balancing of the SortNet
+//!   logits ([`sinkhorn`] forward, strict [`causal_sinkhorn`] for
+//!   causal/decode). Its [`SortStrategy::mix`] / [`SortStrategy::mix_prefix`]
+//!   are the *exact* pre-trait calls, so a stack built with it is
+//!   **bitwise identical** to the pre-refactor code
+//!   (`tests/backends_props.rs` pins this).
+//! * **[`RoutingSort`]** — online k-means clustering over the block
+//!   descriptors, after Routing Transformers (PAPERS.md): blocks stream
+//!   through a deterministic running-mean k-means (first `k` blocks seed
+//!   the centroids; ties break to the lowest centroid index), and each
+//!   query block mixes the blocks of its own cluster uniformly. The
+//!   assignment of block `i` depends only on blocks `<= i`, so the
+//!   strategy is prefix-stable by construction and the decode cache
+//!   rules generalize unchanged. No RNG at inference time — determinism
+//!   comes from the seeded model weights feeding the descriptors.
+//! * **[`LocalSort`]** — the identity permutation with an empty sorted
+//!   term: the all-zero mixing matrix masks the sorted segment entirely
+//!   (the engine's row-support skip), leaving the paper's local-window
+//!   baseline (Table 1's "local" row). Nearly free, and the correctness
+//!   anchor every other backend is compared against.
+//!
+//! **Decode-cache contract** (DESIGN.md §Backends, §Decode): the
+//! incremental decoder re-runs [`SortStrategy::mix_prefix`] only when a
+//! block boundary fills and, under SortCut, freezes gathered cut rows
+//! append-only. Both rules are sound only for strategies whose prefix
+//! mixing is *prefix-stable* — `mix_prefix(feats, m)` agrees with the
+//! top-left of `mix_prefix(feats, m')` for every `m' >= m` — which each
+//! backend declares via [`SortStrategy::prefix_stable`] and the decoder
+//! asserts before trusting a frozen cut.
+
+use std::sync::Arc;
+
+use super::balance::{causal_sinkhorn, sinkhorn};
+use super::matrix::Mat;
+
+/// The selectable sort backends, in CLI spelling (`--backend ...`,
+/// `bench --target backends` rows, the `sort_backend=` key of the `model`
+/// info verb).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Differentiable Sinkhorn balancing of SortNet logits (the paper).
+    Sinkhorn,
+    /// Online k-means block clustering (Routing Transformers).
+    Routing,
+    /// Local-window baseline: no sorted term at all.
+    Local,
+}
+
+/// Every backend, in the order the CLI help, DESIGN.md §Backends and the
+/// bench rows list them.
+pub const ALL_BACKENDS: [Backend; 3] = [Backend::Sinkhorn, Backend::Routing, Backend::Local];
+
+impl Backend {
+    /// The stable CLI / bench-row / `key=value` spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Sinkhorn => "sinkhorn",
+            Backend::Routing => "routing",
+            Backend::Local => "local",
+        }
+    }
+
+    /// Parse a CLI `--backend` value. The error is the *stable* one-line
+    /// `error=` payload (<= 120 chars, single line — the same contract as
+    /// the TCP error paths in rust/README.md), printed verbatim by the
+    /// CLI so scripts can match on it.
+    pub fn parse(s: &str) -> Result<Backend, String> {
+        match s {
+            "sinkhorn" => Ok(Backend::Sinkhorn),
+            "routing" => Ok(Backend::Routing),
+            "local" => Ok(Backend::Local),
+            other => {
+                let mut shown: String = other.chars().take(32).collect();
+                if shown.len() < other.len() {
+                    shown.push_str("...");
+                }
+                // keep the line stable and short: non-printables collapse
+                let shown: String =
+                    shown.chars().map(|c| if c.is_ascii_graphic() { c } else { '?' }).collect();
+                Err(format!("error=unknown backend '{shown}' (expected sinkhorn|routing|local)"))
+            }
+        }
+    }
+
+    /// Build this backend's strategy for a model with `nb` sort blocks.
+    /// Routing picks `k = max(1, isqrt(nb))` clusters (the Routing
+    /// Transformers √n rule at block granularity); the other backends
+    /// ignore `nb`.
+    pub fn strategy(self, nb: usize) -> Arc<dyn SortStrategy> {
+        match self {
+            Backend::Sinkhorn => Arc::new(SinkhornSort),
+            Backend::Routing => Arc::new(RoutingSort::for_blocks(nb)),
+            Backend::Local => Arc::new(LocalSort),
+        }
+    }
+}
+
+/// A sort backend: block descriptor features → the `(nb, nb)` mixing
+/// matrix the engine's gather/window task lists consume.
+///
+/// `feats` is the layer's raw SortNet logit matrix — row `i` is block
+/// `i`'s projected descriptor in the batch forward, and the
+/// decode-rule-maintained row in incremental decoding (DESIGN.md
+/// §Decode). Strategies read it; they never own descriptor state of
+/// their own, which is what lets one `Arc`'d strategy serve every
+/// session of a model concurrently (`Send + Sync`).
+pub trait SortStrategy: Send + Sync {
+    /// Which backend this is (stable naming for CLI/bench/info lines).
+    fn backend(&self) -> Backend;
+
+    /// Full mixing matrix for a batch forward pass over `nb` started
+    /// blocks (`feats` is `(nb, nb)`). `causal == true` must produce a
+    /// *strict* matrix: row `i` carries zero weight on blocks `j >= i`,
+    /// so gathering never reads a block the queries may not see.
+    /// `iters` is the model's configured balance-iteration count
+    /// (ignored by backends that don't iterate).
+    fn mix(&self, feats: &Mat, iters: usize, causal: bool) -> Mat;
+
+    /// Strict mixing over the first `m` started blocks — the decode
+    /// boundary recompute (DESIGN.md §Decode). Reads only rows `< m` of
+    /// `feats` (rows of unstarted blocks may hold anything) and returns
+    /// an `(m, m)` matrix whose row `i` weights only blocks `j < i`
+    /// (never the in-progress block).
+    fn mix_prefix(&self, feats: &Mat, m: usize, iters: usize) -> Mat;
+
+    /// Does `mix_prefix(feats, m)` agree with the top-left of
+    /// `mix_prefix(feats, m')` for every `m' >= m`? The decoder's
+    /// boundary-recompute rule needs this to match the full-prefix
+    /// oracle, and the SortCut frozen-cut cache is sound *only* when it
+    /// holds (DESIGN.md §Backends) — a non-prefix-stable strategy is
+    /// rejected at decode-state construction when a cut is configured.
+    fn prefix_stable(&self) -> bool;
+}
+
+/// The reference backend: Sinkhorn balancing of the SortNet logits,
+/// exactly as the pre-trait code called it — [`sinkhorn`] for the
+/// non-causal forward, strict [`causal_sinkhorn`] for causal forwards
+/// and every decode recompute. Bitwise identical to the pre-refactor
+/// path (`tests/backends_props.rs`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SinkhornSort;
+
+impl SortStrategy for SinkhornSort {
+    fn backend(&self) -> Backend {
+        Backend::Sinkhorn
+    }
+
+    fn mix(&self, feats: &Mat, iters: usize, causal: bool) -> Mat {
+        if causal {
+            causal_sinkhorn(feats, iters, true)
+        } else {
+            sinkhorn(feats, iters)
+        }
+    }
+
+    fn mix_prefix(&self, feats: &Mat, m: usize, iters: usize) -> Mat {
+        // the historical decode rebalance, kept bit for bit: copy the
+        // (m, m) corner, strict-causal balance it
+        let sub = Mat::from_fn(m, m, |a, c| feats[(a, c)]);
+        causal_sinkhorn(&sub, iters, true)
+    }
+
+    fn prefix_stable(&self) -> bool {
+        // strict causal balancing is prefix-consistent
+        // (balance.rs::causal_prefix_consistent)
+        true
+    }
+}
+
+/// The local-window baseline (paper Table 1, "local"): the sorted term
+/// is empty — an all-zero mixing matrix, which both the engine and the
+/// naive reference treat as "mask the sorted segment" (row support
+/// `<= 1e-6`). Equivalent to [`super::attention::local_attention`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LocalSort;
+
+impl SortStrategy for LocalSort {
+    fn backend(&self) -> Backend {
+        Backend::Local
+    }
+
+    fn mix(&self, feats: &Mat, _iters: usize, _causal: bool) -> Mat {
+        Mat::zeros(feats.rows, feats.rows)
+    }
+
+    fn mix_prefix(&self, _feats: &Mat, m: usize, _iters: usize) -> Mat {
+        Mat::zeros(m, m)
+    }
+
+    fn prefix_stable(&self) -> bool {
+        // the zero matrix never changes: trivially prefix-stable
+        true
+    }
+}
+
+/// Online k-means block clustering, after Routing Transformers
+/// (PAPERS.md): block descriptors stream through a deterministic
+/// running-mean k-means and each block mixes the members of its own
+/// cluster. See [`routing_assignments`] for the exact streaming rule.
+///
+/// Mixing weights: row `i` spreads weight `1 / |cluster|` uniformly over
+/// its cluster's blocks — all of them in non-causal mode (including
+/// block `i` itself: duplicating the local block in the sorted term is
+/// harmless, exactly like the identity permutation), and only the
+/// *earlier* members `j < i` in causal/decode mode (strictness). A row
+/// whose cluster has no earlier member is all-zero, which masks its
+/// sorted term — the same no-support rule as strict Sinkhorn's row 0.
+#[derive(Debug, Clone, Copy)]
+pub struct RoutingSort {
+    /// cluster count (clamped to the streamed block count at use)
+    pub k: usize,
+}
+
+impl RoutingSort {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "routing needs at least one cluster");
+        RoutingSort { k }
+    }
+
+    /// The Routing Transformers √n rule at block granularity:
+    /// `k = max(1, isqrt(nb))` clusters for `nb` blocks.
+    pub fn for_blocks(nb: usize) -> Self {
+        let mut k = 1usize;
+        while (k + 1) * (k + 1) <= nb {
+            k += 1;
+        }
+        RoutingSort { k }
+    }
+
+    fn mix_rows(&self, feats: &Mat, m: usize, causal: bool) -> Mat {
+        let assign = routing_assignments(feats, m, self.k);
+        let mut r = Mat::zeros(m, m);
+        for i in 0..m {
+            // causal rows weight strictly earlier members only (the
+            // in-progress block must never be gathered); non-causal rows
+            // weight the whole cluster, block i included
+            let lim = if causal { i } else { m };
+            let count = (0..lim).filter(|&j| assign[j] == assign[i]).count();
+            if count == 0 {
+                continue; // no visible cluster member: sorted term masked
+            }
+            let w = 1.0 / count as f32;
+            for j in 0..lim {
+                if assign[j] == assign[i] {
+                    r[(i, j)] = w;
+                }
+            }
+        }
+        r
+    }
+}
+
+impl SortStrategy for RoutingSort {
+    fn backend(&self) -> Backend {
+        Backend::Routing
+    }
+
+    fn mix(&self, feats: &Mat, _iters: usize, causal: bool) -> Mat {
+        self.mix_rows(feats, feats.rows, causal)
+    }
+
+    fn mix_prefix(&self, feats: &Mat, m: usize, _iters: usize) -> Mat {
+        self.mix_rows(feats, m, true)
+    }
+
+    fn prefix_stable(&self) -> bool {
+        // assignment of block i depends only on blocks <= i, and row i's
+        // weights only on assignments <= i — stable by construction
+        // (tests/backends_props.rs::routing_assignments_are_prefix_stable)
+        true
+    }
+}
+
+/// The streaming k-means assignment rule shared by [`RoutingSort`] and
+/// the naive reference ([`super::attention::routing_mixing`]), exposed so
+/// the tests can pin assignment stability directly:
+///
+/// * blocks `i < k` seed centroid `i` with their own descriptor row;
+/// * every later block joins the nearest centroid by squared euclidean
+///   distance over the full feature row (ties break to the lowest
+///   centroid index), then pulls it by the running mean
+///   `c += (x - c) / n`.
+///
+/// Deterministic (no RNG) and *online*: block `i`'s assignment depends
+/// only on rows `<= i`, which is what makes [`RoutingSort`]
+/// prefix-stable.
+pub fn routing_assignments(feats: &Mat, m: usize, k: usize) -> Vec<usize> {
+    assert!(m <= feats.rows, "assignments need the first m rows");
+    let k = k.max(1);
+    let mut centroids: Vec<Vec<f32>> = Vec::new();
+    let mut counts: Vec<usize> = Vec::new();
+    let mut assign = Vec::with_capacity(m);
+    for i in 0..m {
+        let row = feats.row(i);
+        if centroids.len() < k {
+            centroids.push(row.to_vec());
+            counts.push(1);
+            assign.push(centroids.len() - 1);
+            continue;
+        }
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for (c, cent) in centroids.iter().enumerate() {
+            let mut dist = 0.0f32;
+            for (a, b) in row.iter().zip(cent) {
+                let diff = a - b;
+                dist += diff * diff;
+            }
+            if dist < best_d {
+                best_d = dist;
+                best = c;
+            }
+        }
+        counts[best] += 1;
+        let n = counts[best] as f32;
+        for (cv, &xv) in centroids[best].iter_mut().zip(row) {
+            *cv += (xv - *cv) / n;
+        }
+        assign.push(best);
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    // The cross-backend property battery (per-backend oracle gates,
+    // thread invariance, decode parity, paged spot-checks) lives in
+    // tests/backends_props.rs — this module covers the parse surface and
+    // the small structural invariants.
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_feats(seed: u64, n: usize) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, n, |_, _| rng.normal() as f32 * 0.5)
+    }
+
+    #[test]
+    fn parse_roundtrips_every_backend() {
+        for b in ALL_BACKENDS {
+            assert_eq!(Backend::parse(b.name()), Ok(b));
+        }
+    }
+
+    #[test]
+    fn parse_error_line_is_stable_and_short() {
+        let err = Backend::parse("quantum").unwrap_err();
+        assert_eq!(err, "error=unknown backend 'quantum' (expected sinkhorn|routing|local)");
+        assert_eq!(err.lines().count(), 1, "error payload must stay one line");
+        assert!(err.len() <= 120, "error line must stay <= 120 chars: {} long", err.len());
+    }
+
+    #[test]
+    fn parse_error_clamps_hostile_input() {
+        // long and non-printable inputs must not blow the line length or
+        // smuggle control bytes into the stable payload
+        let long = "x".repeat(500);
+        let err = Backend::parse(&long).unwrap_err();
+        assert!(err.len() <= 120, "got {} chars", err.len());
+        assert_eq!(err.lines().count(), 1);
+        let evil = Backend::parse("a\nb\tc").unwrap_err();
+        assert_eq!(evil.lines().count(), 1, "control chars must be collapsed: {evil:?}");
+        assert!(evil.starts_with("error=unknown backend "));
+    }
+
+    #[test]
+    fn sinkhorn_strategy_is_the_exact_balance_call() {
+        let feats = rand_feats(0xB1, 5);
+        let s = SinkhornSort;
+        assert_eq!(s.mix(&feats, 6, false), sinkhorn(&feats, 6));
+        assert_eq!(s.mix(&feats, 6, true), causal_sinkhorn(&feats, 6, true));
+        let sub = Mat::from_fn(3, 3, |a, c| feats[(a, c)]);
+        assert_eq!(s.mix_prefix(&feats, 3, 6), causal_sinkhorn(&sub, 6, true));
+    }
+
+    #[test]
+    fn local_mix_is_all_zero() {
+        let feats = rand_feats(0xB2, 4);
+        let s = LocalSort;
+        for causal in [false, true] {
+            let r = s.mix(&feats, 4, causal);
+            assert_eq!((r.rows, r.cols), (4, 4));
+            assert!(r.data.iter().all(|&x| x == 0.0));
+        }
+        assert!(s.mix_prefix(&feats, 2, 4).data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn routing_rows_are_strict_and_stochastic() {
+        let feats = rand_feats(0xB3, 8);
+        let s = RoutingSort::for_blocks(8); // k = 2
+        assert_eq!(s.k, 2);
+        let r = s.mix(&feats, 4, true);
+        for i in 0..8 {
+            for j in i..8 {
+                assert_eq!(r[(i, j)], 0.0, "causal row {i} must be strict");
+            }
+            let sum: f32 = r.row(i).iter().sum();
+            assert!(sum == 0.0 || (sum - 1.0).abs() < 1e-6, "row {i} sums to {sum}");
+        }
+        // non-causal rows always include the block itself: support >= 1
+        let rf = s.mix(&feats, 4, false);
+        for i in 0..8 {
+            let sum: f32 = rf.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6, "non-causal row {i} sums to {sum}");
+            assert!(rf[(i, i)] > 0.0, "row {i} must weight its own block");
+        }
+    }
+
+    #[test]
+    fn routing_first_k_blocks_seed_their_own_clusters() {
+        let feats = rand_feats(0xB4, 6);
+        let assign = routing_assignments(&feats, 6, 3);
+        assert_eq!(&assign[..3], &[0, 1, 2]);
+        assert!(assign[3..].iter().all(|&c| c < 3));
+    }
+
+    #[test]
+    fn for_blocks_is_integer_sqrt() {
+        for (nb, k) in [(1, 1), (3, 1), (4, 2), (8, 2), (9, 3), (16, 4), (24, 4)] {
+            assert_eq!(RoutingSort::for_blocks(nb).k, k, "nb={nb}");
+        }
+    }
+}

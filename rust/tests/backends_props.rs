@@ -1,0 +1,360 @@
+//! Cross-backend property battery for the pluggable sort backends
+//! (DESIGN.md §Backends) — runs with no artifacts and no XLA, in every
+//! build. The contract under test:
+//!
+//! 1. every backend's stack forward sits within 1e-5 max-abs of its
+//!    *naive* reference — `reference_stack_forward_with` driven by the
+//!    from-scratch mixing oracles (balance.rs for `sinkhorn`,
+//!    `routing_mixing` for `routing`, the zero matrix for `local`) — and
+//!    the engine attention matches the seed `sinkhorn_attention` under
+//!    each backend's mixing matrix;
+//! 2. the `sinkhorn` backend routed through the `SortStrategy` trait is
+//!    **bitwise identical** to the pre-refactor path: installing it
+//!    explicitly changes nothing vs the default stack (whose bitwise
+//!    legacy pin lives in `model_props`), forward and per-step decode;
+//! 3. every backend is bit-deterministic across engine thread counts;
+//! 4. every backend's incremental decode matches the full-prefix
+//!    per-token oracle `reference_stack_decode_with`, including SortCut
+//!    widths (all three backends are prefix-stable);
+//! 5. the `local` backend's decode is bitwise history-independent — its
+//!    full-prefix oracle *is* the windowed computation, so a long
+//!    session reproduces a fresh block-only session bit for bit;
+//! 6. routing cluster assignments are deterministic under the seeded
+//!    RNG, prefix-stable, and the strategy's mixing equals the
+//!    from-scratch `routing_mixing` oracle bit for bit;
+//! 7. mono and paged decode stores agree bitwise per step under every
+//!    backend (the §Pages parity contract, extended to the new
+//!    strategies).
+
+use sinkhorn::sinkhorn::engine::ENGINE_TOL as TOL;
+use sinkhorn::sinkhorn::{
+    causal_sinkhorn, reference_stack_decode_with, reference_stack_forward_with,
+    routing_assignments, routing_mixing, sinkhorn_attention, Backend, Mat, PagePool, RoutingSort,
+    SinkhornEngine, SinkhornStack, SortStrategy, StackConfig, ALL_BACKENDS,
+};
+use sinkhorn::util::rng::Rng;
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.normal() as f32 * 0.5)
+}
+
+fn cfg(
+    nb: usize,
+    b: usize,
+    d_model: usize,
+    n_heads: usize,
+    depth: usize,
+    d_ff: usize,
+) -> StackConfig {
+    StackConfig {
+        seq_len: nb * b,
+        d_model,
+        n_heads,
+        depth,
+        d_ff,
+        nb,
+        sinkhorn_iters: 5,
+        causal: false,
+        n_cut: None,
+    }
+}
+
+/// A backend's naive mixing rule as a `reference_stack_forward_with`
+/// closure — re-derived from the independent oracles (balance.rs,
+/// `routing_mixing`, the zero matrix), never by calling the strategy
+/// under test.
+fn naive_mix(backend: Backend, nb: usize, causal: bool, iters: usize) -> impl Fn(usize, &Mat) -> Mat {
+    let k = RoutingSort::for_blocks(nb).k;
+    move |_li, logits: &Mat| match backend {
+        Backend::Sinkhorn => {
+            if causal {
+                causal_sinkhorn(logits, iters, true)
+            } else {
+                sinkhorn::sinkhorn::balance::sinkhorn(logits, iters)
+            }
+        }
+        Backend::Routing => routing_mixing(logits, logits.rows, k, causal),
+        Backend::Local => Mat::zeros(logits.rows, logits.rows),
+    }
+}
+
+#[test]
+fn every_backend_forward_matches_its_naive_reference() {
+    let mut rng = Rng::new(0xBAC0);
+    for (nb, b, heads, d_head, depth, d_ff) in
+        [(4usize, 4usize, 2usize, 4usize, 2usize, 17usize), (6, 3, 1, 8, 1, 0), (9, 2, 2, 3, 2, 11)]
+    {
+        for causal in [false, true] {
+            let mut c = cfg(nb, b, heads * d_head, heads, depth, d_ff);
+            c.causal = causal;
+            let x = rand_mat(&mut rng, c.seq_len, c.d_model);
+            for backend in ALL_BACKENDS {
+                let mut stack =
+                    SinkhornStack::seeded(c.clone(), 0xBE ^ nb as u64, SinkhornEngine::serial())
+                        .unwrap();
+                stack.set_strategy(backend.strategy(nb));
+                let want = reference_stack_forward_with(
+                    &x,
+                    &stack.cfg,
+                    &stack.layers,
+                    naive_mix(backend, nb, causal, c.sinkhorn_iters),
+                );
+                let mut got = x.clone();
+                stack.forward(&mut got);
+                let diff = got.max_abs_diff(&want);
+                assert!(
+                    diff <= TOL,
+                    "{} backend (nb={nb}, b={b}, heads={heads}, depth={depth}, d_ff={d_ff}, \
+                     causal={causal}): max-abs {diff} vs naive reference",
+                    backend.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_backend_engine_attention_matches_the_naive_attention() {
+    let mut rng = Rng::new(0xBAC1);
+    let (nb, b, d) = (6usize, 5usize, 16usize);
+    let ell = nb * b;
+    let (q, k, v) =
+        (rand_mat(&mut rng, ell, d), rand_mat(&mut rng, ell, d), rand_mat(&mut rng, ell, d));
+    let feats = rand_mat(&mut rng, nb, nb);
+    let eng = SinkhornEngine::serial();
+    for backend in ALL_BACKENDS {
+        let strat = backend.strategy(nb);
+        for causal in [false, true] {
+            let r = strat.mix(&feats, 5, causal);
+            let want = sinkhorn_attention(&q, &k, &v, &r, nb, causal);
+            let got = eng.attention(&q, &k, &v, &r, nb, causal);
+            let diff = got.max_abs_diff(&want);
+            assert!(
+                diff <= TOL,
+                "{} backend (causal={causal}): engine vs naive max-abs {diff}",
+                backend.name()
+            );
+        }
+    }
+}
+
+/// The acceptance pin: the `sinkhorn` backend routed through the trait is
+/// bitwise the pre-refactor path. The default stack (no `set_strategy`
+/// call) *is* that path — `model_props` pins it bit for bit against the
+/// reconstructed legacy math, and `strategy.rs` unit tests pin the trait
+/// methods against the raw balance.rs calls — so installing the strategy
+/// explicitly must change nothing: forward and per-step decode.
+#[test]
+fn sinkhorn_backend_through_trait_is_bitwise_the_prerefactor_path() {
+    let mut c = cfg(4, 3, 8, 2, 2, 13);
+    c.n_cut = Some(2);
+    let mut rng = Rng::new(0xBAC2);
+    let x = rand_mat(&mut rng, c.seq_len, c.d_model);
+    let mut default_stack =
+        SinkhornStack::seeded(c.clone(), 7, SinkhornEngine::serial()).unwrap();
+    let mut explicit = SinkhornStack::seeded(c.clone(), 7, SinkhornEngine::serial()).unwrap();
+    explicit.set_strategy(Backend::Sinkhorn.strategy(c.nb));
+    assert_eq!(explicit.uniform_backend(), Some(Backend::Sinkhorn));
+
+    let mut a = x.clone();
+    default_stack.forward(&mut a);
+    let mut b = x.clone();
+    explicit.forward(&mut b);
+    assert_eq!(a, b, "explicit sinkhorn strategy drifted from the default forward");
+
+    let mut st_d = default_stack.decode_state();
+    let mut st_e = explicit.decode_state();
+    let mut sc_d = default_stack.new_decode_scratch();
+    let mut sc_e = explicit.new_decode_scratch();
+    let mut out_d = vec![0.0f32; c.d_model];
+    let mut out_e = vec![0.0f32; c.d_model];
+    for t in 0..c.seq_len {
+        default_stack.decode_step(&mut st_d, x.row(t), &mut sc_d, &mut out_d);
+        explicit.decode_step(&mut st_e, x.row(t), &mut sc_e, &mut out_e);
+        assert_eq!(out_d, out_e, "decode step {t} drifted under the explicit strategy");
+    }
+}
+
+#[test]
+fn every_backend_is_thread_invariant_bitwise() {
+    let c = cfg(4, 4, 6, 2, 2, 9);
+    let mut rng = Rng::new(0xBAC3);
+    let x = rand_mat(&mut rng, c.seq_len, c.d_model);
+    for backend in ALL_BACKENDS {
+        let forward = |threads: usize| -> Mat {
+            let mut stack =
+                SinkhornStack::seeded(c.clone(), 0x7E, SinkhornEngine::new(threads)).unwrap();
+            stack.set_strategy(backend.strategy(c.nb));
+            let mut y = x.clone();
+            stack.forward(&mut y);
+            y
+        };
+        let serial = forward(1);
+        for threads in [2usize, 5] {
+            assert_eq!(
+                forward(threads),
+                serial,
+                "{} backend not thread-invariant at {threads} threads",
+                backend.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn every_backend_decode_matches_the_full_prefix_oracle() {
+    let mut rng = Rng::new(0xBAC4);
+    let shapes: [(usize, usize, usize, usize, usize, usize, Option<usize>); 3] = [
+        (3, 4, 2, 4, 2, 11, None),   // full layers, mid-block end below
+        (4, 3, 1, 6, 1, 0, None),    // bare single layer
+        (4, 2, 2, 3, 2, 7, Some(2)), // SortCut: all three backends are prefix-stable
+    ];
+    for (nb, b, heads, d_head, depth, d_ff, cut) in shapes {
+        let mut c = cfg(nb, b, heads * d_head, heads, depth, d_ff);
+        c.n_cut = cut;
+        let total = nb * b - b / 2; // end mid-block
+        let x = rand_mat(&mut rng, total, c.d_model);
+        for backend in ALL_BACKENDS {
+            let mut stack =
+                SinkhornStack::seeded(c.clone(), 0xD0 ^ depth as u64, SinkhornEngine::serial())
+                    .unwrap();
+            stack.set_strategy(backend.strategy(nb));
+            let k_clusters = RoutingSort::for_blocks(nb).k;
+            let iters = c.sinkhorn_iters;
+            let want =
+                reference_stack_decode_with(&x, &stack.cfg, &stack.layers, |_li, sl, m| {
+                    match backend {
+                        Backend::Sinkhorn => {
+                            let sub = Mat::from_fn(m, m, |a, cc| sl[(a, cc)]);
+                            causal_sinkhorn(&sub, iters, true)
+                        }
+                        Backend::Routing => routing_mixing(sl, m, k_clusters, true),
+                        Backend::Local => Mat::zeros(m, m),
+                    }
+                });
+            let mut st = stack.decode_state();
+            let mut scratch = stack.new_decode_scratch();
+            let mut out = vec![0.0f32; c.d_model];
+            for t in 0..total {
+                stack.decode_step(&mut st, x.row(t), &mut scratch, &mut out);
+                for (e, &got) in out.iter().enumerate() {
+                    let dv = (got - want[(t, e)]).abs();
+                    assert!(
+                        dv <= TOL,
+                        "{} backend (nb={nb}, b={b}, depth={depth}, cut={cut:?}) step {t} \
+                         col {e}: diverged from the full-prefix oracle by {dv}",
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The `local` baseline's full-prefix oracle *is* the windowed
+/// computation: the zero mixing matrix caches no sorted term
+/// (`sorted_rows == 0` at every boundary), so token `t` of block `i` in
+/// a long session must reproduce — bit for bit — the same rows decoded
+/// into a fresh state that never saw blocks `< i`.
+#[test]
+fn local_backend_decode_is_bitwise_history_independent() {
+    let c = cfg(4, 5, 6, 2, 2, 9);
+    let b = c.seq_len / c.nb;
+    let mut rng = Rng::new(0xBAC5);
+    let x = rand_mat(&mut rng, c.seq_len, c.d_model);
+    let mut stack = SinkhornStack::seeded(c.clone(), 0x10CA1, SinkhornEngine::serial()).unwrap();
+    stack.set_strategy(Backend::Local.strategy(c.nb));
+
+    let mut st = stack.decode_state();
+    let mut scratch = stack.new_decode_scratch();
+    let mut out = vec![0.0f32; c.d_model];
+    let mut full = Vec::new();
+    for t in 0..c.seq_len {
+        stack.decode_step(&mut st, x.row(t), &mut scratch, &mut out);
+        full.push(out.clone());
+    }
+    for blk in 0..c.nb {
+        let mut fresh = stack.decode_state();
+        let mut fresh_scratch = stack.new_decode_scratch();
+        for (off, t) in (blk * b..(blk + 1) * b).enumerate() {
+            stack.decode_step(&mut fresh, x.row(t), &mut fresh_scratch, &mut out);
+            assert_eq!(
+                out, full[t],
+                "block {blk} token {off}: local decode read history outside its window"
+            );
+        }
+    }
+}
+
+#[test]
+fn routing_assignments_are_stable_under_the_seeded_rng_and_prefix_stable() {
+    let mut rng = Rng::new(0x2007);
+    for nb in [4usize, 9, 12] {
+        let feats = rand_mat(&mut rng, nb, nb);
+        let s = RoutingSort::for_blocks(nb);
+        let full = routing_assignments(&feats, nb, s.k);
+        // deterministic: no RNG at inference time, same feats -> same clusters
+        assert_eq!(full, routing_assignments(&feats, nb, s.k), "nb={nb}: clustering not stable");
+        // online: the assignment of block i depends only on blocks <= i
+        for m in 1..=nb {
+            assert_eq!(
+                &routing_assignments(&feats, m, s.k)[..],
+                &full[..m],
+                "nb={nb}: assignments not prefix-stable at m={m}"
+            );
+        }
+        // the strategy's mixing is the from-scratch oracle, bit for bit
+        for causal in [false, true] {
+            assert_eq!(
+                s.mix(&feats, 5, causal),
+                routing_mixing(&feats, nb, s.k, causal),
+                "nb={nb} causal={causal}: strategy vs routing_mixing oracle"
+            );
+        }
+        // mix_prefix agrees with the top-left of every longer prefix (the
+        // decode boundary-recompute soundness condition)
+        let full_prefix = s.mix_prefix(&feats, nb, 5);
+        for m in 1..=nb {
+            let pm = s.mix_prefix(&feats, m, 5);
+            for i in 0..m {
+                for j in 0..m {
+                    assert_eq!(
+                        pm[(i, j)],
+                        full_prefix[(i, j)],
+                        "nb={nb} m={m}: mix_prefix not prefix-stable at ({i}, {j})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn paged_and_mono_decode_agree_bitwise_per_step_for_every_backend() {
+    let c = cfg(4, 3, 8, 2, 2, 7);
+    let mut rng = Rng::new(0xBAC6);
+    let x = rand_mat(&mut rng, c.seq_len, c.d_model);
+    for backend in ALL_BACKENDS {
+        for bpp in [1usize, 2] {
+            let mut stack =
+                SinkhornStack::seeded(c.clone(), 0xAA, SinkhornEngine::serial()).unwrap();
+            stack.set_strategy(backend.strategy(c.nb));
+            let pool = PagePool::new();
+            let mut mono = stack.decode_state();
+            let mut paged = stack.decode_state_paged(&pool, bpp);
+            let mut sc_m = stack.new_decode_scratch();
+            let mut sc_p = stack.new_decode_scratch();
+            let mut out_m = vec![0.0f32; c.d_model];
+            let mut out_p = vec![0.0f32; c.d_model];
+            for t in 0..c.seq_len {
+                stack.decode_step(&mut mono, x.row(t), &mut sc_m, &mut out_m);
+                stack.decode_step(&mut paged, x.row(t), &mut sc_p, &mut out_p);
+                assert_eq!(
+                    out_m, out_p,
+                    "{} backend: mono vs paged diverged at step {t} (bpp={bpp})",
+                    backend.name()
+                );
+            }
+        }
+    }
+}

@@ -86,6 +86,20 @@ CELL_SCHEMAS = {
         "bytes_per_session": "num",
         "admitted": "int",
     },
+    # sort backends head-to-head (DESIGN.md §Backends): one row per
+    # (backend, shape) with the mix+attention median and the quality
+    # proxy vs dense attention (every sparse backend deviates from dense,
+    # so the "num" > 0 check is sound)
+    "backends": {
+        "backend": "str",
+        "ell": "int",
+        "nb": "int",
+        "b": "int",
+        "d": "int",
+        "threads": "int",
+        "ns_per_iter": "num",
+        "dense_max_abs": "num",
+    },
 }
 
 

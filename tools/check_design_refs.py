@@ -44,9 +44,60 @@ REQUIRED_ANCHORS = {
     # HTTP gateway PR: typed JSON routes + SSE streaming over the
     # scheduler, status mapping for every stable error
     "Gateway",
+    # pluggable-backends PR: SortStrategy trait contract + the
+    # backend-comparison matrix
+    "Backends",
 }
 
 BENCH_JSON_RE = re.compile(r"BENCH_([A-Za-z0-9_]+)\.json")
+
+# The CLI's `--backend a|b|c` help string (rust/src/main.rs) and the
+# backtick-quoted first column of the DESIGN.md §Backends comparison
+# matrix (`| `name` | ...`).
+BACKEND_FLAG_RE = re.compile(r"--backend\s+([a-z][a-z0-9_-]*(?:\|[a-z][a-z0-9_-]*)+)")
+BACKEND_ROW_RE = re.compile(r"^\|\s*`([a-z][a-z0-9_-]*)`\s*\|", re.MULTILINE)
+
+
+def check_backend_names() -> list:
+    """Every backend named in the DESIGN.md §Backends comparison matrix
+    must appear in the CLI `--backend sinkhorn|routing|local` help string
+    (rust/src/main.rs) and vice versa — the docs may not promise a
+    backend the CLI can't select, and the CLI may not grow one the
+    design doc doesn't cover."""
+    design = ROOT / "DESIGN.md"
+    main_rs = ROOT / "rust" / "src" / "main.rs"
+    if not main_rs.exists():
+        return ["rust/src/main.rs does not exist"]
+    m = BACKEND_FLAG_RE.search(main_rs.read_text(encoding="utf-8"))
+    if not m:
+        return ["rust/src/main.rs has no '--backend a|b|c' help string"]
+    cli = set(m.group(1).split("|"))
+    text = design.read_text(encoding="utf-8")
+    sec = re.search(r"^(#{1,6})\s+.*§Backends.*$", text, re.MULTILINE)
+    if not sec:
+        return ["DESIGN.md has no §Backends heading (required anchor)"]
+    level = len(sec.group(1))
+    rest = text[sec.end():]
+    nxt = re.search(rf"^#{{1,{level}}}\s", rest, re.MULTILINE)
+    body = rest[: nxt.start()] if nxt else rest
+    doc = set(BACKEND_ROW_RE.findall(body))
+    errors = []
+    if not doc:
+        errors.append(
+            "DESIGN.md §Backends has no comparison-matrix rows (| `name` | ...) to "
+            "cross-check against the CLI --backend help"
+        )
+    for name in sorted(doc - cli):
+        errors.append(
+            f"DESIGN.md §Backends documents backend `{name}` but the CLI --backend "
+            f"help string in rust/src/main.rs does not offer it (offers: {sorted(cli)})"
+        )
+    for name in sorted(cli - doc):
+        errors.append(
+            f"CLI --backend offers '{name}' but the DESIGN.md §Backends comparison "
+            f"matrix has no `{name}` row (documents: {sorted(doc)})"
+        )
+    return errors
 
 
 def check_bench_targets() -> list:
@@ -116,15 +167,20 @@ def main() -> int:
     bench_errors = check_bench_targets()
     for msg in bench_errors:
         print(f"FAIL: {msg}")
+    backend_errors = check_backend_names()
+    for msg in backend_errors:
+        print(f"FAIL: {msg}")
+    failed = bad or missing or bench_errors or backend_errors
     print(
         f"checked {len(refs)} references to {len(set(a for _, _, a in refs))} anchors "
         f"({', '.join(sorted(set(a for _, _, a in refs)))}) "
         f"against {len(anchors)} headings "
         f"({len(REQUIRED_ANCHORS)} required) "
-        f"+ EXPERIMENTS.md BENCH_*.json targets: "
-        + ("FAIL" if bad or missing or bench_errors else "OK")
+        f"+ EXPERIMENTS.md BENCH_*.json targets "
+        f"+ DESIGN.md §Backends vs CLI --backend: "
+        + ("FAIL" if failed else "OK")
     )
-    return 1 if bad or missing or bench_errors else 0
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":
