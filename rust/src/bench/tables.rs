@@ -21,7 +21,8 @@ use crate::runtime::{Registry, Runtime};
 use crate::sinkhorn::engine::ENGINE_TOL;
 use crate::sinkhorn::{
     causal_decode_attention, memory, reference_stack_forward, sinkhorn, sinkhorn_attention,
-    DecodeScratch, DecodeState, Mat, SinkhornEngine, SinkhornStack, StackConfig, WorkerPool,
+    DecodeReq, DecodeScratch, DecodeState, Mat, PrefillReq, SinkhornEngine, SinkhornStack,
+    StackConfig, WorkerPool,
 };
 use crate::util::rng::Rng;
 use crate::util::stats::{percentile, time_iters, Table};
@@ -463,6 +464,9 @@ struct DecodeCell {
     ell: usize,
     nb: usize,
     path: &'static str,
+    /// engine worker threads the cell ran on (1 for the serial
+    /// generation paths; the pool width for the prefill paths)
+    threads: usize,
     toks_per_sec: f64,
 }
 
@@ -486,16 +490,81 @@ fn decode_run(
     out
 }
 
+/// Ingest an `ell`-token prompt into `n_seqs` independent decode states —
+/// one token per engine pass through the batched step entry (the legacy
+/// prefill: what the scheduler's tick loop costs per prompt token), or
+/// one block-aligned chunk per engine pass through the block-parallel
+/// prefill entry (DESIGN.md §Prefill). Returns every sequence's stacked
+/// outputs so the caller can gate the two paths bitwise against each
+/// other before timing them.
+fn prefill_run(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    logits: &Mat,
+    b: usize,
+    nb: usize,
+    n_seqs: usize,
+    eng: &SinkhornEngine,
+    chunked: bool,
+) -> Vec<Mat> {
+    let d = q.cols;
+    let mut states: Vec<DecodeState> =
+        (0..n_seqs).map(|_| DecodeState::new(b, d, nb, 5, None)).collect();
+    let mut outs: Vec<Mat> = (0..n_seqs).map(|_| Mat::zeros(q.rows, d)).collect();
+    if chunked {
+        let mut t = 0usize;
+        while t < q.rows {
+            let n = b.min(q.rows - t);
+            let rows = t * d..(t + n) * d;
+            let reqs: Vec<PrefillReq> = states
+                .iter_mut()
+                .zip(outs.iter_mut())
+                .map(|(state, out)| PrefillReq {
+                    state,
+                    q: &q.data[rows.clone()],
+                    k: &k.data[rows.clone()],
+                    v: &v.data[rows.clone()],
+                    sort_logits: logits,
+                    out: &mut out.data[rows.clone()],
+                })
+                .collect();
+            eng.prefill_chunks_into(reqs);
+            t += n;
+        }
+    } else {
+        for t in 0..q.rows {
+            let reqs: Vec<DecodeReq> = states
+                .iter_mut()
+                .zip(outs.iter_mut())
+                .map(|(state, out)| DecodeReq {
+                    state,
+                    q: q.row(t),
+                    k: k.row(t),
+                    v: v.row(t),
+                    sort_logits: logits,
+                    out: out.row_mut(t),
+                })
+                .collect();
+            eng.decode_step_into(reqs);
+        }
+    }
+    outs
+}
+
 /// `bench decode` — tokens/sec of autoregressive decoding across sequence
 /// lengths (DESIGN.md §Decode): the full-recompute baseline
 /// (`attention::causal_decode_attention`, which rebalances and regathers
 /// the whole prefix for every token — what serving without caches costs)
 /// vs the incremental `DecodeState` path vs incremental + SortCut
-/// truncation. Before timing, the incremental path is asserted within
-/// [`ENGINE_TOL`] of the oracle at the smallest shape, so the table can't
-/// quietly compare different computations. Medians also land
-/// machine-readably in `BENCH_decode.json` at the repo root, next to
-/// `BENCH_engine.json`.
+/// truncation — plus prompt-ingestion (prefill) throughput for a small
+/// cohort: one engine pass per token vs one block-parallel pass per
+/// block-aligned chunk (DESIGN.md §Prefill). Before timing, the
+/// incremental path is asserted within [`ENGINE_TOL`] of the oracle at
+/// the smallest shape and the chunked prefill is asserted *bitwise*
+/// equal to the step prefill, so the table can't quietly compare
+/// different computations. Medians also land machine-readably in
+/// `BENCH_decode.json` at the repo root, next to `BENCH_engine.json`.
 pub fn decode_table(opts: &BenchOptions) -> Result<String> {
     let (b, d, cut) = (64usize, 64usize, 2usize);
     let ells: &[usize] = if opts.smoke { &[256] } else { &[512, 1024, 4096] };
@@ -504,8 +573,22 @@ pub fn decode_table(opts: &BenchOptions) -> Result<String> {
             "decode — autoregressive tokens/sec, b=64 d=64, cut=2 (DESIGN.md §Decode){}",
             if opts.smoke { " [SMOKE]" } else { "" }
         ),
-        &["ell", "nb", "full tok/s", "incr tok/s", "incr+cut tok/s", "incr x", "cut x"],
+        &[
+            "ell",
+            "nb",
+            "full tok/s",
+            "incr tok/s",
+            "incr+cut tok/s",
+            "incr x",
+            "cut x",
+            "pf step tok/s",
+            "pf chunk tok/s",
+            "pf x",
+        ],
     );
+    // prefill throughput cells: a small cohort of prompts ingested
+    // together, the way the scheduler batches them (DESIGN.md §Prefill)
+    let (eng, n_seqs) = (SinkhornEngine::new(0), 4usize);
     let mut cells = Vec::new();
     for &ell in ells {
         let nb = ell / b;
@@ -527,6 +610,16 @@ pub fn decode_table(opts: &BenchOptions) -> Result<String> {
                      max-abs {diff}"
                 );
             }
+            // prefill gate: the chunked path is *bitwise* equal to the
+            // token-by-token path, per sequence (DESIGN.md §Prefill)
+            let step = prefill_run(&q, &k, &v, &logits, b, nb, n_seqs, &eng, false);
+            let chunked = prefill_run(&q, &k, &v, &logits, b, nb, n_seqs, &eng, true);
+            for (s, (a, c)) in step.iter().zip(chunked.iter()).enumerate() {
+                anyhow::ensure!(
+                    a.data == c.data,
+                    "chunked prefill is not bit-identical to step prefill at ell={ell} seq={s}"
+                );
+            }
         }
 
         // timing: the full-recompute baseline is O(ell^2), so fewer iters
@@ -543,9 +636,18 @@ pub fn decode_table(opts: &BenchOptions) -> Result<String> {
             time_iters(1, iters, || drop(decode_run(&q, &k, &v, &logits, b, nb, None)));
         let mut t_cut =
             time_iters(1, iters, || drop(decode_run(&q, &k, &v, &logits, b, nb, Some(cut))));
+        let mut t_pf_step = time_iters(1, iters, || {
+            drop(prefill_run(&q, &k, &v, &logits, b, nb, n_seqs, &eng, false))
+        });
+        let mut t_pf_chunk = time_iters(1, iters, || {
+            drop(prefill_run(&q, &k, &v, &logits, b, nb, n_seqs, &eng, true))
+        });
         let full = ell as f64 / percentile(&mut t_full, 50.0);
         let incr = ell as f64 / percentile(&mut t_incr, 50.0);
         let cutc = ell as f64 / percentile(&mut t_cut, 50.0);
+        let ingested = (n_seqs * ell) as f64;
+        let pf_step = ingested / percentile(&mut t_pf_step, 50.0);
+        let pf_chunk = ingested / percentile(&mut t_pf_chunk, 50.0);
         t.row(&[
             ell.to_string(),
             nb.to_string(),
@@ -554,10 +656,33 @@ pub fn decode_table(opts: &BenchOptions) -> Result<String> {
             format!("{cutc:.0}"),
             format!("{:.2}x", incr / full),
             format!("{:.2}x", cutc / full),
+            format!("{pf_step:.0}"),
+            format!("{pf_chunk:.0}"),
+            format!("{:.2}x", pf_chunk / pf_step),
         ]);
-        cells.push(DecodeCell { ell, nb, path: "full_recompute", toks_per_sec: full });
-        cells.push(DecodeCell { ell, nb, path: "incremental", toks_per_sec: incr });
-        cells.push(DecodeCell { ell, nb, path: "incremental_sortcut", toks_per_sec: cutc });
+        cells.push(DecodeCell { ell, nb, path: "full_recompute", threads: 1, toks_per_sec: full });
+        cells.push(DecodeCell { ell, nb, path: "incremental", threads: 1, toks_per_sec: incr });
+        cells.push(DecodeCell {
+            ell,
+            nb,
+            path: "incremental_sortcut",
+            threads: 1,
+            toks_per_sec: cutc,
+        });
+        cells.push(DecodeCell {
+            ell,
+            nb,
+            path: "prefill_step",
+            threads: eng.threads(),
+            toks_per_sec: pf_step,
+        });
+        cells.push(DecodeCell {
+            ell,
+            nb,
+            path: "prefill_chunked",
+            threads: eng.threads(),
+            toks_per_sec: pf_chunk,
+        });
     }
     let mut s = t.render();
     s.push_str(
@@ -566,7 +691,11 @@ pub fn decode_table(opts: &BenchOptions) -> Result<String> {
          incr = incremental DecodeState (cached causal Sinkhorn state, rebalance only at\n\
          block boundaries, cached sorted K/V, streaming-softmax carry — O(b*d) per step);\n\
          incr+cut = same with SortCut truncation (cut=2 sorted blocks, append-only cache).\n\
-         Gate: incremental within 1e-5 max-abs of the oracle at every step (ell=512).\n",
+         pf step / pf chunk = prompt-ingestion throughput for a 4-sequence cohort: one\n\
+         engine pass per token vs one block-parallel pass per block-aligned chunk\n\
+         (DESIGN.md §Prefill); both paths produce bit-identical states and outputs.\n\
+         Gates: incremental within 1e-5 max-abs of the oracle at every step, and\n\
+         chunked prefill bitwise equal to step prefill per sequence (ell=512).\n",
     );
     save_result(&opts.artifacts, "decode", &s)?;
     if opts.smoke {
@@ -598,7 +727,7 @@ fn write_decode_json(
             ("d".into(), Json::from(d)),
             ("n_cut".into(), Json::from(if c.path == "incremental_sortcut" { cut } else { 0 })),
             ("path".into(), Json::from(c.path)),
-            ("threads".into(), Json::from(1usize)),
+            ("threads".into(), Json::from(c.threads)),
             ("tokens_per_sec".into(), Json::from(c.toks_per_sec.round())),
         ]));
     }
@@ -776,6 +905,10 @@ fn write_model_json(
 struct ServeCell {
     transport: &'static str,
     mode: &'static str,
+    /// prompt-ingestion axis: `step` = one decode step per tick (chunk
+    /// budget 0), `chunked` = block-parallel prefill between ticks
+    /// (DESIGN.md §Prefill) — streams are bit-identical either way
+    prefill: &'static str,
     sessions: usize,
     prompt_len: usize,
     gen_len: usize,
@@ -783,6 +916,10 @@ struct ServeCell {
     toks_per_sec: f64,
     p50_tok_ms: f64,
     p95_tok_ms: f64,
+    /// time to first token, submit → first streamed event (wave
+    /// executors stream nothing: their whole reply is the first token)
+    ttft_p50_ms: f64,
+    ttft_p95_ms: f64,
     occupancy: f64,
 }
 
@@ -827,17 +964,18 @@ fn parse_sse_event(text: &str) -> Result<(&str, &str)> {
 
 /// One bench client over the TCP line protocol: fire `plan` requests
 /// back to back on one connection, gate every reply against the oracle,
-/// and return `(n_tokens, per-token latencies ms, service seconds)` —
-/// the same triple the in-process clients report.
+/// and return `(n_tokens, per-token latencies ms, per-request TTFTs ms,
+/// service seconds)` — the same tuple the in-process clients report.
 fn drive_serve_tcp(
     addr: std::net::SocketAddr,
     plan: &[(Vec<i32>, usize, Vec<i32>)],
-) -> Result<(usize, Vec<f64>, f64)> {
+) -> Result<(usize, Vec<f64>, Vec<f64>, f64)> {
     use std::io::{BufRead, BufReader, Write};
     use std::time::Instant;
     let mut conn = std::net::TcpStream::connect(addr)?;
     let mut reader = BufReader::new(conn.try_clone()?);
-    let (mut lat_ms, mut n_tokens, mut service_s) = (Vec::new(), 0usize, 0.0f64);
+    let (mut lat_ms, mut ttft_ms) = (Vec::new(), Vec::new());
+    let (mut n_tokens, mut service_s) = (0usize, 0.0f64);
     for (p, want_n, want) in plan {
         let ids = p.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ");
         conn.write_all(format!("gen {want_n} {ids}\n").as_bytes())?;
@@ -850,6 +988,9 @@ fn drive_serve_tcp(
             anyhow::ensure!(reader.read_line(&mut l)? > 0, "tcp stream closed mid-reply");
             if let Some(rest) = l.strip_prefix("tok ") {
                 let now = Instant::now();
+                if streamed.is_empty() {
+                    ttft_ms.push((now - submit).as_secs_f64() * 1e3);
+                }
                 lat_ms.push((now - prev).as_secs_f64() * 1e3);
                 prev = now;
                 let id = rest
@@ -864,29 +1005,34 @@ fn drive_serve_tcp(
                     "serve bench oracle gate: tcp transport diverged from single-request generate"
                 );
                 anyhow::ensure!(streamed == full, "streamed ids must match the summary");
+                if streamed.is_empty() {
+                    // nothing streamed: the summary is the first arrival
+                    ttft_ms.push((Instant::now() - submit).as_secs_f64() * 1e3);
+                }
                 n_tokens += full.len();
                 service_s += total_us.saturating_sub(queue_us) as f64 / 1e6;
                 break;
             }
         }
     }
-    Ok((n_tokens, lat_ms, service_s))
+    Ok((n_tokens, lat_ms, ttft_ms, service_s))
 }
 
 /// One bench client over the HTTP/SSE gateway: POST `/v1/generate` per
 /// request on one keep-alive connection, stream the `tok` events, gate
-/// the `done` summary against the oracle; same return triple as
+/// the `done` summary against the oracle; same return tuple as
 /// [`drive_serve_tcp`].
 fn drive_serve_http(
     addr: std::net::SocketAddr,
     plan: &[(Vec<i32>, usize, Vec<i32>)],
-) -> Result<(usize, Vec<f64>, f64)> {
+) -> Result<(usize, Vec<f64>, Vec<f64>, f64)> {
     use crate::server::json::{FromJson, GenerateRequest, GenerateSummary, ToJson, TokEvent};
     use std::io::{BufRead, BufReader, Read, Write};
     use std::time::Instant;
     let mut conn = std::net::TcpStream::connect(addr)?;
     let mut reader = BufReader::new(conn.try_clone()?);
-    let (mut lat_ms, mut n_tokens, mut service_s) = (Vec::new(), 0usize, 0.0f64);
+    let (mut lat_ms, mut ttft_ms) = (Vec::new(), Vec::new());
+    let (mut n_tokens, mut service_s) = (0usize, 0.0f64);
     for (p, want_n, want) in plan {
         let body = GenerateRequest { max_new: *want_n, tokens: p.clone(), deadline_ms: None }
             .to_json();
@@ -937,6 +1083,9 @@ fn drive_serve_http(
                 match event {
                     "tok" => {
                         let now = Instant::now();
+                        if streamed.is_empty() {
+                            ttft_ms.push((now - submit).as_secs_f64() * 1e3);
+                        }
                         lat_ms.push((now - prev).as_secs_f64() * 1e3);
                         prev = now;
                         streamed.push(TokEvent::from_json(data)?.id);
@@ -964,6 +1113,8 @@ fn drive_serve_http(
             "serve bench oracle gate: http transport diverged from single-request generate"
         );
         if streamed.is_empty() {
+            // token-free reply: the whole summary is the first arrival
+            ttft_ms.push((Instant::now() - submit).as_secs_f64() * 1e3);
             let per = summary.total_us as f64 / 1e3 / summary.tokens.len().max(1) as f64;
             lat_ms.extend(std::iter::repeat(per).take(summary.tokens.len()));
         } else {
@@ -972,21 +1123,26 @@ fn drive_serve_http(
         n_tokens += summary.tokens.len();
         service_s += summary.total_us.saturating_sub(summary.queue_us) as f64 / 1e6;
     }
-    Ok((n_tokens, lat_ms, service_s))
+    Ok((n_tokens, lat_ms, ttft_ms, service_s))
 }
 
 /// `bench serve` — the serving executor under offered load (DESIGN.md
 /// §Scheduler): N concurrent clients fire mixed-length generate requests
 /// at a fallback server running either the legacy **request-batch** wave
-/// executor or the **continuous-batching** scheduler, and the sweep
-/// reports aggregate tokens/s, p50/p95 per-token latency, and slot
-/// occupancy per `(sessions × prompt/gen length, mode)` cell.
+/// executor or the **continuous-batching** scheduler — the latter with
+/// prompts ingested one decode step per tick (`prefill=step`) or through
+/// the budgeted block-parallel chunks of DESIGN.md §Prefill
+/// (`prefill=chunked`) — and the sweep reports aggregate tokens/s,
+/// p50/p95 per-token latency, p50/p95 time-to-first-token, and slot
+/// occupancy per `(sessions × prompt/gen length, mode, prefill)` cell.
 ///
 /// Per-token latency is the inter-arrival gap of streamed tokens (first
-/// token: submit → arrival); the request-batch executor streams nothing,
-/// so its tokens are accounted at `total / n_tokens` each — which is the
-/// honest number: every token of a wave arrives when the whole wave
-/// does. Occupancy is `Σ per-request service time / (wall · slots)`.
+/// token: submit → arrival); TTFT is that first gap, collected per
+/// request. The request-batch executor streams nothing, so its tokens
+/// are accounted at `total / n_tokens` each and its TTFT is the whole
+/// reply time — which is the honest number: every token of a wave
+/// arrives when the whole wave does. Occupancy is
+/// `Σ per-request service time / (wall · slots)`.
 ///
 /// Before timing anything, every reply is gated against the
 /// single-request oracle: the scheduler's output must equal
@@ -1024,20 +1180,28 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
         &[
             "transport",
             "mode",
+            "prefill",
             "sessions",
             "prompt",
             "gen",
             "tok/s",
             "p50 tok ms",
             "p95 tok ms",
+            "ttft p50",
+            "ttft p95",
             "occupancy",
         ],
     );
+    // chunked-prefill budget: one Sinkhorn block per chunk (the natural
+    // unit of the block-parallel path — DESIGN.md §Prefill)
+    let chunk = seq_len / nb;
     let mut cells = Vec::new();
     for &(n_clients, plen, glen) in loads {
-        for (mode, mode_name) in
-            [(ExecMode::RequestBatch, "request_batch"), (ExecMode::Continuous, "continuous")]
-        {
+        for (mode, mode_name, prefill) in [
+            (ExecMode::RequestBatch, "request_batch", "step"),
+            (ExecMode::Continuous, "continuous", "step"),
+            (ExecMode::Continuous, "continuous", "chunked"),
+        ] {
             let policy = BatchPolicy {
                 max_batch: 64,
                 max_wait: Duration::from_millis(1),
@@ -1045,6 +1209,7 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
                 max_sessions: slots,
                 queue_depth: 4096,
                 mem_budget: 0,
+                prefill_chunk_tokens: if prefill == "chunked" { chunk } else { 0 },
                 ..Default::default()
             };
             let server = Server::start_fallback(cfg.clone(), policy)?;
@@ -1074,12 +1239,13 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
             // each client fires mixed-length requests back to back: every
             // third asks for a 2x generation, so wave executors
             // head-of-line block on it while the scheduler backfills
-            let results: Vec<(usize, Vec<f64>, f64)> = std::thread::scope(|scope| {
+            let results: Vec<(usize, Vec<f64>, Vec<f64>, f64)> = std::thread::scope(|scope| {
                 let mut handles = Vec::new();
                 for (c, plan) in expected.iter().enumerate() {
                     let h = server.handle.clone();
                     handles.push(scope.spawn(move || {
                         let mut token_lat_ms: Vec<f64> = Vec::new();
+                        let mut req_ttft_ms: Vec<f64> = Vec::new();
                         let mut n_tokens = 0usize;
                         let mut service_s = 0.0f64;
                         for (r, (p, want_n, want)) in plan.iter().enumerate() {
@@ -1089,6 +1255,9 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
                             let mut ids = Vec::new();
                             for (_i, id) in toks.iter() {
                                 let now = Instant::now();
+                                if ids.is_empty() {
+                                    req_ttft_ms.push((now - submit).as_secs_f64() * 1e3);
+                                }
                                 token_lat_ms.push((now - prev).as_secs_f64() * 1e3);
                                 prev = now;
                                 ids.push(id);
@@ -1103,7 +1272,9 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
                             );
                             if ids.is_empty() {
                                 // request-batch: no token events — every token
-                                // of the wave arrives with the summary
+                                // of the wave arrives with the summary, which
+                                // is also the honest first-token time
+                                req_ttft_ms.push(rsp.total.as_secs_f64() * 1e3);
                                 let per =
                                     rsp.total.as_secs_f64() * 1e3 / full.len().max(1) as f64;
                                 token_lat_ms.extend(std::iter::repeat(per).take(full.len()));
@@ -1113,7 +1284,7 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
                             n_tokens += full.len();
                             service_s += (rsp.total - rsp.queue).as_secs_f64();
                         }
-                        (n_tokens, token_lat_ms, service_s)
+                        (n_tokens, token_lat_ms, req_ttft_ms, service_s)
                     }));
                 }
                 handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -1122,26 +1293,33 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
             server.shutdown()?;
             let total_tokens: usize = results.iter().map(|r| r.0).sum();
             let mut lat: Vec<f64> = results.iter().flat_map(|r| r.1.iter().copied()).collect();
-            let service_total: f64 = results.iter().map(|r| r.2).sum();
+            let mut ttft: Vec<f64> = results.iter().flat_map(|r| r.2.iter().copied()).collect();
+            let service_total: f64 = results.iter().map(|r| r.3).sum();
             anyhow::ensure!(total_tokens > 0, "serve bench produced no tokens");
             let toks_per_sec = total_tokens as f64 / wall;
             let p50 = percentile(&mut lat, 50.0).max(1e-6);
             let p95 = percentile(&mut lat, 95.0).max(1e-6);
+            let ttft_p50 = percentile(&mut ttft, 50.0).max(1e-6);
+            let ttft_p95 = percentile(&mut ttft, 95.0).max(1e-6);
             let occupancy = (service_total / (wall * slots as f64)).max(1e-6);
             t.row(&[
                 "channel".to_string(),
                 mode_name.to_string(),
+                prefill.to_string(),
                 n_clients.to_string(),
                 plen.to_string(),
                 glen.to_string(),
                 format!("{toks_per_sec:.0}"),
                 format!("{p50:.3}"),
                 format!("{p95:.3}"),
+                format!("{ttft_p50:.3}"),
+                format!("{ttft_p95:.3}"),
                 format!("{occupancy:.3}"),
             ]);
             cells.push(ServeCell {
                 transport: "channel",
                 mode: mode_name,
+                prefill,
                 sessions: n_clients,
                 prompt_len: plen,
                 gen_len: glen,
@@ -1149,6 +1327,8 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
                 toks_per_sec,
                 p50_tok_ms: p50,
                 p95_tok_ms: p95,
+                ttft_p50_ms: ttft_p50,
+                ttft_p95_ms: ttft_p95,
                 occupancy,
             });
         }
@@ -1197,7 +1377,7 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
                 })
                 .collect();
             let t0 = Instant::now();
-            let results: Vec<(usize, Vec<f64>, f64)> = std::thread::scope(|scope| {
+            let results: Vec<(usize, Vec<f64>, Vec<f64>, f64)> = std::thread::scope(|scope| {
                 let mut handles = Vec::new();
                 for plan in expected.iter() {
                     handles.push(scope.spawn(move || {
@@ -1216,26 +1396,33 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
             server.shutdown()?;
             let total_tokens: usize = results.iter().map(|r| r.0).sum();
             let mut lat: Vec<f64> = results.iter().flat_map(|r| r.1.iter().copied()).collect();
-            let service_total: f64 = results.iter().map(|r| r.2).sum();
+            let mut ttft: Vec<f64> = results.iter().flat_map(|r| r.2.iter().copied()).collect();
+            let service_total: f64 = results.iter().map(|r| r.3).sum();
             anyhow::ensure!(total_tokens > 0, "serve bench produced no tokens ({transport})");
             let toks_per_sec = total_tokens as f64 / wall;
             let p50 = percentile(&mut lat, 50.0).max(1e-6);
             let p95 = percentile(&mut lat, 95.0).max(1e-6);
+            let ttft_p50 = percentile(&mut ttft, 50.0).max(1e-6);
+            let ttft_p95 = percentile(&mut ttft, 95.0).max(1e-6);
             let occupancy = (service_total / (wall * slots as f64)).max(1e-6);
             t.row(&[
                 transport.to_string(),
                 "continuous".to_string(),
+                "step".to_string(),
                 n_clients.to_string(),
                 plen.to_string(),
                 glen.to_string(),
                 format!("{toks_per_sec:.0}"),
                 format!("{p50:.3}"),
                 format!("{p95:.3}"),
+                format!("{ttft_p50:.3}"),
+                format!("{ttft_p95:.3}"),
                 format!("{occupancy:.3}"),
             ]);
             cells.push(ServeCell {
                 transport,
                 mode: "continuous",
+                prefill: "step",
                 sessions: n_clients,
                 prompt_len: plen,
                 gen_len: glen,
@@ -1243,6 +1430,8 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
                 toks_per_sec,
                 p50_tok_ms: p50,
                 p95_tok_ms: p95,
+                ttft_p50_ms: ttft_p50,
+                ttft_p95_ms: ttft_p95,
                 occupancy,
             });
         }
@@ -1254,6 +1443,10 @@ pub fn serve_table(opts: &BenchOptions) -> Result<String> {
          continuous = token-level scheduler (session table, one fused (session, layer,\n\
          head) engine pass per tick, admission between ticks, slots freed immediately).\n\
          gen column = base budget; each client mixes 0.5x/1x/2x of it per request.\n\
+         prefill: step = prompts ride the tick loop one decode step per tick;\n\
+         chunked = block-parallel prefill between ticks (--prefill-chunk-tokens, one\n\
+         Sinkhorn block per chunk here — DESIGN.md §Prefill; bit-identical streams).\n\
+         ttft = submit -> first streamed token (wave replies land whole: ttft = total).\n\
          transport: channel = in-process ServerHandle (executor-only); tcp / http =\n\
          the same continuous loads over real sockets through the line protocol and\n\
          the JSON/SSE gateway respectively, so the delta vs channel is frontend cost.\n\
@@ -1282,6 +1475,7 @@ fn write_serve_json(cells: &[ServeCell]) -> Result<std::path::PathBuf> {
         rows.push(Json::Obj(vec![
             ("transport".into(), Json::from(c.transport)),
             ("mode".into(), Json::from(c.mode)),
+            ("prefill".into(), Json::from(c.prefill)),
             ("sessions".into(), Json::from(c.sessions)),
             ("prompt_len".into(), Json::from(c.prompt_len)),
             ("gen_len".into(), Json::from(c.gen_len)),
@@ -1289,6 +1483,8 @@ fn write_serve_json(cells: &[ServeCell]) -> Result<std::path::PathBuf> {
             ("tokens_per_sec".into(), Json::from(c.toks_per_sec)),
             ("p50_tok_ms".into(), Json::from(c.p50_tok_ms)),
             ("p95_tok_ms".into(), Json::from(c.p95_tok_ms)),
+            ("ttft_p50_ms".into(), Json::from(c.ttft_p50_ms)),
+            ("ttft_p95_ms".into(), Json::from(c.ttft_p95_ms)),
             ("occupancy".into(), Json::from(c.occupancy)),
         ]));
     }

@@ -72,6 +72,7 @@ USAGE: sinkhorn <subcommand> [flags]
          [--max-sessions S] [--queue-depth Q] [--mem-budget-mb M]
          [--page-bytes B] [--no-paged] [--no-prefix-share]
          [--gen-deadline-ms D] [--stall-timeout-ms T] [--drain-ms T]
+         [--prefill-chunk-tokens N]
          [--idle-timeout-ms T] [--request-batch] [--port P]
          [--http-port P] [--wait]
          (--fallback serves the pure-Rust stack; no artifacts needed.
@@ -89,6 +90,11 @@ USAGE: sinkhorn <subcommand> [flags]
           --page-bytes sizes K/V pages (0 = one Sinkhorn block each),
           --no-prefix-share disables copy-on-write prompt-prefix reuse,
           --queue-depth bounds the admission queue (overflow -> busy=),
+          --prefill-chunk-tokens ingests prompts in block-parallel
+          chunks of up to N tokens between decode ticks (DESIGN.md
+          §Prefill; 0 = default = one decode step per tick) — streams
+          are bit-identical either way, long prompts just stop
+          starving active sessions of ticks,
           --request-batch falls back to the legacy wave executor.
           Failure policy (DESIGN.md §Faults): --gen-deadline-ms caps
           each generation's wall clock (0 = none; per-request
@@ -237,6 +243,9 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
         },
         stall_timeout: std::time::Duration::from_millis(args.u64("stall-timeout-ms", 30_000)?),
         drain: std::time::Duration::from_millis(args.u64("drain-ms", 5_000)?),
+        // chunked prompt ingestion between ticks (DESIGN.md §Prefill);
+        // 0 = legacy one-decode-step-per-tick prefill
+        prefill_chunk_tokens: args.usize("prefill-chunk-tokens", 0)?,
     };
     let seed = args.u64("seed", 17)?;
     // --fallback forces the pure-Rust engine backend; otherwise Server

@@ -71,6 +71,16 @@ pub struct BatchPolicy {
     /// may finish for this long; survivors are then aborted with the
     /// stable `server shutting down` error (DESIGN.md §Faults).
     pub drain: Duration,
+    /// Continuous scheduler: per-session prompt-token budget for chunked
+    /// prefill between decode ticks (DESIGN.md §Prefill, Sarathi-style).
+    /// `> 0` routes prompt ingestion through the block-parallel
+    /// [`crate::sinkhorn::SinkhornStack::prefill`] path, at most this
+    /// many tokens per session per tick, so a long prompt is absorbed in
+    /// budgeted chunks without starving active sessions' token cadence.
+    /// `0` (the default) keeps the legacy behavior: prompts ride the
+    /// tick loop one `decode_step` per tick. Both paths are bit-identical
+    /// per stream.
+    pub prefill_chunk_tokens: usize,
 }
 
 impl Default for BatchPolicy {
@@ -85,6 +95,7 @@ impl Default for BatchPolicy {
             gen_deadline: None,
             stall_timeout: Duration::from_secs(30),
             drain: Duration::from_secs(5),
+            prefill_chunk_tokens: 0,
         }
     }
 }

@@ -511,11 +511,13 @@ impl FallbackModel {
     /// Paged models additionally detect shareable prompt prefixes: the
     /// longest cached block-aligned prefix of the clamped prompt is
     /// *forked* — page refcount bumps, no float copies — and only the
-    /// uncached remainder is prefilled, through the same `decode_step`
-    /// the scheduler's tick loop is bit-identical to, so the session's
-    /// stream is unchanged token for token. The prefix never extends past
-    /// `keep - 1` tokens: step `keep - 1` emits the first generated
-    /// token, so the session itself must still take it.
+    /// uncached remainder is prefilled, through the chunked
+    /// block-parallel path ([`SinkhornStack::prefill`], DESIGN.md
+    /// §Prefill), which is bit-identical to the `decode_step` loop the
+    /// scheduler's ticks replay, so the session's stream is unchanged
+    /// token for token. The prefix never extends past `keep - 1` tokens:
+    /// step `keep - 1` emits the first generated token, so the session
+    /// itself must still take it.
     pub fn open_session(&self, prompt: &[i32], max_new: usize) -> GenSession {
         let (ell_cap, d) = (self.cfg.seq_len, self.cfg.d_model);
         let seeded = [0i32]; // empty prompt: decode from PAD
@@ -572,36 +574,57 @@ impl FallbackModel {
         if target == 0 {
             return (self.fresh_session_state(), 0);
         }
-        // the lock covers match + prefill + insert so concurrent opens
-        // never race duplicate entries; opens are rare next to ticks
-        let mut cache = self.lock_prefix_cache();
-        let (mut st, shared) = match cache
-            .iter()
-            .filter(|e| e.tokens.len() <= target && kept.starts_with(&e.tokens))
-            .max_by_key(|e| e.tokens.len())
-        {
-            Some(e) => (e.st.fork(), e.tokens.len()),
-            None => (self.fresh_session_state(), 0),
+        // lock #1: match only. The lock used to cover match + prefill +
+        // insert, serializing every concurrent open behind one session's
+        // prompt ingestion; now disjoint prompts prefill in parallel and
+        // only the cheap cache scans are serialized
+        // (`tests/prefill_props.rs::concurrent_opens_of_disjoint_prompts_both_progress`).
+        let (mut st, shared) = {
+            let cache = self.lock_prefix_cache();
+            match cache
+                .iter()
+                .filter(|e| e.tokens.len() <= target && kept.starts_with(&e.tokens))
+                .max_by_key(|e| e.tokens.len())
+            {
+                Some(e) => (e.st.fork(), e.tokens.len()),
+                None => (self.fresh_session_state(), 0),
+            }
         };
         if shared < target {
+            // chunked block-parallel prefill (DESIGN.md §Prefill):
+            // `shared` and `target` are both block-aligned, so the
+            // uncached remainder ingests one whole block per
+            // [`SinkhornStack::prefill`] call — a fused (head × block)
+            // engine pass — instead of one `decode_step` per token.
+            // Block-boundary snapshots are forked outside the lock; a
+            // later prompt sharing any whole-block prefix then hits
             let b = self.cfg.seq_len / self.cfg.nb.max(1);
-            let mut scratch = self.stack.new_decode_scratch();
-            let mut x = vec![0.0f32; self.cfg.d_model];
-            let mut h = vec![0.0f32; self.cfg.d_model];
-            for (t, &tok) in kept.iter().enumerate().take(target).skip(shared) {
-                self.embed_token_into(tok, t, &mut x);
-                self.stack.decode_step(&mut st, &x, &mut scratch, &mut h);
-                // snapshot every block boundary, not just `target`: a
-                // later prompt sharing any whole-block prefix then hits.
-                // Snapshots are forks — they ride the session's pages
-                if (t + 1) % b == 0 && !cache.iter().any(|e| e.tokens == kept[..t + 1]) {
+            let d = self.cfg.d_model;
+            let mut scratch = self.stack.new_prefill_scratch();
+            let mut xs = vec![0.0f32; b.max(1) * d];
+            let mut snapshots: Vec<(usize, StackDecodeState)> = Vec::new();
+            let mut t = shared;
+            while t < target {
+                let n = b.min(target - t).max(1);
+                for (j, &tok) in kept[t..t + n].iter().enumerate() {
+                    self.embed_token_into(tok, t + j, &mut xs[j * d..(j + 1) * d]);
+                }
+                self.stack.prefill(&mut st, &xs[..n * d], &mut scratch, None);
+                t += n;
+                if t % b == 0 {
+                    snapshots.push((t, st.fork()));
+                }
+            }
+            // lock #2: insert only, deduped against entries a concurrent
+            // open may have raced in while we prefilled unlocked (losing
+            // a race costs a dropped fork, never a wrong entry)
+            let mut cache = self.lock_prefix_cache();
+            for (end, snap) in snapshots {
+                if !cache.iter().any(|e| e.tokens == kept[..end]) {
                     if cache.len() >= PREFIX_CACHE_CAP {
                         cache.remove(0);
                     }
-                    cache.push(PrefixEntry {
-                        tokens: kept[..t + 1].to_vec(),
-                        st: st.fork(),
-                    });
+                    cache.push(PrefixEntry { tokens: kept[..end].to_vec(), st: snap });
                 }
             }
         }
@@ -634,6 +657,12 @@ impl FallbackModel {
     /// across every tick).
     pub fn new_batch_scratch(&self) -> crate::sinkhorn::StackBatchScratch {
         self.stack.new_batch_scratch()
+    }
+
+    /// Scratch for [`Self::prefill_session`] (one per scheduler, reused
+    /// across every prefill chunk; `session_state_for` builds its own).
+    pub fn new_prefill_scratch(&self) -> crate::sinkhorn::StackPrefillScratch {
+        self.stack.new_prefill_scratch()
     }
 
     /// Bytes of decode state one session holds at full capacity — the
@@ -863,6 +892,66 @@ impl FallbackModel {
         }
         self.session_epilogue(s)
     }
+
+    /// Ingest up to `max_tokens` of `s`'s remaining prompt through the
+    /// chunked prefill path (DESIGN.md §Prefill): the scheduler calls
+    /// this between decode ticks with its `--prefill-chunk-tokens`
+    /// budget, so a long prompt is absorbed in block-parallel engine
+    /// chunks instead of one `decode_step` per tick — while the budget
+    /// bounds how long any single chunk can hold the tick loop
+    /// (Sarathi-style chunking). The *final* prompt token is never
+    /// ingested here: its step emits the session's first token, so it
+    /// must ride the tick loop like every emitting step — which keeps
+    /// the stream's token cadence and the LM-head math untouched.
+    ///
+    /// Bit-identical to consuming the same tokens one tick at a time
+    /// (`tests/prefill_props.rs`): the chunk replays the step path's op
+    /// order exactly. Advances the session's committed point past the
+    /// chunk; returns the number of tokens ingested (0 when the prompt
+    /// is already absorbed). A panic mid-chunk (an injected allocation
+    /// fault) leaves the state torn — recover with
+    /// [`Self::replay_prefill`], mirroring the tick loop's phase-B
+    /// containment (DESIGN.md §Faults).
+    pub fn prefill_session(
+        &self,
+        s: &mut GenSession,
+        max_tokens: usize,
+        scratch: &mut crate::sinkhorn::StackPrefillScratch,
+    ) -> usize {
+        let n = s.prefill_remaining().min(max_tokens);
+        if n == 0 {
+            return 0;
+        }
+        let d = self.cfg.d_model;
+        let t0 = s.st.len();
+        let mut xs = vec![0.0f32; n * d];
+        for j in 0..n {
+            self.embed_token_into(s.prompt[t0 + j], t0 + j, &mut xs[j * d..(j + 1) * d]);
+        }
+        self.stack.prefill(&mut s.st, &xs, scratch, None);
+        s.committed = s.st.len();
+        n
+    }
+
+    /// Recovery for a panic inside [`Self::prefill_session`] (DESIGN.md
+    /// §Faults, §Prefill): the chunk may have left `s.st` torn mid-write,
+    /// so drop it (returning its pages) and rebuild serially up to the
+    /// last committed token — [`Self::replay_and_step`]'s contract minus
+    /// the step that was never taken, so no token is emitted. Panics
+    /// propagate; the caller contains them and retires the session on a
+    /// persistent fault.
+    pub fn replay_prefill(&self, s: &mut GenSession) {
+        let (committed, keep) = (s.committed, s.prompt.len());
+        s.gen.truncate((committed + 1).saturating_sub(keep));
+        s.st = self.fresh_session_state();
+        s.shared = 0;
+        let mut scratch = self.stack.new_decode_scratch();
+        for t in 0..committed {
+            let tok = if t < keep { s.prompt[t] } else { s.gen[t - keep] };
+            self.embed_token_into(tok, t, &mut s.x);
+            self.stack.decode_step(&mut s.st, &s.x, &mut scratch, &mut s.h);
+        }
+    }
 }
 
 /// What one session's tick produced under [`FallbackModel::
@@ -938,6 +1027,14 @@ impl GenSession {
     /// fault recovery rebuilds from (DESIGN.md §Faults).
     pub fn committed(&self) -> usize {
         self.committed
+    }
+
+    /// Prompt tokens still eligible for chunked prefill: everything up
+    /// to — but not including — the final prompt token, whose step emits
+    /// the session's first generated token and therefore rides the tick
+    /// loop (DESIGN.md §Prefill). Zero once the session is emitting.
+    pub fn prefill_remaining(&self) -> usize {
+        self.prompt.len().saturating_sub(1).saturating_sub(self.st.len())
     }
 }
 

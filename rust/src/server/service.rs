@@ -523,7 +523,12 @@ fn fail_pending(p: &PendingGen, msg: &'static str) {
 /// 3. **Classify/info interleave** — classify rows gathered this tick run
 ///    as one batch between decode ticks instead of waiting behind a
 ///    generation wave.
-/// 4. **Decode tick** — every active session advances one token through
+/// 4. **Chunked prefill** (when `policy.prefill_chunk_tokens > 0`,
+///    DESIGN.md §Prefill) — sessions still consuming their prompt absorb
+///    up to the chunk budget of it through the block-parallel engine
+///    path ([`FallbackModel::prefill_session`]) before the tick;
+///    bit-identical to per-tick stepping, Sarathi-style bounded.
+/// 5. **Decode tick** — every active session advances one token through
 ///    one fused `(session, layer, head)` engine pass; emitted tokens go
 ///    to stream subscribers; finished sessions retire and free their slot
 ///    immediately.
@@ -575,6 +580,10 @@ fn scheduler_loop(
     let mut reservations =
         memory::Reservations::new(if paged_budget { policy.mem_budget } else { 0 });
     let mut scratch = model.new_batch_scratch();
+    // chunked-prefill scratch, materialized on first use so schedulers
+    // running the legacy step-prefill path (chunk budget 0) never pay
+    // for the per-session chunk buffers (DESIGN.md §Prefill)
+    let mut prefill_scratch = None;
     let mut active: Vec<ActiveSession> = Vec::with_capacity(slots);
     let mut waiting: VecDeque<PendingGen> = VecDeque::new();
     let mut stop = false;
@@ -792,7 +801,46 @@ fn scheduler_loop(
                 Err(TrySendError::Disconnected(_)) => a.cancel.cancel(),
             }
         }
-        // 6. one decode tick: every unpaused active session advances one
+        // 6. budgeted chunked prefill (DESIGN.md §Prefill): sessions
+        // still consuming their prompt absorb up to
+        // `prefill_chunk_tokens` of it through the block-parallel engine
+        // path before the tick, so a long prompt costs ℓ/chunk fused
+        // passes instead of ℓ ticks — while the budget bounds how long
+        // any one chunk holds the loop, so admitting a long-prompt
+        // session never stalls active sessions' token cadence beyond it
+        // (Sarathi-style chunking). Streams are bit-identical either
+        // way. A panic mid-chunk is contained per session: replay to the
+        // committed point recovers transient faults bitwise; a persistent
+        // fault retires the session with its stable error (§Faults).
+        if policy.prefill_chunk_tokens > 0 {
+            let ps = prefill_scratch.get_or_insert_with(|| model.new_prefill_scratch());
+            let mut failed: Vec<(usize, &'static str)> = Vec::new();
+            for (i, a) in active.iter_mut().enumerate() {
+                if a.pending.is_some() || a.sess.done() || a.sess.prefill_remaining() == 0 {
+                    continue;
+                }
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    model.prefill_session(&mut a.sess, policy.prefill_chunk_tokens, ps)
+                }));
+                match r {
+                    Ok(n) => progressed |= n > 0,
+                    Err(_) => {
+                        match catch_unwind(AssertUnwindSafe(|| model.replay_prefill(&mut a.sess)))
+                        {
+                            Ok(()) => progressed = true,
+                            Err(payload) => failed.push((i, panic_msg(&*payload))),
+                        }
+                    }
+                }
+            }
+            for (i, msg) in failed.into_iter().rev() {
+                let a = active.remove(i);
+                reservations.release(a.reserved_bytes);
+                fail_session(a, msg);
+                progressed = true;
+            }
+        }
+        // 7. one decode tick: every unpaused active session advances one
         // token through the isolated step path — a panic retires the
         // poisoned session(s) with stable errors, survivors keep their
         // bitwise streams (DESIGN.md §Faults)
@@ -838,7 +886,7 @@ fn scheduler_loop(
             reservations.release(a.reserved_bytes);
             fail_session(a, msg);
         }
-        // 7. retire finished sessions immediately — their slot frees for
+        // 8. retire finished sessions immediately — their slot frees for
         // the next admission pass; a done session still holding a refused
         // token stays until its flush lands (or its stall timeout fires)
         let mut i = 0;
@@ -852,7 +900,7 @@ fn scheduler_loop(
                 i += 1;
             }
         }
-        // 8. drain: past the deadline, survivors abort with the stable
+        // 9. drain: past the deadline, survivors abort with the stable
         // shutdown error — reservations released, pages freed
         if drain_deadline.is_some_and(|d| Instant::now() >= d) {
             for p in waiting.drain(..) {

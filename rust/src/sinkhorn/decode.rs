@@ -576,6 +576,69 @@ impl DecodeState {
         stream_segment_one(&qv, &lk, &lv, scale, stream, &mut y);
         normalize_rows(&mut y, &stream.l);
     }
+
+    /// Append a multi-token chunk — `n` rows of `(n, d)` row-major Q/K/V —
+    /// and compute every row's attention output in one call (DESIGN.md
+    /// §Prefill). This is the prompt-ingestion entry: where decoding pays
+    /// one call per generated token, prefill hands the state a whole
+    /// block-aligned chunk and the engine fans *chunks* (one per session ×
+    /// head) over its pool instead of tokens.
+    ///
+    /// Bitwise contract: each row runs the exact [`Self::step_with`] op
+    /// order — same K/V writes, same boundary rebalances, same frozen
+    /// SortCut cuts, same streamed `[sorted | local]` softmax — so the
+    /// outputs and the resulting state are *bit-identical* to `n`
+    /// sequential `step_into` calls (`tests/prefill_props.rs`). Chunk
+    /// boundaries may land anywhere: mid-block tails just leave the state
+    /// where token-by-token decoding would have left it.
+    ///
+    /// `sort_logits` must already hold every row the chunk's boundary
+    /// rebalances will read (rows `0..=⌈(len+n)/b⌉-1`); the stack's
+    /// prefill writes them all before any head consumes the chunk, in the
+    /// same write-once order as its decode rule.
+    ///
+    /// Unwind safety is inherited from `step_with`: a panic mid-chunk
+    /// leaves a torn state that must be discarded, never stepped again.
+    pub fn append_chunk(
+        &mut self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        sort_logits: &Mat,
+        scratch: &mut DecodeScratch,
+        out: &mut [f32],
+    ) {
+        self.append_chunk_with(q, k, v, sort_logits, &mut scratch.stream, out);
+    }
+
+    /// [`Self::append_chunk`] against a caller-owned [`StreamState`] — the
+    /// engine's per-worker entry, mirroring `step_with` vs `step_into`.
+    pub(crate) fn append_chunk_with(
+        &mut self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        sort_logits: &Mat,
+        stream: &mut StreamState,
+        out: &mut [f32],
+    ) {
+        let d = self.d;
+        assert!(q.len() % d == 0, "chunk q must be (n, d) row-major");
+        let n = q.len() / d;
+        assert_eq!(k.len(), n * d, "chunk k must match q's (n, d) shape");
+        assert_eq!(v.len(), n * d, "chunk v must match q's (n, d) shape");
+        assert_eq!(out.len(), n * d, "chunk out must match q's (n, d) shape");
+        assert!(
+            self.len + n <= self.capacity(),
+            "chunk of {n} tokens overflows decode capacity ({} + {n} > {})",
+            self.len,
+            self.capacity()
+        );
+        for j in 0..n {
+            let s = j * d..(j + 1) * d;
+            self.step_with(&q[s.clone()], &k[s.clone()], &v[s.clone()], sort_logits, stream, &mut out[s]);
+        }
+    }
 }
 
 /// Thin wrapper so the engine's `stream_segment` reads as a decode step:

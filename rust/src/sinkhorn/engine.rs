@@ -693,6 +693,63 @@ impl SinkhornEngine {
             rq.state.step_with(rq.q, rq.k, rq.v, rq.sort_logits, &mut w.stream, rq.out);
         });
     }
+
+    /// Chunked prompt ingestion for a batch of `(sequence, head)` tasks
+    /// (DESIGN.md §Prefill): each [`PrefillReq`] appends a whole `(n, d)`
+    /// chunk of projected Q/K/V rows to its [`DecodeState`] via
+    /// [`DecodeState::append_chunk`], so a prompt costs `ℓ/b` parallel
+    /// chunk tasks instead of `ℓ` lockstep decode ticks. Parallelism lives
+    /// *across* tasks — each chunk replays the step-path op order serially
+    /// inside its task — which is exactly why the result is bit-identical
+    /// to token-by-token decoding and across thread counts
+    /// (`tests/prefill_props.rs`).
+    ///
+    /// Allocates a throwaway workspace set per call; the stack's
+    /// `prefill_batch` loop uses [`Self::prefill_chunks_with`] with a
+    /// pooled [`EngineWorkspaces`] instead — the two are bit-identical.
+    pub fn prefill_chunks_into(&self, reqs: Vec<PrefillReq>) {
+        if reqs.is_empty() {
+            return;
+        }
+        let dmax = reqs.iter().map(|rq| rq.state.d()).max().unwrap_or(1);
+        let mut ws = EngineWorkspaces::new(self.threads().min(reqs.len()).max(1), 1, dmax);
+        self.prefill_chunks_with(reqs, &mut ws);
+    }
+
+    /// The reusable-workspace core of [`Self::prefill_chunks_into`]
+    /// (DESIGN.md §Prefill): chunk tasks fan out over the pool with one
+    /// caller-owned per-worker `Workspace` each. The streaming scratch is
+    /// the same `(1, d)` single-row carry the decode step uses — a chunk
+    /// is its tokens stepped serially — so one [`EngineWorkspaces`] serves
+    /// both the tick loop and prefill.
+    pub fn prefill_chunks_with(&self, reqs: Vec<PrefillReq>, ws: &mut EngineWorkspaces) {
+        if reqs.is_empty() {
+            return;
+        }
+        let mut dmax = 0;
+        for rq in &reqs {
+            let d = rq.state.d();
+            assert!(d > 0 && rq.q.len() % d == 0, "chunk q must be (n, d) row-major");
+            let n = rq.q.len() / d;
+            assert_eq!(rq.k.len(), n * d, "chunk k must match q's (n, d) shape");
+            assert_eq!(rq.v.len(), n * d, "chunk v must match q's (n, d) shape");
+            assert_eq!(rq.out.len(), n * d, "chunk out must match q's (n, d) shape");
+            dmax = dmax.max(d);
+        }
+        let workers = self.threads().min(reqs.len()).max(1);
+        assert!(
+            ws.fits(1, dmax, workers),
+            "EngineWorkspaces sized (b={}, d={}, workers={}) cannot serve prefill chunks \
+             (d={dmax}, threads={})",
+            ws.b,
+            ws.d,
+            ws.spaces.len(),
+            self.threads()
+        );
+        self.pool.run_with(reqs, &mut ws.spaces, |w, rq| {
+            rq.state.append_chunk_with(rq.q, rq.k, rq.v, rq.sort_logits, &mut w.stream, rq.out);
+        });
+    }
 }
 
 /// One sequence's slice of a batched decode step: the per-sequence
@@ -700,6 +757,20 @@ impl SinkhornEngine {
 /// each), the caller-maintained sort-logit matrix (rows become live as
 /// blocks complete — DESIGN.md §Decode), and the `d`-element output row.
 pub struct DecodeReq<'a> {
+    pub state: &'a mut DecodeState,
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub sort_logits: &'a Mat,
+    pub out: &'a mut [f32],
+}
+
+/// One `(sequence, head)` slice of a chunked prefill pass: the head's
+/// [`DecodeState`], `(n, d)` row-major projected Q/K/V for the whole
+/// chunk, the caller-maintained sort-logit matrix (every row the chunk's
+/// boundary rebalances will read must already be live — DESIGN.md
+/// §Prefill), and the `(n, d)` output buffer.
+pub struct PrefillReq<'a> {
     pub state: &'a mut DecodeState,
     pub q: &'a [f32],
     pub k: &'a [f32],

@@ -36,12 +36,13 @@ pub use attention::{
 pub use balance::{causal_sinkhorn, ds_residual, sinkhorn};
 pub use decode::{DecodeScratch, DecodeState, LayerDecodeState};
 pub use engine::{
-    AttentionReq, BlockedView, DecodeReq, EngineWorkspaces, SinkhornEngine, SortLayout,
+    AttentionReq, BlockedView, DecodeReq, EngineWorkspaces, PrefillReq, SinkhornEngine,
+    SortLayout,
 };
 pub use matrix::{Mat, MatView, MatViewMut};
 pub use model::{
     SinkhornStack, StackBatchScratch, StackConfig, StackDecodeScratch, StackDecodeState,
-    StackScratch, StackStepReq, TransformerLayer,
+    StackPrefillReq, StackPrefillScratch, StackScratch, StackStepReq, TransformerLayer,
 };
 pub use pages::{Page, PagePool, PageTable, PoolStats};
 pub use pool::WorkerPool;

@@ -50,7 +50,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::decode::{DecodeScratch, LayerDecodeState};
-use super::engine::{DecodeReq, EngineWorkspaces, SinkhornEngine, SortLayout};
+use super::engine::{DecodeReq, EngineWorkspaces, PrefillReq, SinkhornEngine, SortLayout};
 use super::matrix::{
     bias_rows_into, gelu, gelu_into, layernorm_into, layernorm_row_into, matmul_acc_into,
     matmul_acc_ordered_into, row_times, row_times_acc_into, row_times_into, Mat, MatView,
@@ -812,6 +812,195 @@ impl SinkhornStack {
             r.out.copy_from_slice(&sc.x);
         }
     }
+
+    /// Pooled scratch for [`Self::prefill_batch`]: per-session chunk
+    /// buffers sized for a full `seq_len` of rows (grown on demand as the
+    /// session count rises) plus the engine workspaces the fused
+    /// `(session, head)` chunk tasks stream through. The serving layer
+    /// holds one per scheduler / opener, reused across every chunk.
+    pub fn new_prefill_scratch(&self) -> StackPrefillScratch {
+        StackPrefillScratch {
+            per: Vec::new(),
+            ws: EngineWorkspaces::new(self.engine.threads(), 1, self.cfg.d_head()),
+        }
+    }
+
+    /// Chunked prompt ingestion for one sequence (DESIGN.md §Prefill):
+    /// append `n` embedded prompt rows (`(n, d_model)` row-major `xs`) to
+    /// `st` in one pass instead of `n` [`Self::decode_step`] calls.
+    /// `out`, when given, receives the final hidden rows. Sugar over
+    /// [`Self::prefill_batch`] with a single request.
+    pub fn prefill(
+        &self,
+        st: &mut StackDecodeState,
+        xs: &[f32],
+        scratch: &mut StackPrefillScratch,
+        out: Option<&mut [f32]>,
+    ) {
+        self.prefill_batch(vec![StackPrefillReq { st, xs, out }], scratch);
+    }
+
+    /// Chunked prefill for a *batch of sessions* (DESIGN.md §Prefill):
+    /// every [`StackPrefillReq`] advances its own [`StackDecodeState`] by
+    /// a whole chunk of embedded prompt rows, through the same three
+    /// phases as [`Self::decode_step_batch`] — but phases A and C loop
+    /// over the chunk's tokens on the caller thread, and phase B hands
+    /// each `(session, head)` pair its *entire* chunk as one engine task
+    /// ([`SinkhornEngine::prefill_chunks_with`]), so a prompt costs
+    /// `depth` engine passes of `sessions × heads` chunk tasks instead of
+    /// `ℓ` lockstep ticks.
+    ///
+    /// Bitwise contract (`tests/prefill_props.rs`): every per-token
+    /// operation is the same kernel in the same order as `decode_step`.
+    /// The one reordering is that the decode-time SortNet rule runs in
+    /// phase A, *before* the chunk's attention, instead of after each
+    /// token's — sound because row `i + 1` is written from block `i`'s
+    /// mean pre-norm descriptor (a pure function of the layer's inputs,
+    /// untouched by this layer's attention) and is first *read* by tokens
+    /// of block `i + 1`, which phase A visits strictly later. Rows stay
+    /// write-once, values and read order are identical, so chunked
+    /// prefill is bit-identical to token-by-token decoding — across
+    /// block boundaries, partial tails, SortCut cuts, paged/mono stores,
+    /// and thread counts.
+    pub fn prefill_batch(
+        &self,
+        mut reqs: Vec<StackPrefillReq>,
+        scratch: &mut StackPrefillScratch,
+    ) {
+        let cfg = &self.cfg;
+        if reqs.is_empty() {
+            return;
+        }
+        let (d, dh, heads, nb) = (cfg.d_model, cfg.d_head(), cfg.n_heads, cfg.nb);
+        let b = cfg.block_rows();
+        let n_cap = cfg.seq_len;
+        while scratch.per.len() < reqs.len() {
+            scratch.per.push(PrefillBuf::new(cfg));
+        }
+        for (r, sc) in reqs.iter_mut().zip(scratch.per.iter_mut()) {
+            assert_eq!(r.st.layers.len(), cfg.depth, "decode state depth mismatch");
+            assert!(r.xs.len() % d == 0, "prefill xs must be (n, d_model) row-major");
+            let n = r.xs.len() / d;
+            assert!(n > 0, "prefill chunk must carry at least one token");
+            assert!(
+                r.st.len + n <= cfg.seq_len,
+                "prefill chunk of {n} tokens overflows decode capacity ({} + {n} > {})",
+                r.st.len,
+                cfg.seq_len
+            );
+            if let Some(out) = &r.out {
+                assert_eq!(out.len(), n * d, "prefill out must match xs's (n, d_model) shape");
+            }
+            sc.xs[..n * d].copy_from_slice(r.xs);
+        }
+        for (l, layer) in self.layers.iter().enumerate() {
+            // phase A: per token — pre-norm, per-head q/k/v rows,
+            // descriptor accumulation + the SortNet boundary rule, so
+            // every sort-logit row a chunk task will read is live before
+            // phase B starts (write-once, same values as the step path)
+            for (r, sc) in reqs.iter_mut().zip(scratch.per.iter_mut()) {
+                let n = r.xs.len() / d;
+                for j in 0..n {
+                    let t = r.st.len + j;
+                    let x_row = &sc.xs[j * d..(j + 1) * d];
+                    let h: &[f32] = match &layer.ln1 {
+                        Some(ln) => {
+                            let h_row = &mut sc.hs[j * d..(j + 1) * d];
+                            layernorm_row_into(x_row, &ln.gamma, &ln.beta, h_row);
+                            &sc.hs[j * d..(j + 1) * d]
+                        }
+                        None => x_row,
+                    };
+                    for hd in 0..heads {
+                        let o = (hd * n_cap + j) * dh;
+                        row_times_into(h, &layer.wq[hd], &mut sc.qs[o..o + dh]);
+                        row_times_into(h, &layer.wk[hd], &mut sc.ks[o..o + dh]);
+                        row_times_into(h, &layer.wv[hd], &mut sc.vs[o..o + dh]);
+                    }
+                    for (c, a) in r.st.desc[l].iter_mut().enumerate() {
+                        *a += h[c];
+                    }
+                    if (t + 1) % b == 0 {
+                        let i = t / b;
+                        if i + 1 < nb {
+                            let dacc = &mut r.st.desc[l];
+                            for a in dacc.iter_mut() {
+                                *a /= b as f32;
+                            }
+                            let row = row_times(dacc, &layer.sortnet);
+                            r.st.layers[l].sort_logits.row_mut(i + 1).copy_from_slice(&row);
+                        }
+                        r.st.desc[l].fill(0.0);
+                    }
+                }
+            }
+            // phase B: one fused engine pass — each (session, head) task
+            // ingests its whole chunk through the step-path op order
+            let mut preqs: Vec<PrefillReq> = Vec::with_capacity(reqs.len() * heads);
+            for (r, sc) in reqs.iter_mut().zip(scratch.per.iter_mut()) {
+                let n = r.xs.len() / d;
+                let (hstates, sort_logits) = r.st.layers[l].split_heads();
+                for (hd, (hstate, ctx)) in
+                    hstates.iter_mut().zip(sc.ctx.chunks_mut(n_cap * dh)).enumerate()
+                {
+                    let o = hd * n_cap * dh;
+                    preqs.push(PrefillReq {
+                        state: hstate,
+                        q: &sc.qs[o..o + n * dh],
+                        k: &sc.ks[o..o + n * dh],
+                        v: &sc.vs[o..o + n * dh],
+                        sort_logits,
+                        out: &mut ctx[..n * dh],
+                    });
+                }
+            }
+            self.engine.prefill_chunks_with(preqs, &mut scratch.ws);
+            // phase C: per token — output projection + residual, FFN
+            for (r, sc) in reqs.iter_mut().zip(scratch.per.iter_mut()) {
+                let n = r.xs.len() / d;
+                for j in 0..n {
+                    sc.proj.fill(0.0);
+                    for hd in 0..heads {
+                        let o = (hd * n_cap + j) * dh;
+                        row_times_acc_into(&sc.ctx[o..o + dh], &layer.wo[hd], &mut sc.proj);
+                    }
+                    let x_row = &mut sc.xs[j * d..(j + 1) * d];
+                    for (c, xo) in x_row.iter_mut().enumerate() {
+                        *xo += sc.proj[c];
+                    }
+                    if let Some(ffn) = &layer.ffn {
+                        let h_row = &mut sc.hs[j * d..(j + 1) * d];
+                        layernorm_row_into(x_row, &ffn.ln.gamma, &ffn.ln.beta, h_row);
+                        sc.ff_pre.copy_from_slice(&ffn.b1);
+                        {
+                            let hv = MatView::contiguous(h_row, 1, d);
+                            let mut pre = MatViewMut::contiguous(&mut sc.ff_pre, 1, cfg.d_ff);
+                            matmul_acc_into(&hv, &ffn.w1.view(), &mut pre);
+                        }
+                        for (o, &p) in sc.ff_act.iter_mut().zip(sc.ff_pre.iter()) {
+                            *o = gelu(p);
+                        }
+                        sc.ff_out.copy_from_slice(&ffn.b2);
+                        {
+                            let av = MatView::contiguous(&sc.ff_act, 1, cfg.d_ff);
+                            let mut ov = MatViewMut::contiguous(&mut sc.ff_out, 1, d);
+                            matmul_acc_into(&av, &ffn.w2.view(), &mut ov);
+                        }
+                        for (xo, &f) in x_row.iter_mut().zip(sc.ff_out.iter()) {
+                            *xo += f;
+                        }
+                    }
+                }
+            }
+        }
+        for (r, sc) in reqs.iter_mut().zip(scratch.per.iter_mut()) {
+            let n = r.xs.len() / d;
+            r.st.len += n;
+            if let Some(out) = r.out.as_deref_mut() {
+                out.copy_from_slice(&sc.xs[..n * d]);
+            }
+        }
+    }
 }
 
 /// One session's slice of a batched stack decode step
@@ -832,6 +1021,63 @@ pub struct StackStepReq<'a> {
 pub struct StackBatchScratch {
     per: Vec<StackDecodeScratch>,
     ws: EngineWorkspaces,
+}
+
+/// One session's slice of a batched chunked prefill
+/// ([`SinkhornStack::prefill_batch`], DESIGN.md §Prefill): its
+/// per-sequence depth-L state, the embedded prompt rows (`(n, d_model)`
+/// row-major), and optionally a same-shape buffer for the final hidden
+/// rows (prompt ingestion usually discards them — only the *next* token's
+/// step needs a logit — so `None` skips the copy).
+pub struct StackPrefillReq<'a> {
+    pub st: &'a mut StackDecodeState,
+    pub xs: &'a [f32],
+    pub out: Option<&'a mut [f32]>,
+}
+
+/// Pooled scratch for [`SinkhornStack::prefill_batch`]: one
+/// `PrefillBuf`-worth of chunk buffers per session (grown on demand,
+/// never shrunk) plus the per-worker engine workspaces the fused
+/// `(session, head)` chunk tasks stream through.
+pub struct StackPrefillScratch {
+    per: Vec<PrefillBuf>,
+    ws: EngineWorkspaces,
+}
+
+/// Per-session chunk buffers for prefill: residual-stream and pre-norm
+/// rows for up to `seq_len` tokens, head-major projected Q/K/V and
+/// context (`(heads, seq_len, d_head)` — each head's chunk rows are
+/// contiguous, so phase B hands the engine plain slices), and the row
+/// scratch the per-token phase-C kernels reuse.
+struct PrefillBuf {
+    xs: Vec<f32>,
+    hs: Vec<f32>,
+    qs: Vec<f32>,
+    ks: Vec<f32>,
+    vs: Vec<f32>,
+    ctx: Vec<f32>,
+    proj: Vec<f32>,
+    ff_pre: Vec<f32>,
+    ff_act: Vec<f32>,
+    ff_out: Vec<f32>,
+}
+
+impl PrefillBuf {
+    fn new(cfg: &StackConfig) -> Self {
+        let (n_cap, d) = (cfg.seq_len, cfg.d_model);
+        PrefillBuf {
+            xs: vec![0.0; n_cap * d],
+            hs: vec![0.0; n_cap * d],
+            qs: vec![0.0; n_cap * d],
+            ks: vec![0.0; n_cap * d],
+            vs: vec![0.0; n_cap * d],
+            ctx: vec![0.0; n_cap * d],
+            proj: vec![0.0; d],
+            ff_pre: vec![0.0; cfg.d_ff],
+            ff_act: vec![0.0; cfg.d_ff],
+            ff_out: vec![0.0; if cfg.bare_layers() { 0 } else { d }],
+        }
+    }
 }
 
 /// Per-sequence incremental decode state for the whole stack: one

@@ -1,0 +1,577 @@
+//! Property tests for chunked block-parallel prefill (DESIGN.md §Prefill)
+//! — run with no artifacts and no XLA, in every build. The contract under
+//! test: ingesting a prompt through the chunked prefill path is **bitwise
+//! identical** to feeding the same rows one `decode_step` at a time,
+//! because the chunk entry replays the exact per-token op order of the
+//! step path. Concretely:
+//!
+//! 1. `DecodeState::append_chunk` equals a serial `step_into` loop bit
+//!    for bit — for randomized chunk schedules (size-1 chunks, block-
+//!    aligned chunks, chunks crossing block boundaries, partial tails)
+//!    and exhaustively for every two-chunk split point of a sequence,
+//!    full-causal and every SortCut width, outputs *and* the sorted
+//!    gather cache;
+//! 2. a paged state fed the same chunks is bitwise identical to its
+//!    monolithic twin after every chunk (DESIGN.md §Pages);
+//! 3. the depth-L `SinkhornStack::prefill` matches token-by-token
+//!    `decode_step` bitwise, and decode steps *continued after* a chunked
+//!    prefill still match — the handed-over state is indistinguishable;
+//! 4. chunked prefill is bit-identical across engine thread counts, and
+//!    the batched entry equals per-sequence calls;
+//! 5. SortCut freezes the same cut through both paths: the cut caches
+//!    match bitwise after ingestion and never diverge afterwards;
+//! 6. the serving layer: two concurrent `open_session`s on disjoint
+//!    prompts both make progress (the prefix-cache lock is no longer held
+//!    across prefill), and a long-prompt session admitted mid-stream is
+//!    absorbed in budgeted chunks without stalling an active session's
+//!    token cadence — one token per tick, streams equal to `generate`
+//!    (DESIGN.md §Scheduler, §Prefill).
+
+use sinkhorn::server::{BatchPolicy, FallbackConfig, FallbackModel, GenSession, Server};
+use sinkhorn::sinkhorn::{
+    DecodeScratch, DecodeState, Mat, PagePool, SinkhornEngine, SinkhornStack, StackConfig,
+};
+use sinkhorn::util::prop::{forall, Gen};
+use sinkhorn::util::rng::Rng;
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.normal() as f32 * 0.5)
+}
+
+/// Split `total` tokens into a randomized chunk schedule that mixes the
+/// interesting shapes: single tokens, exactly one block, block-crossing
+/// chunks, and whatever ragged tail is left.
+fn chunk_schedule(g: &mut Gen, total: usize, b: usize) -> Vec<usize> {
+    let mut left = total;
+    let mut out = Vec::new();
+    while left > 0 {
+        let n = match g.usize(0, 4) {
+            0 => 1,
+            1 => b,
+            2 => b + 1,
+            _ => 1 + g.usize(0, (2 * b).min(left)),
+        };
+        let n = n.min(left).max(1);
+        out.push(n);
+        left -= n;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// DecodeState level: append_chunk vs the serial step loop
+// ---------------------------------------------------------------------------
+
+struct Case {
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    logits: Mat,
+    b: usize,
+    nb: usize,
+    /// ingested length; may end mid-block
+    total: usize,
+    chunks: Vec<usize>,
+    n_cut: Option<usize>,
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Case(b={}, nb={}, d={}, total={}, chunks={:?}, cut={:?})",
+            self.b, self.nb, self.q.cols, self.total, self.chunks, self.n_cut
+        )
+    }
+}
+
+fn gen_case(g: &mut Gen) -> Case {
+    let nb = 2 + g.usize(0, 4);
+    let b = 2 + g.usize(0, 5);
+    let d = 4 + g.usize(0, 8);
+    let ell = nb * b;
+    // half the cases stop mid-block to cover partial tails
+    let total = if g.usize(0, 2) == 0 { ell } else { ell - g.usize(1, b) };
+    let chunks = chunk_schedule(g, total, b);
+    let n_cut = if g.usize(0, 3) == 0 { Some(1 + g.usize(0, nb - 1)) } else { None };
+    let mut rng = Rng::new(g.rng.next_u64());
+    Case {
+        q: rand_mat(&mut rng, ell, d),
+        k: rand_mat(&mut rng, ell, d),
+        v: rand_mat(&mut rng, ell, d),
+        logits: rand_mat(&mut rng, nb, nb),
+        b,
+        nb,
+        total,
+        chunks,
+        n_cut,
+    }
+}
+
+/// Serial oracle: one `step_into` per token; returns the stacked per-step
+/// outputs and leaves `st` at `total` tokens.
+fn step_all(c: &Case, st: &mut DecodeState) -> Mat {
+    let d = c.q.cols;
+    let mut scratch = DecodeScratch::new();
+    let mut out = Mat::zeros(c.total, d);
+    for t in 0..c.total {
+        let mut row = vec![0.0f32; d];
+        st.step_into(c.q.row(t), c.k.row(t), c.v.row(t), &c.logits, &mut scratch, &mut row);
+        out.row_mut(t).copy_from_slice(&row);
+    }
+    out
+}
+
+/// Chunked path: drive `st` through `append_chunk` following `chunks`;
+/// returns the stacked outputs.
+fn chunk_all(c: &Case, st: &mut DecodeState) -> Mat {
+    let d = c.q.cols;
+    let mut scratch = DecodeScratch::new();
+    let mut out = Mat::zeros(c.total, d);
+    let mut t = 0usize;
+    for &n in &c.chunks {
+        let rows = t * d..(t + n) * d;
+        let mut rows_out = vec![0.0f32; n * d];
+        st.append_chunk(
+            &c.q.data[rows.clone()],
+            &c.k.data[rows.clone()],
+            &c.v.data[rows],
+            &c.logits,
+            &mut scratch,
+            &mut rows_out,
+        );
+        out.data[t * d..(t + n) * d].copy_from_slice(&rows_out);
+        t += n;
+    }
+    assert_eq!(t, c.total);
+    out
+}
+
+#[test]
+fn append_chunk_matches_serial_steps_bitwise() {
+    forall(24, 0x9F11, gen_case, |c| {
+        let d = c.q.cols;
+        let mut st_serial = DecodeState::new(c.b, d, c.nb, 5, c.n_cut);
+        let want = step_all(c, &mut st_serial);
+        let mut st_chunk = DecodeState::new(c.b, d, c.nb, 5, c.n_cut);
+        let got = chunk_all(c, &mut st_chunk);
+        for t in 0..c.total {
+            if got.row(t) != want.row(t) {
+                return Err(format!("chunked output diverged at token {t}"));
+            }
+        }
+        // the states themselves must be indistinguishable: the sorted
+        // gather cache (which pins the SortCut cut) matches bitwise...
+        if st_chunk.sorted_cache() != st_serial.sorted_cache() {
+            return Err("sorted-gather caches diverged after ingestion".into());
+        }
+        // ...and further serial steps from either state stay bit-equal
+        if c.total < c.nb * c.b {
+            let mut scratch = DecodeScratch::new();
+            let (mut a, mut b) = (vec![0.0f32; d], vec![0.0f32; d]);
+            let t = c.total;
+            st_serial.step_into(c.q.row(t), c.k.row(t), c.v.row(t), &c.logits, &mut scratch, &mut a);
+            st_chunk.step_into(c.q.row(t), c.k.row(t), c.v.row(t), &c.logits, &mut scratch, &mut b);
+            if a != b {
+                return Err("post-prefill decode step diverged".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Exhaustive two-chunk splits: every split point of a fixed sequence —
+/// every block boundary and every mid-block tail — through one
+/// `append_chunk` pair, against the serial oracle, full-causal and cut.
+#[test]
+fn append_chunk_bitwise_at_every_split_point() {
+    let (nb, b, d) = (3usize, 4usize, 6usize);
+    let total = nb * b;
+    let mut rng = Rng::new(0x9F22);
+    for n_cut in [None, Some(1), Some(2)] {
+        let base = Case {
+            q: rand_mat(&mut rng, total, d),
+            k: rand_mat(&mut rng, total, d),
+            v: rand_mat(&mut rng, total, d),
+            logits: rand_mat(&mut rng, nb, nb),
+            b,
+            nb,
+            total,
+            chunks: vec![],
+            n_cut,
+        };
+        let mut st = DecodeState::new(b, d, nb, 5, n_cut);
+        let want = step_all(&base, &mut st);
+        let want_cache = st.sorted_cache();
+        let (wsk, wsv) = (want_cache.0.to_vec(), want_cache.1.to_vec());
+        for split in 1..total {
+            let c = Case { chunks: vec![split, total - split], ..clone_case(&base) };
+            let mut st = DecodeState::new(b, d, nb, 5, n_cut);
+            let got = chunk_all(&c, &mut st);
+            assert_eq!(
+                got.data, want.data,
+                "split at {split} (cut={n_cut:?}) diverged from the serial oracle"
+            );
+            let (sk, sv) = st.sorted_cache();
+            assert_eq!((sk, sv), (&wsk[..], &wsv[..]), "cache diverged at split {split}");
+        }
+    }
+}
+
+fn clone_case(c: &Case) -> Case {
+    Case {
+        q: c.q.clone(),
+        k: c.k.clone(),
+        v: c.v.clone(),
+        logits: c.logits.clone(),
+        b: c.b,
+        nb: c.nb,
+        total: c.total,
+        chunks: c.chunks.clone(),
+        n_cut: c.n_cut,
+    }
+}
+
+/// Paged == mono per chunk: after every `append_chunk`, the paged state's
+/// outputs and sorted cache are bitwise equal to the monolithic twin's.
+#[test]
+fn paged_equals_mono_per_chunk() {
+    forall(20, 0x9F33, gen_case, |c| {
+        let d = c.q.cols;
+        for bpp in [1usize, 2] {
+            let pool = PagePool::new();
+            let mut mono = DecodeState::new(c.b, d, c.nb, 5, c.n_cut);
+            let mut paged = DecodeState::new_paged(c.b, d, c.nb, 5, c.n_cut, &pool, bpp);
+            let mut scratch = DecodeScratch::new();
+            let mut t = 0usize;
+            for &n in &c.chunks {
+                let rows = t * d..(t + n) * d;
+                let mut out_m = vec![0.0f32; n * d];
+                let mut out_p = vec![0.0f32; n * d];
+                mono.append_chunk(
+                    &c.q.data[rows.clone()],
+                    &c.k.data[rows.clone()],
+                    &c.v.data[rows.clone()],
+                    &c.logits,
+                    &mut scratch,
+                    &mut out_m,
+                );
+                paged.append_chunk(
+                    &c.q.data[rows.clone()],
+                    &c.k.data[rows.clone()],
+                    &c.v.data[rows],
+                    &c.logits,
+                    &mut scratch,
+                    &mut out_p,
+                );
+                if out_m != out_p {
+                    return Err(format!("paged chunk at t={t} (bpp={bpp}) diverged"));
+                }
+                if mono.sorted_cache() != paged.sorted_cache() {
+                    return Err(format!("paged cache at t={t} (bpp={bpp}) diverged"));
+                }
+                t += n;
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Stack level: SinkhornStack::prefill vs token-by-token decode_step
+// ---------------------------------------------------------------------------
+
+fn stack_cfg(nb: usize, b: usize, heads: usize, d_head: usize, depth: usize, d_ff: usize) -> StackConfig {
+    StackConfig {
+        seq_len: nb * b,
+        d_model: heads * d_head,
+        n_heads: heads,
+        depth,
+        d_ff,
+        nb,
+        sinkhorn_iters: 5,
+        causal: false,
+        n_cut: None,
+    }
+}
+
+struct StackCase {
+    cfg: StackConfig,
+    x: Mat,
+    total: usize,
+    chunks: Vec<usize>,
+    seed: u64,
+}
+
+impl std::fmt::Debug for StackCase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let c = &self.cfg;
+        write!(
+            f,
+            "StackCase(nb={}, b={}, d={}, heads={}, depth={}, d_ff={}, cut={:?}, total={}, chunks={:?})",
+            c.nb,
+            c.block_rows(),
+            c.d_model,
+            c.n_heads,
+            c.depth,
+            c.d_ff,
+            c.n_cut,
+            self.total,
+            self.chunks
+        )
+    }
+}
+
+fn gen_stack_case(g: &mut Gen) -> StackCase {
+    let nb = 2 + g.usize(0, 3);
+    let b = 2 + g.usize(0, 4);
+    let heads = 1 + g.usize(0, 2);
+    let d_head = 2 + g.usize(0, 5);
+    let depth = 1 + g.usize(0, 2);
+    let d_ff = if g.usize(0, 2) == 0 { 0 } else { heads * d_head * 2 + 1 };
+    let mut cfg = stack_cfg(nb, b, heads, d_head, depth, d_ff);
+    if g.usize(0, 3) == 0 {
+        cfg.n_cut = Some(1 + g.usize(0, nb - 1));
+    }
+    let ell = cfg.seq_len;
+    // leave headroom so decode can continue after the prefill
+    let total = ell - 1 - g.usize(0, b.min(ell - 1));
+    let chunks = chunk_schedule(g, total, b);
+    let mut rng = Rng::new(g.rng.next_u64());
+    let x = rand_mat(&mut rng, ell, cfg.d_model);
+    StackCase { cfg, x, total, chunks, seed: rng.next_u64() }
+}
+
+#[test]
+fn stack_prefill_matches_token_by_token_decode() {
+    forall(20, 0x9F44, gen_stack_case, |c| {
+        let stack =
+            SinkhornStack::seeded(c.cfg.clone(), c.seed, SinkhornEngine::serial()).unwrap();
+        let d = c.cfg.d_model;
+        // oracle: one decode_step per token
+        let mut st_step = stack.decode_state();
+        let mut dsc = stack.new_decode_scratch();
+        let mut want = Mat::zeros(c.total, d);
+        for t in 0..c.total {
+            let mut row = vec![0.0f32; d];
+            stack.decode_step(&mut st_step, c.x.row(t), &mut dsc, &mut row);
+            want.row_mut(t).copy_from_slice(&row);
+        }
+        // chunked prefill over the same rows
+        let mut st_pre = stack.decode_state();
+        let mut psc = stack.new_prefill_scratch();
+        let mut got = Mat::zeros(c.total, d);
+        let mut t = 0usize;
+        for &n in &c.chunks {
+            let mut rows_out = vec![0.0f32; n * d];
+            stack.prefill(&mut st_pre, &c.x.data[t * d..(t + n) * d], &mut psc, Some(&mut rows_out[..]));
+            got.data[t * d..(t + n) * d].copy_from_slice(&rows_out);
+            t += n;
+        }
+        if got.data != want.data {
+            let t = (0..c.total).find(|&t| got.row(t) != want.row(t)).unwrap();
+            return Err(format!("prefill diverged from decode_step at token {t}"));
+        }
+        // the handed-over state is indistinguishable: continued decode
+        // steps from both states stay bitwise equal (this also pins the
+        // SortCut cut — a differently-frozen cut would diverge here)
+        for t in c.total..c.cfg.seq_len {
+            let (mut a, mut b) = (vec![0.0f32; d], vec![0.0f32; d]);
+            stack.decode_step(&mut st_step, c.x.row(t), &mut dsc, &mut a);
+            stack.decode_step(&mut st_pre, c.x.row(t), &mut dsc, &mut b);
+            if a != b {
+                return Err(format!("post-prefill decode diverged at token {t}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Chunked prefill is bitwise invariant to engine thread count, and the
+/// batched entry (several sessions per call) equals per-sequence calls.
+#[test]
+fn stack_prefill_thread_count_and_batch_invariance() {
+    forall(12, 0x9F55, gen_stack_case, |c| {
+        let d = c.cfg.d_model;
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for threads in [1usize, 4] {
+            let stack =
+                SinkhornStack::seeded(c.cfg.clone(), c.seed, SinkhornEngine::new(threads)).unwrap();
+            let mut st = stack.decode_state();
+            let mut psc = stack.new_prefill_scratch();
+            let mut got = vec![0.0f32; c.total * d];
+            let mut t = 0usize;
+            for &n in &c.chunks {
+                let mut rows_out = vec![0.0f32; n * d];
+                stack.prefill(&mut st, &c.x.data[t * d..(t + n) * d], &mut psc, Some(&mut rows_out[..]));
+                got[t * d..(t + n) * d].copy_from_slice(&rows_out);
+                t += n;
+            }
+            outs.push(got);
+        }
+        if outs[0] != outs[1] {
+            return Err("prefill is not bit-identical across thread counts".into());
+        }
+        // batched: two independent sessions prefilled in one call must
+        // equal the single-session path for each
+        let stack =
+            SinkhornStack::seeded(c.cfg.clone(), c.seed, SinkhornEngine::new(2)).unwrap();
+        let mut psc = stack.new_prefill_scratch();
+        let (mut st_a, mut st_b) = (stack.decode_state(), stack.decode_state());
+        let (mut out_a, mut out_b) =
+            (vec![0.0f32; c.total * d], vec![0.0f32; c.total * d]);
+        let mut t = 0usize;
+        for &n in &c.chunks {
+            use sinkhorn::sinkhorn::StackPrefillReq;
+            let xs = &c.x.data[t * d..(t + n) * d];
+            let (a, b) = (&mut out_a[t * d..(t + n) * d], &mut out_b[t * d..(t + n) * d]);
+            stack.prefill_batch(
+                vec![
+                    StackPrefillReq { st: &mut st_a, xs, out: Some(a) },
+                    StackPrefillReq { st: &mut st_b, xs, out: Some(b) },
+                ],
+                &mut psc,
+            );
+            t += n;
+        }
+        if out_a != outs[0] || out_b != outs[0] {
+            return Err("batched prefill diverged from the single-session path".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Serving layer: concurrent opens, scheduler interleaving
+// ---------------------------------------------------------------------------
+
+fn serve_cfg() -> FallbackConfig {
+    FallbackConfig {
+        seq_len: 32,
+        d_model: 16,
+        nb: 4,
+        vocab: 64,
+        depth: 2,
+        n_heads: 2,
+        d_ff: 32,
+        ..Default::default()
+    }
+}
+
+/// Two concurrent `open_session`s on *disjoint* prompts both make
+/// progress: the prefix-cache lock is held only for the match and the
+/// insert, never across the chunked prefill itself
+/// (`fallback.rs::session_state_for`). Each stream still equals the
+/// single-request oracle.
+#[test]
+fn concurrent_opens_of_disjoint_prompts_both_progress() {
+    let m = FallbackModel::new(serve_cfg()).unwrap();
+    let max_new = 4;
+    // disjoint prompts long enough that the prefix-cache fill runs the
+    // chunked path across block boundaries (b = 8 here)
+    let prompts: Vec<Vec<i32>> = vec![
+        (0..20).map(|i| (i * 3 + 1) % 64).collect(),
+        (0..20).map(|i| (i * 5 + 2) % 64).collect(),
+    ];
+    let want: Vec<Vec<i32>> = prompts.iter().map(|p| m.generate(p, max_new)).collect();
+    let barrier = std::sync::Barrier::new(prompts.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = prompts
+            .iter()
+            .zip(&want)
+            .map(|(p, w)| {
+                let (m, barrier) = (&m, &barrier);
+                s.spawn(move || {
+                    barrier.wait();
+                    let mut sess = m.open_session(p, max_new);
+                    let mut scratch = m.new_batch_scratch();
+                    while !sess.done() {
+                        m.step_sessions(&mut [&mut sess], &mut scratch);
+                    }
+                    assert_eq!(sess.generated(), &w[..], "concurrent open changed the stream");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("an open_session thread failed to make progress");
+        }
+    });
+}
+
+/// Deterministic scheduler interleave at the model level: while a
+/// long-prompt session is absorbed chunk by chunk, an already-active
+/// session emits exactly one token per tick — its cadence never stalls —
+/// and both final streams equal the single-request oracle. Prefill takes
+/// exactly `ceil(remaining / budget)` chunks of at most `budget` tokens.
+#[test]
+fn prefill_interleave_preserves_active_cadence() {
+    let cfg = FallbackConfig { prefix_share: false, ..serve_cfg() };
+    let m = FallbackModel::new(cfg).unwrap();
+    let budget = 5usize;
+    let short: Vec<i32> = (0..4).map(|i| i * 7 + 3).collect();
+    let long: Vec<i32> = (0..24).map(|i| (i * 11 + 1) % 64).collect();
+    let (want_short, want_long) = (m.generate(&short, 8), m.generate(&long, 3));
+
+    let mut a = m.open_session(&short, 8);
+    let mut scratch = m.new_batch_scratch();
+    let mut psc = m.new_prefill_scratch();
+    // A is mid-stream when B arrives: tick it past its own prompt
+    while a.generated().is_empty() {
+        m.step_sessions(&mut [&mut a], &mut scratch);
+    }
+
+    let mut b = m.open_session(&long, 3);
+    let remaining = b.prefill_remaining();
+    assert!(remaining > 2 * budget, "long prompt must need several chunks (got {remaining})");
+    let mut chunks = 0usize;
+    while b.prefill_remaining() > 0 {
+        let n = m.prefill_session(&mut b, budget, &mut psc);
+        assert!(0 < n && n <= budget, "chunk of {n} tokens exceeds the budget {budget}");
+        chunks += 1;
+        // the active session ticks between chunks and never misses a beat
+        let before = a.generated().len();
+        m.step_sessions(&mut [&mut a], &mut scratch);
+        assert_eq!(a.generated().len(), before + 1, "active cadence stalled during prefill");
+    }
+    assert_eq!(chunks, remaining.div_ceil(budget), "prefill chunk count off");
+    assert_eq!(b.committed(), long.len() - 1, "prefill must stop one short of the prompt");
+    assert!(b.generated().is_empty(), "prefill must not emit tokens");
+    while !a.done() || !b.done() {
+        let mut live: Vec<&mut GenSession> =
+            [&mut a, &mut b].into_iter().filter(|s| !s.done()).collect();
+        m.step_sessions(&mut live, &mut scratch);
+    }
+    assert_eq!(a.generated(), &want_short[..], "active session's stream changed");
+    assert_eq!(b.generated(), &want_long[..], "prefilled session's stream changed");
+}
+
+/// End to end through the continuous scheduler: with a chunk budget set,
+/// a long-prompt generation admitted while another streams is absorbed in
+/// chunks (`service.rs` phase 6) and both replies are bit-equal to the
+/// single-request oracle; token events stay in order.
+#[test]
+fn scheduler_chunked_prefill_streams_bit_identical() {
+    let cfg = serve_cfg();
+    let model = FallbackModel::new(cfg.clone()).unwrap();
+    let short: Vec<i32> = (0..4).map(|i| i * 7 + 3).collect();
+    let long: Vec<i32> = (0..24).map(|i| (i * 11 + 1) % 64).collect();
+    let (want_short, want_long) = (model.generate(&short, 8), model.generate(&long, 4));
+    let policy = BatchPolicy { prefill_chunk_tokens: 5, ..Default::default() };
+    let server = Server::start_fallback(cfg, policy).unwrap();
+    let (toks_a, reply_a) = server.handle.generate_streaming(short, 8).unwrap();
+    // first token read: A is active before B is admitted
+    let first = toks_a.recv().expect("active session must stream");
+    assert_eq!(first.0, 0);
+    let (toks_b, reply_b) = server.handle.generate_streaming(long, 4).unwrap();
+    let mut got_a = vec![first.1];
+    for (i, id) in toks_a.iter() {
+        assert_eq!(i, got_a.len(), "tok indices must stream in order");
+        got_a.push(id);
+    }
+    let got_b: Vec<i32> = toks_b.iter().map(|(_, id)| id).collect();
+    assert_eq!(got_a, want_short, "chunked-prefill stream diverged from the oracle");
+    assert_eq!(got_b, want_long, "long-prompt stream diverged from the oracle");
+    assert_eq!(reply_a.recv().unwrap().unwrap().gen.unwrap(), want_short);
+    assert_eq!(reply_b.recv().unwrap().unwrap().gen.unwrap(), want_long);
+    server.shutdown().unwrap();
+}

@@ -64,9 +64,13 @@ CELL_SCHEMAS = {
         "threads": "int",
         "ns_per_iter": "num",
     },
+    # "prefill" is the prompt-ingestion axis (DESIGN.md §Prefill):
+    # "step" = one decode step per tick, "chunked" = block-parallel
+    # chunks between ticks; ttft_* are submit -> first-token percentiles
     "serve": {
         "transport": "str",
         "mode": "str",
+        "prefill": "str",
         "sessions": "int",
         "prompt_len": "int",
         "gen_len": "int",
@@ -74,6 +78,8 @@ CELL_SCHEMAS = {
         "tokens_per_sec": "num",
         "p50_tok_ms": "num",
         "p95_tok_ms": "num",
+        "ttft_p50_ms": "num",
+        "ttft_p95_ms": "num",
         "occupancy": "num",
     },
     "pages": {

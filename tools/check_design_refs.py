@@ -47,6 +47,9 @@ REQUIRED_ANCHORS = {
     # pluggable-backends PR: SortStrategy trait contract + the
     # backend-comparison matrix
     "Backends",
+    # chunked-prefill PR: block-parallel prompt ingestion, the bitwise
+    # step-path contract, and the scheduler's chunk budget
+    "Prefill",
 }
 
 BENCH_JSON_RE = re.compile(r"BENCH_([A-Za-z0-9_]+)\.json")
